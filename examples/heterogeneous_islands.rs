@@ -1,0 +1,76 @@
+//! Heterogeneous, unreliable islands — the paper's motivating deployment.
+//!
+//! Combines three robustness mechanisms in one scenario: islands in
+//! "distant regions" (slow WAN: 200 Mb/s, 150 ms latency), flaky uplinks
+//! (30% outer-gradient drop), and pruned outer gradients (50% sign
+//! pruning) to respect the thin pipes. Reports what actually crossed the
+//! fabric and what the fault injection did to quality — the argument for
+//! why H≫1 makes geo-distributed training viable at all.
+//!
+//!   cargo run --release --example heterogeneous_islands
+
+use diloco::config::ExperimentConfig;
+use diloco::coordinator::Coordinator;
+use diloco::runtime::Runtime;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".into());
+    let mut cfg = ExperimentConfig::paper_default(&dir, "nano");
+    cfg.workers = 8;
+    cfg.schedule = diloco::config::ComputeSchedule::Constant(8);
+    cfg.inner_steps = 20;
+    cfg.rounds = 8;
+    cfg.pretrain_steps = 40;
+    cfg.data.non_iid = true; // each region has its own data distribution
+    // A poor cross-region fabric.
+    cfg.comm.bandwidth_bps = 200e6 / 8.0; // 200 Mb/s
+    cfg.comm.latency_s = 0.150;
+    cfg.comm.drop_prob = 0.3;
+    cfg.prune_frac = 0.5;
+
+    let rt = Rc::new(Runtime::load(&cfg.artifacts_dir, &cfg.model)?);
+    println!(
+        "8 islands, {} params each, WAN 200 Mb/s / 150 ms, 30% uplink loss, \
+         50% sign-pruned outer gradients",
+        rt.manifest.config.param_count
+    );
+
+    // Reference run on a perfect fabric for comparison.
+    let mut perfect = cfg.clone();
+    perfect.comm.drop_prob = 0.0;
+    perfect.prune_frac = 0.0;
+
+    let faulty_report = Coordinator::new(cfg, rt.clone())?.run()?;
+    let perfect_report = Coordinator::new(perfect, rt)?.run()?;
+
+    for (name, r) in [("perfect fabric", &perfect_report), ("faulty fabric", &faulty_report)] {
+        let m = &r.metrics;
+        println!(
+            "\n[{name}] final ppl {:.3} | {:.2} MB across fabric | \
+             {} msgs ({} dropped) | sim comm time {:.2}s",
+            m.final_ppl(),
+            m.comm_bytes as f64 / 1e6,
+            m.comm_messages,
+            m.comm_dropped,
+            m.sim_comm_seconds
+        );
+        let worst = r
+            .drops_per_worker
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &d)| d)
+            .map(|(i, &d)| format!("island {i} lost {d} rounds"))
+            .unwrap_or_default();
+        println!("[{name}] {worst}");
+    }
+
+    let degradation = 100.0
+        * (faulty_report.metrics.final_ppl() - perfect_report.metrics.final_ppl())
+        / perfect_report.metrics.final_ppl();
+    println!(
+        "\nquality cost of 30% drops + 50% pruning on a slow WAN: {degradation:+.2}% PPL \
+         (paper: ~2% at 50% drops; ~0.4% at 50% pruning)"
+    );
+    Ok(())
+}

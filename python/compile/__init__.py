@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 jax model + L1 Pallas kernels + AOT lowering.
+
+Never imported at runtime — the Rust binary only consumes the HLO text and
+manifest files this package writes into ``artifacts/``.
+"""

@@ -1,0 +1,389 @@
+"""AOT lowering: jax step functions → HLO text + JSON manifest.
+
+The interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is lowered from a *flat-signature* wrapper whose positional
+arguments follow the canonical leaf order of ``model.flatten_spec`` — so
+HLO parameter index i is, by construction, manifest input i. The manifest
+records name/role/shape/dtype per input and output; the Rust runtime binds
+buffers by role and never hard-codes the architecture.
+
+Usage (from ``python/``):
+    python -m compile.aot --config micro --out-dir ../artifacts
+    python -m compile.aot --config nano --kernels pallas --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import ModelConfig, TrainConfig, model_config, train_config
+
+DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _iospec(name: str, role: str, aval) -> Dict[str, Any]:
+    return {
+        "name": name,
+        "role": role,
+        "shape": list(aval.shape),
+        "dtype": DTYPE_NAMES[jnp.dtype(aval.dtype)],
+    }
+
+
+def _spec_leaves(tree, role: str, prefix: str) -> List[Dict[str, Any]]:
+    return [
+        _iospec(f"{prefix}{name}", role, leaf)
+        for name, leaf in M.flatten_spec(tree)
+    ]
+
+
+class ArtifactBuilder:
+    """Lowers one config's artifact set and accumulates the manifest."""
+
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, impl: str,
+                 out_dir: str):
+        self.cfg, self.tc, self.impl, self.out_dir = cfg, tc, impl, out_dir
+        self.params_t = jax.eval_shape(lambda: M.init_params(cfg))
+        self.manifest: Dict[str, Any] = {
+            "config": {
+                "name": cfg.name,
+                "kernels": impl,
+                "n_layers": cfg.n_layers,
+                "d_model": cfg.d_model,
+                "n_heads": cfg.n_heads,
+                "d_head": cfg.d_head,
+                "vocab_size": cfg.vocab_size,
+                "seq_len": cfg.seq_len,
+                "d_ff": cfg.d_ff,
+                "batch_size": tc.batch_size,
+                "param_count": cfg.param_count(),
+                "peak_lr": tc.peak_lr,
+                "warmup_steps": tc.warmup_steps,
+                "total_steps": tc.total_steps,
+                "weight_decay": tc.weight_decay,
+                "b1": tc.b1,
+                "b2": tc.b2,
+                "eps": tc.eps,
+                "grad_clip": tc.grad_clip,
+            },
+            "params": [
+                {"name": n, "shape": list(l.shape), "dtype": "f32"}
+                for n, l in M.flatten_spec(self.params_t)
+            ],
+            "artifacts": {},
+        }
+
+    # -- shape helpers ----------------------------------------------------
+    def _batch_avals(self):
+        b, s = self.tc.batch_size, self.cfg.seq_len
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        tgt = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return tok, tgt
+
+    def _tree_avals(self):
+        return jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), self.params_t
+        )
+
+    # -- artifact writers -------------------------------------------------
+    def _write(self, key: str, hlo: str, inputs, outputs):
+        fname = f"{self.cfg.name}.{key}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(hlo)
+        self.manifest["artifacts"][key] = {
+            "file": fname,
+            "sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(f"  {fname}: {len(hlo) / 1e6:.2f} MB, "
+              f"{len(inputs)} inputs, {len(outputs)} outputs")
+
+    def build_train_step(self):
+        step_fn = M.make_train_step(self.cfg, self.tc, self.impl)
+        pt = self._tree_avals()
+        tok, tgt = self._batch_avals()
+        n_leaves = len(M.flatten(pt))
+
+        def flat(*args):
+            p = M.unflatten(pt, list(args[:n_leaves]))
+            m = M.unflatten(pt, list(args[n_leaves:2 * n_leaves]))
+            v = M.unflatten(pt, list(args[2 * n_leaves:3 * n_leaves]))
+            step, tokens, targets = args[3 * n_leaves:]
+            np_, nm, nv, loss = step_fn(p, m, v, step, tokens, targets)
+            return tuple(M.flatten(np_) + M.flatten(nm) + M.flatten(nv) + [loss])
+
+        leaves = M.flatten(pt)
+        scalar = jax.ShapeDtypeStruct((), jnp.float32)
+        args = leaves * 3 + [scalar, tok, tgt]
+        lowered = jax.jit(flat).lower(*args)
+        inputs = (
+            _spec_leaves(pt, "param", "")
+            + _spec_leaves(pt, "opt_m", "m.")
+            + _spec_leaves(pt, "opt_v", "v.")
+            + [_iospec("step", "step", scalar),
+               _iospec("tokens", "batch_tokens", tok),
+               _iospec("targets", "batch_targets", tgt)]
+        )
+        outputs = (
+            _spec_leaves(pt, "param", "")
+            + _spec_leaves(pt, "opt_m", "m.")
+            + _spec_leaves(pt, "opt_v", "v.")
+            + [_iospec("loss", "loss", scalar)]
+        )
+        self._write("train_step", to_hlo_text(lowered), inputs, outputs)
+
+    def build_train_chunk(self, chunk: int):
+        step_fn = M.make_train_chunk(self.cfg, self.tc, self.impl, chunk)
+        pt = self._tree_avals()
+        b, s = self.tc.batch_size, self.cfg.seq_len
+        tok = jax.ShapeDtypeStruct((chunk, b, s), jnp.int32)
+        tgt = jax.ShapeDtypeStruct((chunk, b, s), jnp.int32)
+        n_leaves = len(M.flatten(pt))
+
+        def flat(*args):
+            p = M.unflatten(pt, list(args[:n_leaves]))
+            m = M.unflatten(pt, list(args[n_leaves:2 * n_leaves]))
+            v = M.unflatten(pt, list(args[2 * n_leaves:3 * n_leaves]))
+            step, tokens, targets = args[3 * n_leaves:]
+            np_, nm, nv, losses = step_fn(p, m, v, step, tokens, targets)
+            return tuple(
+                M.flatten(np_) + M.flatten(nm) + M.flatten(nv) + [losses]
+            )
+
+        scalar = jax.ShapeDtypeStruct((), jnp.float32)
+        leaves = M.flatten(pt)
+        lowered = jax.jit(flat).lower(*(leaves * 3 + [scalar, tok, tgt]))
+        losses = jax.ShapeDtypeStruct((chunk,), jnp.float32)
+        inputs = (
+            _spec_leaves(pt, "param", "")
+            + _spec_leaves(pt, "opt_m", "m.")
+            + _spec_leaves(pt, "opt_v", "v.")
+            + [_iospec("step", "step", scalar),
+               _iospec("tokens", "batch_tokens", tok),
+               _iospec("targets", "batch_targets", tgt)]
+        )
+        outputs = (
+            _spec_leaves(pt, "param", "")
+            + _spec_leaves(pt, "opt_m", "m.")
+            + _spec_leaves(pt, "opt_v", "v.")
+            + [_iospec("losses", "loss", losses)]
+        )
+        self._write(f"train_chunk_{chunk}", to_hlo_text(lowered),
+                    inputs, outputs)
+
+    def build_eval_step(self):
+        step_fn = M.make_eval_step(self.cfg, self.impl)
+        pt = self._tree_avals()
+        tok, tgt = self._batch_avals()
+        n_leaves = len(M.flatten(pt))
+
+        def flat(*args):
+            p = M.unflatten(pt, list(args[:n_leaves]))
+            tokens, targets = args[n_leaves:]
+            return step_fn(p, tokens, targets)
+
+        lowered = jax.jit(flat).lower(*(M.flatten(pt) + [tok, tgt]))
+        scalar = jax.ShapeDtypeStruct((), jnp.float32)
+        inputs = _spec_leaves(pt, "param", "") + [
+            _iospec("tokens", "batch_tokens", tok),
+            _iospec("targets", "batch_targets", tgt),
+        ]
+        outputs = [
+            _iospec("sum_nll", "sum_nll", scalar),
+            _iospec("token_count", "token_count", scalar),
+        ]
+        self._write("eval_step", to_hlo_text(lowered), inputs, outputs)
+
+    def build_outer_step(self):
+        step_fn = M.make_outer_step(self.impl)
+        pt = self._tree_avals()
+        n_leaves = len(M.flatten(pt))
+
+        def flat(*args):
+            p = M.unflatten(pt, list(args[:n_leaves]))
+            d = M.unflatten(pt, list(args[n_leaves:2 * n_leaves]))
+            m = M.unflatten(pt, list(args[2 * n_leaves:3 * n_leaves]))
+            lr, mu = args[3 * n_leaves:]
+            np_, nm = step_fn(p, d, m, lr, mu)
+            return tuple(M.flatten(np_) + M.flatten(nm))
+
+        scalar = jax.ShapeDtypeStruct((), jnp.float32)
+        leaves = M.flatten(pt)
+        lowered = jax.jit(flat).lower(*(leaves * 3 + [scalar, scalar]))
+        inputs = (
+            _spec_leaves(pt, "param", "")
+            + _spec_leaves(pt, "outer_delta", "delta.")
+            + _spec_leaves(pt, "outer_mom", "mom.")
+            + [_iospec("lr", "outer_lr", scalar),
+               _iospec("mu", "outer_mu", scalar)]
+        )
+        outputs = (
+            _spec_leaves(pt, "param", "")
+            + _spec_leaves(pt, "outer_mom", "mom.")
+        )
+        self._write("outer_step", to_hlo_text(lowered), inputs, outputs)
+
+    def build_grad_step(self):
+        step_fn = M.make_grad_step(self.cfg, self.tc, self.impl)
+        pt = self._tree_avals()
+        tok, tgt = self._batch_avals()
+        n_leaves = len(M.flatten(pt))
+
+        def flat(*args):
+            p = M.unflatten(pt, list(args[:n_leaves]))
+            tokens, targets = args[n_leaves:]
+            grads, loss = step_fn(p, tokens, targets)
+            return tuple(M.flatten(grads) + [loss])
+
+        lowered = jax.jit(flat).lower(*(M.flatten(pt) + [tok, tgt]))
+        scalar = jax.ShapeDtypeStruct((), jnp.float32)
+        inputs = _spec_leaves(pt, "param", "") + [
+            _iospec("tokens", "batch_tokens", tok),
+            _iospec("targets", "batch_targets", tgt),
+        ]
+        outputs = _spec_leaves(pt, "grad", "g.") + [
+            _iospec("loss", "loss", scalar)
+        ]
+        self._write("grad_step", to_hlo_text(lowered), inputs, outputs)
+
+    def build_apply_update(self):
+        step_fn = M.make_apply_update(self.cfg, self.tc, self.impl)
+        pt = self._tree_avals()
+        n_leaves = len(M.flatten(pt))
+
+        def flat(*args):
+            p = M.unflatten(pt, list(args[:n_leaves]))
+            m = M.unflatten(pt, list(args[n_leaves:2 * n_leaves]))
+            v = M.unflatten(pt, list(args[2 * n_leaves:3 * n_leaves]))
+            g = M.unflatten(pt, list(args[3 * n_leaves:4 * n_leaves]))
+            step = args[4 * n_leaves]
+            np_, nm, nv = step_fn(p, m, v, g, step)
+            return tuple(M.flatten(np_) + M.flatten(nm) + M.flatten(nv))
+
+        scalar = jax.ShapeDtypeStruct((), jnp.float32)
+        leaves = M.flatten(pt)
+        lowered = jax.jit(flat).lower(*(leaves * 4 + [scalar]))
+        inputs = (
+            _spec_leaves(pt, "param", "")
+            + _spec_leaves(pt, "opt_m", "m.")
+            + _spec_leaves(pt, "opt_v", "v.")
+            + _spec_leaves(pt, "grad", "g.")
+            + [_iospec("step", "step", scalar)]
+        )
+        outputs = (
+            _spec_leaves(pt, "param", "")
+            + _spec_leaves(pt, "opt_m", "m.")
+            + _spec_leaves(pt, "opt_v", "v.")
+        )
+        self._write("apply_update", to_hlo_text(lowered), inputs, outputs)
+
+    def build_fwd_logits(self):
+        fwd = M.make_fwd_logits(self.cfg, self.impl)
+        pt = self._tree_avals()
+        tok, _ = self._batch_avals()
+        n_leaves = len(M.flatten(pt))
+
+        def flat(*args):
+            p = M.unflatten(pt, list(args[:n_leaves]))
+            return (fwd(p, args[n_leaves]),)
+
+        lowered = jax.jit(flat).lower(*(M.flatten(pt) + [tok]))
+        logits = jax.ShapeDtypeStruct(
+            (self.tc.batch_size, self.cfg.seq_len, self.cfg.vocab_size),
+            jnp.float32,
+        )
+        inputs = _spec_leaves(pt, "param", "") + [
+            _iospec("tokens", "batch_tokens", tok)
+        ]
+        outputs = [_iospec("logits", "logits", logits)]
+        self._write("fwd_logits", to_hlo_text(lowered), inputs, outputs)
+
+    def build_init_params(self, seed: int = 0):
+        """Init as an artifact too, so Rust runs with zero numpy on its side."""
+        def flat():
+            return tuple(M.flatten(M.init_params(self.cfg, seed)))
+
+        lowered = jax.jit(flat).lower()
+        pt = self._tree_avals()
+        self._write("init_params", to_hlo_text(lowered), [],
+                    _spec_leaves(pt, "param", ""))
+
+    def finalize(self):
+        path = os.path.join(self.out_dir, f"{self.cfg.name}.manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"  {os.path.basename(path)} written")
+
+
+def build(config_name: str, impl: str, out_dir: str,
+          batch_size: int | None = None, seq_len: int | None = None,
+          chunks: tuple = (5, 25)):
+    cfg = model_config(config_name)
+    tc = train_config(config_name)
+    if batch_size is not None:
+        tc = type(tc)(**{**tc.__dict__, "batch_size": batch_size})
+    if seq_len is not None:
+        cfg = type(cfg)(**{**cfg.__dict__, "seq_len": seq_len})
+    if impl == "pallas":
+        # Distinct artifact-set name so the pallas build never clobbers the
+        # ref build; rust loads it as model "<name>_pallas".
+        cfg = type(cfg)(**{**cfg.__dict__, "name": f"{cfg.name}_pallas"})
+    print(f"building artifacts: config={cfg.name} kernels={impl} "
+          f"params={cfg.param_count():,}")
+    b = ArtifactBuilder(cfg, tc, impl, out_dir)
+    b.build_train_step()
+    for chunk in chunks:
+        b.build_train_chunk(chunk)
+    b.build_eval_step()
+    b.build_outer_step()
+    b.build_grad_step()
+    b.build_apply_update()
+    b.build_fwd_logits()
+    b.build_init_params()
+    b.finalize()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="micro",
+                    help="model preset, or comma list (nano,micro,tiny)")
+    ap.add_argument("--kernels", default="ref", choices=["ref", "pallas"])
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch-size", type=int, default=None)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--chunks", default="5,25",
+                    help="train_chunk scan lengths, comma list")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    chunks = tuple(int(c) for c in args.chunks.split(",") if c.strip())
+    for name in args.config.split(","):
+        build(name.strip(), args.kernels, args.out_dir,
+              args.batch_size, args.seq_len, chunks)
+
+
+if __name__ == "__main__":
+    main()

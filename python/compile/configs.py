@@ -1,0 +1,111 @@
+"""Model / training configuration presets.
+
+Paper-parity presets (``60m``/``150m``/``400m``) follow Table 1 of the
+DiLoCo paper (chinchilla-style decoder-only transformers). Scaled tiers
+(``nano``/``micro``/``tiny``) preserve the architecture family at sizes a
+single-core CPU PJRT client can train; the scale map lives in DESIGN.md §6.
+
+Everything here is *build-time only*: these dataclasses parameterize the
+AOT lowering in ``aot.py`` and are echoed into the artifact manifest so the
+Rust side (``config::presets``) can assert it agrees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer architecture (chinchilla-style)."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_head: int  # K/V size per head (Table 1)
+    vocab_size: int
+    seq_len: int
+    d_ff_mult: int = 4  # MLP hidden = d_ff_mult * d_model
+
+    @property
+    def d_ff(self) -> int:
+        return self.d_ff_mult * self.d_model
+
+    def param_count(self) -> int:
+        """Exact parameter count of init_params() for this config."""
+        d, dh, nh, v, s = (
+            self.d_model,
+            self.d_head,
+            self.n_heads,
+            self.vocab_size,
+            self.seq_len,
+        )
+        attn = d * (nh * dh) * 3 + (nh * dh) * d  # wq wk wv + wo
+        mlp = d * self.d_ff + self.d_ff + self.d_ff * d + d
+        ln = 2 * d  # gain + bias
+        block = attn + mlp + 2 * ln
+        embed = v * d + s * d  # token + learned positional
+        head = d * v
+        return embed + self.n_layers * block + 2 * d + head
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Inner-optimization hyperparameters (paper Table 5, scaled)."""
+
+    batch_size: int
+    peak_lr: float = 4e-4
+    warmup_steps: int = 1000
+    total_steps: int = 88_000  # cosine decay horizon
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: float = 1.0  # 0.0 disables
+
+
+# --- Paper-parity presets (Table 1; batch 512, seq 1024, Table 5) -------
+_PAPER = {
+    "60m": ModelConfig("60m", 3, 896, 16, 64, 32_000, 1024),
+    "150m": ModelConfig("150m", 12, 896, 16, 64, 32_000, 1024),
+    "400m": ModelConfig("400m", 12, 1536, 12, 128, 32_000, 1024),
+}
+
+# --- Scaled tiers for the 1-core CPU testbed (DESIGN.md §6) -------------
+_SCALED = {
+    "nano": ModelConfig("nano", 2, 64, 4, 16, 256, 32),
+    "micro": ModelConfig("micro", 4, 128, 4, 32, 512, 64),
+    "tiny": ModelConfig("tiny", 8, 256, 8, 32, 2048, 128),
+}
+
+MODEL_PRESETS: Dict[str, ModelConfig] = {**_PAPER, **_SCALED}
+
+TRAIN_PRESETS: Dict[str, TrainConfig] = {
+    "60m": TrainConfig(batch_size=512),
+    "150m": TrainConfig(batch_size=512),
+    "400m": TrainConfig(batch_size=512),
+    # Scaled: shorter horizons, proportional warmup; batch sized for 1 core.
+    "nano": TrainConfig(batch_size=8, warmup_steps=20, total_steps=1_600),
+    "micro": TrainConfig(batch_size=8, warmup_steps=40, total_steps=3_200),
+    "tiny": TrainConfig(batch_size=16, warmup_steps=60, total_steps=2_400),
+}
+
+
+def model_config(name: str) -> ModelConfig:
+    try:
+        return MODEL_PRESETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown model preset {name!r}; have {sorted(MODEL_PRESETS)}"
+        ) from None
+
+
+def train_config(name: str) -> TrainConfig:
+    try:
+        return TRAIN_PRESETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown train preset {name!r}; have {sorted(TRAIN_PRESETS)}"
+        ) from None

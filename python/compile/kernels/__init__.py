@@ -1,0 +1,33 @@
+"""L1 Pallas kernels for the DiLoCo compute hot-spots.
+
+``ref`` holds the pure-jnp oracles; each sibling module implements the same
+contract as a Pallas kernel (interpret-mode on CPU). ``select(impl)``
+returns the kernel namespace the L2 model should call — ``"ref"`` for the
+fast XLA-fused default artifacts, ``"pallas"`` for the composition-proof
+artifacts.
+"""
+
+from __future__ import annotations
+
+import types
+
+from . import adamw, attention, nesterov, ref, xent
+
+
+def select(impl: str) -> types.SimpleNamespace:
+    """Kernel namespace with a uniform surface for the L2 model."""
+    if impl == "ref":
+        return types.SimpleNamespace(
+            causal_attention=lambda q, k, v: ref.causal_attention(q, k, v),
+            softmax_xent=lambda lg, tg: ref.softmax_xent(lg, tg)[0],
+            adamw_update=ref.adamw_update,
+            nesterov_update=ref.nesterov_update,
+        )
+    if impl == "pallas":
+        return types.SimpleNamespace(
+            causal_attention=lambda q, k, v: attention.causal_attention(q, k, v),
+            softmax_xent=lambda lg, tg: xent.softmax_xent(lg, tg),
+            adamw_update=adamw.adamw_update,
+            nesterov_update=nesterov.nesterov_update,
+        )
+    raise ValueError(f"unknown kernel impl {impl!r} (want 'ref' or 'pallas')")

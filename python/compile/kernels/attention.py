@@ -1,0 +1,129 @@
+"""Fused causal flash-attention as a Pallas kernel (TPU-shaped, interpret on CPU).
+
+Hardware adaptation (DESIGN.md §7): the CUDA flash-attention insight — never
+materialize the S×S score matrix in HBM, stream K/V tiles through fast
+memory with an online softmax — maps onto TPU as BlockSpec-driven HBM→VMEM
+tile streaming with per-tile ``jnp.dot`` contractions feeding the MXU. The
+grid is (batch·heads, q_tiles); K/V tiles stream in an inner ``fori_loop``.
+Online-softmax accumulators (running max ``m``, normalizer ``l``, weighted
+sum ``acc``) live in VMEM for the lifetime of one q-tile.
+
+On this backend Pallas must run with ``interpret=True`` (CPU PJRT cannot
+execute Mosaic custom-calls), so this path is a *correctness + composition*
+artifact; the ref path produces the default fast artifacts.
+
+The public entry ``causal_attention`` carries a ``jax.custom_vjp``: forward
+is the Pallas kernel, backward is the exact flash backward recurrence in
+pure jnp (re-computing probabilities tile-free — fine at build time, and
+numerically identical to differentiating the reference).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_Q = 16
+DEFAULT_BLOCK_K = 16
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_k, seq_len):
+    """One (batch·head, q-tile) grid cell of causal flash attention.
+
+    q_ref: (block_q, d) VMEM tile; k_ref/v_ref: (S, d) — the full K/V rows
+    for this head, streamed block_k at a time; o_ref: (block_q, d) output.
+    """
+    block_q = q_ref.shape[0]
+    d = q_ref.shape[1]
+    q_tile_idx = pl.program_id(1)
+    q_start = q_tile_idx * block_q
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    # Online-softmax accumulators (the VMEM-resident state of flash attn).
+    m0 = jnp.full((block_q,), ref.NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+
+    # Causality: q row (q_start + i) attends keys <= q_start + i, so K tiles
+    # beyond the current q tile's last row contribute nothing — skip them.
+    num_k_tiles = (q_start + block_q + block_k - 1) // block_k
+
+    def body(kt, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_start = kt * block_k
+        k_tile = jax.lax.dynamic_slice_in_dim(k_ref[...], k_start, block_k, 0)
+        v_tile = jax.lax.dynamic_slice_in_dim(v_ref[...], k_start, block_k, 0)
+        s = jnp.dot(  # (block_q, block_k) — MXU contraction on real TPU
+            q, k_tile.astype(jnp.float32).T, preferred_element_type=jnp.float32
+        )
+        # Causal mask within the tile.
+        q_ids = q_start + jax.lax.iota(jnp.int32, block_q)
+        k_ids = k_start + jax.lax.iota(jnp.int32, block_k)
+        s = jnp.where(q_ids[:, None] >= k_ids[None, :], s, ref.NEG_INF)
+
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(
+            p, v_tile.astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_k_tiles, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def causal_attention(q, k, v, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Pallas causal attention; q/k/v: (B, H, S, Dh) → (B, H, S, Dh)."""
+    return _forward(q, k, v, block_q, block_k)
+
+
+def _forward(q, k, v, block_q, block_k):
+    b, h, s, d = q.shape
+    if s % block_q or s % block_k:
+        raise ValueError(f"seq_len {s} must divide block sizes {block_q}/{block_k}")
+    scale = 1.0 / (d**0.5)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, scale=scale, block_k=block_k, seq_len=s
+        ),
+        grid=(b * h, s // block_q),
+        in_specs=[
+            # Q streams one (block_q, d) tile per grid cell…
+            pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+            # …K/V expose the whole row for this head; the kernel's inner
+            # fori_loop is the HBM→VMEM tile schedule.
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+def _fwd(q, k, v, block_q, block_k):
+    out = _forward(q, k, v, block_q, block_k)
+    return out, (q, k, v)
+
+
+def _bwd(block_q, block_k, res, g):
+    # Exact attention backward in jnp (build-time only; see module docstring).
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.causal_attention(q_, k_, v_), q, k, v)
+    return vjp(g)
+
+
+causal_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,59 @@
+"""Outer Nesterov-momentum update as a Pallas kernel.
+
+Same fused-elementwise pattern as the AdamW kernel: one VMEM pass over
+(θ, Δ, μ-buffer) per tile. This backs the ``outer_step`` artifact — the
+XLA-accelerated alternative to the Rust-native outer optimizer
+(``coordinator::opt``), cross-checked against it in the Rust tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _nesterov_kernel(p_ref, d_ref, m_ref, lr_ref, mu_ref, po_ref, mo_ref):
+    p = p_ref[...].astype(jnp.float32)
+    delta = d_ref[...].astype(jnp.float32)
+    mom = m_ref[...].astype(jnp.float32)
+    lr = lr_ref[0]
+    mu = mu_ref[0]
+    mom_new = mu * mom + delta
+    p_new = p - lr * (delta + mu * mom_new)
+    po_ref[...] = p_new.astype(po_ref.dtype)
+    mo_ref[...] = mom_new.astype(mo_ref.dtype)
+
+
+def nesterov_update(p, delta, mom, *, lr, mu, block=DEFAULT_BLOCK):
+    """Fused Nesterov outer step on flat f32 tensors → (θ', μ')."""
+    (n,) = p.shape
+    pad = (-n) % block
+    if pad:
+        zeros = jnp.zeros((pad,), p.dtype)
+        p, delta, mom = (jnp.concatenate([t, zeros]) for t in (p, delta, mom))
+    npad = n + pad
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1)
+    mu_arr = jnp.asarray(mu, jnp.float32).reshape(1)
+    p2, m2 = pl.pallas_call(
+        _nesterov_kernel,
+        grid=(npad // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((npad,), p.dtype)] * 2,
+        interpret=True,
+    )(p, delta, mom, lr_arr, mu_arr)
+    if pad:
+        p2, m2 = p2[:n], m2[:n]
+    return p2, m2

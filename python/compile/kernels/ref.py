@@ -1,0 +1,78 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the semantic ground truth: each Pallas kernel in this package is
+validated against the function of the same name here (pytest +
+hypothesis sweeps in ``python/tests/test_kernels.py``). They are also the
+default implementation compiled into the AOT artifacts (``--kernels ref``),
+since XLA:CPU fuses them well while Pallas must run in interpret mode on
+this backend (see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def causal_attention(q, k, v, scale=None):
+    """Multi-head causal attention.
+
+    q, k, v: (B, H, S, Dh). Returns (B, H, S, Dh).
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    s = q.shape[2]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def softmax_xent(logits, targets):
+    """Token-level negative log-likelihood.
+
+    logits: (N, V) float; targets: (N,) int32. Returns nll (N,) and
+    logsumexp (N,) — the latter is the residual reused by the bwd kernel.
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return lse - picked, lse
+
+
+def softmax_xent_grad(logits, lse, targets, g):
+    """Gradient of ``softmax_xent`` nll wrt logits.
+
+    d nll_i / d logits_ij = softmax(logits)_ij - 1[j == targets_i],
+    scaled by the incoming cotangent g (N,).
+    """
+    probs = jnp.exp(logits - lse[:, None])
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    return (probs - onehot) * g[:, None]
+
+
+def adamw_update(p, g, m, v, *, lr, b1, b2, eps, wd, step):
+    """One fused AdamW step on a flat tensor.
+
+    Decoupled weight decay (Loshchilov & Hutter 2019): the decay term uses
+    the *pre-update* parameters scaled by lr. ``step`` is 1-based.
+    """
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    m_hat = m_new / (1.0 - b1**step)
+    v_hat = v_new / (1.0 - b2**step)
+    p_new = p - lr * (m_hat / (jnp.sqrt(v_hat) + eps) + wd * p)
+    return p_new, m_new, v_new
+
+
+def nesterov_update(p, delta, mom, *, lr, mu):
+    """One outer Nesterov step (Sutskever et al. 2013, PyTorch convention).
+
+    ``delta`` is the averaged outer gradient Δ = mean_i(θ_prev - θ_i),
+    treated as a gradient: new_mom = μ·mom + Δ; θ' = θ - lr·(Δ + μ·new_mom).
+    """
+    mom_new = mu * mom + delta
+    p_new = p - lr * (delta + mu * mom_new)
+    return p_new, mom_new

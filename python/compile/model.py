@@ -1,0 +1,355 @@
+"""L2: chinchilla-style decoder-only transformer LM + fused train/eval steps.
+
+This module is build-time only. ``aot.py`` lowers the step functions defined
+here to HLO text; the Rust runtime executes them. Parameters are a nested
+dict pytree; :func:`flatten_spec` defines the *canonical leaf order* (sorted
+depth-first) that both the lowered HLO signature and the Rust-side manifest
+share — the Rust coordinator binds buffers by this order and never
+hard-codes the architecture.
+
+The compute hot-spots (attention, softmax-xent, AdamW, outer Nesterov) are
+delegated to the L1 kernel namespace selected by ``kernels.select(impl)``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import ModelConfig, TrainConfig
+
+Tree = Any
+
+
+# --------------------------------------------------------------------------
+# Pytree flattening with stable, named leaf order
+# --------------------------------------------------------------------------
+
+def flatten_spec(tree: Tree, prefix: str = "") -> List[Tuple[str, Any]]:
+    """Depth-first, key-sorted (name, leaf) pairs — the canonical order."""
+    if isinstance(tree, dict):
+        out: List[Tuple[str, Any]] = []
+        for key in sorted(tree):
+            out.extend(flatten_spec(tree[key], f"{prefix}{key}."))
+        return out
+    if isinstance(tree, (list, tuple)):
+        out = []
+        for i, sub in enumerate(tree):
+            out.extend(flatten_spec(sub, f"{prefix}{i}."))
+        return out
+    return [(prefix[:-1], tree)]
+
+
+def flatten(tree: Tree) -> List[Any]:
+    return [leaf for _, leaf in flatten_spec(tree)]
+
+
+def leaf_names(tree: Tree) -> List[str]:
+    return [name for name, _ in flatten_spec(tree)]
+
+
+def unflatten(template: Tree, leaves: List[Any]) -> Tree:
+    """Rebuild a tree shaped like ``template`` from canonical-order leaves."""
+    it = iter(leaves)
+
+    def go(node):
+        if isinstance(node, dict):
+            return {k: go(node[k]) for k in sorted(node)}
+        if isinstance(node, (list, tuple)):
+            return type(node)(go(s) for s in node)
+        return next(it)
+
+    out = go(template)
+    rest = list(it)
+    if rest:
+        raise ValueError(f"{len(rest)} extra leaves in unflatten")
+    return out
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Tree:
+    """GPT-2-style init: normal(0.02) matrices, zero biases, unit LN gains."""
+    key = jax.random.PRNGKey(seed)
+    d, dh, nh, v, s, ff = (
+        cfg.d_model, cfg.d_head, cfg.n_heads, cfg.vocab_size,
+        cfg.seq_len, cfg.d_ff,
+    )
+
+    def norm(key, shape, std=0.02):
+        return (jax.random.normal(key, shape) * std).astype(jnp.float32)
+
+    keys = iter(jax.random.split(key, 4 + 10 * cfg.n_layers))
+    blocks = []
+    for _ in range(cfg.n_layers):
+        blocks.append({
+            "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "attn": {
+                "wq": norm(next(keys), (d, nh * dh)),
+                "wk": norm(next(keys), (d, nh * dh)),
+                "wv": norm(next(keys), (d, nh * dh)),
+                # residual-branch projections scaled down per GPT-2
+                "wo": norm(next(keys), (nh * dh, d),
+                           std=0.02 / (2 * cfg.n_layers) ** 0.5),
+            },
+            "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "mlp": {
+                "w1": norm(next(keys), (d, ff)),
+                "b1": jnp.zeros((ff,)),
+                "w2": norm(next(keys), (ff, d),
+                           std=0.02 / (2 * cfg.n_layers) ** 0.5),
+                "b2": jnp.zeros((d,)),
+            },
+        })
+        for _ in range(4):  # burn the per-block spare keys deterministically
+            next(keys)
+    return {
+        "embed": {"w": norm(next(keys), (v, d))},
+        "pos": {"w": norm(next(keys), (s, d), std=0.01)},
+        "blocks": blocks,
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "head": {"w": norm(next(keys), (d, v))},
+    }
+
+
+def zeros_like_tree(tree: Tree) -> Tree:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def forward(params: Tree, tokens: jnp.ndarray, cfg: ModelConfig,
+            kern) -> jnp.ndarray:
+    """tokens (B, S) int32 → logits (B, S, V)."""
+    b, s = tokens.shape
+    nh, dh = cfg.n_heads, cfg.d_head
+    x = params["embed"]["w"][tokens] + params["pos"]["w"][None, :s]
+    for blk in params["blocks"]:
+        h = _layer_norm(x, blk["ln1"]["g"], blk["ln1"]["b"])
+        q = (h @ blk["attn"]["wq"]).reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+        k = (h @ blk["attn"]["wk"]).reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+        v = (h @ blk["attn"]["wv"]).reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+        att = kern.causal_attention(q, k, v)  # L1 hot-spot
+        att = att.transpose(0, 2, 1, 3).reshape(b, s, nh * dh)
+        x = x + att @ blk["attn"]["wo"]
+        h = _layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"])
+        h = jax.nn.gelu(h @ blk["mlp"]["w1"] + blk["mlp"]["b1"])
+        x = x + h @ blk["mlp"]["w2"] + blk["mlp"]["b2"]
+    x = _layer_norm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+    return x @ params["head"]["w"]
+
+
+def loss_fn(params: Tree, tokens, targets, cfg: ModelConfig, kern):
+    """Mean next-token nll over all positions."""
+    logits = forward(params, tokens, cfg, kern)
+    n = logits.shape[0] * logits.shape[1]
+    nll = kern.softmax_xent(
+        logits.reshape(n, cfg.vocab_size), targets.reshape(n)
+    )  # L1 hot-spot
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# Inner step: fwd/bwd + fused AdamW, lr schedule baked in
+# --------------------------------------------------------------------------
+
+def lr_schedule(step, tc: TrainConfig):
+    """Linear warmup → cosine decay to 10% of peak (chinchilla-style)."""
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - tc.warmup_steps)
+        / jnp.maximum(tc.total_steps - tc.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tc.peak_lr * warm * cos
+
+
+def _global_norm(tree: Tree):
+    return jnp.sqrt(
+        sum(jnp.sum(leaf**2) for leaf in flatten(tree))
+    )
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, impl: str = "ref"):
+    """(params, m, v, step, tokens, targets) → (params', m', v', loss)."""
+    kern = kernels.select(impl)
+
+    def train_step(params, m, v, step, tokens, targets):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, tokens, targets, cfg, kern
+        )
+        if tc.grad_clip > 0.0:
+            gn = _global_norm(grads)
+            scale = jnp.minimum(1.0, tc.grad_clip / (gn + 1e-12))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        lr = lr_schedule(step, tc)
+        step1 = step + 1.0  # AdamW bias correction is 1-based
+
+        new_p, new_m, new_v = [], [], []
+        for (name, p_leaf), g_leaf, m_leaf, v_leaf in zip(
+            flatten_spec(params), flatten(grads), flatten(m), flatten(v)
+        ):
+            shape = p_leaf.shape
+            pn, mn, vn = kern.adamw_update(  # L1 hot-spot
+                p_leaf.reshape(-1), g_leaf.reshape(-1),
+                m_leaf.reshape(-1), v_leaf.reshape(-1),
+                lr=lr, b1=tc.b1, b2=tc.b2, eps=tc.eps,
+                wd=tc.weight_decay, step=step1,
+            )
+            new_p.append(pn.reshape(shape))
+            new_m.append(mn.reshape(shape))
+            new_v.append(vn.reshape(shape))
+        return (
+            unflatten(params, new_p),
+            unflatten(m, new_m),
+            unflatten(v, new_v),
+            loss,
+        )
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, impl: str = "ref"):
+    """(params, tokens, targets) → (sum_nll, token_count)."""
+    kern = kernels.select(impl)
+
+    def eval_step(params, tokens, targets):
+        logits = forward(params, tokens, cfg, kern)
+        n = logits.shape[0] * logits.shape[1]
+        nll = kern.softmax_xent(
+            logits.reshape(n, cfg.vocab_size), targets.reshape(n)
+        )
+        return jnp.sum(nll), jnp.asarray(float(n), jnp.float32)
+
+    return eval_step
+
+
+def make_fwd_logits(cfg: ModelConfig, impl: str = "ref"):
+    """(params, tokens) → logits — debug / greedy-decode artifact."""
+    kern = kernels.select(impl)
+
+    def fwd_logits(params, tokens):
+        return forward(params, tokens, cfg, kern)
+
+    return fwd_logits
+
+
+def make_train_chunk(cfg: ModelConfig, tc: TrainConfig, impl: str = "ref",
+                     chunk: int = 25):
+    """(params, m, v, step0, tokens[C,B,S], targets[C,B,S])
+    → (params', m', v', losses[C]).
+
+    ``chunk`` inner AdamW steps fused into one XLA execution via
+    ``lax.scan``. This is the production inner loop: PJRT executions return
+    a single tuple buffer (host readback per call), so running C steps per
+    call amortizes the host round-trip to 1/C per step — and DiLoCo's
+    round structure (H ≫ 1 local steps between communications) makes the
+    boundary free: the coordinator needs the post-round parameters on the
+    host anyway to form the outer gradient.
+    """
+    step_fn = make_train_step(cfg, tc, impl)
+
+    def chunk_fn(params, m, v, step0, tokens, targets):
+        def body(carry, xs):
+            p, m_, v_, s = carry
+            tok, tgt = xs
+            p, m_, v_, loss = step_fn(p, m_, v_, s, tok, tgt)
+            return (p, m_, v_, s + 1.0), loss
+
+        (p, m_, v_, _), losses = jax.lax.scan(
+            body, (params, m, v, step0), (tokens, targets)
+        )
+        return p, m_, v_, losses
+
+    return chunk_fn
+
+
+def make_grad_step(cfg: ModelConfig, tc: TrainConfig, impl: str = "ref"):
+    """(params, tokens, targets) → (grads, loss) — no optimizer update.
+
+    Backs the data-parallel / microbatching baselines (Table 2): the L3
+    coordinator averages gradients across microbatches or simulated DP
+    replicas, then applies one ``apply_update`` step.
+    """
+    kern = kernels.select(impl)
+
+    def grad_step(params, tokens, targets):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, tokens, targets, cfg, kern
+        )
+        return grads, loss
+
+    return grad_step
+
+
+def make_apply_update(cfg: ModelConfig, tc: TrainConfig, impl: str = "ref"):
+    """(params, m, v, grads, step) → (params', m', v') — AdamW on given grads."""
+    kern = kernels.select(impl)
+
+    def apply_update(params, m, v, grads, step):
+        if tc.grad_clip > 0.0:
+            gn = _global_norm(grads)
+            scale = jnp.minimum(1.0, tc.grad_clip / (gn + 1e-12))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        lr = lr_schedule(step, tc)
+        step1 = step + 1.0
+        new_p, new_m, new_v = [], [], []
+        for p_leaf, g_leaf, m_leaf, v_leaf in zip(
+            flatten(params), flatten(grads), flatten(m), flatten(v)
+        ):
+            shape = p_leaf.shape
+            pn, mn, vn = kern.adamw_update(
+                p_leaf.reshape(-1), g_leaf.reshape(-1),
+                m_leaf.reshape(-1), v_leaf.reshape(-1),
+                lr=lr, b1=tc.b1, b2=tc.b2, eps=tc.eps,
+                wd=tc.weight_decay, step=step1,
+            )
+            new_p.append(pn.reshape(shape))
+            new_m.append(mn.reshape(shape))
+            new_v.append(vn.reshape(shape))
+        return (
+            unflatten(params, new_p),
+            unflatten(m, new_m),
+            unflatten(v, new_v),
+        )
+
+    return apply_update
+
+
+# --------------------------------------------------------------------------
+# Outer step (Nesterov) over the whole parameter tree
+# --------------------------------------------------------------------------
+
+def make_outer_step(impl: str = "ref"):
+    """(params, delta, momentum, lr, mu) → (params', momentum')."""
+    kern = kernels.select(impl)
+
+    def outer_step(params, delta, momentum, lr, mu):
+        new_p, new_m = [], []
+        for p_leaf, d_leaf, m_leaf in zip(
+            flatten(params), flatten(delta), flatten(momentum)
+        ):
+            shape = p_leaf.shape
+            pn, mn = kern.nesterov_update(
+                p_leaf.reshape(-1), d_leaf.reshape(-1), m_leaf.reshape(-1),
+                lr=lr, mu=mu,
+            )
+            new_p.append(pn.reshape(shape))
+            new_m.append(mn.reshape(shape))
+        return unflatten(params, new_p), unflatten(momentum, new_m)
+
+    return outer_step

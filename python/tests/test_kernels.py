@@ -1,0 +1,260 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Fixed-shape exactness checks plus hypothesis sweeps over shapes/dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adamw, attention, nesterov, ref, xent
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 2e-5
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+class TestAttention:
+    def test_matches_ref_default_shape(self):
+        kq, kk, kv = keys(0, 3)
+        q = jax.random.normal(kq, (2, 4, 32, 16))
+        k = jax.random.normal(kk, (2, 4, 32, 16))
+        v = jax.random.normal(kv, (2, 4, 32, 16))
+        np.testing.assert_allclose(
+            attention.causal_attention(q, k, v),
+            ref.causal_attention(q, k, v),
+            atol=ATOL,
+        )
+
+    def test_causality(self):
+        """Output at position t must not depend on inputs at positions > t."""
+        kq, kk, kv, kp = keys(1, 4)
+        q = jax.random.normal(kq, (1, 2, 32, 16))
+        k = jax.random.normal(kk, (1, 2, 32, 16))
+        v = jax.random.normal(kv, (1, 2, 32, 16))
+        out = attention.causal_attention(q, k, v)
+        # Perturb the future half of k/v; prefix output must be unchanged.
+        noise = jax.random.normal(kp, (1, 2, 16, 16)) * 10
+        k2 = k.at[:, :, 16:].add(noise)
+        v2 = v.at[:, :, 16:].add(noise)
+        out2 = attention.causal_attention(q, k2, v2)
+        np.testing.assert_allclose(out[:, :, :16], out2[:, :, :16], atol=ATOL)
+
+    def test_grad_matches_ref(self):
+        kq, kk, kv = keys(2, 3)
+        q = jax.random.normal(kq, (1, 2, 32, 16))
+        k = jax.random.normal(kk, (1, 2, 32, 16))
+        v = jax.random.normal(kv, (1, 2, 32, 16))
+
+        def loss_pallas(q, k, v):
+            return jnp.sum(attention.causal_attention(q, k, v) ** 2)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(ref.causal_attention(q, k, v) ** 2)
+
+        gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(gp, gr):
+            np.testing.assert_allclose(a, b, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        h=st.integers(1, 4),
+        s_tiles=st.integers(1, 4),
+        d=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shape_sweep(self, b, h, s_tiles, d, seed):
+        s = 16 * s_tiles
+        kq, kk, kv = keys(seed, 3)
+        q = jax.random.normal(kq, (b, h, s, d))
+        k = jax.random.normal(kk, (b, h, s, d))
+        v = jax.random.normal(kv, (b, h, s, d))
+        np.testing.assert_allclose(
+            attention.causal_attention(q, k, v),
+            ref.causal_attention(q, k, v),
+            atol=ATOL,
+        )
+
+    def test_rejects_misaligned_seq(self):
+        q = jnp.zeros((1, 1, 10, 8))
+        with pytest.raises(ValueError):
+            attention.causal_attention(q, q, q)
+
+
+# --------------------------------------------------------------------------
+# Softmax cross-entropy
+# --------------------------------------------------------------------------
+
+class TestXent:
+    def test_matches_ref(self):
+        kl, kt = keys(3, 2)
+        logits = jax.random.normal(kl, (64, 100)) * 3
+        targets = jax.random.randint(kt, (64,), 0, 100)
+        np.testing.assert_allclose(
+            xent.softmax_xent(logits, targets),
+            ref.softmax_xent(logits, targets)[0],
+            atol=ATOL,
+        )
+
+    def test_grad_matches_ref(self):
+        kl, kt = keys(4, 2)
+        logits = jax.random.normal(kl, (32, 50))
+        targets = jax.random.randint(kt, (32,), 0, 50)
+        gp = jax.grad(lambda l: jnp.mean(xent.softmax_xent(l, targets)))(logits)
+        gr = jax.grad(
+            lambda l: jnp.mean(ref.softmax_xent(l, targets)[0])
+        )(logits)
+        np.testing.assert_allclose(gp, gr, atol=ATOL)
+
+    def test_uniform_logits_is_log_v(self):
+        """nll of uniform logits must be exactly log(V)."""
+        v = 128
+        logits = jnp.zeros((32, v))
+        targets = jnp.arange(32, dtype=jnp.int32)
+        nll = xent.softmax_xent(logits, targets)
+        np.testing.assert_allclose(nll, np.log(v), rtol=1e-6)
+
+    def test_extreme_logits_stable(self):
+        """No overflow for large-magnitude logits (online max-subtract)."""
+        logits = jnp.array([[1e4, -1e4, 0.0, 5.0]] * 32, jnp.float32)
+        targets = jnp.zeros((32,), jnp.int32)
+        nll = xent.softmax_xent(logits, targets)
+        assert np.all(np.isfinite(nll))
+        np.testing.assert_allclose(nll, 0.0, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 4),
+        v=st.sampled_from([17, 64, 311]),
+        scale=st.floats(0.1, 10.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shape_sweep(self, n_blocks, v, scale, seed):
+        n = 32 * n_blocks
+        kl, kt = keys(seed, 2)
+        logits = jax.random.normal(kl, (n, v)) * scale
+        targets = jax.random.randint(kt, (n,), 0, v)
+        np.testing.assert_allclose(
+            xent.softmax_xent(logits, targets),
+            ref.softmax_xent(logits, targets)[0],
+            atol=1e-4,
+        )
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+HP = dict(lr=3e-4, b1=0.9, b2=0.999, eps=1e-8, wd=0.1)
+
+
+class TestAdamW:
+    def test_matches_ref(self):
+        kp, kg, km, kv = keys(5, 4)
+        p = jax.random.normal(kp, (5000,))
+        g = jax.random.normal(kg, (5000,))
+        m = jax.random.normal(km, (5000,)) * 0.1
+        v = jax.random.normal(kv, (5000,)) ** 2
+        got = adamw.adamw_update(p, g, m, v, step=7.0, **HP)
+        want = ref.adamw_update(p, g, m, v, step=7.0, **HP)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, atol=ATOL)
+
+    def test_non_multiple_of_block(self):
+        """Padding path: n not divisible by the VMEM block size."""
+        kp, kg = keys(6, 2)
+        n = 4096 + 37
+        p = jax.random.normal(kp, (n,))
+        g = jax.random.normal(kg, (n,))
+        z = jnp.zeros((n,))
+        got = adamw.adamw_update(p, g, z, z, step=1.0, **HP)
+        want = ref.adamw_update(p, g, z, z, step=1.0, **HP)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, atol=ATOL)
+
+    def test_zero_grad_pure_decay(self):
+        """g=0, m=v=0 ⇒ update is exactly the decoupled weight-decay term."""
+        p = jnp.ones((100,))
+        z = jnp.zeros((100,))
+        p2, m2, v2 = adamw.adamw_update(p, z, z, z, step=1.0, **HP)
+        np.testing.assert_allclose(p2, p * (1 - HP["lr"] * HP["wd"]), atol=1e-7)
+        np.testing.assert_allclose(m2, 0.0)
+        np.testing.assert_allclose(v2, 0.0)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        n=st.integers(1, 9000),
+        step=st.integers(1, 1000),
+        seed=st.integers(0, 2**16),
+    )
+    def test_size_sweep(self, n, step, seed):
+        kp, kg, km, kv = keys(seed, 4)
+        p = jax.random.normal(kp, (n,))
+        g = jax.random.normal(kg, (n,))
+        m = jax.random.normal(km, (n,)) * 0.01
+        v = jax.random.normal(kv, (n,)) ** 2
+        got = adamw.adamw_update(p, g, m, v, step=float(step), **HP)
+        want = ref.adamw_update(p, g, m, v, step=float(step), **HP)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# Outer Nesterov
+# --------------------------------------------------------------------------
+
+class TestNesterov:
+    def test_matches_ref(self):
+        kp, kd, km = keys(7, 3)
+        p = jax.random.normal(kp, (5000,))
+        d = jax.random.normal(kd, (5000,))
+        m = jax.random.normal(km, (5000,))
+        got = nesterov.nesterov_update(p, d, m, lr=0.7, mu=0.9)
+        want = ref.nesterov_update(p, d, m, lr=0.7, mu=0.9)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, atol=ATOL)
+
+    def test_mu_zero_is_sgd(self):
+        """μ=0 must reduce Nesterov to plain SGD: θ' = θ - lr·Δ."""
+        kp, kd = keys(8, 2)
+        p = jax.random.normal(kp, (1000,))
+        d = jax.random.normal(kd, (1000,))
+        p2, m2 = nesterov.nesterov_update(p, d, jnp.zeros_like(p), lr=0.5, mu=0.0)
+        np.testing.assert_allclose(p2, p - 0.5 * d, atol=1e-6)
+        np.testing.assert_allclose(m2, d, atol=1e-6)
+
+    def test_zero_delta_decays_momentum_only(self):
+        p = jnp.ones((100,))
+        m = jnp.ones((100,))
+        p2, m2 = nesterov.nesterov_update(p, jnp.zeros_like(p), m, lr=0.7, mu=0.9)
+        np.testing.assert_allclose(m2, 0.9, atol=1e-6)
+        np.testing.assert_allclose(p2, 1.0 - 0.7 * 0.81, atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        n=st.integers(1, 9000),
+        lr=st.floats(0.01, 1.0),
+        mu=st.floats(0.0, 0.99),
+        seed=st.integers(0, 2**16),
+    )
+    def test_size_sweep(self, n, lr, mu, seed):
+        kp, kd, km = keys(seed, 3)
+        p = jax.random.normal(kp, (n,))
+        d = jax.random.normal(kd, (n,))
+        m = jax.random.normal(km, (n,))
+        got = nesterov.nesterov_update(p, d, m, lr=lr, mu=mu)
+        want = ref.nesterov_update(p, d, m, lr=lr, mu=mu)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, atol=1e-4)

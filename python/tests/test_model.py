@@ -1,0 +1,237 @@
+"""L2 model: shapes, flatten invariants, schedule, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import (
+    MODEL_PRESETS, TRAIN_PRESETS, model_config, train_config,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = model_config("nano")
+TC = train_config("nano")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def batch(seed=0, b=None, s=None):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    b = b or TC.batch_size
+    s = s or CFG.seq_len
+    tok = jax.random.randint(k1, (b, s), 0, CFG.vocab_size)
+    tgt = jax.random.randint(k2, (b, s), 0, CFG.vocab_size)
+    return tok, tgt
+
+
+class TestFlatten:
+    def test_roundtrip(self, params):
+        leaves = M.flatten(params)
+        rebuilt = M.unflatten(params, leaves)
+        for (n1, a), (n2, b) in zip(
+            M.flatten_spec(params), M.flatten_spec(rebuilt)
+        ):
+            assert n1 == n2
+            np.testing.assert_array_equal(a, b)
+
+    def test_order_is_deterministic(self, params):
+        assert M.leaf_names(params) == M.leaf_names(params)
+
+    def test_names_are_canonical(self, params):
+        names = M.leaf_names(params)
+        assert "embed.w" in names
+        assert "blocks.0.attn.wq" in names
+        assert f"blocks.{CFG.n_layers - 1}.mlp.w2" in names
+        assert len(names) == len(set(names)), "duplicate leaf names"
+
+    def test_extra_leaves_rejected(self, params):
+        leaves = M.flatten(params)
+        with pytest.raises(ValueError):
+            M.unflatten(params, leaves + [leaves[0]])
+
+
+class TestParamCount:
+    @pytest.mark.parametrize("name", sorted(MODEL_PRESETS))
+    def test_param_count_formula(self, name):
+        """ModelConfig.param_count must equal the actual init tree size."""
+        cfg = MODEL_PRESETS[name]
+        if cfg.param_count() > 5_000_000:
+            shapes = jax.eval_shape(lambda: M.init_params(cfg))
+            n = sum(np.prod(l.shape) for _, l in M.flatten_spec(shapes))
+        else:
+            n = sum(l.size for _, l in M.flatten_spec(M.init_params(cfg)))
+        assert n == cfg.param_count()
+
+    def test_paper_sizes_are_plausible(self):
+        """Table 1 presets land near their nominal sizes."""
+        assert 40e6 < model_config("60m").param_count() < 90e6
+        assert 100e6 < model_config("150m").param_count() < 200e6
+        assert 280e6 < model_config("400m").param_count() < 520e6
+
+
+class TestForward:
+    def test_logit_shape(self, params):
+        tok, _ = batch()
+        logits = M.forward(params, tok, CFG, __import__(
+            "compile.kernels", fromlist=["select"]).select("ref"))
+        assert logits.shape == (TC.batch_size, CFG.seq_len, CFG.vocab_size)
+
+    def test_causality(self, params):
+        """Changing future tokens must not change past logits."""
+        from compile import kernels
+        kern = kernels.select("ref")
+        tok, _ = batch()
+        cut = CFG.seq_len // 2
+        tok2 = tok.at[:, cut:].set((tok[:, cut:] + 1) % CFG.vocab_size)
+        l1 = M.forward(params, tok, CFG, kern)
+        l2 = M.forward(params, tok2, CFG, kern)
+        np.testing.assert_allclose(l1[:, :cut], l2[:, :cut], atol=1e-4)
+
+    def test_initial_loss_near_log_vocab(self, params):
+        """Untrained model ≈ uniform predictor ⇒ loss ≈ log V."""
+        from compile import kernels
+        kern = kernels.select("ref")
+        tok, tgt = batch()
+        loss = M.loss_fn(params, tok, tgt, CFG, kern)
+        assert abs(float(loss) - np.log(CFG.vocab_size)) < 0.5
+
+
+class TestSchedule:
+    def test_warmup_starts_at_zero(self):
+        assert float(M.lr_schedule(jnp.asarray(0.0), TC)) == 0.0
+
+    def test_peak_after_warmup(self):
+        lr = float(M.lr_schedule(jnp.asarray(float(TC.warmup_steps)), TC))
+        assert abs(lr - TC.peak_lr) / TC.peak_lr < 1e-5
+
+    def test_decays_to_ten_percent(self):
+        lr = float(M.lr_schedule(jnp.asarray(float(TC.total_steps)), TC))
+        assert abs(lr - 0.1 * TC.peak_lr) / TC.peak_lr < 1e-5
+
+    def test_monotone_decay_after_peak(self):
+        steps = jnp.linspace(TC.warmup_steps, TC.total_steps, 50)
+        lrs = [float(M.lr_schedule(s, TC)) for s in steps]
+        assert all(a >= b - 1e-9 for a, b in zip(lrs, lrs[1:]))
+
+
+class TestTrainStep:
+    def test_loss_decreases(self, params):
+        step_fn = jax.jit(M.make_train_step(CFG, TC))
+        m = M.zeros_like_tree(params)
+        v = M.zeros_like_tree(params)
+        tok, tgt = batch()
+        p = params
+        first = None
+        for i in range(30):
+            p, m, v, loss = step_fn(p, m, v, float(i), tok, tgt)
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first - 0.5, (first, float(loss))
+
+    def test_grad_step_plus_apply_equals_train_step(self, params):
+        """grad_step → apply_update must be bitwise-equivalent to train_step."""
+        m = M.zeros_like_tree(params)
+        v = M.zeros_like_tree(params)
+        tok, tgt = batch(3)
+        fused = jax.jit(M.make_train_step(CFG, TC))
+        gstep = jax.jit(M.make_grad_step(CFG, TC))
+        apply = jax.jit(M.make_apply_update(CFG, TC))
+        p1, m1, v1, loss1 = fused(params, m, v, 5.0, tok, tgt)
+        grads, loss2 = gstep(params, tok, tgt)
+        p2, m2, v2 = apply(params, m, v, grads, 5.0)
+        np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-6)
+        for a, b in zip(M.flatten(p1), M.flatten(p2)):
+            np.testing.assert_allclose(a, b, atol=1e-7)
+        for a, b in zip(M.flatten(m1), M.flatten(m2)):
+            np.testing.assert_allclose(a, b, atol=1e-7)
+
+    def test_train_chunk_equals_stepwise(self, params):
+        """lax.scan chunk of C steps ≡ C sequential train_steps."""
+        import jax.numpy as jnp
+        c = 3
+        m = M.zeros_like_tree(params)
+        v = M.zeros_like_tree(params)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+        toks = jax.random.randint(
+            k1, (c, TC.batch_size, CFG.seq_len), 0, CFG.vocab_size
+        )
+        tgts = jax.random.randint(
+            k2, (c, TC.batch_size, CFG.seq_len), 0, CFG.vocab_size
+        )
+        chunk = jax.jit(M.make_train_chunk(CFG, TC, "ref", c))
+        pc, mc, vc, losses = chunk(params, m, v, 2.0, toks, tgts)
+        step = jax.jit(M.make_train_step(CFG, TC))
+        ps, ms, vs = params, m, v
+        manual = []
+        for i in range(c):
+            ps, ms, vs, loss = step(ps, ms, vs, 2.0 + i, toks[i], tgts[i])
+            manual.append(float(loss))
+        np.testing.assert_allclose(losses, manual, atol=1e-5)
+        for a, b in zip(M.flatten(pc), M.flatten(ps)):
+            np.testing.assert_allclose(a, b, atol=1e-5)
+
+    def test_eval_step_counts_tokens(self, params):
+        eval_fn = jax.jit(M.make_eval_step(CFG))
+        tok, tgt = batch(1)
+        s, n = eval_fn(params, tok, tgt)
+        assert float(n) == TC.batch_size * CFG.seq_len
+        assert float(s) / float(n) == pytest.approx(
+            float(M.loss_fn(
+                params, tok, tgt, CFG,
+                __import__("compile.kernels", fromlist=["select"]).select("ref"),
+            )),
+            rel=1e-5,
+        )
+
+
+class TestOuterStep:
+    def test_matches_manual_nesterov(self, params):
+        outer = M.make_outer_step("ref")
+        delta = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.01, params)
+        mom = M.zeros_like_tree(params)
+        p2, m2 = outer(params, delta, mom, 0.7, 0.9)
+        for a, b, d in zip(M.flatten(p2), M.flatten(params), M.flatten(delta)):
+            # mom'=Δ; θ' = θ - 0.7(Δ + 0.9Δ) = θ - 1.33Δ
+            np.testing.assert_allclose(a, b - 0.7 * 1.9 * d, atol=1e-6)
+
+    def test_pallas_ref_agree(self, params):
+        k = jax.random.PRNGKey(9)
+        delta = jax.tree_util.tree_map(
+            lambda p: jax.random.normal(k, p.shape) * 0.01, params
+        )
+        mom = jax.tree_util.tree_map(
+            lambda p: jax.random.normal(k, p.shape) * 0.1, params
+        )
+        p_r, m_r = M.make_outer_step("ref")(params, delta, mom, 0.7, 0.9)
+        p_p, m_p = M.make_outer_step("pallas")(params, delta, mom, 0.7, 0.9)
+        for a, b in zip(M.flatten(p_r), M.flatten(p_p)):
+            np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+class TestKernelParity:
+    """The pallas-built model must match the ref-built model numerically."""
+
+    def test_forward_parity(self, params):
+        from compile import kernels
+        tok, _ = batch(7)
+        l_ref = M.forward(params, tok, CFG, kernels.select("ref"))
+        l_pal = M.forward(params, tok, CFG, kernels.select("pallas"))
+        np.testing.assert_allclose(l_ref, l_pal, atol=1e-3)
+
+    def test_train_step_parity(self, params):
+        m = M.zeros_like_tree(params)
+        v = M.zeros_like_tree(params)
+        tok, tgt = batch(8)
+        f_ref = M.make_train_step(CFG, TC, "ref")
+        f_pal = M.make_train_step(CFG, TC, "pallas")
+        p1, m1, v1, l1 = f_ref(params, m, v, 2.0, tok, tgt)
+        p2, m2, v2, l2 = f_pal(params, m, v, 2.0, tok, tgt)
+        np.testing.assert_allclose(float(l1), float(l2), atol=1e-4)
+        for a, b in zip(M.flatten(p1), M.flatten(p2)):
+            np.testing.assert_allclose(a, b, atol=1e-4)

@@ -1,0 +1,100 @@
+//! Paper Fig 10 + Fig 11 — cosine similarity between outer gradients.
+//!
+//! Fig 10: mean ± std of pairwise cosine similarity among the k=8
+//! replicas' outer gradients per round, for H ∈ {250, 500, 1000} (scaled
+//! {10, 20, 40}) in both data regimes. Paper shape: i.i.d. similarity has
+//! near-zero variance; similarity is *inversely* related to communication
+//! frequency; non-i.i.d. variance grows late in training.
+//!
+//! Fig 11: non-i.i.d. similarity for k=4 vs k=8 — more shards ⇒ more
+//! distinct distributions ⇒ less correlated outer gradients; the averaged
+//! outer-gradient norm shrinks ~1/√k.
+
+use diloco::bench::scenarios::{base_config, fmt, load_runtime};
+use diloco::bench::{BenchCtx, Scale, Table};
+use diloco::config::ComputeSchedule;
+use diloco::coordinator::Coordinator;
+use diloco::util::math;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new("fig10_11_cosine_sim");
+    let base = base_config(ctx.scale);
+    let rt = load_runtime(&base.model);
+    let budget = base.rounds * base.inner_steps;
+
+    let hs: Vec<(usize, &str)> = match ctx.scale {
+        Scale::Scaled => vec![(10, "250"), (20, "500"), (40, "1000")],
+        Scale::Paper => vec![(250, "250"), (500, "500"), (1000, "1000")],
+    };
+
+    // Fig 10: H × regime grid.
+    let mut fig10 = Table::new(
+        "Fig 10 — outer-gradient cosine similarity (mean over rounds)",
+        &["regime", "H(paper)", "cos_mean", "cos_std_mean"],
+    );
+    let mut curve = String::from("regime,H,round,cos_mean,cos_std,avg_norm\n");
+    for non_iid in [false, true] {
+        let regime = if non_iid { "non_iid" } else { "iid" };
+        for &(h, label) in &hs {
+            let mut cfg = base.clone();
+            cfg.data.non_iid = non_iid;
+            cfg.inner_steps = h;
+            cfg.rounds = (budget / h).max(2);
+            cfg.eval_every_rounds = 0; // stats only — skip eval cost
+            let coord = Coordinator::new(cfg, rt.clone())?;
+            let report = coord.run()?;
+            let means: Vec<f64> =
+                report.round_stats.iter().map(|s| s.cos_mean).collect();
+            let stds: Vec<f64> =
+                report.round_stats.iter().map(|s| s.cos_std).collect();
+            for s in &report.round_stats {
+                curve.push_str(&format!(
+                    "{regime},{label},{},{:.5},{:.5},{:.5}\n",
+                    s.round, s.cos_mean, s.cos_std, s.avg_delta_norm
+                ));
+            }
+            fig10.row(vec![
+                regime.to_string(),
+                label.to_string(),
+                fmt(math::mean(&means)),
+                fmt(math::mean(&stds)),
+            ]);
+        }
+    }
+    ctx.emit(&fig10);
+    ctx.emit_csv("fig10_curves", &curve);
+
+    // Fig 11: k = 4 vs 8, non-i.i.d.; also check the 1/√k norm scaling.
+    let mut fig11 = Table::new(
+        "Fig 11 — similarity vs replicas (paper: k=8 less correlated than k=4)",
+        &["k", "cos_mean", "avg_delta_norm", "worker_norm_mean"],
+    );
+    for k in [4usize, 8] {
+        let mut cfg = base.clone();
+        cfg.workers = k;
+        cfg.schedule = ComputeSchedule::Constant(k);
+        cfg.data.non_iid = true;
+        cfg.eval_every_rounds = 0;
+        let coord = Coordinator::new(cfg, rt.clone())?;
+        let report = coord.run()?;
+        let means: Vec<f64> =
+            report.round_stats.iter().map(|s| s.cos_mean).collect();
+        let norms: Vec<f64> =
+            report.round_stats.iter().map(|s| s.avg_delta_norm).collect();
+        let wnorms: Vec<f64> = report
+            .round_stats
+            .iter()
+            .map(|s| s.per_worker_norm_mean)
+            .collect();
+        fig11.row(vec![
+            k.to_string(),
+            fmt(math::mean(&means)),
+            fmt(math::mean(&norms)),
+            fmt(math::mean(&wnorms)),
+        ]);
+    }
+    print!("{}", fig11.render());
+    ctx.emit_csv("fig11", &fig11.csv());
+    ctx.finish();
+    Ok(())
+}

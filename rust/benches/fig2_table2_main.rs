@@ -1,0 +1,154 @@
+//! Paper Fig 2 + Table 2 — the main result.
+//!
+//! Compares, from a shared pretrained checkpoint (paper: 24k steps):
+//!   1. baseline            — 1 worker, batch B, N more steps
+//!   2. baseline, 8× batch via data parallelism   (comm 8×N, time 1×)
+//!   3. baseline, 8× batch via microbatching      (comm 0,   time 8×)
+//!   4. baseline, 8× updates                      (comm 0,   time 8×)
+//!   5. DiLoCo, k=8 non-i.i.d.                    (comm 8×N/H, time 1×)
+//! plus a from-scratch baseline for the Fig-2 curve. Rows report measured
+//! communication, simulated time, compute×, and final validation PPL.
+//! Paper shape to reproduce: DiLoCo beats rows 1–3 in PPL, ~matches the
+//! 8×-batch rows' compute, and communicates H× less than DP; 8× updates
+//! (row 4) still wins PPL at 8× the wall-clock.
+
+use diloco::bench::scenarios::{base_config, fmt, load_runtime};
+use diloco::bench::{BenchCtx, Table};
+use diloco::coordinator::baselines::{run_big_batch, BigBatchMode};
+use diloco::coordinator::Coordinator;
+use diloco::metrics::RunMetrics;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new("fig2_table2_main");
+    let cfg = base_config(ctx.scale);
+    let rt = load_runtime(&cfg.model);
+    let coord = Coordinator::new(cfg.clone(), rt.clone())?;
+
+    let n_steps = cfg.rounds * cfg.inner_steps; // N after pretraining
+    let k = cfg.workers;
+    let payload = rt.manifest.param_bytes() as f64;
+
+    // Shared pretrained checkpoint θ(0).
+    let mut pre_metrics = RunMetrics::new("pretrain");
+    let pretrained = coord.plain_train(
+        rt.init_params()?,
+        0.0,
+        cfg.pretrain_steps,
+        &mut pre_metrics,
+        0,
+    )?;
+    println!(
+        "pretrained {} steps: ppl {}",
+        cfg.pretrain_steps,
+        fmt(pre_metrics.final_ppl())
+    );
+
+    // 0. From-scratch baseline (Fig 2 red curve): same *total* step count.
+    let mut scratch = RunMetrics::new("from_scratch");
+    coord.plain_train(
+        rt.init_params()?,
+        0.0,
+        cfg.pretrain_steps + n_steps,
+        &mut scratch,
+        cfg.eval_every_rounds,
+    )?;
+
+    // 1. Baseline: finetune N more steps at batch B.
+    let mut baseline = RunMetrics::new("baseline");
+    coord.plain_train(
+        pretrained.clone(),
+        cfg.pretrain_steps as f64,
+        n_steps,
+        &mut baseline,
+        cfg.eval_every_rounds,
+    )?;
+
+    // 2+3. 8× batch (DP billing and microbatch billing).
+    let dp = run_big_batch(
+        &coord,
+        k,
+        n_steps,
+        BigBatchMode::DataParallel,
+        pretrained.clone(),
+        cfg.pretrain_steps as f64,
+    )?;
+    let micro = run_big_batch(
+        &coord,
+        k,
+        n_steps,
+        BigBatchMode::Microbatch,
+        pretrained.clone(),
+        cfg.pretrain_steps as f64,
+    )?;
+
+    // 4. 8× updates at batch B.
+    let mut upd8 = RunMetrics::new("8x_updates");
+    coord.plain_train(
+        pretrained.clone(),
+        cfg.pretrain_steps as f64,
+        k * n_steps,
+        &mut upd8,
+        cfg.eval_every_rounds,
+    )?;
+
+    // 5. DiLoCo k=8, non-i.i.d., from the same checkpoint.
+    let report = coord.run_from(Some(pretrained))?;
+    let diloco = report.metrics;
+
+    // Two time columns: `time_dc` assumes the paper's co-located
+    // datacenter fabric (communication fully overlapped ⇒ compute only);
+    // `time_wan` bills the simulated cross-island WAN. The paper's Table 2
+    // reports the datacenter column; the WAN column is the scenario
+    // DiLoCo exists for (DP's per-step barrier is ruinous there).
+    let mut table = Table::new(
+        "Table 2 — trade-offs (paper PPL: 16.23 / 15.30 / 15.30 / 14.72 / 15.02)",
+        &["model", "comm_msgs", "comm_MB", "time_dc", "time_wan", "compute_x", "ppl"],
+    );
+    let base_time = baseline.sim_compute_seconds.max(1e-9);
+    let mut row = |label: &str, m: &RunMetrics, compute_x: f64| {
+        table.row(vec![
+            label.to_string(),
+            m.comm_messages.to_string(),
+            format!("{:.1}", m.comm_bytes as f64 / 1e6),
+            format!("{:.2}", m.sim_compute_seconds / base_time),
+            format!("{:.2}", m.sim_wall_seconds() / base_time),
+            format!("{compute_x:.0}x"),
+            fmt(m.final_ppl()),
+        ]);
+    };
+    row("baseline", &baseline, 1.0);
+    row("dp_8x_batch", &dp, k as f64);
+    row("microbatch_8x", &micro, k as f64);
+    row("8x_updates", &upd8, k as f64);
+    row("diloco_k8", &diloco, k as f64);
+    ctx.emit(&table);
+
+    println!(
+        "\nouter-gradient upload reduction vs DP: {:.0}x (paper: H = {}x); \
+         total incl. broadcast: {:.1}x",
+        dp.comm_bytes_up as f64 / diloco.comm_bytes_up.max(1) as f64,
+        cfg.inner_steps,
+        dp.comm_bytes as f64 / diloco.comm_bytes.max(1) as f64,
+    );
+    assert!(
+        (dp.comm_bytes as f64) > payload, // sanity: DP actually communicated
+        "DP baseline communicated nothing"
+    );
+
+    // Fig 2 curves: eval PPL vs step for every variant.
+    let mut curves = String::from("variant,step,ppl\n");
+    for (name, m) in [
+        ("from_scratch", &scratch),
+        ("baseline_finetune", &baseline),
+        ("8x_batch", &micro),
+        ("8x_updates", &upd8),
+        ("diloco_k8", &diloco),
+    ] {
+        for p in &m.eval_curve {
+            curves.push_str(&format!("{name},{},{:.4}\n", p.step, p.ppl));
+        }
+    }
+    ctx.emit_csv("curves", &curves);
+    ctx.finish();
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Paper Fig 4 — communication frequency H.
+//!
+//! H sweeps {50, 100, 250, 500, 1000, 2000} (scaled {2, 4, 10, 20, 40,
+//! 80}) with T×H held fixed so every variant does the same number of
+//! inner steps from the same pretrained checkpoint. Paper shape: more
+//! frequent communication helps, but with strongly diminishing returns —
+//! H=1000 (scaled 40) costs only ~2.9% PPL vs H=50 (scaled 2) while
+//! communicating 20× less.
+
+use diloco::bench::scenarios::{base_config, fmt, load_runtime, rel_pct};
+use diloco::bench::{BenchCtx, Scale, Table};
+use diloco::coordinator::Coordinator;
+use diloco::metrics::RunMetrics;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new("fig4_comm_freq");
+    let base = base_config(ctx.scale);
+    let rt = load_runtime(&base.model);
+
+    let (hs, labels): (Vec<usize>, Vec<&str>) = match ctx.scale {
+        Scale::Scaled => (
+            vec![2, 4, 10, 20, 40, 80],
+            vec!["50", "100", "250", "500", "1000", "2000"],
+        ),
+        Scale::Paper => (
+            vec![50, 100, 250, 500, 1000, 2000],
+            vec!["50", "100", "250", "500", "1000", "2000"],
+        ),
+    };
+    let budget = base.rounds * base.inner_steps;
+
+    // Shared pretrained start.
+    let coord0 = Coordinator::new(base.clone(), rt.clone())?;
+    let mut pre = RunMetrics::new("pretrain");
+    let pretrained =
+        coord0.plain_train(rt.init_params()?, 0.0, base.pretrain_steps, &mut pre, 0)?;
+
+    let mut table = Table::new(
+        "Fig 4 — communication frequency (paper: mild degradation to H=1000)",
+        &["H(paper)", "H", "T", "comm_MB", "final_ppl", "vs_smallest_H"],
+    );
+    let mut results: Vec<(String, f64, f64)> = Vec::new();
+    let mut curves = String::from("H,step,ppl\n");
+    for (&h, &label) in hs.iter().zip(&labels) {
+        let mut cfg = base.clone();
+        cfg.inner_steps = h;
+        cfg.rounds = (budget / h).max(1);
+        let coord = Coordinator::new(cfg.clone(), rt.clone())?;
+        let report = coord.run_from(Some(pretrained.clone()))?;
+        let m = report.metrics;
+        for p in &m.eval_curve {
+            curves.push_str(&format!("{label},{},{:.4}\n", p.step, p.ppl));
+        }
+        results.push((
+            format!("{label},{h},{}", cfg.rounds),
+            m.comm_bytes as f64 / 1e6,
+            m.final_ppl(),
+        ));
+    }
+    let best_ref = results[0].2;
+    for (prefix, mb, ppl) in &results {
+        let cells: Vec<&str> = prefix.split(',').collect();
+        table.row(vec![
+            cells[0].to_string(),
+            cells[1].to_string(),
+            cells[2].to_string(),
+            format!("{mb:.1}"),
+            fmt(*ppl),
+            rel_pct(*ppl, best_ref),
+        ]);
+    }
+    ctx.emit(&table);
+    ctx.emit_csv("curves", &curves);
+    ctx.finish();
+    Ok(())
+}

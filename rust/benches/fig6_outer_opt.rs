@@ -1,0 +1,63 @@
+//! Paper Fig 6 — outer optimizer comparison.
+//!
+//! SGD (≡ FedAvg), SGD-momentum, Nesterov (the paper's choice), and Adam
+//! (≡ FedOpt, with ε raised to 0.1 for stability — the paper found Adam
+//! unstable otherwise), each at its best Table-5 hyperparameters, from a
+//! shared pretrained checkpoint. Paper shape: Nesterov wins; SGD and Adam
+//! clearly behind.
+
+use diloco::bench::scenarios::{base_config, fmt, load_runtime};
+use diloco::bench::{BenchCtx, Table};
+use diloco::config::OuterOptConfig;
+use diloco::coordinator::Coordinator;
+use diloco::metrics::RunMetrics;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new("fig6_outer_opt");
+    let base = base_config(ctx.scale);
+    let rt = load_runtime(&base.model);
+
+    // Table 5 bold values per optimizer.
+    let variants: Vec<(&str, OuterOptConfig)> = vec![
+        ("sgd(lr=0.5)", OuterOptConfig::Sgd { lr: 0.5 }),
+        ("sgdm(lr=0.3,mu=0.9)", OuterOptConfig::SgdM { lr: 0.3, mu: 0.9 }),
+        (
+            "nesterov(lr=0.7,mu=0.9)",
+            OuterOptConfig::Nesterov { lr: 0.7, mu: 0.9 },
+        ),
+        (
+            "adam(lr=0.3,eps=0.1)",
+            OuterOptConfig::Adam { lr: 0.3, b1: 0.9, b2: 0.95, eps: 0.1 },
+        ),
+    ];
+
+    let coord0 = Coordinator::new(base.clone(), rt.clone())?;
+    let mut pre = RunMetrics::new("pretrain");
+    let pretrained =
+        coord0.plain_train(rt.init_params()?, 0.0, base.pretrain_steps, &mut pre, 0)?;
+
+    let mut table = Table::new(
+        "Fig 6 — outer optimizers (paper: Nesterov best)",
+        &["outer_opt", "final_ppl", "tail_loss"],
+    );
+    let mut curves = String::from("opt,step,ppl\n");
+    for (label, opt) in variants {
+        let mut cfg = base.clone();
+        cfg.outer_opt = opt;
+        let coord = Coordinator::new(cfg, rt.clone())?;
+        let report = coord.run_from(Some(pretrained.clone()))?;
+        let m = report.metrics;
+        for p in &m.eval_curve {
+            curves.push_str(&format!("{label},{},{:.4}\n", p.step, p.ppl));
+        }
+        table.row(vec![
+            label.to_string(),
+            fmt(m.final_ppl()),
+            fmt(m.tail_loss(10)),
+        ]);
+    }
+    ctx.emit(&table);
+    ctx.emit_csv("curves", &curves);
+    ctx.finish();
+    Ok(())
+}

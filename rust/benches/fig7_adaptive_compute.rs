@@ -1,0 +1,55 @@
+//! Paper Fig 7 — adaptive compute pool.
+//!
+//! The number of active replicas varies over the run: constant-local (1),
+//! constant-distributed (8), doubling (4→8), halving (8→4), ramping up
+//! (1→8) and ramping down (8→1). Paper shape: final quality tracks the
+//! *total* compute spent (worker-rounds), not the shape of the schedule —
+//! doubling ≈ halving, ramp-up ≈ ramp-down, both ramps worse than the
+//! constant-8 run that spends more compute.
+
+use diloco::bench::scenarios::{base_config, fmt, load_runtime};
+use diloco::bench::{BenchCtx, Table};
+use diloco::config::ComputeSchedule;
+use diloco::coordinator::Coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new("fig7_adaptive_compute");
+    let base = base_config(ctx.scale);
+    let rt = load_runtime(&base.model);
+
+    let schedules: Vec<(&str, ComputeSchedule)> = vec![
+        ("constant_local(1)", ComputeSchedule::Constant(1)),
+        ("constant_distributed(8)", ComputeSchedule::Constant(8)),
+        ("doubling(4->8)", ComputeSchedule::Step { first: 4, second: 8 }),
+        ("halving(8->4)", ComputeSchedule::Step { first: 8, second: 4 }),
+        ("ramp_up(1->8)", ComputeSchedule::Ramp { from: 1, to: 8 }),
+        ("ramp_down(8->1)", ComputeSchedule::Ramp { from: 8, to: 1 }),
+    ];
+
+    let mut table = Table::new(
+        "Fig 7 — adaptive compute (paper: quality ~ total compute)",
+        &["schedule", "worker_rounds", "final_ppl"],
+    );
+    let mut curves = String::from("schedule,step,ppl\n");
+    for (label, schedule) in schedules {
+        let mut cfg = base.clone();
+        // i.i.d. regime, as in the paper's adaptive-compute study.
+        cfg.data.non_iid = false;
+        cfg.schedule = schedule.clone();
+        let wr = schedule.total_worker_rounds(cfg.rounds);
+        let coord = Coordinator::new(cfg, rt.clone())?;
+        let report = coord.run()?;
+        for p in &report.metrics.eval_curve {
+            curves.push_str(&format!("{label},{},{:.4}\n", p.step, p.ppl));
+        }
+        table.row(vec![
+            label.to_string(),
+            wr.to_string(),
+            fmt(report.metrics.final_ppl()),
+        ]);
+    }
+    ctx.emit(&table);
+    ctx.emit_csv("curves", &curves);
+    ctx.finish();
+    Ok(())
+}

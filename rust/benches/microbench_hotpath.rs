@@ -1,0 +1,178 @@
+//! Hot-path microbenchmarks — the §Perf instrument (not a paper figure).
+//!
+//! Times each primitive on the training path in isolation:
+//!   · train_step (1 fused inner AdamW step, PJRT execute + readback)
+//!   · train_chunk_5 / train_chunk_25 (amortized per-step cost)
+//!   · eval_step, grad_step, apply_update
+//!   · outer optimizer step, averaging, pruning, delta (pure rust)
+//!   · batch sampling + corpus/tokenizer build (data substrate)
+//! The per-step amortization of the chunk path vs the single-step path is
+//! the headline number recorded in EXPERIMENTS.md §Perf.
+
+use diloco::bench::scenarios::load_runtime;
+use diloco::bench::{time_median, BenchCtx, Table};
+use diloco::config::{DataConfig, OuterOptConfig};
+use diloco::coordinator::{average, opt::OuterOpt, prune};
+use diloco::data::batch::BatchIter;
+use diloco::data::Dataset;
+use diloco::runtime::{Tensors, Value};
+use diloco::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new("microbench_hotpath");
+    let rt = load_runtime("nano");
+    let mcfg = rt.manifest.config.clone();
+    let params = rt.init_params()?;
+    let zeros = Tensors::zeros(&rt.manifest);
+
+    let mut table = Table::new(
+        "hot-path microbench (nano)",
+        &["op", "median_ms", "per_step_ms", "notes"],
+    );
+
+    // Data pipeline.
+    let data_cfg = DataConfig { n_docs: 120, doc_len: 120, ..DataConfig::default() };
+    let t_dataset = time_median(3, || {
+        let _ = Dataset::build(&data_cfg, 8, mcfg.vocab_size, 0);
+    });
+    table.row(vec![
+        "dataset_build".into(),
+        format!("{:.2}", t_dataset * 1e3),
+        "-".into(),
+        "corpus+BPE+shard (once per run)".into(),
+    ]);
+
+    let ds = Dataset::build(&data_cfg, 8, mcfg.vocab_size, 0);
+    let mut iter = BatchIter::new(
+        ds.shards[0].clone(),
+        mcfg.batch_size,
+        mcfg.seq_len,
+        Rng::new(0),
+    );
+    let t_batch = time_median(20, || {
+        let _ = iter.next_batch();
+    });
+    table.row(vec![
+        "next_batch".into(),
+        format!("{:.3}", t_batch * 1e3),
+        format!("{:.3}", t_batch * 1e3),
+        "per inner step".into(),
+    ]);
+
+    // PJRT execution paths.
+    let run_steps = |key: &str, steps: usize| -> anyhow::Result<f64> {
+        let mut iter = BatchIter::new(
+            ds.shards[0].clone(),
+            mcfg.batch_size,
+            mcfg.seq_len,
+            Rng::new(1),
+        );
+        let mut inputs = Vec::new();
+        inputs.extend(params.to_values());
+        inputs.extend(zeros.to_values());
+        inputs.extend(zeros.to_values());
+        inputs.push(Value::F32(vec![0.0]));
+        let per = mcfg.batch_size * mcfg.seq_len;
+        let mut tokens = Vec::with_capacity(steps * per);
+        let mut targets = Vec::with_capacity(steps * per);
+        for _ in 0..steps {
+            let b = iter.next_batch();
+            tokens.extend(b.tokens);
+            targets.extend(b.targets);
+        }
+        inputs.push(Value::I32(tokens));
+        inputs.push(Value::I32(targets));
+        rt.execute(key, &inputs)?; // warm the compile cache
+        Ok(time_median(5, || {
+            rt.execute(key, &inputs).unwrap();
+        }))
+    };
+    for (key, steps) in [("train_step", 1usize), ("train_chunk_5", 5), ("train_chunk_25", 25)] {
+        let t = run_steps(key, steps)?;
+        table.row(vec![
+            key.into(),
+            format!("{:.2}", t * 1e3),
+            format!("{:.2}", t * 1e3 / steps as f64),
+            format!("{steps} fused steps"),
+        ]);
+    }
+
+    let eval_batch: Vec<i32> =
+        (0..mcfg.batch_size * mcfg.seq_len).map(|i| (i % mcfg.vocab_size) as i32).collect();
+    let t_eval = {
+        rt.eval_batch(&params, &eval_batch, &eval_batch)?;
+        time_median(5, || {
+            rt.eval_batch(&params, &eval_batch, &eval_batch).unwrap();
+        })
+    };
+    table.row(vec![
+        "eval_step".into(),
+        format!("{:.2}", t_eval * 1e3),
+        "-".into(),
+        "per eval batch".into(),
+    ]);
+
+    // Pure-rust outer loop ops over the full parameter set.
+    let delta = {
+        let mut d = params.clone();
+        d.scale(1e-3);
+        d
+    };
+    let deltas: Vec<Tensors> = (0..8).map(|_| delta.clone()).collect();
+    let t_avg = time_median(20, || {
+        let _ = average::weighted_average(&deltas, &[1.0; 8]);
+    });
+    table.row(vec![
+        "average_k8".into(),
+        format!("{:.3}", t_avg * 1e3),
+        "-".into(),
+        "per round".into(),
+    ]);
+
+    let mut outer = OuterOpt::new(&OuterOptConfig::Nesterov { lr: 0.7, mu: 0.9 }, &zeros);
+    let mut g = params.clone();
+    let t_outer = time_median(20, || {
+        outer.step(&mut g, &delta);
+    });
+    table.row(vec![
+        "outer_nesterov".into(),
+        format!("{:.3}", t_outer * 1e3),
+        "-".into(),
+        "per round".into(),
+    ]);
+
+    let t_prune = time_median(10, || {
+        let mut d = delta.clone();
+        let _ = prune::prune_sign(&mut d, 0.5);
+    });
+    table.row(vec![
+        "prune_sign_50%".into(),
+        format!("{:.3}", t_prune * 1e3),
+        "-".into(),
+        "per worker per round (opt-in)".into(),
+    ]);
+
+    let t_delta = time_median(20, || {
+        let _ = params.delta(&g);
+    });
+    table.row(vec![
+        "delta".into(),
+        format!("{:.3}", t_delta * 1e3),
+        "-".into(),
+        "per worker per round".into(),
+    ]);
+
+    ctx.emit(&table);
+
+    // Headline §Perf ratio: chunked vs stepwise per-step cost.
+    let t1 = run_steps("train_step", 1)?;
+    let t25 = run_steps("train_chunk_25", 25)? / 25.0;
+    println!(
+        "\nper-step: train_step {:.2} ms vs train_chunk_25 {:.2} ms → {:.2}x speedup",
+        t1 * 1e3,
+        t25 * 1e3,
+        t1 / t25
+    );
+    ctx.finish();
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Paper Table 3 — number of replicas/clusters, both data regimes.
+//!
+//! k ∈ {1, 4, 8, 16} by default ({1, 4, 8, 16, 64} with BENCH_FULL=1 —
+//! k=64 multiplies bench compute 8× over the k=8 row). Inner steps per
+//! replica are fixed, so more replicas = more data + compute, exactly as
+//! in the paper. Paper shape: PPL improves with k with diminishing
+//! returns past k=8, in both regimes (unlike the ImageNet-scale local-SGD
+//! results of Ortiz et al.).
+
+use diloco::bench::scenarios::{base_config, fmt, load_runtime};
+use diloco::bench::{BenchCtx, Table};
+use diloco::config::ComputeSchedule;
+use diloco::coordinator::Coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new("table3_replicas");
+    let base = base_config(ctx.scale);
+    let rt = load_runtime(&base.model);
+
+    let mut ks = vec![1usize, 4, 8, 16];
+    if std::env::var("BENCH_FULL").is_ok() {
+        ks.push(64);
+    }
+
+    let mut table = Table::new(
+        "Table 3 — replicas (paper non-iid: 16.23/15.18/15.02/14.91/14.96)",
+        &["k", "iid_ppl", "non_iid_ppl"],
+    );
+    for &k in &ks {
+        let mut row = vec![k.to_string()];
+        for non_iid in [false, true] {
+            let mut cfg = base.clone();
+            cfg.workers = k;
+            cfg.schedule = ComputeSchedule::Constant(k);
+            cfg.data.non_iid = non_iid;
+            // Keep shard sizes usable at large k.
+            cfg.data.n_docs = cfg.data.n_docs.max(40 * k);
+            let coord = Coordinator::new(cfg, rt.clone())?;
+            let report = coord.run()?;
+            row.push(fmt(report.metrics.final_ppl()));
+        }
+        table.row(row);
+    }
+    ctx.emit(&table);
+    ctx.finish();
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Paper Table 4 — model-size sweep.
+//!
+//! For each size tier, compares the single-worker baseline against
+//! DiLoCo k=8 (non-i.i.d.) on the same step budget and reports the
+//! relative + absolute PPL improvement. Paper shape: DiLoCo's advantage
+//! holds (indeed grows) with model size — 4.33% / 7.45% / 7.49% for
+//! 60M / 150M / 400M. Scaled tiers: nano + micro by default (micro ≈ 7×
+//! nano compute); BENCH_FULL=1 adds tiny.
+//!
+//! Requires artifacts for each tier: `make artifacts` builds nano+micro.
+
+use diloco::bench::scenarios::{artifacts_dir, base_config, fmt, load_runtime};
+use diloco::bench::{BenchCtx, Scale, Table};
+use diloco::coordinator::Coordinator;
+use diloco::metrics::RunMetrics;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new("table4_model_size");
+    let mut tiers: Vec<&str> = match ctx.scale {
+        Scale::Scaled => vec!["nano", "micro"],
+        Scale::Paper => vec!["60m", "150m", "400m"],
+    };
+    if ctx.scale == Scale::Scaled && std::env::var("BENCH_FULL").is_ok() {
+        tiers.push("tiny");
+    }
+
+    let mut table = Table::new(
+        "Table 4 — model size (paper improvement: 4.33% / 7.45% / 7.49%)",
+        &["model", "params", "baseline_ppl", "diloco_ppl", "rel_improve", "abs_improve"],
+    );
+    for model in tiers {
+        if !std::path::Path::new(&artifacts_dir())
+            .join(format!("{model}.manifest.json"))
+            .exists()
+        {
+            println!("skipping {model}: artifacts not built");
+            continue;
+        }
+        let rt = load_runtime(model);
+        let mut cfg = base_config(ctx.scale);
+        cfg.model = model.to_string();
+        // Bigger tiers get shorter rounds to keep the bench bounded, but
+        // baseline/DiLoCo stay compute-matched within a tier.
+        if model == "micro" {
+            cfg.rounds = 6;
+            cfg.pretrain_steps = 40;
+        }
+        if model == "tiny" {
+            cfg.rounds = 4;
+            cfg.inner_steps = 10;
+            cfg.pretrain_steps = 20;
+        }
+        let coord = Coordinator::new(cfg.clone(), rt.clone())?;
+        let n_steps = cfg.rounds * cfg.inner_steps;
+
+        let mut pre = RunMetrics::new("pretrain");
+        let pretrained =
+            coord.plain_train(rt.init_params()?, 0.0, cfg.pretrain_steps, &mut pre, 0)?;
+
+        let mut baseline = RunMetrics::new("baseline");
+        coord.plain_train(
+            pretrained.clone(),
+            cfg.pretrain_steps as f64,
+            n_steps,
+            &mut baseline,
+            0,
+        )?;
+        let report = coord.run_from(Some(pretrained))?;
+        let (b, d) = (baseline.final_ppl(), report.metrics.final_ppl());
+        table.row(vec![
+            model.to_string(),
+            rt.manifest.config.param_count.to_string(),
+            fmt(b),
+            fmt(d),
+            format!("{:.2}%", 100.0 * (b - d) / b),
+            fmt(b - d),
+        ]);
+    }
+    ctx.emit(&table);
+    ctx.finish();
+    Ok(())
+}

@@ -1,0 +1,198 @@
+//! Bench harness (criterion substitute — fixed crate universe).
+//!
+//! Every `rust/benches/*.rs` reproduces one paper table/figure: it builds
+//! the experiment variants, runs them through the public API, prints the
+//! paper's rows as an aligned table + CSV, and writes `bench_out/<id>.csv`.
+//! `BenchCtx` provides shared plumbing: wall timers, table rendering, CSV
+//! sink, and the scaled-vs-paper workload knob (`SCALE=paper` env).
+
+pub mod scenarios;
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// Scale selector: benches default to the DESIGN.md §6 scaled workload;
+/// `SCALE=paper` requests paper-parity parameters (documented as not
+/// runnable on the 1-core testbed, but wired for larger machines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Scaled,
+    Paper,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("SCALE").as_deref() {
+            Ok("paper") => Scale::Paper,
+            _ => Scale::Scaled,
+        }
+    }
+}
+
+/// One table of results, printed to stdout and persisted as CSV.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(w)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.columns, &widths));
+        let _ = writeln!(
+            out,
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    pub fn csv(&self) -> String {
+        let mut out = self.columns.join(",") + "\n";
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Shared bench context: timing, output dir, scale.
+pub struct BenchCtx {
+    pub id: String,
+    pub scale: Scale,
+    start: Instant,
+    out_dir: String,
+}
+
+impl BenchCtx {
+    pub fn new(id: &str) -> BenchCtx {
+        let out_dir =
+            std::env::var("BENCH_OUT").unwrap_or_else(|_| "bench_out".to_string());
+        println!("[{id}] start (scale={:?})", Scale::from_env());
+        BenchCtx {
+            id: id.to_string(),
+            scale: Scale::from_env(),
+            start: Instant::now(),
+            out_dir,
+        }
+    }
+
+    /// Print + persist a finished table.
+    pub fn emit(&self, table: &Table) {
+        print!("{}", table.render());
+        if let Err(e) = std::fs::create_dir_all(&self.out_dir) {
+            eprintln!("[{}] cannot create {}: {e}", self.id, self.out_dir);
+            return;
+        }
+        let path = format!("{}/{}.csv", self.out_dir, self.id);
+        if let Err(e) = std::fs::write(&path, table.csv()) {
+            eprintln!("[{}] cannot write {path}: {e}", self.id);
+        } else {
+            println!("[{}] wrote {path}", self.id);
+        }
+    }
+
+    /// Persist an extra CSV artifact (e.g. a curve) next to the table.
+    pub fn emit_csv(&self, suffix: &str, content: &str) {
+        if std::fs::create_dir_all(&self.out_dir).is_ok() {
+            let path = format!("{}/{}.{suffix}.csv", self.out_dir, self.id);
+            if std::fs::write(&path, content).is_ok() {
+                println!("[{}] wrote {path}", self.id);
+            }
+        }
+    }
+
+    pub fn finish(&self) {
+        println!(
+            "[{}] done in {:.1}s",
+            self.id,
+            self.start.elapsed().as_secs_f64()
+        );
+    }
+}
+
+/// Median-of-runs micro timing (for the hot-path microbench).
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    assert!(reps > 0);
+    let mut samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["name", "ppl"]);
+        t.row(vec!["baseline".into(), "16.23".into()]);
+        t.row(vec!["diloco".into(), "15.02".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("baseline"));
+        assert_eq!(t.csv().lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn median_timing_positive() {
+        let d = time_median(5, || std::thread::sleep(std::time::Duration::from_micros(100)));
+        assert!(d > 0.0);
+    }
+
+    #[test]
+    fn scale_default_is_scaled() {
+        std::env::remove_var("SCALE");
+        assert_eq!(Scale::from_env(), Scale::Scaled);
+    }
+}

@@ -1,0 +1,128 @@
+//! Shared bench workloads — the DESIGN.md §6 scale map in code.
+//!
+//! Every paper-reproduction bench starts from [`base_config`]: the `nano`
+//! model, k=8 workers, H=20 inner steps, T=8 rounds, 60 pretrain steps,
+//! non-i.i.d. topic shards — the scaled analogue of the paper's
+//! 150M/k=8/H=500/T=128/24k-pretrain main setting. `SCALE=paper` swaps in
+//! paper-parity numbers (documented as requiring a bigger machine).
+//!
+//! The scaled↔paper correspondences used throughout:
+//!   H: 20 ↔ 500 (so the Fig-4 sweep {2,4,10,20,40,80} ↔ {50..2000})
+//!   pretrain: 60 ↔ 24k (≈27% of the step budget)
+//!   T×H after pretrain: 160 ↔ 64k
+
+use super::Scale;
+use crate::config::{ComputeSchedule, ExperimentConfig, OuterOptConfig};
+use crate::runtime::Runtime;
+use std::rc::Rc;
+
+pub fn artifacts_dir() -> String {
+    std::env::var("ARTIFACTS_DIR")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string())
+}
+
+/// Load the runtime for a preset, or explain how to build artifacts.
+pub fn load_runtime(model: &str) -> Rc<Runtime> {
+    let dir = artifacts_dir();
+    match Runtime::load(&dir, model) {
+        Ok(rt) => Rc::new(rt),
+        Err(e) => {
+            eprintln!(
+                "cannot load {model} artifacts from {dir}: {e}\n\
+                 run `make artifacts` (or ARTIFACTS_DIR=...) first"
+            );
+            std::process::exit(1);
+        }
+    }
+}
+
+/// The scaled main setting (paper: 150M, k=8, H=500, T=128, 24k pretrain).
+pub fn base_config(scale: Scale) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default(&artifacts_dir(), "nano");
+    match scale {
+        Scale::Scaled => {
+            cfg.workers = 8;
+            cfg.schedule = ComputeSchedule::Constant(8);
+            cfg.inner_steps = 20;
+            cfg.rounds = 8;
+            cfg.pretrain_steps = 60;
+            cfg.outer_opt = OuterOptConfig::Nesterov { lr: 0.7, mu: 0.9 };
+            cfg.data.n_topics = 8;
+            cfg.data.n_docs = 320;
+            cfg.data.doc_len = 160;
+            cfg.data.non_iid = true;
+            cfg.eval_every_rounds = 2;
+            cfg.eval_batches = 3;
+        }
+        Scale::Paper => {
+            cfg.model = "150m".to_string();
+            cfg.workers = 8;
+            cfg.schedule = ComputeSchedule::Constant(8);
+            cfg.inner_steps = 500;
+            cfg.rounds = 128;
+            cfg.pretrain_steps = 24_000;
+            cfg.data.n_topics = 8;
+            cfg.data.n_docs = 20_000;
+            cfg.data.doc_len = 800;
+            cfg.eval_every_rounds = 8;
+            cfg.eval_batches = 8;
+        }
+    }
+    cfg
+}
+
+/// Total inner steps after pretraining (T×H) for the base setting — kept
+/// constant across H sweeps so variants are compute-matched.
+pub fn step_budget(scale: Scale) -> usize {
+    let cfg = base_config(scale);
+    cfg.rounds * cfg.inner_steps
+}
+
+/// Format a PPL (or any f64) for table cells.
+pub fn fmt(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "n/a".to_string()
+    }
+}
+
+/// Relative change in percent vs a reference.
+pub fn rel_pct(x: f64, reference: f64) -> String {
+    if x.is_finite() && reference.is_finite() && reference != 0.0 {
+        format!("{:+.2}%", 100.0 * (x - reference) / reference)
+    } else {
+        "n/a".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_budget_matches_design_doc() {
+        assert_eq!(step_budget(Scale::Scaled), 160);
+        let cfg = base_config(Scale::Scaled);
+        // pretrain ≈ 27% of total, as in the paper (24k of 88k).
+        let frac = cfg.pretrain_steps as f64
+            / (cfg.pretrain_steps + step_budget(Scale::Scaled)) as f64;
+        assert!((frac - 24_000.0 / 88_000.0).abs() < 0.01, "frac {frac}");
+    }
+
+    #[test]
+    fn paper_scale_uses_paper_numbers() {
+        let cfg = base_config(Scale::Paper);
+        assert_eq!(cfg.inner_steps, 500);
+        assert_eq!(cfg.rounds, 128);
+        assert_eq!(cfg.pretrain_steps, 24_000);
+        assert_eq!(cfg.model, "150m");
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt(15.0234), "15.023");
+        assert_eq!(fmt(f64::NAN), "n/a");
+        assert_eq!(rel_pct(110.0, 100.0), "+10.00%");
+    }
+}

@@ -1,0 +1,17 @@
+fn main() -> anyhow::Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    for rt in ["True", "False"] {
+        let path = format!("/tmp/probe_{rt}.hlo.txt");
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+        let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]);
+        let y = xla::Literal::vec1(&[10f32, 20., 30., 40.]);
+        let out = exe.execute::<xla::Literal>(&[x, y])?;
+        println!("return_tuple={rt}: replicas={} bufs={}", out.len(), out[0].len());
+        for (i, b) in out[0].iter().enumerate() {
+            let lit = b.to_literal_sync()?;
+            println!("  buf{i}: shape={:?}", lit.shape()?);
+        }
+    }
+    Ok(())
+}

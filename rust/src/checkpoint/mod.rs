@@ -1,0 +1,170 @@
+//! Checkpointing: save/load parameter (and optimizer) tensors.
+//!
+//! Simple self-describing binary format (no serde/npz in the crate
+//! universe): magic + version header, then per leaf: name, shape, f32
+//! little-endian data, followed by a u64 FNV checksum over everything.
+//! Used by the pretrain → DiLoCo warm-start flow (paper Fig 3) and the
+//! CLI's `eval --ckpt`.
+
+use crate::runtime::{Manifest, Tensors};
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 8] = b"DILOCO01";
+
+fn fnv_update(hash: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *hash ^= b as u64;
+        *hash = hash.wrapping_mul(0x1000_0000_01b3);
+    }
+}
+
+/// Save tensors with their manifest leaf names/shapes.
+pub fn save(path: &str, manifest: &Manifest, tensors: &Tensors) -> anyhow::Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(manifest.params.len() as u32).to_le_bytes());
+    for (spec, leaf) in manifest.params.iter().zip(tensors.leaves()) {
+        let name = spec.name.as_bytes();
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name);
+        buf.extend_from_slice(&(spec.shape.len() as u32).to_le_bytes());
+        for &d in &spec.shape {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        buf.extend_from_slice(&(leaf.len() as u64).to_le_bytes());
+        for &x in leaf {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    fnv_update(&mut hash, &buf);
+    buf.extend_from_slice(&hash.to_le_bytes());
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("creating {path}: {e}"))?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Load tensors, verifying checksum and manifest compatibility.
+pub fn load(path: &str, manifest: &Manifest) -> anyhow::Result<Tensors> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening {path}: {e}"))?
+        .read_to_end(&mut bytes)?;
+    anyhow::ensure!(bytes.len() > MAGIC.len() + 12, "checkpoint too short");
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    fnv_update(&mut hash, body);
+    anyhow::ensure!(hash == stored, "checkpoint checksum mismatch");
+    anyhow::ensure!(&body[..8] == MAGIC, "bad checkpoint magic");
+
+    let mut pos = 8;
+    let read_u32 = |pos: &mut usize| -> anyhow::Result<u32> {
+        anyhow::ensure!(*pos + 4 <= body.len(), "truncated checkpoint");
+        let v = u32::from_le_bytes(body[*pos..*pos + 4].try_into().unwrap());
+        *pos += 4;
+        Ok(v)
+    };
+    let read_u64 = |pos: &mut usize| -> anyhow::Result<u64> {
+        anyhow::ensure!(*pos + 8 <= body.len(), "truncated checkpoint");
+        let v = u64::from_le_bytes(body[*pos..*pos + 8].try_into().unwrap());
+        *pos += 8;
+        Ok(v)
+    };
+
+    let n = read_u32(&mut pos)? as usize;
+    anyhow::ensure!(
+        n == manifest.params.len(),
+        "checkpoint has {n} leaves, manifest wants {}",
+        manifest.params.len()
+    );
+    let mut leaves = Vec::with_capacity(n);
+    for spec in &manifest.params {
+        let name_len = read_u32(&mut pos)? as usize;
+        anyhow::ensure!(pos + name_len <= body.len(), "truncated name");
+        let name = std::str::from_utf8(&body[pos..pos + name_len])
+            .map_err(|_| anyhow::anyhow!("bad leaf name"))?;
+        anyhow::ensure!(
+            name == spec.name,
+            "leaf order mismatch: checkpoint {name:?}, manifest {:?}",
+            spec.name
+        );
+        pos += name_len;
+        let rank = read_u32(&mut pos)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u64(&mut pos)? as usize);
+        }
+        anyhow::ensure!(
+            shape == spec.shape,
+            "leaf {name}: checkpoint shape {shape:?}, manifest {:?}",
+            spec.shape
+        );
+        let count = read_u64(&mut pos)? as usize;
+        anyhow::ensure!(count == spec.elements(), "leaf {name}: element count");
+        anyhow::ensure!(pos + 4 * count <= body.len(), "truncated data");
+        let mut data = Vec::with_capacity(count);
+        for i in 0..count {
+            let off = pos + 4 * i;
+            data.push(f32::from_le_bytes(body[off..off + 4].try_into().unwrap()));
+        }
+        pos += 4 * count;
+        leaves.push(data);
+    }
+    anyhow::ensure!(pos == body.len(), "trailing bytes in checkpoint");
+    Tensors::from_leaves(manifest, leaves)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> Option<(Manifest, Tensors)> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        let path = std::path::Path::new(dir).join("nano.manifest.json");
+        if !path.exists() {
+            return None;
+        }
+        let man = Manifest::load(&path).unwrap();
+        let mut t = Tensors::zeros(&man);
+        let mut x = 0.0f32;
+        t.for_each_mut(|v| {
+            *v = x.sin();
+            x += 1.0;
+        });
+        Some((man, t))
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let Some((man, t)) = fixture() else { return };
+        let path = std::env::temp_dir().join("diloco_ckpt_test.bin");
+        let path = path.to_str().unwrap();
+        save(path, &man, &t).unwrap();
+        let loaded = load(path, &man).unwrap();
+        assert_eq!(&loaded, &t);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let Some((man, t)) = fixture() else { return };
+        let path = std::env::temp_dir().join("diloco_ckpt_corrupt.bin");
+        let path = path.to_str().unwrap();
+        save(path, &man, &t).unwrap();
+        let mut bytes = std::fs::read(path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(path, &bytes).unwrap();
+        assert!(load(path, &man).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors_cleanly() {
+        let Some((man, _)) = fixture() else { return };
+        let err = load("/nonexistent/ckpt.bin", &man).unwrap_err();
+        assert!(err.to_string().contains("opening"));
+    }
+}

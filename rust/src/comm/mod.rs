@@ -1,0 +1,188 @@
+//! Simulated inter-island network fabric.
+//!
+//! The paper's workers live on "islands of devices that are poorly
+//! connected"; all results are perplexity-vs-steps plus communication
+//! accounting. `SimNet` reproduces both: every transfer is billed in
+//! bytes and simulated seconds (latency + size/bandwidth), and drop
+//! injection models reboots/packet loss (paper Fig 8). The simulated
+//! clock lets Table 2's "Time" column be *measured*: compute time from
+//! per-step costs, communication time from the fabric — overlapping
+//! workers take the max, as islands run in parallel.
+
+use crate::util::rng::Rng;
+
+/// One message on the fabric.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Direction {
+    /// Worker → coordinator (outer gradient).
+    Up,
+    /// Coordinator → worker (fresh global parameters).
+    Down,
+}
+
+/// Billing record of everything that crossed the fabric.
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    pub messages: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub dropped: u64,
+    /// Simulated seconds spent in communication barriers (per round, the
+    /// slowest island's transfer time — islands transfer in parallel).
+    pub sim_comm_seconds: f64,
+}
+
+impl CommStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_up + self.bytes_down
+    }
+}
+
+/// Bandwidth/latency/drop model shared by all islands.
+pub struct SimNet {
+    bandwidth_bps: f64,
+    latency_s: f64,
+    drop_prob: f64,
+    rng: Rng,
+    stats: CommStats,
+    /// Per-round transfer times, reset by `end_round`.
+    round_transfers: Vec<f64>,
+}
+
+impl SimNet {
+    pub fn new(bandwidth_bps: f64, latency_s: f64, drop_prob: f64, rng: Rng) -> SimNet {
+        assert!(bandwidth_bps > 0.0, "bandwidth must be positive");
+        assert!((0.0..=1.0).contains(&drop_prob), "drop_prob in [0,1]");
+        SimNet {
+            bandwidth_bps,
+            latency_s,
+            drop_prob,
+            rng,
+            stats: CommStats::default(),
+            round_transfers: Vec::new(),
+        }
+    }
+
+    /// Transfer time for a payload (one-way).
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Attempt an upload of `bytes` from a worker; returns `false` if the
+    /// message is dropped (worker reboot / packet loss — Fig 8 semantics:
+    /// the coordinator simply does not receive this outer gradient).
+    pub fn try_send(&mut self, bytes: u64, dir: Direction) -> bool {
+        self.stats.messages += 1;
+        if self.drop_prob > 0.0 && self.rng.coin(self.drop_prob) {
+            self.stats.dropped += 1;
+            return false;
+        }
+        match dir {
+            Direction::Up => self.stats.bytes_up += bytes,
+            Direction::Down => self.stats.bytes_down += bytes,
+        }
+        self.round_transfers.push(self.transfer_time(bytes));
+        true
+    }
+
+    /// Reliable transfer — billed, never dropped. Used for the
+    /// coordinator → worker re-dispatch: the paper's drop injection (Fig 8)
+    /// models *outer gradients* failing to arrive, not the broadcast.
+    pub fn send_reliable(&mut self, bytes: u64, dir: Direction) {
+        self.stats.messages += 1;
+        match dir {
+            Direction::Up => self.stats.bytes_up += bytes,
+            Direction::Down => self.stats.bytes_down += bytes,
+        }
+        self.round_transfers.push(self.transfer_time(bytes));
+    }
+
+    /// Close a communication barrier: islands transfer concurrently, so
+    /// the round's wall-clock cost is the slowest single transfer.
+    pub fn end_round(&mut self) {
+        if let Some(max) = self
+            .round_transfers
+            .iter()
+            .cloned()
+            .fold(None::<f64>, |acc, x| Some(acc.map_or(x, |a| a.max(x))))
+        {
+            self.stats.sim_comm_seconds += max;
+        }
+        self.round_transfers.clear();
+    }
+
+    pub fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    pub fn set_drop_prob(&mut self, p: f64) {
+        assert!((0.0..=1.0).contains(&p));
+        self.drop_prob = p;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(drop: f64) -> SimNet {
+        SimNet::new(1e6, 0.01, drop, Rng::new(0))
+    }
+
+    #[test]
+    fn transfer_time_is_latency_plus_serialization() {
+        let n = net(0.0);
+        assert!((n.transfer_time(1_000_000) - 1.01).abs() < 1e-9);
+        assert!((n.transfer_time(0) - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn billing_accumulates_by_direction() {
+        let mut n = net(0.0);
+        assert!(n.try_send(100, Direction::Up));
+        assert!(n.try_send(300, Direction::Down));
+        assert_eq!(n.stats().bytes_up, 100);
+        assert_eq!(n.stats().bytes_down, 300);
+        assert_eq!(n.stats().total_bytes(), 400);
+        assert_eq!(n.stats().messages, 2);
+    }
+
+    #[test]
+    fn round_cost_is_max_not_sum() {
+        let mut n = net(0.0);
+        n.try_send(1_000_000, Direction::Up); // 1.01 s
+        n.try_send(500_000, Direction::Up); // 0.51 s
+        n.end_round();
+        assert!((n.stats().sim_comm_seconds - 1.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_round_costs_nothing() {
+        let mut n = net(0.0);
+        n.end_round();
+        assert_eq!(n.stats().sim_comm_seconds, 0.0);
+    }
+
+    #[test]
+    fn drop_rate_matches_probability() {
+        let mut n = net(0.3);
+        let mut dropped = 0;
+        for _ in 0..10_000 {
+            if !n.try_send(10, Direction::Up) {
+                dropped += 1;
+            }
+        }
+        let rate = dropped as f64 / 10_000.0;
+        assert!((rate - 0.3).abs() < 0.02, "drop rate {rate}");
+        assert_eq!(n.stats().dropped, dropped);
+    }
+
+    #[test]
+    fn dropped_messages_are_not_billed() {
+        let mut n = net(1.0);
+        assert!(!n.try_send(100, Direction::Up));
+        assert_eq!(n.stats().bytes_up, 0);
+        n.end_round();
+        assert_eq!(n.stats().sim_comm_seconds, 0.0);
+    }
+}

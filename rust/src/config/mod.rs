@@ -1,0 +1,388 @@
+//! Typed experiment configuration + TOML loading + presets.
+//!
+//! One [`ExperimentConfig`] fully describes a run: which AOT artifact set
+//! to load, how to synthesize and shard data, the DiLoCo schedule
+//! (k, H, T, outer optimizer), failure injection, and metric sinks.
+//! Benches and examples construct it programmatically; the CLI loads it
+//! from a TOML file (`config::toml` subset parser).
+
+pub mod presets;
+pub mod toml;
+
+use crate::util::rng::Rng;
+use toml::TomlDoc;
+
+/// Which outer optimizer updates the global parameters (paper Fig. 6).
+#[derive(Clone, Debug, PartialEq)]
+pub enum OuterOptConfig {
+    /// Plain SGD — equivalent to classical FedAvg (McMahan et al., 2017).
+    Sgd { lr: f32 },
+    /// SGD with (heavy-ball) momentum.
+    SgdM { lr: f32, mu: f32 },
+    /// Nesterov momentum — the paper's choice (lr 0.7, μ 0.9).
+    Nesterov { lr: f32, mu: f32 },
+    /// Adam — equivalent to FedOpt (Reddi et al., 2021). The paper found
+    /// ε must be raised to ~0.1 for stability.
+    Adam { lr: f32, b1: f32, b2: f32, eps: f32 },
+}
+
+impl OuterOptConfig {
+    pub fn paper_default() -> Self {
+        OuterOptConfig::Nesterov { lr: 0.7, mu: 0.9 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OuterOptConfig::Sgd { .. } => "sgd",
+            OuterOptConfig::SgdM { .. } => "sgdm",
+            OuterOptConfig::Nesterov { .. } => "nesterov",
+            OuterOptConfig::Adam { .. } => "adam",
+        }
+    }
+}
+
+/// How many workers are active each round (paper Fig. 7 schedules).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ComputeSchedule {
+    /// k workers every round.
+    Constant(usize),
+    /// `first` workers for the first half of rounds, then `second`.
+    Step { first: usize, second: usize },
+    /// Linear ramp from `from` to `to` across rounds.
+    Ramp { from: usize, to: usize },
+    /// Explicit per-round worker counts.
+    Explicit(Vec<usize>),
+}
+
+impl ComputeSchedule {
+    /// Active worker count for round `t` of `total` (0-based).
+    pub fn workers_at(&self, t: usize, total: usize) -> usize {
+        match self {
+            ComputeSchedule::Constant(k) => *k,
+            ComputeSchedule::Step { first, second } => {
+                if t < total / 2 {
+                    *first
+                } else {
+                    *second
+                }
+            }
+            ComputeSchedule::Ramp { from, to } => {
+                if total <= 1 {
+                    return *to;
+                }
+                let frac = t as f64 / (total - 1) as f64;
+                let k = *from as f64 + frac * (*to as f64 - *from as f64);
+                k.round().max(1.0) as usize
+            }
+            ComputeSchedule::Explicit(v) => v[t.min(v.len() - 1)],
+        }
+    }
+
+    /// Maximum concurrent workers (sizing for state allocation).
+    pub fn max_workers(&self, total: usize) -> usize {
+        (0..total.max(1))
+            .map(|t| self.workers_at(t, total))
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Total worker-rounds (∝ compute) across the run.
+    pub fn total_worker_rounds(&self, total: usize) -> usize {
+        (0..total).map(|t| self.workers_at(t, total)).sum()
+    }
+}
+
+/// Synthetic-corpus + sharding parameters (DESIGN.md §2 substitution).
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    /// Latent topics — these play the role of the paper's k-means clusters.
+    pub n_topics: usize,
+    pub n_docs: usize,
+    pub doc_len: usize,
+    /// i.i.d. = random split; non-i.i.d. = shard by topic.
+    pub non_iid: bool,
+    /// Non-i.i.d. softening: probability a document is re-assigned to a
+    /// random shard (0.0 = fully clustered, 1.0 = i.i.d.).
+    pub mix: f64,
+    /// Held-out fraction for the validation split.
+    pub holdout: f64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            n_topics: 8,
+            n_docs: 400,
+            doc_len: 220,
+            non_iid: true,
+            mix: 0.0,
+            holdout: 0.1,
+        }
+    }
+}
+
+/// Simulated inter-island network (DESIGN.md §2).
+#[derive(Clone, Debug)]
+pub struct CommConfig {
+    /// Bytes/second on each island's WAN link (paper: poorly connected).
+    pub bandwidth_bps: f64,
+    /// One-way latency per message, seconds.
+    pub latency_s: f64,
+    /// Probability a worker's outer gradient is dropped in a round (Fig 8).
+    pub drop_prob: f64,
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        CommConfig {
+            bandwidth_bps: 1e9 / 8.0, // 1 Gb/s WAN
+            latency_s: 0.05,
+            drop_prob: 0.0,
+        }
+    }
+}
+
+/// The full description of one run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    /// Artifact directory (output of `make artifacts`).
+    pub artifacts_dir: String,
+    /// Model preset name — selects `<model>.manifest.json`.
+    pub model: String,
+    /// Replicas k (paper default 8).
+    pub workers: usize,
+    /// Inner steps per round (paper default 500).
+    pub inner_steps: usize,
+    /// Outer rounds T (paper: 128 at H=500).
+    pub rounds: usize,
+    /// Plain (non-DiLoCo) warm-start steps before round 0 (paper: 24k).
+    pub pretrain_steps: usize,
+    pub outer_opt: OuterOptConfig,
+    pub schedule: ComputeSchedule,
+    /// Weight outer gradients by shard example counts (paper §6.1,
+    /// applied in the non-i.i.d. regime).
+    pub weighted_average: bool,
+    /// Sign-based outer-gradient pruning fraction (paper Table 6).
+    pub prune_frac: f64,
+    /// Synchronize inner AdamW state across workers at each round
+    /// (paper appendix: costs 3× communication, no quality win — off).
+    pub sync_inner_opt: bool,
+    pub data: DataConfig,
+    pub comm: CommConfig,
+    /// Evaluate every this many rounds (0 = only at end).
+    pub eval_every_rounds: usize,
+    /// Validation batches per evaluation.
+    pub eval_batches: usize,
+}
+
+impl ExperimentConfig {
+    /// The paper's default DiLoCo setting, scaled per DESIGN.md §6.
+    pub fn paper_default(artifacts_dir: &str, model: &str) -> Self {
+        ExperimentConfig {
+            seed: 0,
+            artifacts_dir: artifacts_dir.to_string(),
+            model: model.to_string(),
+            workers: 8,
+            inner_steps: 25,
+            rounds: 12,
+            pretrain_steps: 100,
+            outer_opt: OuterOptConfig::paper_default(),
+            schedule: ComputeSchedule::Constant(8),
+            weighted_average: true,
+            prune_frac: 0.0,
+            sync_inner_opt: false,
+            data: DataConfig::default(),
+            comm: CommConfig::default(),
+            eval_every_rounds: 1,
+            eval_batches: 4,
+        }
+    }
+
+    /// Derived: total inner steps per worker, N = T × H.
+    pub fn total_inner_steps(&self) -> usize {
+        self.rounds * self.inner_steps
+    }
+
+    pub fn rng(&self) -> Rng {
+        Rng::new(self.seed)
+    }
+
+    /// Load from the TOML subset; missing keys fall back to
+    /// `paper_default` values.
+    pub fn from_toml(doc: &TomlDoc) -> anyhow::Result<Self> {
+        let artifacts = doc.str_or("artifacts_dir", "artifacts")?;
+        let model = doc.str_or("model", "nano")?;
+        let mut cfg = ExperimentConfig::paper_default(&artifacts, &model);
+        cfg.seed = doc.usize_or("seed", 0)? as u64;
+        cfg.workers = doc.usize_or("diloco.workers", cfg.workers)?;
+        cfg.inner_steps = doc.usize_or("diloco.inner_steps", cfg.inner_steps)?;
+        cfg.rounds = doc.usize_or("diloco.rounds", cfg.rounds)?;
+        cfg.pretrain_steps = doc.usize_or("diloco.pretrain_steps", cfg.pretrain_steps)?;
+        cfg.weighted_average =
+            doc.bool_or("diloco.weighted_average", cfg.weighted_average)?;
+        cfg.prune_frac = doc.f64_or("diloco.prune_frac", cfg.prune_frac)?;
+        cfg.sync_inner_opt = doc.bool_or("diloco.sync_inner_opt", false)?;
+
+        let kind = doc.str_or("outer_opt.kind", "nesterov")?;
+        let lr = doc.f64_or("outer_opt.lr", 0.7)? as f32;
+        let mu = doc.f64_or("outer_opt.momentum", 0.9)? as f32;
+        cfg.outer_opt = match kind.as_str() {
+            "sgd" => OuterOptConfig::Sgd { lr },
+            "sgdm" => OuterOptConfig::SgdM { lr, mu },
+            "nesterov" => OuterOptConfig::Nesterov { lr, mu },
+            "adam" => OuterOptConfig::Adam {
+                lr,
+                b1: doc.f64_or("outer_opt.b1", 0.9)? as f32,
+                b2: doc.f64_or("outer_opt.b2", 0.95)? as f32,
+                eps: doc.f64_or("outer_opt.eps", 0.1)? as f32,
+            },
+            other => anyhow::bail!("unknown outer_opt.kind {other:?}"),
+        };
+
+        let sched = doc.str_or("diloco.schedule", "constant")?;
+        cfg.schedule = parse_schedule(&sched, cfg.workers)?;
+
+        cfg.data.n_topics = doc.usize_or("data.topics", cfg.data.n_topics)?;
+        cfg.data.n_docs = doc.usize_or("data.docs", cfg.data.n_docs)?;
+        cfg.data.doc_len = doc.usize_or("data.doc_len", cfg.data.doc_len)?;
+        cfg.data.non_iid = doc.bool_or("data.non_iid", cfg.data.non_iid)?;
+        cfg.data.mix = doc.f64_or("data.mix", cfg.data.mix)?;
+        cfg.data.holdout = doc.f64_or("data.holdout", cfg.data.holdout)?;
+
+        cfg.comm.bandwidth_bps =
+            doc.f64_or("comm.bandwidth_bps", cfg.comm.bandwidth_bps)?;
+        cfg.comm.latency_s = doc.f64_or("comm.latency_s", cfg.comm.latency_s)?;
+        cfg.comm.drop_prob = doc.f64_or("comm.drop_prob", cfg.comm.drop_prob)?;
+
+        cfg.eval_every_rounds =
+            doc.usize_or("eval.every_rounds", cfg.eval_every_rounds)?;
+        cfg.eval_batches = doc.usize_or("eval.batches", cfg.eval_batches)?;
+        Ok(cfg)
+    }
+}
+
+/// Schedule mini-language: `constant`, `step:4,8`, `ramp:1,8`, or
+/// `explicit:1,2,4,8,...`.
+pub fn parse_schedule(s: &str, default_k: usize) -> anyhow::Result<ComputeSchedule> {
+    if s == "constant" {
+        return Ok(ComputeSchedule::Constant(default_k));
+    }
+    let (kind, args) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("bad schedule {s:?}"))?;
+    let nums: Vec<usize> = args
+        .split(',')
+        .map(|x| x.trim().parse::<usize>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("bad schedule numbers in {s:?}: {e}"))?;
+    match (kind, nums.as_slice()) {
+        ("constant", [k]) => Ok(ComputeSchedule::Constant(*k)),
+        ("step", [a, b]) => Ok(ComputeSchedule::Step { first: *a, second: *b }),
+        ("ramp", [a, b]) => Ok(ComputeSchedule::Ramp { from: *a, to: *b }),
+        ("explicit", xs) if !xs.is_empty() => {
+            Ok(ComputeSchedule::Explicit(xs.to_vec()))
+        }
+        _ => anyhow::bail!("bad schedule {s:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_constant() {
+        let s = ComputeSchedule::Constant(8);
+        assert_eq!(s.workers_at(0, 10), 8);
+        assert_eq!(s.workers_at(9, 10), 8);
+        assert_eq!(s.total_worker_rounds(10), 80);
+    }
+
+    #[test]
+    fn schedule_step_halves() {
+        let s = ComputeSchedule::Step { first: 4, second: 8 };
+        assert_eq!(s.workers_at(0, 10), 4);
+        assert_eq!(s.workers_at(4, 10), 4);
+        assert_eq!(s.workers_at(5, 10), 8);
+        assert_eq!(s.total_worker_rounds(10), 4 * 5 + 8 * 5);
+    }
+
+    #[test]
+    fn schedule_ramp_endpoints() {
+        let s = ComputeSchedule::Ramp { from: 1, to: 8 };
+        assert_eq!(s.workers_at(0, 8), 1);
+        assert_eq!(s.workers_at(7, 8), 8);
+        assert_eq!(s.max_workers(8), 8);
+        // Monotone non-decreasing.
+        let counts: Vec<_> = (0..8).map(|t| s.workers_at(t, 8)).collect();
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn schedule_parse_language() {
+        assert_eq!(
+            parse_schedule("constant", 8).unwrap(),
+            ComputeSchedule::Constant(8)
+        );
+        assert_eq!(
+            parse_schedule("step:8,4", 8).unwrap(),
+            ComputeSchedule::Step { first: 8, second: 4 }
+        );
+        assert_eq!(
+            parse_schedule("ramp:1,8", 8).unwrap(),
+            ComputeSchedule::Ramp { from: 1, to: 8 }
+        );
+        assert_eq!(
+            parse_schedule("explicit:1,1,2", 8).unwrap(),
+            ComputeSchedule::Explicit(vec![1, 1, 2])
+        );
+        assert!(parse_schedule("bogus:1", 8).is_err());
+    }
+
+    #[test]
+    fn from_toml_roundtrip() {
+        let doc = TomlDoc::parse(
+            r#"
+            seed = 7
+            model = "nano"
+            [diloco]
+            workers = 4
+            inner_steps = 50
+            rounds = 3
+            schedule = "ramp:1,4"
+            prune_frac = 0.5
+            [outer_opt]
+            kind = "adam"
+            lr = 0.3
+            eps = 0.1
+            [data]
+            non_iid = false
+            [comm]
+            drop_prob = 0.3
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.inner_steps, 50);
+        assert_eq!(cfg.prune_frac, 0.5);
+        assert!(!cfg.data.non_iid);
+        assert_eq!(cfg.comm.drop_prob, 0.3);
+        assert_eq!(cfg.schedule, ComputeSchedule::Ramp { from: 1, to: 4 });
+        match cfg.outer_opt {
+            OuterOptConfig::Adam { lr, eps, .. } => {
+                assert!((lr - 0.3).abs() < 1e-6);
+                assert!((eps - 0.1).abs() < 1e-6);
+            }
+            other => panic!("wrong opt {other:?}"),
+        }
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_opt() {
+        let doc = TomlDoc::parse("[outer_opt]\nkind = \"lion\"").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+}

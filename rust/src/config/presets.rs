@@ -1,0 +1,125 @@
+//! Rust-side mirror of `python/compile/configs.py` presets.
+//!
+//! The runtime always trusts the *manifest* (what was actually lowered);
+//! these mirrors exist so the coordinator can sanity-check that the
+//! artifacts on disk match the preset an experiment asked for, and so
+//! Table 1 / Table 5 of the paper are asserted in unit tests without
+//! touching python.
+
+/// Architecture preset (paper Table 1 + scaled tiers, DESIGN.md §6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelPreset {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub vocab_size: usize,
+    pub seq_len: usize,
+}
+
+impl ModelPreset {
+    pub fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    /// Must agree with `ModelConfig.param_count()` in configs.py
+    /// (asserted against the manifest in runtime tests).
+    pub fn param_count(&self) -> usize {
+        let (d, dh, nh, v, s) = (
+            self.d_model,
+            self.d_head,
+            self.n_heads,
+            self.vocab_size,
+            self.seq_len,
+        );
+        let attn = d * (nh * dh) * 3 + (nh * dh) * d;
+        let mlp = d * self.d_ff() + self.d_ff() + self.d_ff() * d + d;
+        let block = attn + mlp + 4 * d;
+        v * d + s * d + self.n_layers * block + 2 * d + d * v
+    }
+}
+
+/// Paper Table 1.
+pub const PAPER_60M: ModelPreset = ModelPreset {
+    name: "60m", n_layers: 3, d_model: 896, n_heads: 16, d_head: 64,
+    vocab_size: 32_000, seq_len: 1024,
+};
+pub const PAPER_150M: ModelPreset = ModelPreset {
+    name: "150m", n_layers: 12, d_model: 896, n_heads: 16, d_head: 64,
+    vocab_size: 32_000, seq_len: 1024,
+};
+pub const PAPER_400M: ModelPreset = ModelPreset {
+    name: "400m", n_layers: 12, d_model: 1536, n_heads: 12, d_head: 128,
+    vocab_size: 32_000, seq_len: 1024,
+};
+
+/// Scaled tiers (DESIGN.md §6).
+pub const NANO: ModelPreset = ModelPreset {
+    name: "nano", n_layers: 2, d_model: 64, n_heads: 4, d_head: 16,
+    vocab_size: 256, seq_len: 32,
+};
+pub const MICRO: ModelPreset = ModelPreset {
+    name: "micro", n_layers: 4, d_model: 128, n_heads: 4, d_head: 32,
+    vocab_size: 512, seq_len: 64,
+};
+pub const TINY: ModelPreset = ModelPreset {
+    name: "tiny", n_layers: 8, d_model: 256, n_heads: 8, d_head: 32,
+    vocab_size: 2048, seq_len: 128,
+};
+
+pub const ALL: [&ModelPreset; 6] =
+    [&PAPER_60M, &PAPER_150M, &PAPER_400M, &NANO, &MICRO, &TINY];
+
+pub fn by_name(name: &str) -> Option<&'static ModelPreset> {
+    ALL.iter().copied().find(|p| p.name == name)
+}
+
+/// Paper Table 5 (bold values) — the chosen hyperparameters.
+pub mod paper_hparams {
+    pub const INNER_LR: f64 = 4e-4;
+    pub const WARMUP_STEPS: usize = 1000;
+    pub const WEIGHT_DECAY: f64 = 0.1;
+    pub const BATCH_SIZE: usize = 512;
+    pub const SEQ_LEN: usize = 1024;
+    pub const OUTER_NESTEROV_LR: f64 = 0.7;
+    pub const OUTER_NESTEROV_MU: f64 = 0.9;
+    pub const OUTER_ADAM_EPS: f64 = 0.1;
+    pub const COMM_FREQ_H: usize = 500;
+    pub const PRETRAIN_STEPS: usize = 24_000;
+    pub const TOTAL_STEPS: usize = 88_000;
+    pub const REPLICAS: usize = 8;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nano_param_count_matches_python() {
+        // Value printed by configs.py / asserted in python tests.
+        assert_eq!(NANO.param_count(), 134_400);
+    }
+
+    #[test]
+    fn paper_sizes_near_nominal() {
+        assert!((40e6..90e6).contains(&(PAPER_60M.param_count() as f64)));
+        assert!((100e6..200e6).contains(&(PAPER_150M.param_count() as f64)));
+        assert!((280e6..520e6).contains(&(PAPER_400M.param_count() as f64)));
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("micro"), Some(&MICRO));
+        assert_eq!(by_name("nope"), None);
+    }
+
+    #[test]
+    fn attention_dims_consistent() {
+        // Table 1 uses nh*dh != d for some presets; check our formula's shape.
+        for p in ALL {
+            assert!(p.n_heads * p.d_head > 0);
+            assert_eq!(p.d_ff(), 4 * p.d_model);
+        }
+    }
+}

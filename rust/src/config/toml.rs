@@ -1,0 +1,304 @@
+//! TOML-subset parser (substrate — no toml/serde in the crate universe).
+//!
+//! Supports what experiment configs need: `[table]` and `[table.sub]`
+//! headers, `key = value` with strings, integers, floats, booleans, and
+//! homogeneous arrays, plus `#` comments. Keys flatten to dotted paths
+//! (`model.name`), values land in a [`TomlDoc`] map. Unsupported TOML
+//! (multiline strings, inline tables, dates, arrays-of-tables) is a parse
+//! error, not silent misreading.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> anyhow::Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => anyhow::bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> anyhow::Result<i64> {
+        match self {
+            TomlValue::Int(x) => Ok(*x),
+            _ => anyhow::bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> anyhow::Result<usize> {
+        let x = self.as_i64()?;
+        if x < 0 {
+            anyhow::bail!("expected non-negative integer, got {x}");
+        }
+        Ok(x as usize)
+    }
+
+    pub fn as_f64(&self) -> anyhow::Result<f64> {
+        match self {
+            TomlValue::Float(x) => Ok(*x),
+            TomlValue::Int(x) => Ok(*x as f64),
+            _ => anyhow::bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> anyhow::Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => anyhow::bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// A parsed document: dotted-path key → value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> anyhow::Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: bad table header", lineno + 1))?
+                    .trim();
+                if name.is_empty() || name.starts_with('[') {
+                    anyhow::bail!("line {}: unsupported table header {line:?}", lineno + 1);
+                }
+                prefix = format!("{name}.");
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                anyhow::bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            let full = format!("{prefix}{key}");
+            if doc.entries.insert(full.clone(), value).is_some() {
+                anyhow::bail!("line {}: duplicate key {full:?}", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> anyhow::Result<String> {
+        match self.get(key) {
+            Some(v) => Ok(v.as_str()?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            Some(v) => v.as_usize(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            Some(v) => v.as_f64(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.get(key) {
+            Some(v) => v.as_bool(),
+            None => Ok(default),
+        }
+    }
+
+    /// Keys that were never read — surfaced as a config-typo warning.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string literal.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> anyhow::Result<TomlValue> {
+    if s.is_empty() {
+        anyhow::bail!("empty value");
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string {s:?}"))?;
+        if body.contains('"') {
+            anyhow::bail!("embedded quote in {s:?} (escapes unsupported)");
+        }
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array {s:?}"))?
+            .trim();
+        if body.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = split_top_level(body)?;
+        return Ok(TomlValue::Arr(
+            items
+                .iter()
+                .map(|i| parse_value(i.trim()))
+                .collect::<anyhow::Result<_>>()?,
+        ));
+    }
+    let clean = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(x) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(x));
+        }
+    }
+    if let Ok(x) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(x));
+    }
+    anyhow::bail!("cannot parse value {s:?}")
+}
+
+fn split_top_level(s: &str) -> anyhow::Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| anyhow::anyhow!("unbalanced brackets"))?;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_scalars() {
+        let doc = TomlDoc::parse(
+            r#"
+            # experiment
+            seed = 17
+            [model]
+            name = "nano"   # preset
+            lr = 4e-4
+            deep = -1.5
+            [diloco]
+            workers = 8
+            non_iid = true
+            hs = [50, 100, 250]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("seed").unwrap().as_i64().unwrap(), 17);
+        assert_eq!(doc.get("model.name").unwrap().as_str().unwrap(), "nano");
+        assert!((doc.get("model.lr").unwrap().as_f64().unwrap() - 4e-4).abs() < 1e-12);
+        assert_eq!(doc.get("diloco.workers").unwrap().as_usize().unwrap(), 8);
+        assert!(doc.get("diloco.non_iid").unwrap().as_bool().unwrap());
+        assert_eq!(
+            doc.get("diloco.hs").unwrap(),
+            &TomlValue::Arr(vec![
+                TomlValue::Int(50),
+                TomlValue::Int(100),
+                TomlValue::Int(250)
+            ])
+        );
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+        assert!(TomlDoc::parse("a 1").is_err());
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("a = \"unterminated").is_err());
+        assert!(TomlDoc::parse("a = [1, 2").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let doc = TomlDoc::parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc.get("k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn defaults_api() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.usize_or("x", 9).unwrap(), 3);
+        assert_eq!(doc.usize_or("y", 9).unwrap(), 9);
+        assert_eq!(doc.str_or("name", "dflt").unwrap(), "dflt");
+    }
+
+    #[test]
+    fn underscore_separators() {
+        let doc = TomlDoc::parse("big = 88_000").unwrap();
+        assert_eq!(doc.get("big").unwrap().as_i64().unwrap(), 88_000);
+    }
+}

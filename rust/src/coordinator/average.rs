@@ -1,0 +1,118 @@
+//! Outer-gradient averaging (Algorithm 1 line 12).
+//!
+//! Uniform mean in the i.i.d. regime; shard-size-weighted mean in the
+//! non-i.i.d. regime (paper §6.1 "Weighted Average of Outer Gradients":
+//! at k=64 cluster imbalance is striking and weighting by example count
+//! is beneficial).
+
+use crate::runtime::Tensors;
+
+/// Weighted average of deltas. `weights` need not be normalized; they are
+/// divided by their sum. Panics on empty input or all-zero weights.
+pub fn weighted_average(deltas: &[Tensors], weights: &[f64]) -> Tensors {
+    assert!(!deltas.is_empty(), "no outer gradients to average");
+    assert_eq!(deltas.len(), weights.len());
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "all-zero averaging weights");
+    let mut acc = deltas[0].clone();
+    acc.scale((weights[0] / total) as f32);
+    for (d, &w) in deltas[1..].iter().zip(&weights[1..]) {
+        acc.axpy((w / total) as f32, d);
+    }
+    acc
+}
+
+/// Uniform average.
+pub fn average(deltas: &[Tensors]) -> Tensors {
+    weighted_average(deltas, &vec![1.0; deltas.len()])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn t(vals: &[f32]) -> Tensors {
+        Tensors::from_raw(vec![vals.to_vec()])
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let avg = average(&[t(&[1.0, 2.0]), t(&[3.0, 4.0])]);
+        assert_eq!(avg.iter_flat().collect::<Vec<f32>>(), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn weights_normalize() {
+        let avg = weighted_average(&[t(&[0.0]), t(&[10.0])], &[3.0, 1.0]);
+        assert!((avg.iter_flat().next().unwrap() - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_delta_is_identity() {
+        let d = t(&[1.5, -2.5]);
+        let avg = average(&[d.clone()]);
+        assert_eq!(avg, d);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_input_panics() {
+        average(&[]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_weights_panic() {
+        weighted_average(&[t(&[1.0])], &[0.0]);
+    }
+
+    #[test]
+    fn prop_permutation_invariant() {
+        check("uniform average is permutation-invariant", 50, |g| {
+            let n = g.usize_in(2..6);
+            let len = g.usize_in(1..30);
+            let deltas: Vec<Tensors> = (0..n)
+                .map(|_| {
+                    let mut v = g.f32_vec(len..len + 1, 3.0);
+                    v.resize(len, 0.0);
+                    t(&v)
+                })
+                .collect();
+            let mut reversed = deltas.clone();
+            reversed.reverse();
+            let a = average(&deltas);
+            let b = average(&reversed);
+            for (x, y) in a.iter_flat().zip(b.iter_flat()) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_average_within_bounds() {
+        check("average lies within elementwise min/max", 50, |g| {
+            let len = g.usize_in(1..20);
+            let k = g.usize_in(2..5);
+            let deltas: Vec<Tensors> = (0..k)
+                .map(|_| {
+                    let mut v = g.f32_vec(len..len + 1, 2.0);
+                    v.resize(len, 0.0);
+                    t(&v)
+                })
+                .collect();
+            let avg: Vec<f32> = average(&deltas).iter_flat().collect();
+            for i in 0..len {
+                let col: Vec<f32> =
+                    deltas.iter().map(|d| d.leaves()[0][i]).collect();
+                let lo = col.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = col.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                assert!(
+                    avg[i] >= lo - 1e-5 && avg[i] <= hi + 1e-5,
+                    "avg {} outside [{lo}, {hi}]",
+                    avg[i]
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,222 @@
+//! The paper's baselines (Table 2 / Fig 2).
+//!
+//! * **Plain baseline** — single worker, batch B, N steps
+//!   ([`Coordinator::plain_train`] drives this one).
+//! * **8× batch, data parallelism** — k simulated DP replicas: each step,
+//!   every replica computes gradients on its own batch (`grad_step`
+//!   artifact), gradients are all-reduced (averaged — billed as k messages
+//!   per step on the fabric), and one `apply_update` applies AdamW.
+//!   Same wall-clock as the baseline (replicas run in parallel), k× the
+//!   compute & data, k×N communication.
+//! * **8× batch, microbatching** — numerically identical update (gradient
+//!   accumulation over k microbatches on one island): zero communication
+//!   but k× the wall-clock. Table 2 rows 2–3 share one implementation
+//!   here, differing only in how simulated time and bytes are billed.
+
+use crate::comm::{Direction, SimNet};
+use crate::coordinator::Coordinator;
+use crate::metrics::{RunMetrics, Stopwatch};
+use crate::runtime::{Tensors, ValueView};
+use crate::util::math;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BigBatchMode {
+    /// k islands in parallel; gradients cross the fabric each step.
+    DataParallel,
+    /// One island accumulates k microbatches serially; no communication.
+    Microbatch,
+}
+
+/// Train with an effective batch of `k × B` for `steps` optimizer updates.
+pub fn run_big_batch(
+    coord: &Coordinator,
+    k: usize,
+    steps: usize,
+    mode: BigBatchMode,
+    init: Tensors,
+    start_step: f64,
+) -> anyhow::Result<RunMetrics> {
+    let rt = coord.runtime();
+    let mcfg = &rt.manifest.config;
+    let n_leaves = rt.manifest.params.len();
+    let label = match mode {
+        BigBatchMode::DataParallel => format!("dp_{k}x_batch"),
+        BigBatchMode::Microbatch => format!("microbatch_{k}x_batch"),
+    };
+    let mut metrics = RunMetrics::new(&label);
+    let cfg = &coord.cfg;
+
+    // k independent data streams over the merged corpus (the big batch is
+    // still i.i.d. data, only bigger).
+    let merged = coord.merged_stream();
+    let mut iters: Vec<crate::data::batch::BatchIter> = (0..k)
+        .map(|i| {
+            crate::data::batch::BatchIter::new(
+                merged.clone(),
+                mcfg.batch_size,
+                mcfg.seq_len,
+                cfg.rng().child(500 + i as u64),
+            )
+        })
+        .collect();
+
+    let mut net = SimNet::new(
+        cfg.comm.bandwidth_bps,
+        cfg.comm.latency_s,
+        0.0,
+        cfg.rng().child(8),
+    );
+    let payload = rt.manifest.param_bytes() as u64;
+
+    let mut params = init;
+    let mut m = Tensors::zeros(&rt.manifest);
+    let mut v = Tensors::zeros(&rt.manifest);
+    let mut step = start_step;
+
+    let eval_interval = (cfg.inner_steps * cfg.eval_every_rounds.max(1)).max(1);
+    for s in 0..steps {
+        // Gradient phase across the k (simulated) replicas.
+        let mut grad_sum: Option<Tensors> = None;
+        let mut losses = Vec::with_capacity(k);
+        let mut slowest = 0.0f64;
+        let mut serial = 0.0f64;
+        for it in iters.iter_mut() {
+            let batch = it.next_batch();
+            let mut inputs = params.to_views();
+            inputs.push(ValueView::I32(&batch.tokens));
+            inputs.push(ValueView::I32(&batch.targets));
+            let t0 = std::time::Instant::now();
+            let mut out = {
+                let _t = Stopwatch::new(&mut metrics.phases.inner_compute_s);
+                rt.execute_views("grad_step", &inputs)?
+            };
+            let dt = t0.elapsed().as_secs_f64();
+            slowest = slowest.max(dt);
+            serial += dt;
+            let loss = out.pop().unwrap().scalar_f32()?;
+            losses.push(loss as f64);
+            let grads = Tensors::from_values(&rt.manifest, out)?;
+            match &mut grad_sum {
+                None => grad_sum = Some(grads),
+                Some(acc) => acc.axpy(1.0, &grads),
+            }
+            if mode == BigBatchMode::DataParallel && k > 1 {
+                net.try_send(payload, Direction::Up);
+            }
+        }
+        let mut grads = grad_sum.expect("k >= 1");
+        grads.scale(1.0 / k as f32);
+        metrics.loss_curve.push(math::mean(&losses) as f32);
+        metrics.sim_compute_seconds += match mode {
+            BigBatchMode::DataParallel => slowest,
+            BigBatchMode::Microbatch => serial,
+        };
+        if mode == BigBatchMode::DataParallel {
+            net.end_round();
+        }
+
+        // One fused AdamW application on the averaged gradient.
+        let step_scalar = [step as f32];
+        let mut inputs = Vec::with_capacity(4 * n_leaves + 1);
+        params.append_views(&mut inputs);
+        m.append_views(&mut inputs);
+        v.append_views(&mut inputs);
+        grads.append_views(&mut inputs);
+        inputs.push(ValueView::F32(&step_scalar));
+        let mut out = {
+            let _t = Stopwatch::new(&mut metrics.phases.outer_opt_s);
+            rt.execute_views("apply_update", &inputs)?
+        };
+        drop(inputs);
+        let v_vals = out.split_off(2 * n_leaves);
+        let m_vals = out.split_off(n_leaves);
+        params = Tensors::from_values(&rt.manifest, out)?;
+        m = Tensors::from_values(&rt.manifest, m_vals)?;
+        v = Tensors::from_values(&rt.manifest, v_vals)?;
+        step += 1.0;
+
+        if (s + 1) % eval_interval == 0 || s + 1 == steps {
+            let _t = Stopwatch::new(&mut metrics.phases.eval_s);
+            let mut p = coord.evaluate(&params)?;
+            p.step = start_step as usize + s + 1;
+            metrics.eval_curve.push(p);
+        }
+    }
+
+    let cs = net.stats();
+    metrics.comm_bytes = cs.total_bytes();
+    metrics.comm_bytes_up = cs.bytes_up;
+    metrics.comm_messages = cs.messages;
+    metrics.sim_comm_seconds = cs.sim_comm_seconds;
+    Ok(metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::runtime::Runtime;
+    use std::rc::Rc;
+
+    fn setup() -> Option<(Coordinator, Tensors)> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("nano.manifest.json").exists() {
+            return None;
+        }
+        let rt = Rc::new(Runtime::load(dir, "nano").unwrap());
+        let mut cfg = ExperimentConfig::paper_default(dir, "nano");
+        cfg.data.n_docs = 60;
+        cfg.data.doc_len = 120;
+        cfg.eval_batches = 1;
+        cfg.inner_steps = 4;
+        let init = rt.init_params().unwrap();
+        Some((Coordinator::new(cfg, rt).unwrap(), init))
+    }
+
+    #[test]
+    fn dp_and_microbatch_produce_identical_models() {
+        // Table 2 rows 2–3: same math, different cost model.
+        let Some((coord, init)) = setup() else { return };
+        let a = run_big_batch(
+            &coord, 2, 3, BigBatchMode::DataParallel, init.clone(), 0.0,
+        )
+        .unwrap();
+        let b =
+            run_big_batch(&coord, 2, 3, BigBatchMode::Microbatch, init, 0.0)
+                .unwrap();
+        assert_eq!(a.loss_curve, b.loss_curve);
+        assert!((a.final_ppl() - b.final_ppl()).abs() < 1e-9);
+        // …but DP communicates and microbatching does not.
+        assert!(a.comm_bytes > 0);
+        assert_eq!(b.comm_bytes, 0);
+    }
+
+    #[test]
+    fn dp_comm_scales_with_k_times_steps() {
+        let Some((coord, init)) = setup() else { return };
+        let m =
+            run_big_batch(&coord, 2, 3, BigBatchMode::DataParallel, init, 0.0)
+                .unwrap();
+        let payload = coord.runtime().manifest.param_bytes() as u64;
+        assert_eq!(m.comm_bytes, 2 * 3 * payload);
+        assert_eq!(m.comm_messages, 6);
+    }
+
+    #[test]
+    fn k1_big_batch_matches_plain_training_loss() {
+        // k=1 DP is exactly the plain baseline (grad_step + apply_update
+        // ≡ the fused train_step) — cross-checks the two artifact paths.
+        let Some((coord, init)) = setup() else { return };
+        let dp = run_big_batch(
+            &coord, 1, 4, BigBatchMode::DataParallel, init.clone(), 0.0,
+        )
+        .unwrap();
+        let mut plain = RunMetrics::new("plain");
+        coord.plain_train(init, 0.0, 4, &mut plain, 0).unwrap();
+        // Same update math; different data streams ⇒ compare magnitudes.
+        assert!(dp.loss_curve.iter().all(|l| l.is_finite()));
+        assert!(plain.loss_curve.iter().all(|l| l.is_finite()));
+        let d = (dp.loss_curve[0] - plain.loss_curve[0]).abs();
+        assert!(d < 1.0, "first-step losses far apart: {d}");
+    }
+}

@@ -1,0 +1,442 @@
+//! The DiLoCo coordinator — Algorithm 1 of the paper, plus every ablation
+//! knob the evaluation section exercises.
+//!
+//! One [`Coordinator`] owns the run: it synthesizes + shards data, warm
+//! starts from `pretrain_steps` of plain training (paper Fig 3), then
+//! executes T outer rounds. Each round: the schedule (Fig 7) picks the
+//! active workers; each active worker runs H inner AdamW steps through the
+//! AOT artifacts; outer gradients are optionally sign-pruned (Table 6),
+//! shipped over the simulated fabric with drop injection (Fig 8),
+//! weighted-averaged (§6.1), and applied by the outer optimizer (Fig 6).
+//! Fresh parameters are re-dispatched to every worker that communicated;
+//! a worker whose upload dropped keeps training from its own parameters,
+//! exactly as the paper specifies.
+
+pub mod average;
+pub mod baselines;
+pub mod opt;
+pub mod prune;
+pub mod stats;
+
+use crate::comm::{Direction, SimNet};
+use crate::config::ExperimentConfig;
+use crate::data::batch::{BatchIter, EvalSet};
+use crate::data::Dataset;
+use crate::metrics::{EvalPoint, RunMetrics, Stopwatch};
+use crate::runtime::{Runtime, Tensors};
+use crate::util::math;
+use crate::worker::Worker;
+use std::rc::Rc;
+
+pub use stats::RoundStats;
+
+/// Everything a finished run reports.
+pub struct DilocoReport {
+    pub metrics: RunMetrics,
+    pub round_stats: Vec<RoundStats>,
+    pub final_params: Tensors,
+    /// Rounds in which each worker's outer gradient was dropped.
+    pub drops_per_worker: Vec<usize>,
+}
+
+pub struct Coordinator {
+    pub cfg: ExperimentConfig,
+    rt: Rc<Runtime>,
+    pub dataset: Dataset,
+    evalset: EvalSet,
+}
+
+impl Coordinator {
+    /// Build the data pipeline for `cfg` against an already-loaded runtime
+    /// (runtimes are reused across bench variants — compilation is paid
+    /// once per artifact set).
+    pub fn new(cfg: ExperimentConfig, rt: Rc<Runtime>) -> anyhow::Result<Coordinator> {
+        let mcfg = &rt.manifest.config;
+        anyhow::ensure!(
+            mcfg.name == cfg.model,
+            "runtime holds {:?}, config wants {:?}",
+            mcfg.name,
+            cfg.model
+        );
+        let max_k = cfg.schedule.max_workers(cfg.rounds).max(cfg.workers);
+        let dataset = Dataset::build(&cfg.data, max_k, mcfg.vocab_size, cfg.seed);
+        let evalset = EvalSet::new(
+            &dataset.holdout,
+            mcfg.batch_size,
+            mcfg.seq_len,
+            cfg.eval_batches,
+        );
+        Ok(Coordinator { cfg, rt, dataset, evalset })
+    }
+
+    pub fn runtime(&self) -> &Rc<Runtime> {
+        &self.rt
+    }
+
+    /// Mean nll / PPL of `params` on the fixed validation windows.
+    pub fn evaluate(&self, params: &Tensors) -> anyhow::Result<EvalPoint> {
+        let mut sum = 0.0;
+        let mut count = 0.0;
+        for b in self.evalset.batches() {
+            let (s, c) = self.rt.eval_batch(params, &b.tokens, &b.targets)?;
+            sum += s;
+            count += c;
+        }
+        let mean_nll = sum / count;
+        Ok(EvalPoint { step: 0, mean_nll, ppl: math::ppl(mean_nll) })
+    }
+
+    /// Merged token stream over all shards (pretraining / plain baselines
+    /// train on the full dataset, like the paper's single-worker runs).
+    pub fn merged_stream(&self) -> Vec<i32> {
+        let mut s = Vec::new();
+        for shard in &self.dataset.shards {
+            s.extend_from_slice(shard);
+        }
+        s
+    }
+
+    /// Plain (non-DiLoCo) training for `steps` steps from `init`.
+    /// Returns final params; logs losses/evals into `metrics`.
+    pub fn plain_train(
+        &self,
+        init: Tensors,
+        start_step: f64,
+        steps: usize,
+        metrics: &mut RunMetrics,
+        eval_every: usize,
+    ) -> anyhow::Result<Tensors> {
+        let mcfg = &self.rt.manifest.config;
+        let mut worker = Worker::new(
+            usize::MAX,
+            init,
+            Tensors::zeros(&self.rt.manifest),
+            BatchIter::new(
+                self.merged_stream(),
+                mcfg.batch_size,
+                mcfg.seq_len,
+                self.cfg.rng().child(999),
+            ),
+        );
+        worker.step = start_step;
+        let mut done = 0usize;
+        while done < steps {
+            let h = (steps - done).min(self.cfg.inner_steps.max(1));
+            {
+                let _t = Stopwatch::new(&mut metrics.phases.inner_compute_s);
+                worker.run_inner_steps(&self.rt, h, &mut metrics.loss_curve)?;
+            }
+            done += h;
+            let at_boundary = eval_every > 0
+                && (done / self.cfg.inner_steps.max(1))
+                    % eval_every == 0;
+            if at_boundary || done >= steps {
+                let _t = Stopwatch::new(&mut metrics.phases.eval_s);
+                let mut p = self.evaluate(&worker.params)?;
+                p.step = start_step as usize + done;
+                metrics.eval_curve.push(p);
+            }
+        }
+        metrics.sim_compute_seconds += worker.compute_seconds;
+        Ok(worker.params)
+    }
+
+    /// Full DiLoCo run: pretrain warm start, then T rounds of Algorithm 1.
+    pub fn run(&self) -> anyhow::Result<DilocoReport> {
+        self.run_from(None)
+    }
+
+    /// As [`run`], but optionally starting from caller-provided parameters.
+    /// A provided `init` is treated as *already pretrained* for
+    /// `cfg.pretrain_steps` steps (shared warm start across bench
+    /// variants): the pretrain phase is skipped but the workers' global
+    /// step counter — and hence the baked inner-lr schedule — resumes
+    /// from `pretrain_steps`.
+    pub fn run_from(&self, init: Option<Tensors>) -> anyhow::Result<DilocoReport> {
+        let cfg = &self.cfg;
+        let mcfg = &self.rt.manifest.config;
+        let mut metrics = RunMetrics::new(&format!(
+            "diloco_k{}_h{}_{}",
+            cfg.workers,
+            cfg.inner_steps,
+            cfg.outer_opt.name()
+        ));
+        let rng = cfg.rng();
+
+        // θ(0): explicit init (already pretrained) or fresh init followed
+        // by the pretraining phase.
+        let global = match init {
+            Some(p) => p,
+            None => {
+                let fresh = self.rt.init_params()?;
+                if cfg.pretrain_steps > 0 {
+                    self.plain_train(
+                        fresh,
+                        0.0,
+                        cfg.pretrain_steps,
+                        &mut metrics,
+                        cfg.eval_every_rounds,
+                    )?
+                } else {
+                    fresh
+                }
+            }
+        };
+        let mut global = global;
+
+        // Worker pool sized to the schedule's maximum.
+        let max_k = cfg.schedule.max_workers(cfg.rounds).max(1);
+        let zeros = Tensors::zeros(&self.rt.manifest);
+        let mut workers: Vec<Worker> = (0..max_k)
+            .map(|i| {
+                let shard = self.dataset.shards[i % self.dataset.shards.len()].clone();
+                let mut w = Worker::new(
+                    i,
+                    global.clone(),
+                    zeros.clone(),
+                    BatchIter::new(
+                        shard,
+                        mcfg.batch_size,
+                        mcfg.seq_len,
+                        rng.child(100 + i as u64),
+                    ),
+                );
+                w.step = cfg.pretrain_steps as f64;
+                w
+            })
+            .collect();
+        // Workers desynced by a dropped upload keep local params (Fig 8).
+        let mut synced = vec![true; max_k];
+        let mut drops_per_worker = vec![0usize; max_k];
+
+        let mut net = SimNet::new(
+            cfg.comm.bandwidth_bps,
+            cfg.comm.latency_s,
+            cfg.comm.drop_prob,
+            rng.child(7),
+        );
+        let mut outer = opt::OuterOpt::new(&cfg.outer_opt, &zeros);
+        let mut round_stats = Vec::with_capacity(cfg.rounds);
+        let payload = self.rt.manifest.param_bytes() as u64;
+
+        for t in 0..cfg.rounds {
+            let k_t = cfg.schedule.workers_at(t, cfg.rounds).min(max_k).max(1);
+            let active = &mut workers[..k_t];
+
+            // Re-dispatch θ(t-1) to synced workers; desynced ones continue
+            // from their own parameters.
+            let mut starts: Vec<Tensors> = Vec::with_capacity(k_t);
+            for w in active.iter_mut() {
+                if synced[w.id] {
+                    w.set_params(global.clone());
+                }
+                starts.push(w.params.clone());
+            }
+
+            // Inner phase: H steps per active worker, losses averaged
+            // across workers per step index (islands run in parallel).
+            let mut per_worker_losses: Vec<Vec<f32>> = Vec::with_capacity(k_t);
+            let mut round_compute = 0.0f64;
+            for w in active.iter_mut() {
+                let before = w.compute_seconds;
+                let mut losses = Vec::with_capacity(cfg.inner_steps);
+                {
+                    let _t = Stopwatch::new(&mut metrics.phases.inner_compute_s);
+                    w.run_inner_steps(&self.rt, cfg.inner_steps, &mut losses)?;
+                }
+                round_compute = round_compute.max(w.compute_seconds - before);
+                per_worker_losses.push(losses);
+            }
+            metrics.sim_compute_seconds += round_compute;
+            for s in 0..cfg.inner_steps {
+                let avg = per_worker_losses.iter().map(|l| l[s]).sum::<f32>()
+                    / k_t as f32;
+                metrics.loss_curve.push(avg);
+            }
+
+            // Communication phase: prune, upload (drops possible), average.
+            let _outer_timer = Stopwatch::new(&mut metrics.phases.outer_opt_s);
+            let mut received: Vec<Tensors> = Vec::with_capacity(k_t);
+            let mut weights: Vec<f64> = Vec::with_capacity(k_t);
+            let mut uploaded = vec![false; k_t];
+            for (i, w) in active.iter_mut().enumerate() {
+                let mut delta = starts[i].delta(&w.params);
+                let bytes = if cfg.prune_frac > 0.0 {
+                    let zeroed = prune::prune_sign(&mut delta, cfg.prune_frac);
+                    prune::pruned_payload_bytes(delta.total_elements(), zeroed)
+                } else {
+                    payload
+                };
+                // k=1 "accelerating a single worker" (Fig 9): the outer
+                // step is local, nothing crosses the fabric.
+                let ok = if k_t == 1 {
+                    true
+                } else {
+                    net.try_send(bytes, Direction::Up)
+                };
+                if ok {
+                    uploaded[i] = true;
+                    received.push(delta);
+                    weights.push(if cfg.weighted_average && cfg.data.non_iid {
+                        self.dataset.shard_doc_counts
+                            [w.id % self.dataset.shard_doc_counts.len()]
+                            as f64
+                    } else {
+                        1.0
+                    });
+                } else {
+                    drops_per_worker[w.id] += 1;
+                }
+            }
+
+            if !received.is_empty() {
+                let avg = average::weighted_average(&received, &weights);
+                round_stats.push(stats::round_stats(t, &received, &avg));
+                outer.step(&mut global, &avg);
+                anyhow::ensure!(
+                    global.all_finite(),
+                    "outer step produced non-finite parameters at round {t}"
+                );
+            }
+
+            // Download: workers that communicated get θ(t); others stay
+            // desynced until their next successful round.
+            for (i, w) in active.iter().enumerate() {
+                if uploaded[i] {
+                    if k_t > 1 {
+                        net.send_reliable(payload, Direction::Down);
+                    }
+                    synced[w.id] = true;
+                } else {
+                    synced[w.id] = false;
+                }
+            }
+            net.end_round();
+            drop(_outer_timer);
+
+            // Evaluation of the *global* model.
+            let at_eval = cfg.eval_every_rounds > 0
+                && (t + 1) % cfg.eval_every_rounds == 0;
+            if at_eval || t + 1 == cfg.rounds {
+                let _t = Stopwatch::new(&mut metrics.phases.eval_s);
+                let mut p = self.evaluate(&global)?;
+                p.step = cfg.pretrain_steps + (t + 1) * cfg.inner_steps;
+                metrics.eval_curve.push(p);
+            }
+        }
+
+        let cs = net.stats();
+        metrics.comm_bytes = cs.total_bytes();
+        metrics.comm_bytes_up = cs.bytes_up;
+        metrics.comm_messages = cs.messages;
+        metrics.comm_dropped = cs.dropped;
+        metrics.sim_comm_seconds = cs.sim_comm_seconds;
+
+        Ok(DilocoReport {
+            metrics,
+            round_stats,
+            final_params: global,
+            drops_per_worker,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ComputeSchedule, OuterOptConfig};
+
+    fn runtime() -> Option<Rc<Runtime>> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        std::path::Path::new(dir)
+            .join("nano.manifest.json")
+            .exists()
+            .then(|| Rc::new(Runtime::load(dir, "nano").unwrap()))
+    }
+
+    fn fast_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper_default(
+            concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+            "nano",
+        );
+        cfg.workers = 2;
+        cfg.schedule = ComputeSchedule::Constant(2);
+        cfg.inner_steps = 5;
+        cfg.rounds = 2;
+        cfg.pretrain_steps = 5;
+        cfg.eval_batches = 1;
+        cfg.data.n_docs = 60;
+        cfg.data.doc_len = 120;
+        cfg
+    }
+
+    #[test]
+    fn diloco_runs_and_reports() {
+        let Some(rt) = runtime() else { return };
+        let coord = Coordinator::new(fast_cfg(), rt).unwrap();
+        let report = coord.run().unwrap();
+        // 5 pretrain + 2 rounds × 5 inner steps of loss points.
+        assert_eq!(report.metrics.loss_curve.len(), 15);
+        assert_eq!(report.round_stats.len(), 2);
+        assert!(report.metrics.final_ppl().is_finite());
+        assert!(report.final_params.all_finite());
+        // Communication: 2 workers × 2 rounds, up + down each.
+        assert_eq!(report.metrics.comm_messages, 8);
+        assert_eq!(
+            report.metrics.comm_bytes,
+            8 * coord.runtime().manifest.param_bytes() as u64
+        );
+    }
+
+    #[test]
+    fn single_worker_has_zero_comm() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = fast_cfg();
+        cfg.workers = 1;
+        cfg.schedule = ComputeSchedule::Constant(1);
+        let coord = Coordinator::new(cfg, rt).unwrap();
+        let report = coord.run().unwrap();
+        assert_eq!(report.metrics.comm_bytes, 0);
+        assert_eq!(report.metrics.comm_messages, 0);
+        assert_eq!(report.round_stats.len(), 2); // outer steps still happen
+    }
+
+    #[test]
+    fn full_drop_leaves_global_unchanged() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = fast_cfg();
+        cfg.comm.drop_prob = 1.0;
+        cfg.pretrain_steps = 0;
+        let coord = Coordinator::new(cfg, rt.clone()).unwrap();
+        let init = rt.init_params().unwrap();
+        let report = coord.run_from(Some(init.clone())).unwrap();
+        // Every upload dropped ⇒ no outer step ever ⇒ global == init.
+        assert_eq!(report.final_params, init);
+        assert!(report.round_stats.is_empty());
+        assert_eq!(report.drops_per_worker.iter().sum::<usize>(), 4);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let Some(rt) = runtime() else { return };
+        let r1 = Coordinator::new(fast_cfg(), rt.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let r2 = Coordinator::new(fast_cfg(), rt).unwrap().run().unwrap();
+        assert_eq!(r1.metrics.loss_curve, r2.metrics.loss_curve);
+        assert_eq!(r1.final_params, r2.final_params);
+    }
+
+    #[test]
+    fn schedule_controls_active_workers() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = fast_cfg();
+        cfg.schedule = ComputeSchedule::Step { first: 1, second: 2 };
+        cfg.rounds = 2;
+        let coord = Coordinator::new(cfg, rt).unwrap();
+        let report = coord.run().unwrap();
+        // Round 0: k=1 (no fabric traffic), round 1: k=2 (2 up + 2 down).
+        assert_eq!(report.metrics.comm_messages, 4);
+    }
+}

@@ -1,0 +1,241 @@
+//! Outer optimizers (paper Fig 6): SGD, SGD-momentum, Nesterov, Adam.
+//!
+//! These are the rust-native implementation of Algorithm 1 line 14 —
+//! `θ(t) ← OuterOpt(θ(t-1), Δ(t))` — operating on host `Tensors`. The
+//! averaged outer gradient Δ is treated as a gradient (it points from the
+//! workers' average back toward the previous parameters).
+//!
+//! Nesterov with lr 0.7 / μ 0.9 is the paper's choice; SGD(lr) reduces to
+//! classical FedAvg when lr=1, and Adam is FedOpt (with ε raised to ~0.1
+//! for stability, as the paper found necessary). The `outer_step` HLO
+//! artifact implements the same Nesterov recurrence and is cross-checked
+//! against this module in the integration tests.
+
+use crate::config::OuterOptConfig;
+use crate::runtime::Tensors;
+
+pub enum OuterOpt {
+    Sgd {
+        lr: f32,
+    },
+    SgdM {
+        lr: f32,
+        mu: f32,
+        mom: Tensors,
+    },
+    Nesterov {
+        lr: f32,
+        mu: f32,
+        mom: Tensors,
+    },
+    Adam {
+        lr: f32,
+        b1: f32,
+        b2: f32,
+        eps: f32,
+        t: u64,
+        m: Tensors,
+        v: Tensors,
+    },
+}
+
+impl OuterOpt {
+    /// Build from config; `zeros` supplies the state shape.
+    pub fn new(cfg: &OuterOptConfig, zeros: &Tensors) -> OuterOpt {
+        match *cfg {
+            OuterOptConfig::Sgd { lr } => OuterOpt::Sgd { lr },
+            OuterOptConfig::SgdM { lr, mu } => {
+                OuterOpt::SgdM { lr, mu, mom: zeros.clone() }
+            }
+            OuterOptConfig::Nesterov { lr, mu } => {
+                OuterOpt::Nesterov { lr, mu, mom: zeros.clone() }
+            }
+            OuterOptConfig::Adam { lr, b1, b2, eps } => OuterOpt::Adam {
+                lr,
+                b1,
+                b2,
+                eps,
+                t: 0,
+                m: zeros.clone(),
+                v: zeros.clone(),
+            },
+        }
+    }
+
+    /// Apply one outer update in place: `params ← params - update(delta)`.
+    pub fn step(&mut self, params: &mut Tensors, delta: &Tensors) {
+        match self {
+            OuterOpt::Sgd { lr } => {
+                params.axpy(-*lr, delta);
+            }
+            OuterOpt::SgdM { lr, mu, mom } => {
+                // Heavy ball: mom ← μ·mom + Δ; θ ← θ - lr·mom
+                mom.scale(*mu);
+                mom.axpy(1.0, delta);
+                params.axpy(-*lr, mom);
+            }
+            OuterOpt::Nesterov { lr, mu, mom } => {
+                // PyTorch convention (matches kernels/ref.py):
+                // mom ← μ·mom + Δ; θ ← θ - lr·(Δ + μ·mom)
+                mom.scale(*mu);
+                mom.axpy(1.0, delta);
+                params.axpy(-*lr, delta);
+                params.axpy(-*lr * *mu, mom);
+            }
+            OuterOpt::Adam { lr, b1, b2, eps, t, m, v } => {
+                *t += 1;
+                let bc1 = 1.0 - (*b1 as f64).powi(*t as i32);
+                let bc2 = 1.0 - (*b2 as f64).powi(*t as i32);
+                for ((p_leaf, m_leaf), (v_leaf, d_leaf)) in params
+                    .leaves_mut()
+                    .iter_mut()
+                    .zip(m.leaves_mut())
+                    .zip(v.leaves_mut().iter_mut().zip(delta.leaves()))
+                {
+                    for i in 0..p_leaf.len() {
+                        let g = d_leaf[i];
+                        m_leaf[i] = *b1 * m_leaf[i] + (1.0 - *b1) * g;
+                        v_leaf[i] = *b2 * v_leaf[i] + (1.0 - *b2) * g * g;
+                        let m_hat = m_leaf[i] as f64 / bc1;
+                        let v_hat = v_leaf[i] as f64 / bc2;
+                        p_leaf[i] -=
+                            (*lr as f64 * m_hat / (v_hat.sqrt() + *eps as f64)) as f32;
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OuterOpt::Sgd { .. } => "sgd",
+            OuterOpt::SgdM { .. } => "sgdm",
+            OuterOpt::Nesterov { .. } => "nesterov",
+            OuterOpt::Adam { .. } => "adam",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn toy(vals: &[f32]) -> Tensors {
+        tensors_from(vals)
+    }
+
+    /// Split into two leaves to exercise multi-leaf paths.
+    fn tensors_from(vals: &[f32]) -> Tensors {
+        let mid = vals.len() / 2;
+        Tensors::from_raw(vec![vals[..mid].to_vec(), vals[mid..].to_vec()])
+    }
+
+    #[test]
+    fn sgd_is_plain_descent() {
+        let mut p = toy(&[1.0, 2.0, 3.0, 4.0]);
+        let d = toy(&[0.5, 0.5, 0.5, 0.5]);
+        let mut opt = OuterOpt::new(&OuterOptConfig::Sgd { lr: 1.0 }, &{
+            let mut z = p.clone();
+            z.scale(0.0);
+            z
+        });
+        opt.step(&mut p, &d);
+        let got: Vec<f32> = p.iter_flat().collect();
+        assert_eq!(got, vec![0.5, 1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn nesterov_mu_zero_equals_sgd() {
+        check("nesterov(mu=0) == sgd", 40, |g| {
+            let vals = g.f32_vec(2..40, 2.0);
+            let dvals = g.f32_vec(2..40, 1.0);
+            let n = vals.len().min(dvals.len()).max(2);
+            let p0 = tensors_from(&vals[..n]);
+            let d = tensors_from(&dvals[..n]);
+            let mut z = p0.clone();
+            z.scale(0.0);
+            let lr = g.f64_in(0.01..1.0) as f32;
+            let mut p_sgd = p0.clone();
+            let mut p_nes = p0.clone();
+            OuterOpt::new(&OuterOptConfig::Sgd { lr }, &z).step(&mut p_sgd, &d);
+            OuterOpt::new(&OuterOptConfig::Nesterov { lr, mu: 0.0 }, &z)
+                .step(&mut p_nes, &d);
+            for (a, b) in p_sgd.iter_flat().zip(p_nes.iter_flat()) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn nesterov_matches_reference_recurrence() {
+        // Scalar trace mirroring kernels/ref.py nesterov_update.
+        let mut p = tensors_from(&[1.0, 1.0]);
+        let d = tensors_from(&[0.1, 0.1]);
+        let mut z = p.clone();
+        z.scale(0.0);
+        let mut opt = OuterOpt::new(&OuterOptConfig::Nesterov { lr: 0.7, mu: 0.9 }, &z);
+        // Step 1: mom=0.1, p = 1 - 0.7*(0.1 + 0.09) = 0.867
+        opt.step(&mut p, &d);
+        for x in p.iter_flat() {
+            assert!((x - 0.867).abs() < 1e-5, "{x}");
+        }
+        // Step 2: mom = 0.09+0.1 = 0.19; p = 0.867 - 0.7*(0.1 + 0.171)
+        opt.step(&mut p, &d);
+        for x in p.iter_flat() {
+            assert!((x - (0.867 - 0.7 * 0.271)).abs() < 1e-5, "{x}");
+        }
+    }
+
+    #[test]
+    fn sgdm_accumulates_momentum() {
+        let mut p = tensors_from(&[0.0, 0.0]);
+        let d = tensors_from(&[1.0, 1.0]);
+        let mut z = p.clone();
+        z.scale(0.0);
+        let mut opt = OuterOpt::new(&OuterOptConfig::SgdM { lr: 1.0, mu: 0.5 }, &z);
+        opt.step(&mut p, &d); // mom=1, p=-1
+        opt.step(&mut p, &d); // mom=1.5, p=-2.5
+        for x in p.iter_flat() {
+            assert!((x + 2.5).abs() < 1e-6, "{x}");
+        }
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step() {
+        // With b1=b2=0.9/0.999, step 1: m_hat = g, v_hat = g², so the
+        // update is lr·g/(|g|+ε) ≈ lr·sign(g).
+        let mut p = tensors_from(&[0.0, 0.0, 0.0, 0.0]);
+        let d = tensors_from(&[0.5, -0.5, 2.0, -2.0]);
+        let mut z = p.clone();
+        z.scale(0.0);
+        let mut opt = OuterOpt::new(
+            &OuterOptConfig::Adam { lr: 0.3, b1: 0.9, b2: 0.999, eps: 1e-8 },
+            &z,
+        );
+        opt.step(&mut p, &d);
+        for (x, g) in p.iter_flat().zip([0.5f32, -0.5, 2.0, -2.0]) {
+            assert!((x + 0.3 * g.signum()).abs() < 1e-4, "{x} vs {}", g.signum());
+        }
+    }
+
+    #[test]
+    fn zero_delta_sgd_and_adam_are_stationary() {
+        let mut p = tensors_from(&[1.0, -1.0]);
+        let zero = {
+            let mut z = p.clone();
+            z.scale(0.0);
+            z
+        };
+        let mut sgd = OuterOpt::new(&OuterOptConfig::Sgd { lr: 0.7 }, &zero);
+        let before: Vec<f32> = p.iter_flat().collect();
+        sgd.step(&mut p, &zero);
+        assert_eq!(before, p.iter_flat().collect::<Vec<f32>>());
+        let mut adam = OuterOpt::new(
+            &OuterOptConfig::Adam { lr: 0.3, b1: 0.9, b2: 0.95, eps: 0.1 },
+            &zero,
+        );
+        adam.step(&mut p, &zero);
+        assert_eq!(before, p.iter_flat().collect::<Vec<f32>>());
+    }
+}

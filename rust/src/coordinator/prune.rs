@@ -1,0 +1,142 @@
+//! Sign-based outer-gradient pruning (paper Table 6, after Yadav et al.
+//! 2023 "TIES").
+//!
+//! Each replica prunes its own outer gradient before sending: per leaf,
+//! (1) *elect* the dominant sign by magnitude-weighted vote, then
+//! (2) zero a `frac` fraction of entries, discarding sign-disagreeing
+//! entries first (smallest magnitude first within each class). The paper
+//! reports ≤50% pruning costs ≈nothing (+0.39% PPL) while proportionally
+//! cutting the already-infrequent communication.
+
+use crate::runtime::Tensors;
+
+/// Prune `frac ∈ [0,1)` of each leaf's entries in place; returns the
+/// number of zeroed entries (for communication accounting: only non-zero
+/// values + a bitmap need to cross the wire).
+pub fn prune_sign(delta: &mut Tensors, frac: f64) -> usize {
+    assert!((0.0..=1.0).contains(&frac), "frac in [0,1]");
+    if frac == 0.0 {
+        return 0;
+    }
+    let mut zeroed = 0usize;
+    for leaf in delta.leaves_mut() {
+        let n = leaf.len();
+        let k = ((n as f64) * frac).floor() as usize;
+        if k == 0 {
+            continue;
+        }
+        // (1) elect sign by magnitude-weighted vote.
+        let vote: f64 = leaf.iter().map(|&x| x as f64).sum();
+        let elected = if vote >= 0.0 { 1.0f32 } else { -1.0f32 };
+        // (2) priority: disagreeing entries first, then by |value| asc.
+        // O(n) selection instead of a full sort (§Perf: 18.0 → 1.9 ms on
+        // the nano parameter set): rank by (agrees-with-elected, |value|)
+        // lexicographically, then select_nth. (Not a single float key —
+        // adding a large offset for the agreement class absorbs the
+        // magnitude bits.)
+        let key = |x: f32| -> (u8, f32) {
+            let disagree = x.signum() != elected && x != 0.0;
+            (u8::from(!disagree), x.abs()) // disagreeing rank lowest
+        };
+        let mut order: Vec<usize> = (0..n).collect();
+        if k < n {
+            order.select_nth_unstable_by(k, |&a, &b| {
+                let (ca, ma) = key(leaf[a]);
+                let (cb, mb) = key(leaf[b]);
+                ca.cmp(&cb).then_with(|| {
+                    ma.partial_cmp(&mb).unwrap_or(std::cmp::Ordering::Equal)
+                })
+            });
+        }
+        for &i in order.iter().take(k) {
+            if leaf[i] != 0.0 {
+                zeroed += 1;
+            }
+            leaf[i] = 0.0;
+        }
+    }
+    zeroed
+}
+
+/// Bytes to transmit a pruned delta: non-zeros as f32 + 1 bit/position.
+pub fn pruned_payload_bytes(total_elements: usize, zeroed: usize) -> u64 {
+    let nonzero = total_elements - zeroed;
+    (nonzero * 4) as u64 + (total_elements as u64).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn t(vals: &[f32]) -> Tensors {
+        Tensors::from_raw(vec![vals.to_vec()])
+    }
+
+    #[test]
+    fn zero_frac_is_identity() {
+        let mut d = t(&[1.0, -2.0, 3.0]);
+        let before = d.clone();
+        assert_eq!(prune_sign(&mut d, 0.0), 0);
+        assert_eq!(d, before);
+    }
+
+    #[test]
+    fn prunes_exact_fraction() {
+        let mut d = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        prune_sign(&mut d, 0.5);
+        let zeros = d.iter_flat().filter(|&x| x == 0.0).count();
+        assert_eq!(zeros, 4);
+    }
+
+    #[test]
+    fn disagreeing_signs_pruned_first() {
+        // Positive-dominated leaf: the negative entry must be zeroed even
+        // though its magnitude is largest among the pruned count.
+        let mut d = t(&[5.0, 4.0, 3.0, -2.0]);
+        prune_sign(&mut d, 0.25); // prune 1 of 4
+        let got: Vec<f32> = d.iter_flat().collect();
+        assert_eq!(got, vec![5.0, 4.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn survivors_are_largest_magnitude_agreeing() {
+        let mut d = t(&[0.1, 0.9, 0.5, 0.7, 0.3, 0.2, 0.8, 0.4]);
+        prune_sign(&mut d, 0.75); // keep 2
+        let survivors: Vec<f32> =
+            d.iter_flat().filter(|&x| x != 0.0).collect();
+        assert_eq!(survivors, vec![0.9, 0.8]);
+    }
+
+    #[test]
+    fn payload_accounting() {
+        // 100 elements, 60 zeroed → 40 f32 + 13 bitmap bytes.
+        assert_eq!(pruned_payload_bytes(100, 60), 40 * 4 + 13);
+        // No pruning → full payload + bitmap.
+        assert_eq!(pruned_payload_bytes(8, 0), 33);
+    }
+
+    #[test]
+    fn prop_prune_never_increases_norm() {
+        check("pruning never increases the L2 norm", 50, |g| {
+            let v = g.f32_vec(1..100, 3.0);
+            let mut d = t(&v);
+            let before = d.l2_norm();
+            prune_sign(&mut d, g.f64_in(0.0..0.9));
+            assert!(d.l2_norm() <= before + 1e-6);
+        });
+    }
+
+    #[test]
+    fn prop_unpruned_entries_unchanged() {
+        check("surviving entries keep their values", 30, |g| {
+            let v = g.f32_vec(2..60, 2.0);
+            let orig = t(&v);
+            let mut d = orig.clone();
+            prune_sign(&mut d, 0.5);
+            for (a, b) in d.iter_flat().zip(orig.iter_flat()) {
+                assert!(a == 0.0 || a == b);
+            }
+        });
+    }
+}

@@ -1,0 +1,83 @@
+//! Outer-gradient statistics (paper Fig 10/11): pairwise cosine
+//! similarity among the k replicas' deltas, plus norm tracking.
+
+use crate::runtime::Tensors;
+use crate::util::math;
+
+/// Mean ± stddev of cosine similarity over all worker pairs, and the
+/// norm of the averaged delta — one record per round.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundStats {
+    pub round: usize,
+    pub cos_mean: f64,
+    pub cos_std: f64,
+    pub avg_delta_norm: f64,
+    pub per_worker_norm_mean: f64,
+}
+
+/// Pairwise cosine similarities among deltas (k·(k-1)/2 values).
+pub fn pairwise_cosines(deltas: &[Tensors]) -> Vec<f64> {
+    let k = deltas.len();
+    let mut out = Vec::with_capacity(k * (k.saturating_sub(1)) / 2);
+    for i in 0..k {
+        for j in (i + 1)..k {
+            out.push(deltas[i].cosine(&deltas[j]));
+        }
+    }
+    out
+}
+
+pub fn round_stats(round: usize, deltas: &[Tensors], avg: &Tensors) -> RoundStats {
+    let cosines = pairwise_cosines(deltas);
+    let norms: Vec<f64> = deltas.iter().map(|d| d.l2_norm()).collect();
+    RoundStats {
+        round,
+        cos_mean: math::mean(&cosines),
+        cos_std: math::stddev(&cosines),
+        avg_delta_norm: avg.l2_norm(),
+        per_worker_norm_mean: math::mean(&norms),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(vals: &[f32]) -> Tensors {
+        Tensors::from_raw(vec![vals.to_vec()])
+    }
+
+    #[test]
+    fn identical_deltas_have_cos_one() {
+        let d = t(&[1.0, 2.0, 3.0]);
+        let cs = pairwise_cosines(&[d.clone(), d.clone(), d]);
+        assert_eq!(cs.len(), 3);
+        assert!(cs.iter().all(|c| (c - 1.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn orthogonal_deltas_have_cos_zero() {
+        let cs = pairwise_cosines(&[t(&[1.0, 0.0]), t(&[0.0, 1.0])]);
+        assert_eq!(cs.len(), 1);
+        assert!(cs[0].abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_worker_has_no_pairs() {
+        assert!(pairwise_cosines(&[t(&[1.0])]).is_empty());
+        let s = round_stats(0, &[t(&[1.0])], &t(&[1.0]));
+        assert_eq!(s.cos_mean, 0.0); // mean of empty = 0 by convention
+    }
+
+    #[test]
+    fn averaging_orthogonal_deltas_shrinks_norm() {
+        // Fig 11 intuition: more-orthogonal deltas ⇒ smaller averaged norm.
+        // ‖avg of k orthogonal unit vectors‖ = 1/√k.
+        let deltas = vec![t(&[1.0, 0.0]), t(&[0.0, 1.0])];
+        let avg = crate::coordinator::average::average(&deltas);
+        let s = round_stats(3, &deltas, &avg);
+        assert_eq!(s.round, 3);
+        assert!((s.avg_delta_norm - (0.5f64).sqrt()).abs() < 1e-6);
+        assert!((s.per_worker_norm_mean - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,170 @@
+//! Batch iterators over tokenized shards.
+//!
+//! Training batches are random windows of `seq_len + 1` tokens from the
+//! shard stream (input = window[..S], target = window[1..]) — the standard
+//! LM next-token setup the L2 artifacts expect. Each worker owns an
+//! independently seeded iterator so data order is reproducible per
+//! (seed, worker, step). Evaluation uses fixed non-overlapping windows.
+
+use crate::util::rng::Rng;
+
+/// One (tokens, targets) pair, row-major `[batch, seq]` i32.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+}
+
+/// Infinite sampler of training batches from one shard.
+pub struct BatchIter {
+    stream: Vec<i32>,
+    batch_size: usize,
+    seq_len: usize,
+    rng: Rng,
+}
+
+impl BatchIter {
+    pub fn new(stream: Vec<i32>, batch_size: usize, seq_len: usize, rng: Rng) -> Self {
+        assert!(
+            stream.len() > seq_len + 1,
+            "shard stream too short: {} tokens for seq_len {}",
+            stream.len(),
+            seq_len
+        );
+        BatchIter { stream, batch_size, seq_len, rng }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let b = self.batch_size;
+        let s = self.seq_len;
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut targets = Vec::with_capacity(b * s);
+        for _ in 0..b {
+            let start = self.rng.below(self.stream.len() - s - 1);
+            tokens.extend_from_slice(&self.stream[start..start + s]);
+            targets.extend_from_slice(&self.stream[start + 1..start + s + 1]);
+        }
+        Batch { tokens, targets, batch_size: b, seq_len: s }
+    }
+}
+
+/// Fixed validation windows — identical across runs for comparable PPL.
+pub struct EvalSet {
+    batches: Vec<Batch>,
+}
+
+impl EvalSet {
+    /// Cut `holdout` into up to `max_batches` non-overlapping batches.
+    pub fn new(
+        holdout: &[i32],
+        batch_size: usize,
+        seq_len: usize,
+        max_batches: usize,
+    ) -> EvalSet {
+        let window = seq_len + 1;
+        let per_batch = batch_size * window;
+        let n = (holdout.len() / per_batch).min(max_batches.max(1));
+        assert!(
+            n >= 1,
+            "holdout too small: {} tokens < one {batch_size}x{window} batch",
+            holdout.len()
+        );
+        let mut batches = Vec::with_capacity(n);
+        for bi in 0..n {
+            let mut tokens = Vec::with_capacity(batch_size * seq_len);
+            let mut targets = Vec::with_capacity(batch_size * seq_len);
+            for r in 0..batch_size {
+                let start = (bi * batch_size + r) * window;
+                tokens.extend_from_slice(&holdout[start..start + seq_len]);
+                targets.extend_from_slice(&holdout[start + 1..start + window]);
+            }
+            batches.push(Batch { tokens, targets, batch_size, seq_len });
+        }
+        EvalSet { batches }
+    }
+
+    pub fn batches(&self) -> &[Batch] {
+        &self.batches
+    }
+
+    pub fn len(&self) -> usize {
+        self.batches.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batches.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(n: usize) -> Vec<i32> {
+        (0..n as i32).collect()
+    }
+
+    #[test]
+    fn targets_are_shifted_inputs() {
+        let mut it = BatchIter::new(stream(1000), 4, 16, Rng::new(0));
+        let b = it.next_batch();
+        assert_eq!(b.tokens.len(), 4 * 16);
+        for row in 0..4 {
+            for i in 0..15 {
+                assert_eq!(
+                    b.tokens[row * 16 + i + 1],
+                    b.targets[row * 16 + i],
+                    "target must be input shifted by one"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn iterator_is_deterministic_per_seed() {
+        let mut a = BatchIter::new(stream(500), 2, 8, Rng::new(7));
+        let mut b = BatchIter::new(stream(500), 2, 8, Rng::new(7));
+        for _ in 0..5 {
+            assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = BatchIter::new(stream(500), 2, 8, Rng::new(1));
+        let mut b = BatchIter::new(stream(500), 2, 8, Rng::new(2));
+        assert_ne!(a.next_batch().tokens, b.next_batch().tokens);
+    }
+
+    #[test]
+    fn eval_windows_do_not_overlap() {
+        let es = EvalSet::new(&stream(10_000), 2, 16, 8);
+        assert!(es.len() >= 2);
+        let mut seen = std::collections::HashSet::new();
+        for b in es.batches() {
+            for &t in &b.tokens {
+                assert!(seen.insert(t), "token {t} reused across eval windows");
+            }
+        }
+    }
+
+    #[test]
+    fn eval_respects_max_batches() {
+        let es = EvalSet::new(&stream(100_000), 2, 16, 3);
+        assert_eq!(es.len(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn eval_panics_when_holdout_too_small() {
+        EvalSet::new(&stream(10), 4, 16, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn train_panics_when_stream_too_small() {
+        BatchIter::new(stream(10), 4, 16, Rng::new(0));
+    }
+}

@@ -1,0 +1,221 @@
+//! Synthetic topic-mixture corpus (the C4 substitution, DESIGN.md §2).
+//!
+//! A shared lexicon of pronounceable synthetic words is generated once;
+//! each latent topic gets (a) its own Zipf-weighted permutation of the
+//! lexicon — topic-specific word frequencies — and (b) a deterministic
+//! first-order Markov transition (hash-derived successor sets), so text
+//! has learnable bigram structure a language model can actually fit.
+//! Topics differ in both unigram and bigram statistics, which is what
+//! makes topic-sharding genuinely non-i.i.d.
+
+use crate::config::DataConfig;
+use crate::util::rng::Rng;
+
+/// Number of distinct synthetic words in the shared lexicon.
+pub const LEXICON_SIZE: usize = 600;
+/// Candidate successors per (topic, word) in the Markov chain.
+const SUCCESSORS: usize = 12;
+/// Zipf exponent for topic unigram distributions.
+const ZIPF_S: f64 = 1.1;
+/// Probability of following the Markov chain vs. resampling a unigram.
+const CHAIN_PROB: f64 = 0.75;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Document {
+    pub topic: usize,
+    pub text: String,
+}
+
+pub struct Corpus {
+    pub docs: Vec<Document>,
+    pub n_topics: usize,
+    pub lexicon: Vec<String>,
+}
+
+/// Deterministic pronounceable word for lexicon slot `i` ("bako", "rilu"…).
+fn make_word(i: usize) -> String {
+    const C: &[u8] = b"bcdfghjklmnprstvz";
+    const V: &[u8] = b"aeiou";
+    let mut w = String::new();
+    let mut x = i + 1;
+    loop {
+        w.push(C[x % C.len()] as char);
+        w.push(V[(x / C.len()) % V.len()] as char);
+        x /= C.len() * V.len();
+        if x == 0 {
+            break;
+        }
+    }
+    w
+}
+
+/// FNV-1a — deterministic topic/word mixing for successor sets.
+fn fnv(parts: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for p in parts {
+        for b in p.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+struct TopicModel {
+    /// lexicon index by topic-specific rank (rank 0 = most frequent).
+    ranked: Vec<usize>,
+    /// Zipf weights by rank.
+    weights: Vec<f64>,
+    topic: usize,
+}
+
+impl TopicModel {
+    fn new(topic: usize, rng: &mut Rng) -> TopicModel {
+        let mut ranked: Vec<usize> = (0..LEXICON_SIZE).collect();
+        rng.shuffle(&mut ranked);
+        let weights: Vec<f64> = (0..LEXICON_SIZE)
+            .map(|r| 1.0 / ((r + 1) as f64).powf(ZIPF_S))
+            .collect();
+        TopicModel { ranked, weights, topic }
+    }
+
+    fn sample_unigram(&self, rng: &mut Rng) -> usize {
+        self.ranked[rng.weighted(&self.weights)]
+    }
+
+    /// Markov successor: one of SUCCESSORS hash-derived candidates.
+    fn sample_successor(&self, word: usize, rng: &mut Rng) -> usize {
+        let pick = rng.below(SUCCESSORS);
+        (fnv(&[self.topic as u64, word as u64, pick as u64]) % LEXICON_SIZE as u64)
+            as usize
+    }
+
+    fn generate(&self, len: usize, rng: &mut Rng) -> String {
+        let mut words = Vec::with_capacity(len);
+        let mut cur = self.sample_unigram(rng);
+        words.push(cur);
+        for _ in 1..len {
+            cur = if rng.coin(CHAIN_PROB) {
+                self.sample_successor(cur, rng)
+            } else {
+                self.sample_unigram(rng)
+            };
+            words.push(cur);
+        }
+        words
+            .into_iter()
+            .map(make_word)
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+impl Corpus {
+    /// Synthesize `cfg.n_docs` documents across `cfg.n_topics` topics.
+    pub fn synthesize(cfg: &DataConfig, rng: &mut Rng) -> Corpus {
+        assert!(cfg.n_topics > 0 && cfg.n_docs > 0);
+        let topics: Vec<TopicModel> = (0..cfg.n_topics)
+            .map(|t| TopicModel::new(t, &mut rng.child(1000 + t as u64)))
+            .collect();
+        let mut docs = Vec::with_capacity(cfg.n_docs);
+        for i in 0..cfg.n_docs {
+            let topic = i % cfg.n_topics; // balanced topic coverage
+            let mut drng = rng.child(2_000_000 + i as u64);
+            // Mild length variation, ±25%.
+            let len = (cfg.doc_len as f64 * (0.75 + 0.5 * drng.f64())) as usize;
+            docs.push(Document {
+                topic,
+                text: topics[topic].generate(len.max(4), &mut drng),
+            });
+        }
+        Corpus {
+            docs,
+            n_topics: cfg.n_topics,
+            lexicon: (0..LEXICON_SIZE).map(make_word).collect(),
+        }
+    }
+
+    pub fn total_words(&self) -> usize {
+        self.docs
+            .iter()
+            .map(|d| d.text.split(' ').count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DataConfig {
+        DataConfig {
+            n_topics: 4,
+            n_docs: 40,
+            doc_len: 100,
+            non_iid: true,
+            mix: 0.0,
+            holdout: 0.1,
+        }
+    }
+
+    #[test]
+    fn words_are_distinct_and_pronounceable() {
+        let words: Vec<String> = (0..LEXICON_SIZE).map(make_word).collect();
+        let mut dedup = words.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), LEXICON_SIZE);
+        assert!(words.iter().all(|w| w.len() >= 2 && w.is_ascii()));
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let a = Corpus::synthesize(&cfg(), &mut Rng::new(3));
+        let b = Corpus::synthesize(&cfg(), &mut Rng::new(3));
+        assert_eq!(a.docs, b.docs);
+    }
+
+    #[test]
+    fn topics_are_balanced() {
+        let c = Corpus::synthesize(&cfg(), &mut Rng::new(4));
+        let mut counts = vec![0usize; 4];
+        for d in &c.docs {
+            counts[d.topic] += 1;
+        }
+        assert!(counts.iter().all(|&n| n == 10));
+    }
+
+    #[test]
+    fn topics_have_distinct_statistics() {
+        // Word-frequency vectors of different topics should correlate far
+        // less than same-topic halves — the non-i.i.d. premise.
+        let c = Corpus::synthesize(
+            &DataConfig { n_docs: 60, doc_len: 300, ..cfg() },
+            &mut Rng::new(5),
+        );
+        let freq = |topic: usize| -> Vec<f32> {
+            let mut f = vec![0f32; LEXICON_SIZE];
+            for d in c.docs.iter().filter(|d| d.topic == topic) {
+                for w in d.text.split(' ') {
+                    if let Some(i) = c.lexicon.iter().position(|x| x == w) {
+                        f[i] += 1.0;
+                    }
+                }
+            }
+            f
+        };
+        let f0 = freq(0);
+        let f1 = freq(1);
+        let sim = crate::util::math::cosine(&f0, &f1);
+        assert!(sim < 0.8, "topics too similar: {sim}");
+    }
+
+    #[test]
+    fn doc_lengths_vary_but_bounded() {
+        let c = Corpus::synthesize(&cfg(), &mut Rng::new(6));
+        for d in &c.docs {
+            let n = d.text.split(' ').count();
+            assert!((50..=150).contains(&n), "len {n}");
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Data substrate: synthetic topic corpus, BPE tokenizer, sharding,
+//! batch iterators.
+//!
+//! Stands in for the paper's C4 pipeline (DESIGN.md §2): the corpus has K
+//! latent topics whose word distributions differ, so "shard by topic"
+//! reproduces the paper's non-i.i.d. regime (they k-means-clustered C4 by
+//! features) while "random split" reproduces i.i.d.
+
+pub mod batch;
+pub mod corpus;
+pub mod shard;
+pub mod tokenizer;
+
+pub use batch::{BatchIter, EvalSet};
+pub use corpus::{Corpus, Document};
+pub use shard::{shard_corpus, ShardPlan};
+pub use tokenizer::Tokenizer;
+
+use crate::config::DataConfig;
+use crate::util::rng::Rng;
+
+/// Fully prepared dataset: tokenized shards + held-out eval windows.
+pub struct Dataset {
+    pub tokenizer: Tokenizer,
+    /// Token stream per shard (train).
+    pub shards: Vec<Vec<i32>>,
+    /// Documents per shard (for weighted averaging, paper §6.1).
+    pub shard_doc_counts: Vec<usize>,
+    /// Held-out token stream (validation).
+    pub holdout: Vec<i32>,
+}
+
+impl Dataset {
+    /// Build corpus → tokenizer → shards for `k` workers.
+    pub fn build(cfg: &DataConfig, k: usize, vocab_size: usize, seed: u64) -> Dataset {
+        let rng = Rng::new(seed);
+        let corpus = Corpus::synthesize(cfg, &mut rng.child(1));
+        let tokenizer = Tokenizer::train(&corpus, vocab_size, &mut rng.child(2));
+
+        // Hold out a fraction of documents (round-robin over topics so the
+        // validation set covers every topic).
+        let n_hold = ((corpus.docs.len() as f64) * cfg.holdout).ceil() as usize;
+        let mut hold_idx: Vec<usize> = Vec::new();
+        let mut train_idx: Vec<usize> = Vec::new();
+        for (i, _) in corpus.docs.iter().enumerate() {
+            if i % corpus.docs.len().div_ceil(n_hold.max(1)) == 0 && hold_idx.len() < n_hold
+            {
+                hold_idx.push(i);
+            } else {
+                train_idx.push(i);
+            }
+        }
+
+        let plan = shard_corpus(&corpus, &train_idx, k, cfg, &mut rng.child(3));
+        let shards: Vec<Vec<i32>> = plan
+            .doc_assignment
+            .iter()
+            .map(|docs| tokenize_stream(&corpus, docs, &tokenizer))
+            .collect();
+        let holdout = tokenize_stream(&corpus, &hold_idx, &tokenizer);
+        Dataset {
+            tokenizer,
+            shards,
+            shard_doc_counts: plan.doc_assignment.iter().map(|d| d.len()).collect(),
+            holdout,
+        }
+    }
+}
+
+/// Concatenate the given documents into one token stream with EOS breaks.
+fn tokenize_stream(corpus: &Corpus, docs: &[usize], tok: &Tokenizer) -> Vec<i32> {
+    let mut out = Vec::new();
+    for &d in docs {
+        out.extend(tok.encode(&corpus.docs[d].text));
+        out.push(Tokenizer::EOS);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> DataConfig {
+        DataConfig {
+            n_topics: 4,
+            n_docs: 40,
+            doc_len: 60,
+            non_iid: true,
+            mix: 0.0,
+            holdout: 0.1,
+        }
+    }
+
+    #[test]
+    fn dataset_builds_and_covers_all_shards() {
+        let ds = Dataset::build(&small_cfg(), 4, 256, 0);
+        assert_eq!(ds.shards.len(), 4);
+        assert!(ds.shards.iter().all(|s| s.len() > 100));
+        assert!(ds.holdout.len() > 50);
+        let total: usize = ds.shard_doc_counts.iter().sum();
+        assert_eq!(total, 40 - 4); // 10% of 40 held out
+    }
+
+    #[test]
+    fn dataset_is_deterministic() {
+        let a = Dataset::build(&small_cfg(), 2, 256, 7);
+        let b = Dataset::build(&small_cfg(), 2, 256, 7);
+        assert_eq!(a.shards, b.shards);
+        assert_eq!(a.holdout, b.holdout);
+    }
+
+    #[test]
+    fn tokens_within_vocab() {
+        let ds = Dataset::build(&small_cfg(), 2, 256, 1);
+        for s in ds.shards.iter().chain(std::iter::once(&ds.holdout)) {
+            assert!(s.iter().all(|&t| (0..256).contains(&t)));
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Document → shard assignment: i.i.d. vs non-i.i.d. regimes (paper Fig 5).
+//!
+//! Non-i.i.d. assigns by latent topic (topic t → shard t mod k), mirroring
+//! the paper's k-means clustering of C4; `mix` re-assigns a fraction of
+//! documents uniformly to interpolate between regimes. i.i.d. is a random
+//! permutation split. Every shard is guaranteed non-empty.
+
+use crate::config::DataConfig;
+use crate::data::corpus::Corpus;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// doc indices per shard.
+    pub doc_assignment: Vec<Vec<usize>>,
+}
+
+impl ShardPlan {
+    pub fn counts(&self) -> Vec<usize> {
+        self.doc_assignment.iter().map(|v| v.len()).collect()
+    }
+}
+
+/// Assign `train_docs` (indices into `corpus.docs`) to `k` shards.
+pub fn shard_corpus(
+    corpus: &Corpus,
+    train_docs: &[usize],
+    k: usize,
+    cfg: &DataConfig,
+    rng: &mut Rng,
+) -> ShardPlan {
+    assert!(k > 0, "need at least one shard");
+    assert!(
+        train_docs.len() >= k,
+        "cannot spread {} docs over {k} shards",
+        train_docs.len()
+    );
+    let mut assignment = vec![Vec::new(); k];
+    if cfg.non_iid {
+        for &d in train_docs {
+            let shard = if cfg.mix > 0.0 && rng.coin(cfg.mix) {
+                rng.below(k)
+            } else {
+                corpus.docs[d].topic % k
+            };
+            assignment[shard].push(d);
+        }
+    } else {
+        let mut shuffled = train_docs.to_vec();
+        rng.shuffle(&mut shuffled);
+        for (i, d) in shuffled.into_iter().enumerate() {
+            assignment[i % k].push(d);
+        }
+    }
+    // Repair empty shards by stealing from the largest (can happen when
+    // k > n_topics in the non-i.i.d. regime).
+    for i in 0..k {
+        if assignment[i].is_empty() {
+            let donor = (0..k)
+                .max_by_key(|&j| assignment[j].len())
+                .expect("k > 0");
+            assert!(assignment[donor].len() > 1, "not enough docs to repair");
+            let doc = assignment[donor].pop().unwrap();
+            assignment[i].push(doc);
+        }
+    }
+    ShardPlan { doc_assignment: assignment }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(n_topics: usize, n_docs: usize) -> (Corpus, DataConfig) {
+        let cfg = DataConfig {
+            n_topics,
+            n_docs,
+            doc_len: 20,
+            non_iid: true,
+            mix: 0.0,
+            holdout: 0.0,
+        };
+        let corpus = Corpus::synthesize(&cfg, &mut Rng::new(0));
+        (corpus, cfg)
+    }
+
+    #[test]
+    fn non_iid_shards_are_topic_pure() {
+        let (corpus, cfg) = setup(4, 40);
+        let docs: Vec<usize> = (0..40).collect();
+        let plan = shard_corpus(&corpus, &docs, 4, &cfg, &mut Rng::new(1));
+        for (shard, docs) in plan.doc_assignment.iter().enumerate() {
+            for &d in docs {
+                assert_eq!(corpus.docs[d].topic % 4, shard);
+            }
+        }
+    }
+
+    #[test]
+    fn iid_shards_are_balanced_and_cover_all() {
+        let (corpus, mut cfg) = setup(4, 40);
+        cfg.non_iid = false;
+        let docs: Vec<usize> = (0..40).collect();
+        let plan = shard_corpus(&corpus, &docs, 8, &cfg, &mut Rng::new(2));
+        assert!(plan.counts().iter().all(|&c| c == 5));
+        let mut all: Vec<usize> =
+            plan.doc_assignment.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, docs);
+    }
+
+    #[test]
+    fn more_shards_than_topics_still_nonempty() {
+        let (corpus, cfg) = setup(4, 64);
+        let docs: Vec<usize> = (0..64).collect();
+        let plan = shard_corpus(&corpus, &docs, 16, &cfg, &mut Rng::new(3));
+        assert_eq!(plan.doc_assignment.len(), 16);
+        assert!(plan.counts().iter().all(|&c| c >= 1));
+        assert_eq!(plan.counts().iter().sum::<usize>(), 64);
+    }
+
+    #[test]
+    fn mix_interpolates_regimes() {
+        let (corpus, mut cfg) = setup(8, 400);
+        cfg.mix = 1.0; // fully mixed = iid-like
+        let docs: Vec<usize> = (0..400).collect();
+        let plan = shard_corpus(&corpus, &docs, 8, &cfg, &mut Rng::new(4));
+        // With full mixing, shard 0 should hold many topics, not one.
+        let topics: std::collections::HashSet<usize> = plan.doc_assignment[0]
+            .iter()
+            .map(|&d| corpus.docs[d].topic)
+            .collect();
+        assert!(topics.len() >= 4, "only topics {topics:?}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_few_docs_panics() {
+        let (corpus, cfg) = setup(2, 4);
+        let docs: Vec<usize> = (0..2).collect();
+        shard_corpus(&corpus, &docs, 4, &cfg, &mut Rng::new(5));
+    }
+}

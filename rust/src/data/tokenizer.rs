@@ -1,0 +1,236 @@
+//! Byte-pair-encoding tokenizer trained on the synthetic corpus.
+//!
+//! Stands in for the paper's 32k SentencePiece vocab: same interface
+//! (text → token ids in `[0, vocab)`), trained with classic BPE merges
+//! over whitespace-delimited words until the target vocab size is filled.
+//! Special ids: 0 = PAD, 1 = EOS (document separator), 2 = UNK.
+
+use crate::data::corpus::Corpus;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// piece string → id.
+    vocab: HashMap<String, i32>,
+    /// Ordered merge rules (left, right) by priority.
+    merges: Vec<(String, String)>,
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    pub const PAD: i32 = 0;
+    pub const EOS: i32 = 1;
+    pub const UNK: i32 = 2;
+    const SPECIALS: usize = 3;
+
+    /// Train BPE on the corpus until `vocab_size` pieces exist.
+    pub fn train(corpus: &Corpus, vocab_size: usize, _rng: &mut Rng) -> Tokenizer {
+        assert!(vocab_size >= 32, "vocab too small for byte coverage");
+        // Word frequency table (the classic BPE training corpus view).
+        let mut word_freq: HashMap<Vec<String>, usize> = HashMap::new();
+        for doc in &corpus.docs {
+            for word in doc.text.split(' ') {
+                // Word-final marker so merges respect word boundaries.
+                let mut chars: Vec<String> =
+                    word.chars().map(|c| c.to_string()).collect();
+                if let Some(last) = chars.last_mut() {
+                    last.push('_');
+                }
+                *word_freq.entry(chars).or_insert(0) += 1;
+            }
+        }
+
+        // Seed vocab: specials + every base character piece.
+        let mut vocab: HashMap<String, i32> = HashMap::new();
+        let add = |vocab: &mut HashMap<String, i32>, piece: String| {
+            let next = vocab.len() as i32 + Self::SPECIALS as i32;
+            vocab.entry(piece).or_insert(next);
+        };
+        let mut base: Vec<String> = word_freq
+            .keys()
+            .flat_map(|w| w.iter().cloned())
+            .collect();
+        base.sort();
+        base.dedup();
+        for piece in base {
+            add(&mut vocab, piece);
+        }
+
+        // Greedy merges.
+        let mut merges = Vec::new();
+        while vocab.len() + Self::SPECIALS < vocab_size {
+            let mut pair_counts: HashMap<(String, String), usize> = HashMap::new();
+            for (word, freq) in &word_freq {
+                for pair in word.windows(2) {
+                    *pair_counts
+                        .entry((pair[0].clone(), pair[1].clone()))
+                        .or_insert(0) += freq;
+                }
+            }
+            // Deterministic tie-break: highest count, then lexicographic.
+            let Some(best) = pair_counts.into_iter().max_by(|a, b| {
+                a.1.cmp(&b.1).then_with(|| b.0.cmp(&a.0))
+            }) else {
+                break;
+            };
+            if best.1 < 2 {
+                break; // nothing left worth merging
+            }
+            let (l, r) = best.0;
+            let merged = format!("{l}{r}");
+            add(&mut vocab, merged.clone());
+            merges.push((l.clone(), r.clone()));
+            // Apply the merge to the training view.
+            let mut next: HashMap<Vec<String>, usize> = HashMap::new();
+            for (word, freq) in word_freq {
+                let mut out = Vec::with_capacity(word.len());
+                let mut i = 0;
+                while i < word.len() {
+                    if i + 1 < word.len() && word[i] == l && word[i + 1] == r {
+                        out.push(merged.clone());
+                        i += 2;
+                    } else {
+                        out.push(word[i].clone());
+                        i += 1;
+                    }
+                }
+                *next.entry(out).or_insert(0) += freq;
+            }
+            word_freq = next;
+        }
+
+        Tokenizer { vocab, merges, vocab_size }
+    }
+
+    /// Encode text to token ids (never out of `[0, vocab_size)`).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::new();
+        for word in text.split(' ') {
+            if word.is_empty() {
+                continue;
+            }
+            let mut pieces: Vec<String> =
+                word.chars().map(|c| c.to_string()).collect();
+            if let Some(last) = pieces.last_mut() {
+                last.push('_');
+            }
+            // Replay merges in priority order.
+            for (l, r) in &self.merges {
+                let mut i = 0;
+                while i + 1 < pieces.len() {
+                    if &pieces[i] == l && &pieces[i + 1] == r {
+                        pieces[i] = format!("{l}{r}");
+                        pieces.remove(i + 1);
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            for p in pieces {
+                out.push(*self.vocab.get(&p).unwrap_or(&Self::UNK));
+            }
+        }
+        out
+    }
+
+    /// Decode ids back to text (lossy across UNK).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let rev: HashMap<i32, &String> =
+            self.vocab.iter().map(|(k, v)| (*v, k)).collect();
+        let mut s = String::new();
+        for &id in ids {
+            match id {
+                Self::PAD => {}
+                Self::EOS => s.push('\n'),
+                Self::UNK => s.push('?'),
+                _ => {
+                    if let Some(piece) = rev.get(&id) {
+                        if let Some(stripped) = piece.strip_suffix('_') {
+                            s.push_str(stripped);
+                            s.push(' ');
+                        } else {
+                            s.push_str(piece);
+                        }
+                    }
+                }
+            }
+        }
+        s.trim_end().to_string()
+    }
+
+    /// Number of pieces actually allocated (≤ vocab_size).
+    pub fn pieces(&self) -> usize {
+        self.vocab.len() + Self::SPECIALS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataConfig;
+
+    fn corpus() -> Corpus {
+        Corpus::synthesize(
+            &DataConfig {
+                n_topics: 2,
+                n_docs: 30,
+                doc_len: 80,
+                non_iid: false,
+                mix: 0.0,
+                holdout: 0.1,
+            },
+            &mut Rng::new(0),
+        )
+    }
+
+    #[test]
+    fn ids_always_in_range() {
+        let c = corpus();
+        let tok = Tokenizer::train(&c, 128, &mut Rng::new(1));
+        for d in &c.docs {
+            for id in tok.encode(&d.text) {
+                assert!((0..128).contains(&id));
+            }
+        }
+        assert!(tok.pieces() <= 128);
+    }
+
+    #[test]
+    fn roundtrip_on_trained_text() {
+        let c = corpus();
+        let tok = Tokenizer::train(&c, 256, &mut Rng::new(1));
+        let text = &c.docs[0].text;
+        let decoded = tok.decode(&tok.encode(text));
+        assert_eq!(&decoded, text);
+    }
+
+    #[test]
+    fn merges_reduce_sequence_length() {
+        let c = corpus();
+        let small = Tokenizer::train(&c, 40, &mut Rng::new(1));
+        let large = Tokenizer::train(&c, 256, &mut Rng::new(1));
+        let text = &c.docs[1].text;
+        assert!(
+            large.encode(text).len() < small.encode(text).len(),
+            "bigger vocab must compress better"
+        );
+    }
+
+    #[test]
+    fn unknown_chars_hit_unk_not_panic() {
+        let c = corpus();
+        let tok = Tokenizer::train(&c, 64, &mut Rng::new(1));
+        let ids = tok.encode("xyzzy qwrt 日本");
+        assert!(!ids.is_empty());
+        assert!(ids.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let c = corpus();
+        let a = Tokenizer::train(&c, 128, &mut Rng::new(1));
+        let b = Tokenizer::train(&c, 128, &mut Rng::new(2));
+        assert_eq!(a.encode(&c.docs[3].text), b.encode(&c.docs[3].text));
+    }
+}

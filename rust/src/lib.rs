@@ -1,0 +1,34 @@
+//! # diloco — Distributed Low-Communication training (DiLoCo)
+//!
+//! A rust + JAX + Pallas reproduction of *DiLoCo: Distributed
+//! Low-Communication Training of Language Models* (Douillard et al., 2023).
+//!
+//! Architecture (see `DESIGN.md`):
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution:
+//!   round orchestration ([`coordinator`]), outer optimizers
+//!   ([`coordinator::opt`]), the simulated wide-area fabric ([`comm`]),
+//!   data sharding ([`data`]), metrics, checkpoints, config and CLI.
+//! * **Layer 2/1 (build-time python, never on the training path)** — the
+//!   transformer fwd/bwd + fused AdamW and the Pallas kernels, lowered
+//!   once by `python/compile/aot.py` into `artifacts/*.hlo.txt` which
+//!   [`runtime`] loads through the PJRT C API (`xla` crate).
+//!
+//! The hot path is rust-only: device-resident parameter/optimizer buffers
+//! stepped by `execute_b`, with host round-trips only at the H-step round
+//! boundaries — exactly the communication pattern the paper exploits.
+
+pub mod bench;
+pub mod checkpoint;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+pub mod worker;
+
+pub use config::ExperimentConfig;
+pub use coordinator::{Coordinator, DilocoReport};
+pub use runtime::Runtime;

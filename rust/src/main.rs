@@ -1,0 +1,214 @@
+//! `diloco` — the launcher CLI.
+//!
+//! Subcommands:
+//!   train    Run a full DiLoCo experiment from a TOML config.
+//!   eval     Evaluate a checkpoint on the validation split.
+//!   data     Synthesize the corpus and print shard statistics.
+//!   inspect  Dump the AOT artifact manifest for a model preset.
+//!
+//! Examples:
+//!   diloco train --config experiments/diloco_nano.toml --out runs/
+//!   diloco inspect --artifacts artifacts --model nano
+//!   diloco data --topics 8 --docs 400 --workers 8 --non-iid
+
+use diloco::config::toml::TomlDoc;
+use diloco::config::ExperimentConfig;
+use diloco::coordinator::Coordinator;
+use diloco::data::Dataset;
+use diloco::runtime::Runtime;
+use std::rc::Rc;
+
+/// Minimal flag parser: `--key value` and `--flag` booleans.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "data" => cmd_data(&args),
+        "inspect" => cmd_inspect(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "diloco — Distributed Low-Communication training (DiLoCo)\n\n\
+         USAGE: diloco <train|eval|data|inspect> [--flags]\n\n\
+         train   --config <exp.toml> [--out runs/] [--ckpt out.ckpt]\n\
+         eval    --ckpt <file> [--artifacts artifacts] [--model nano]\n\
+         data    [--topics 8] [--docs 400] [--workers 8] [--non-iid] [--seed 0]\n\
+         inspect [--artifacts artifacts] [--model nano]"
+    );
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_toml(&TomlDoc::load(path)?)?,
+        None => {
+            eprintln!("no --config given; using built-in nano defaults");
+            ExperimentConfig::paper_default(&args.get_or("artifacts", "artifacts"), "nano")
+        }
+    };
+    println!(
+        "DiLoCo: model={} k={} H={} T={} pretrain={} outer={} non_iid={}",
+        cfg.model,
+        cfg.workers,
+        cfg.inner_steps,
+        cfg.rounds,
+        cfg.pretrain_steps,
+        cfg.outer_opt.name(),
+        cfg.data.non_iid
+    );
+    let rt = Rc::new(Runtime::load(&cfg.artifacts_dir, &cfg.model)?);
+    println!(
+        "artifacts: {} params, kernels={}, {} artifacts compiled lazily",
+        rt.manifest.config.param_count,
+        rt.manifest.config.kernels,
+        rt.manifest.artifacts.len()
+    );
+    let coord = Coordinator::new(cfg, rt)?;
+    let report = coord.run()?;
+
+    let m = &report.metrics;
+    println!("\n-- run summary --");
+    println!("{}", m.summary_json());
+    for p in &m.eval_curve {
+        println!("step {:>6}  nll {:.4}  ppl {:.3}", p.step, p.mean_nll, p.ppl);
+    }
+    println!(
+        "comm: {} msgs, {:.2} MB total, {} dropped; sim wall {:.1}s \
+         (compute {:.1}s + comm {:.1}s); coordinator overhead {:.1}%",
+        m.comm_messages,
+        m.comm_bytes as f64 / 1e6,
+        m.comm_dropped,
+        m.sim_wall_seconds(),
+        m.sim_compute_seconds,
+        m.sim_comm_seconds,
+        100.0 * m.phases.overhead_fraction()
+    );
+
+    if let Some(out) = args.get("out") {
+        m.write_curves(out)?;
+        println!("curves written under {out}/");
+    }
+    if let Some(ckpt) = args.get("ckpt") {
+        diloco::checkpoint::save(ckpt, &coord.runtime().manifest, &report.final_params)?;
+        println!("checkpoint written to {ckpt}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let model = args.get_or("model", "nano");
+    let ckpt = args
+        .get("ckpt")
+        .ok_or_else(|| anyhow::anyhow!("--ckpt required"))?;
+    let rt = Rc::new(Runtime::load(&dir, &model)?);
+    let params = diloco::checkpoint::load(ckpt, &rt.manifest)?;
+    let mut cfg = ExperimentConfig::paper_default(&dir, &model);
+    cfg.seed = args.get_or("seed", "0").parse()?;
+    let coord = Coordinator::new(cfg, rt)?;
+    let p = coord.evaluate(&params)?;
+    println!("ckpt {ckpt}: mean nll {:.4}, ppl {:.3}", p.mean_nll, p.ppl);
+    Ok(())
+}
+
+fn cmd_data(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = diloco::config::DataConfig {
+        n_topics: args.get_or("topics", "8").parse()?,
+        n_docs: args.get_or("docs", "400").parse()?,
+        doc_len: args.get_or("doc-len", "220").parse()?,
+        non_iid: args.get("non-iid").is_some(),
+        mix: args.get_or("mix", "0.0").parse()?,
+        holdout: 0.1,
+    };
+    if args.get("iid").is_some() {
+        cfg.non_iid = false;
+    }
+    let k: usize = args.get_or("workers", "8").parse()?;
+    let vocab: usize = args.get_or("vocab", "256").parse()?;
+    let seed: u64 = args.get_or("seed", "0").parse()?;
+    let ds = Dataset::build(&cfg, k, vocab, seed);
+    println!(
+        "corpus: {} docs × ~{} words, {} topics, non_iid={}",
+        cfg.n_docs, cfg.doc_len, cfg.n_topics, cfg.non_iid
+    );
+    println!("tokenizer: {} pieces (target {vocab})", ds.tokenizer.pieces());
+    for (i, (shard, docs)) in
+        ds.shards.iter().zip(&ds.shard_doc_counts).enumerate()
+    {
+        println!("shard {i}: {docs} docs, {} tokens", shard.len());
+    }
+    println!("holdout: {} tokens", ds.holdout.len());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let model = args.get_or("model", "nano");
+    let rt = Runtime::load(&dir, &model)?;
+    let c = &rt.manifest.config;
+    println!(
+        "model {} (kernels={}): {} layers, d_model {}, {} heads × d_head {}, \
+         vocab {}, seq {}, batch {} — {} params",
+        c.name, c.kernels, c.n_layers, c.d_model, c.n_heads, c.d_head,
+        c.vocab_size, c.seq_len, c.batch_size, c.param_count
+    );
+    println!("{} parameter leaves; artifacts:", rt.manifest.params.len());
+    for (key, art) in &rt.manifest.artifacts {
+        println!(
+            "  {key:<16} {} inputs, {} outputs  ({})",
+            art.inputs.len(),
+            art.outputs.len(),
+            art.file
+        );
+    }
+    println!("train chunk sizes: {:?}", rt.chunk_sizes());
+    Ok(())
+}

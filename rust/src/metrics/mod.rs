@@ -1,0 +1,219 @@
+//! Run metrics: loss/PPL curves, phase timers, CSV/JSONL sinks.
+//!
+//! Every experiment produces a [`RunMetrics`]: the inner-loss trace (one
+//! point per inner step, averaged across active workers), the eval-PPL
+//! curve (per evaluation point), wall/simulated time per phase, and the
+//! communication bill. Benches read these to print the paper's rows;
+//! the CLI writes them to `csv`/`jsonl` files.
+
+use crate::util::math;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// One point on the evaluation curve.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalPoint {
+    /// Global inner-step index (pretrain steps + rounds×H so far).
+    pub step: usize,
+    pub mean_nll: f64,
+    pub ppl: f64,
+}
+
+/// Wall-clock phase accounting (real seconds on this host).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimes {
+    pub inner_compute_s: f64,
+    pub outer_opt_s: f64,
+    pub eval_s: f64,
+    pub data_s: f64,
+    pub other_s: f64,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> f64 {
+        self.inner_compute_s + self.outer_opt_s + self.eval_s + self.data_s + self.other_s
+    }
+
+    /// Coordinator overhead fraction = everything except inner compute.
+    pub fn overhead_fraction(&self) -> f64 {
+        let t = self.total();
+        if t == 0.0 {
+            0.0
+        } else {
+            (t - self.inner_compute_s) / t
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub label: String,
+    /// Mean inner loss per global step (averaged over active workers).
+    pub loss_curve: Vec<f32>,
+    pub eval_curve: Vec<EvalPoint>,
+    pub phases: PhaseTimes,
+    /// Copied from the comm fabric at run end.
+    pub comm_bytes: u64,
+    /// Worker → coordinator payloads only (outer gradients / DP grads) —
+    /// the direction the paper's "communicate 500× less" claim counts.
+    pub comm_bytes_up: u64,
+    pub comm_messages: u64,
+    pub comm_dropped: u64,
+    pub sim_comm_seconds: f64,
+    /// Simulated compute seconds (steps × per-step cost on the islands).
+    pub sim_compute_seconds: f64,
+}
+
+impl RunMetrics {
+    pub fn new(label: &str) -> RunMetrics {
+        RunMetrics { label: label.to_string(), ..Default::default() }
+    }
+
+    pub fn final_ppl(&self) -> f64 {
+        self.eval_curve.last().map(|p| p.ppl).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_nll(&self) -> f64 {
+        self.eval_curve.last().map(|p| p.mean_nll).unwrap_or(f64::NAN)
+    }
+
+    /// Simulated wall-clock: compute + communication barriers.
+    pub fn sim_wall_seconds(&self) -> f64 {
+        self.sim_compute_seconds + self.sim_comm_seconds
+    }
+
+    /// Mean of the last `n` inner losses (smoothed terminal loss).
+    pub fn tail_loss(&self, n: usize) -> f64 {
+        if self.loss_curve.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &self.loss_curve[self.loss_curve.len().saturating_sub(n)..];
+        math::mean(&tail.iter().map(|&x| x as f64).collect::<Vec<_>>())
+    }
+
+    /// CSV of the eval curve: step,mean_nll,ppl.
+    pub fn eval_csv(&self) -> String {
+        let mut s = String::from("step,mean_nll,ppl\n");
+        for p in &self.eval_curve {
+            let _ = writeln!(s, "{},{:.6},{:.4}", p.step, p.mean_nll, p.ppl);
+        }
+        s
+    }
+
+    /// CSV of the loss curve: step,loss.
+    pub fn loss_csv(&self) -> String {
+        let mut s = String::from("step,loss\n");
+        for (i, l) in self.loss_curve.iter().enumerate() {
+            let _ = writeln!(s, "{i},{l:.6}");
+        }
+        s
+    }
+
+    /// One-line JSON summary (run ledger entry).
+    pub fn summary_json(&self) -> String {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("label".into(), Json::Str(self.label.clone()));
+        m.insert("final_ppl".into(), Json::Num(self.final_ppl()));
+        m.insert("final_nll".into(), Json::Num(self.final_nll()));
+        m.insert("steps".into(), Json::Num(self.loss_curve.len() as f64));
+        m.insert("comm_bytes".into(), Json::Num(self.comm_bytes as f64));
+        m.insert("comm_messages".into(), Json::Num(self.comm_messages as f64));
+        m.insert("comm_dropped".into(), Json::Num(self.comm_dropped as f64));
+        m.insert("sim_wall_s".into(), Json::Num(self.sim_wall_seconds()));
+        m.insert(
+            "overhead_frac".into(),
+            Json::Num(self.phases.overhead_fraction()),
+        );
+        Json::Obj(m).dump()
+    }
+
+    pub fn write_curves(&self, dir: &str) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let base = self.label.replace([' ', '/'], "_");
+        std::fs::write(format!("{dir}/{base}.eval.csv"), self.eval_csv())?;
+        std::fs::write(format!("{dir}/{base}.loss.csv"), self.loss_csv())?;
+        Ok(())
+    }
+}
+
+/// Scoped wall-clock timer: `let _t = Stopwatch::new(&mut acc);`.
+pub struct Stopwatch<'a> {
+    start: Instant,
+    acc: &'a mut f64,
+}
+
+impl<'a> Stopwatch<'a> {
+    pub fn new(acc: &'a mut f64) -> Stopwatch<'a> {
+        Stopwatch { start: Instant::now(), acc }
+    }
+}
+
+impl Drop for Stopwatch<'_> {
+    fn drop(&mut self) {
+        *self.acc += self.start.elapsed().as_secs_f64();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppl_summaries() {
+        let mut m = RunMetrics::new("test");
+        m.eval_curve.push(EvalPoint { step: 10, mean_nll: 2.0, ppl: 2.0f64.exp() });
+        m.eval_curve.push(EvalPoint { step: 20, mean_nll: 1.0, ppl: 1.0f64.exp() });
+        assert!((m.final_ppl() - std::f64::consts::E).abs() < 1e-9);
+        assert_eq!(m.final_nll(), 1.0);
+    }
+
+    #[test]
+    fn tail_loss_windows() {
+        let mut m = RunMetrics::new("t");
+        m.loss_curve = vec![5.0, 4.0, 3.0, 2.0, 1.0];
+        assert!((m.tail_loss(2) - 1.5).abs() < 1e-9);
+        assert!((m.tail_loss(100) - 3.0).abs() < 1e-9);
+        assert!(RunMetrics::new("e").tail_loss(3).is_nan());
+    }
+
+    #[test]
+    fn csv_shapes() {
+        let mut m = RunMetrics::new("t");
+        m.loss_curve = vec![1.0, 2.0];
+        m.eval_curve.push(EvalPoint { step: 5, mean_nll: 0.5, ppl: 1.65 });
+        assert_eq!(m.loss_csv().lines().count(), 3);
+        assert_eq!(m.eval_csv().lines().count(), 2);
+        assert!(m.eval_csv().starts_with("step,"));
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut acc = 0.0;
+        {
+            let _t = Stopwatch::new(&mut acc);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(acc >= 0.004, "acc {acc}");
+    }
+
+    #[test]
+    fn overhead_fraction() {
+        let p = PhaseTimes {
+            inner_compute_s: 9.0,
+            outer_opt_s: 0.5,
+            eval_s: 0.25,
+            data_s: 0.25,
+            other_s: 0.0,
+        };
+        assert!((p.overhead_fraction() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_json_parses() {
+        let m = RunMetrics::new("x");
+        let parsed = crate::util::json::Json::parse(&m.summary_json()).unwrap();
+        assert_eq!(parsed.get("label").unwrap().as_str().unwrap(), "x");
+    }
+}

@@ -1,0 +1,338 @@
+//! AOT manifest parsing — the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! The manifest pins, for every artifact, the exact positional buffer
+//! layout of the lowered HLO (name/role/shape/dtype per input and output),
+//! plus the model configuration that was baked in at lowering time. The
+//! coordinator binds buffers **by role**, so nothing on the Rust side
+//! hard-codes the parameter tree.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> anyhow::Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => anyhow::bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Buffer roles the coordinator understands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Role {
+    Param,
+    OptM,
+    OptV,
+    Grad,
+    Step,
+    BatchTokens,
+    BatchTargets,
+    Loss,
+    SumNll,
+    TokenCount,
+    OuterDelta,
+    OuterMom,
+    OuterLr,
+    OuterMu,
+    Logits,
+}
+
+impl Role {
+    fn parse(s: &str) -> anyhow::Result<Role> {
+        Ok(match s {
+            "param" => Role::Param,
+            "opt_m" => Role::OptM,
+            "opt_v" => Role::OptV,
+            "grad" => Role::Grad,
+            "step" => Role::Step,
+            "batch_tokens" => Role::BatchTokens,
+            "batch_targets" => Role::BatchTargets,
+            "loss" => Role::Loss,
+            "sum_nll" => Role::SumNll,
+            "token_count" => Role::TokenCount,
+            "outer_delta" => Role::OuterDelta,
+            "outer_mom" => Role::OuterMom,
+            "outer_lr" => Role::OuterLr,
+            "outer_mu" => Role::OuterMu,
+            "logits" => Role::Logits,
+            other => anyhow::bail!("unknown role {other:?}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub role: Role,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size_bytes()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl LeafSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub key: String,
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    /// Indices of inputs with the given role, in manifest order.
+    pub fn input_indices(&self, role: Role) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.role == role)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn output_indices(&self, role: Role) -> Vec<usize> {
+        self.outputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.role == role)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Model/training config echoed by the AOT step (configs.py values).
+#[derive(Clone, Debug)]
+pub struct ManifestConfig {
+    pub name: String,
+    pub kernels: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub param_count: usize,
+    pub peak_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub weight_decay: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: ManifestConfig,
+    pub params: Vec<LeafSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let root = Json::parse(text)?;
+        let cfg = root.expect("config")?;
+        let config = ManifestConfig {
+            name: cfg.expect("name")?.as_str()?.to_string(),
+            kernels: cfg.expect("kernels")?.as_str()?.to_string(),
+            n_layers: cfg.expect("n_layers")?.as_usize()?,
+            d_model: cfg.expect("d_model")?.as_usize()?,
+            n_heads: cfg.expect("n_heads")?.as_usize()?,
+            d_head: cfg.expect("d_head")?.as_usize()?,
+            vocab_size: cfg.expect("vocab_size")?.as_usize()?,
+            seq_len: cfg.expect("seq_len")?.as_usize()?,
+            batch_size: cfg.expect("batch_size")?.as_usize()?,
+            param_count: cfg.expect("param_count")?.as_usize()?,
+            peak_lr: cfg.expect("peak_lr")?.as_f64()?,
+            warmup_steps: cfg.expect("warmup_steps")?.as_usize()?,
+            total_steps: cfg.expect("total_steps")?.as_usize()?,
+            weight_decay: cfg.expect("weight_decay")?.as_f64()?,
+        };
+
+        let params = root
+            .expect("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(LeafSpec {
+                    name: p.expect("name")?.as_str()?.to_string(),
+                    shape: p
+                        .expect("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<anyhow::Result<_>>()?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        let mut artifacts = BTreeMap::new();
+        for (key, art) in root.expect("artifacts")?.as_obj()? {
+            let parse_io = |list: &Json| -> anyhow::Result<Vec<IoSpec>> {
+                list.as_arr()?
+                    .iter()
+                    .map(|io| {
+                        Ok(IoSpec {
+                            name: io.expect("name")?.as_str()?.to_string(),
+                            role: Role::parse(io.expect("role")?.as_str()?)?,
+                            shape: io
+                                .expect("shape")?
+                                .as_arr()?
+                                .iter()
+                                .map(|d| d.as_usize())
+                                .collect::<anyhow::Result<_>>()?,
+                            dtype: Dtype::parse(io.expect("dtype")?.as_str()?)?,
+                        })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                key.clone(),
+                ArtifactSpec {
+                    key: key.clone(),
+                    file: art.expect("file")?.as_str()?.to_string(),
+                    sha256: art.expect("sha256")?.as_str()?.to_string(),
+                    inputs: parse_io(art.expect("inputs")?)?,
+                    outputs: parse_io(art.expect("outputs")?)?,
+                },
+            );
+        }
+
+        let man = Manifest { config, params, artifacts };
+        man.validate()?;
+        Ok(man)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// Structural invariants every valid manifest satisfies.
+    fn validate(&self) -> anyhow::Result<()> {
+        let total: usize = self.params.iter().map(|l| l.elements()).sum();
+        if total != self.config.param_count {
+            anyhow::bail!(
+                "param leaves sum to {total}, manifest says {}",
+                self.config.param_count
+            );
+        }
+        for required in ["train_step", "eval_step", "outer_step", "init_params"] {
+            if !self.artifacts.contains_key(required) {
+                anyhow::bail!("manifest missing required artifact {required:?}");
+            }
+        }
+        let n = self.params.len();
+        let train = &self.artifacts["train_step"];
+        if train.input_indices(Role::Param).len() != n
+            || train.output_indices(Role::Param).len() != n
+        {
+            anyhow::bail!("train_step param arity mismatch");
+        }
+        // Param leaf i must have identical name+shape across manifest lists.
+        for (leaf, io) in self.params.iter().zip(train.inputs.iter()) {
+            if leaf.name != io.name || leaf.shape != io.shape {
+                anyhow::bail!(
+                    "param order mismatch: {} vs {}",
+                    leaf.name,
+                    io.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, key: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("no artifact {key:?} in manifest"))
+    }
+
+    /// Total parameter bytes — the per-round communication payload
+    /// (one outer gradient) before compression.
+    pub fn param_bytes(&self) -> usize {
+        self.config.param_count * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nano_manifest() -> Option<Manifest> {
+        let path = std::path::Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/artifacts/nano.manifest.json"
+        ));
+        path.exists().then(|| Manifest::load(path).unwrap())
+    }
+
+    #[test]
+    fn parses_real_nano_manifest() {
+        let Some(man) = nano_manifest() else { return };
+        assert_eq!(man.config.name, "nano");
+        assert_eq!(man.config.param_count, 134_400);
+        assert!(man.artifacts.len() >= 5);
+        let train = man.artifact("train_step").unwrap();
+        let n = man.params.len();
+        assert_eq!(train.inputs.len(), 3 * n + 3);
+        assert_eq!(train.outputs.len(), 3 * n + 1);
+        assert_eq!(train.output_indices(Role::Loss), vec![3 * n]);
+    }
+
+    #[test]
+    fn role_binding_by_index() {
+        let Some(man) = nano_manifest() else { return };
+        let train = man.artifact("train_step").unwrap();
+        let toks = train.input_indices(Role::BatchTokens);
+        assert_eq!(toks.len(), 1);
+        let spec = &train.inputs[toks[0]];
+        assert_eq!(spec.shape, vec![man.config.batch_size, man.config.seq_len]);
+        assert_eq!(spec.dtype, Dtype::I32);
+    }
+
+    #[test]
+    fn rejects_param_count_mismatch() {
+        let text = r#"{
+            "config": {"name":"x","kernels":"ref","n_layers":1,"d_model":2,
+                "n_heads":1,"d_head":2,"vocab_size":4,"seq_len":2,
+                "batch_size":1,"param_count":999,"peak_lr":1e-3,
+                "warmup_steps":1,"total_steps":10,"weight_decay":0.1},
+            "params": [{"name":"w","shape":[2,2],"dtype":"f32"}],
+            "artifacts": {}
+        }"#;
+        assert!(Manifest::parse(text).is_err());
+    }
+}

@@ -1,0 +1,328 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client): `HloModuleProto::
+//! from_text_file` → `client.compile` → `execute`. Executables are
+//! compiled on first use and cached for the process lifetime. Outputs
+//! arrive from PJRT as a single tuple buffer; [`Runtime::execute`] reads
+//! it back and decomposes it against the manifest's output specs, so
+//! callers deal in `Tensors` (host `f32`/`i32` leaf vectors) only.
+//!
+//! Python never runs here — the artifacts are self-contained HLO.
+
+pub mod manifest;
+pub mod tensors;
+
+pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest, Role};
+pub use tensors::Tensors;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// Host-side value fed to / read from an artifact execution.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Borrowed view of an input value — the hot path feeds executions
+/// without cloning host tensors (§Perf change 2: the owned-`Value` path
+/// cloned params+m+v once per execute on top of the unavoidable
+/// host→Literal copy).
+#[derive(Clone, Copy, Debug)]
+pub enum ValueView<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl<'a> ValueView<'a> {
+    fn len(&self) -> usize {
+        match self {
+            ValueView::F32(v) => v.len(),
+            ValueView::I32(v) => v.len(),
+        }
+    }
+}
+
+impl Value {
+    pub fn view(&self) -> ValueView<'_> {
+        match self {
+            Value::F32(v) => ValueView::F32(v),
+            Value::I32(v) => ValueView::I32(v),
+        }
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            Value::F32(v) => Ok(v),
+            Value::I32(_) => anyhow::bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            Value::I32(v) => Ok(v),
+            Value::F32(_) => anyhow::bail!("expected i32 value, got f32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> anyhow::Result<f32> {
+        let v = self.as_f32()?;
+        anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+        Ok(v[0])
+    }
+}
+
+/// A compiled artifact + its manifest spec.
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Loaded artifact set for one model preset, bound to a PJRT CPU client.
+pub struct Runtime {
+    pub manifest: Manifest,
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Artifact>>>,
+    /// Executions performed, by artifact key (perf accounting).
+    exec_counts: RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Load `dir/<model>.manifest.json` and create the PJRT CPU client.
+    pub fn load(dir: &str, model: &str) -> anyhow::Result<Runtime> {
+        let dir = PathBuf::from(dir);
+        let manifest = Manifest::load(&dir.join(format!("{model}.manifest.json")))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            manifest,
+            dir,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            exec_counts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch cached) an artifact by manifest key.
+    pub fn artifact(&self, key: &str) -> anyhow::Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(key) {
+            return Ok(a.clone());
+        }
+        let spec = self.manifest.artifact(key)?.clone();
+        let path = self.dir.join(&spec.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow::anyhow!("parsing {path_str}: {e}"))?;
+        let exe = self
+            .client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .map_err(|e| anyhow::anyhow!("compiling {key}: {e}"))?;
+        let artifact = Rc::new(Artifact { spec, exe });
+        self.cache.borrow_mut().insert(key.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    /// True if the manifest ships this artifact (e.g. optional chunk sizes).
+    pub fn has_artifact(&self, key: &str) -> bool {
+        self.manifest.artifacts.contains_key(key)
+    }
+
+    /// Largest available `train_chunk_*` size, if any.
+    pub fn chunk_sizes(&self) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .manifest
+            .artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix("train_chunk_"))
+            .filter_map(|s| s.parse().ok())
+            .collect();
+        sizes.sort_unstable();
+        sizes
+    }
+
+    /// Execute an artifact on host values; returns outputs in manifest
+    /// order. Convenience wrapper over [`Runtime::execute_views`].
+    pub fn execute(&self, key: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        let views: Vec<ValueView> = inputs.iter().map(Value::view).collect();
+        self.execute_views(key, &views)
+    }
+
+    /// Execute on borrowed host slices — the hot path. Inputs are
+    /// validated against the manifest (arity, element counts, dtypes)
+    /// before touching the device.
+    pub fn execute_views(
+        &self,
+        key: &str,
+        inputs: &[ValueView<'_>],
+    ) -> anyhow::Result<Vec<Value>> {
+        let artifact = self.artifact(key)?;
+        let spec = &artifact.spec;
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{key}: got {} inputs, manifest wants {}",
+            inputs.len(),
+            spec.inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (value, io) in inputs.iter().zip(&spec.inputs) {
+            literals.push(self.to_literal(value, io)?);
+        }
+        *self
+            .exec_counts
+            .borrow_mut()
+            .entry(key.to_string())
+            .or_insert(0) += 1;
+        let out = artifact
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {key}: {e}"))?;
+        anyhow::ensure!(
+            out.len() == 1 && out[0].len() == 1,
+            "{key}: unexpected replica/buffer layout"
+        );
+        let mut root = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("readback {key}: {e}"))?;
+        let parts = root
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {key}: {e}"))?;
+        anyhow::ensure!(
+            parts.len() == spec.outputs.len(),
+            "{key}: got {} outputs, manifest wants {}",
+            parts.len(),
+            spec.outputs.len()
+        );
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, io)| self.from_literal(lit, io))
+            .collect()
+    }
+
+    fn to_literal(&self, value: &ValueView<'_>, io: &IoSpec) -> anyhow::Result<xla::Literal> {
+        anyhow::ensure!(
+            value.len() == io.elements(),
+            "{}: got {} elems, want {}",
+            io.name,
+            value.len(),
+            io.elements()
+        );
+        let dims: Vec<i64> = io.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (value, io.dtype) {
+            (ValueView::F32(v), Dtype::F32) => xla::Literal::vec1(v),
+            (ValueView::I32(v), Dtype::I32) => xla::Literal::vec1(v),
+            _ => anyhow::bail!("{}: dtype mismatch", io.name),
+        };
+        if io.shape.len() == 1 {
+            Ok(lit)
+        } else {
+            // Covers scalars ([]) and rank ≥ 2.
+            lit.reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshape {:?}: {e}", io.shape))
+        }
+    }
+
+    fn from_literal(&self, lit: xla::Literal, io: &IoSpec) -> anyhow::Result<Value> {
+        match io.dtype {
+            Dtype::F32 => {
+                let v: Vec<f32> = lit
+                    .to_vec()
+                    .map_err(|e| anyhow::anyhow!("{}: to_vec f32: {e}", io.name))?;
+                anyhow::ensure!(v.len() == io.elements(), "{}: output size", io.name);
+                Ok(Value::F32(v))
+            }
+            Dtype::I32 => {
+                let v: Vec<i32> = lit
+                    .to_vec()
+                    .map_err(|e| anyhow::anyhow!("{}: to_vec i32: {e}", io.name))?;
+                anyhow::ensure!(v.len() == io.elements(), "{}: output size", io.name);
+                Ok(Value::I32(v))
+            }
+        }
+    }
+
+    /// Per-artifact execution counters (for perf accounting / tests).
+    pub fn exec_counts(&self) -> HashMap<String, u64> {
+        self.exec_counts.borrow().clone()
+    }
+
+    // ---- high-level steps the coordinator uses --------------------------
+
+    /// Run `init_params` → fresh parameter tensors.
+    pub fn init_params(&self) -> anyhow::Result<Tensors> {
+        let out = self.execute("init_params", &[])?;
+        Tensors::from_values(&self.manifest, out)
+    }
+
+    /// One eval pass: mean nll over the given batch.
+    pub fn eval_batch(
+        &self,
+        params: &Tensors,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> anyhow::Result<(f64, f64)> {
+        let mut inputs = params.to_views();
+        inputs.push(ValueView::I32(tokens));
+        inputs.push(ValueView::I32(targets));
+        let out = self.execute_views("eval_step", &inputs)?;
+        let sum_nll = out[0].scalar_f32()? as f64;
+        let count = out[1].scalar_f32()? as f64;
+        Ok((sum_nll, count))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        std::path::Path::new(dir)
+            .join("nano.manifest.json")
+            .exists()
+            .then(|| Runtime::load(dir, "nano").unwrap())
+    }
+
+    #[test]
+    fn init_params_matches_manifest_count() {
+        let Some(rt) = runtime() else { return };
+        let params = rt.init_params().unwrap();
+        assert_eq!(params.total_elements(), rt.manifest.config.param_count);
+    }
+
+    #[test]
+    fn execute_rejects_wrong_arity() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute("eval_step", &[]).is_err());
+    }
+
+    #[test]
+    fn execute_rejects_wrong_size() {
+        let Some(rt) = runtime() else { return };
+        let params = rt.init_params().unwrap();
+        let mut inputs = params.to_values();
+        inputs.push(Value::I32(vec![0; 3])); // wrong token count
+        inputs.push(Value::I32(vec![0; 3]));
+        assert!(rt.execute("eval_step", &inputs).is_err());
+    }
+
+    #[test]
+    fn eval_loss_near_log_vocab_at_init() {
+        let Some(rt) = runtime() else { return };
+        let params = rt.init_params().unwrap();
+        let cfg = &rt.manifest.config;
+        let n = cfg.batch_size * cfg.seq_len;
+        let tokens: Vec<i32> = (0..n).map(|i| (i % cfg.vocab_size) as i32).collect();
+        let (sum_nll, count) = rt.eval_batch(&params, &tokens, &tokens).unwrap();
+        assert_eq!(count as usize, n);
+        let mean = sum_nll / count;
+        let logv = (cfg.vocab_size as f64).ln();
+        assert!((mean - logv).abs() < 1.0, "mean nll {mean} vs log V {logv}");
+    }
+}

@@ -1,0 +1,241 @@
+//! `Tensors` — host-side parameter/optimizer-state storage.
+//!
+//! One `Vec<f32>` per manifest leaf, in canonical manifest order. All
+//! outer-loop algebra (deltas, averaging, outer optimizers, pruning,
+//! cosine stats) operates on these through flat-slice views; the runtime
+//! converts to/from `Value`s at execution boundaries.
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::Value;
+use crate::util::math;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensors {
+    leaves: Vec<Vec<f32>>,
+}
+
+impl Tensors {
+    /// All-zero tensors shaped like the manifest's parameter tree
+    /// (used for AdamW m/v state and outer momentum).
+    pub fn zeros(manifest: &Manifest) -> Tensors {
+        Tensors {
+            leaves: manifest
+                .params
+                .iter()
+                .map(|l| vec![0f32; l.elements()])
+                .collect(),
+        }
+    }
+
+    /// Wrap raw leaf vectors without a manifest (tests / synthetic state).
+    pub fn from_raw(leaves: Vec<Vec<f32>>) -> Tensors {
+        Tensors { leaves }
+    }
+
+    /// Wrap leaf vectors (must match manifest arity and sizes).
+    pub fn from_leaves(manifest: &Manifest, leaves: Vec<Vec<f32>>) -> anyhow::Result<Tensors> {
+        anyhow::ensure!(
+            leaves.len() == manifest.params.len(),
+            "got {} leaves, manifest wants {}",
+            leaves.len(),
+            manifest.params.len()
+        );
+        for (leaf, spec) in leaves.iter().zip(&manifest.params) {
+            anyhow::ensure!(
+                leaf.len() == spec.elements(),
+                "leaf {} has {} elems, want {}",
+                spec.name,
+                leaf.len(),
+                spec.elements()
+            );
+        }
+        Ok(Tensors { leaves })
+    }
+
+    /// Consume the first `n_params` f32 values from an execution output.
+    pub fn from_values(manifest: &Manifest, values: Vec<Value>) -> anyhow::Result<Tensors> {
+        let leaves = values
+            .into_iter()
+            .take(manifest.params.len())
+            .map(|v| match v {
+                Value::F32(x) => Ok(x),
+                Value::I32(_) => anyhow::bail!("param leaf is i32"),
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Self::from_leaves(manifest, leaves)
+    }
+
+    pub fn to_values(&self) -> Vec<Value> {
+        self.leaves.iter().map(|l| Value::F32(l.clone())).collect()
+    }
+
+    /// Borrowed views for the zero-copy execution path (§Perf change 2).
+    pub fn to_views(&self) -> Vec<crate::runtime::ValueView<'_>> {
+        self.leaves
+            .iter()
+            .map(|l| crate::runtime::ValueView::F32(l))
+            .collect()
+    }
+
+    /// Append views to an existing argument list.
+    pub fn append_views<'a>(&'a self, out: &mut Vec<crate::runtime::ValueView<'a>>) {
+        out.extend(self.leaves.iter().map(|l| crate::runtime::ValueView::F32(l)));
+    }
+
+    pub fn leaves(&self) -> &[Vec<f32>] {
+        &self.leaves
+    }
+
+    pub fn leaves_mut(&mut self) -> &mut [Vec<f32>] {
+        &mut self.leaves
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.leaves.len()
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.leaves.iter().map(|l| l.len()).sum()
+    }
+
+    /// Bytes when transmitted uncompressed (f32).
+    pub fn byte_size(&self) -> usize {
+        self.total_elements() * 4
+    }
+
+    // ---- algebra ---------------------------------------------------------
+
+    /// self - other, leafwise (the outer gradient Δ = θ_prev - θ_worker).
+    pub fn delta(&self, other: &Tensors) -> Tensors {
+        assert_eq!(self.leaves.len(), other.leaves.len());
+        Tensors {
+            leaves: self
+                .leaves
+                .iter()
+                .zip(&other.leaves)
+                .map(|(a, b)| math::sub(a, b))
+                .collect(),
+        }
+    }
+
+    /// self += c * other.
+    pub fn axpy(&mut self, c: f32, other: &Tensors) {
+        assert_eq!(self.leaves.len(), other.leaves.len());
+        for (a, b) in self.leaves.iter_mut().zip(&other.leaves) {
+            math::axpy(a, c, b);
+        }
+    }
+
+    pub fn scale(&mut self, c: f32) {
+        for l in &mut self.leaves {
+            math::scale(l, c);
+        }
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.leaves
+            .iter()
+            .map(|l| math::dot(l, l))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Cosine similarity across the full flattened vector.
+    pub fn cosine(&self, other: &Tensors) -> f64 {
+        let dot: f64 = self
+            .leaves
+            .iter()
+            .zip(&other.leaves)
+            .map(|(a, b)| math::dot(a, b))
+            .sum();
+        let na = self.l2_norm();
+        let nb = other.l2_norm();
+        if na == 0.0 || nb == 0.0 {
+            0.0
+        } else {
+            dot / (na * nb)
+        }
+    }
+
+    /// Flat iterator over every element (read-only).
+    pub fn iter_flat(&self) -> impl Iterator<Item = f32> + '_ {
+        self.leaves.iter().flat_map(|l| l.iter().copied())
+    }
+
+    /// Visit every element mutably.
+    pub fn for_each_mut(&mut self, mut f: impl FnMut(&mut f32)) {
+        for l in &mut self.leaves {
+            for x in l {
+                f(x);
+            }
+        }
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.iter_flat().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn toy(leaves: Vec<Vec<f32>>) -> Tensors {
+        Tensors { leaves }
+    }
+
+    #[test]
+    fn delta_and_axpy_roundtrip() {
+        let a = toy(vec![vec![1.0, 2.0], vec![3.0]]);
+        let b = toy(vec![vec![0.5, 1.0], vec![1.0]]);
+        let d = a.delta(&b); // a - b
+        let mut b2 = b.clone();
+        b2.axpy(1.0, &d); // b + (a-b) = a
+        assert_eq!(b2, a);
+    }
+
+    #[test]
+    fn norm_and_cosine() {
+        let a = toy(vec![vec![3.0], vec![4.0]]);
+        assert!((a.l2_norm() - 5.0).abs() < 1e-9);
+        assert!((a.cosine(&a) - 1.0).abs() < 1e-9);
+        let zero = toy(vec![vec![0.0], vec![0.0]]);
+        assert_eq!(a.cosine(&zero), 0.0);
+    }
+
+    #[test]
+    fn prop_delta_antisymmetric() {
+        check("delta(a,b) = -delta(b,a)", 50, |g| {
+            let x = g.f32_vec(1..40, 5.0);
+            let y: Vec<f32> = x.iter().map(|v| v + 1.0).collect();
+            let a = toy(vec![x.clone()]);
+            let b = toy(vec![y]);
+            let mut ab = a.delta(&b);
+            let ba = b.delta(&a);
+            ab.axpy(1.0, &ba);
+            assert!(ab.iter_flat().all(|v| v.abs() < 1e-5));
+        });
+    }
+
+    #[test]
+    fn prop_scale_linear_in_norm() {
+        check("‖c·x‖ = |c|·‖x‖", 50, |g| {
+            let x = g.f32_vec(1..60, 3.0);
+            let c = g.f64_in(-4.0..4.0) as f32;
+            let t = toy(vec![x]);
+            let mut s = t.clone();
+            s.scale(c);
+            let want = t.l2_norm() * c.abs() as f64;
+            assert!((s.l2_norm() - want).abs() < 1e-3 * (1.0 + want));
+        });
+    }
+
+    #[test]
+    fn finite_detection() {
+        let mut t = toy(vec![vec![1.0, 2.0]]);
+        assert!(t.all_finite());
+        t.leaves_mut()[0][1] = f32::NAN;
+        assert!(!t.all_finite());
+    }
+}

@@ -1,0 +1,119 @@
+//! Flat-vector math used by the coordinator hot path.
+//!
+//! All outer-loop algebra (averaging, deltas, cosine similarity, norms)
+//! operates on `&[f32]` slices over parameter leaves. These are simple
+//! loops the compiler auto-vectorizes; the profile in EXPERIMENTS.md §Perf
+//! confirms they are not the bottleneck at any tested scale.
+
+/// dot(a, b) in f64 accumulation (f32 inputs, stable for large vectors).
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+pub fn l2_norm(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Cosine similarity; 0.0 when either vector is all-zero.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let na = l2_norm(a);
+    let nb = l2_norm(b);
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot(a, b) / (na * nb)
+}
+
+/// out[i] += x[i]
+pub fn add_assign(out: &mut [f32], x: &[f32]) {
+    assert_eq!(out.len(), x.len());
+    for (o, v) in out.iter_mut().zip(x) {
+        *o += v;
+    }
+}
+
+/// out[i] += c * x[i]
+pub fn axpy(out: &mut [f32], c: f32, x: &[f32]) {
+    assert_eq!(out.len(), x.len());
+    for (o, v) in out.iter_mut().zip(x) {
+        *o += c * v;
+    }
+}
+
+/// out[i] *= c
+pub fn scale(out: &mut [f32], c: f32) {
+    for o in out.iter_mut() {
+        *o *= c;
+    }
+}
+
+/// a - b elementwise into a fresh vec.
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Perplexity from mean negative log-likelihood.
+pub fn ppl(mean_nll: f64) -> f64 {
+    mean_nll.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_of_self_is_one() {
+        let v = vec![1.0, -2.0, 3.0];
+        assert!((cosine(&v, &v) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_orthogonal_is_zero() {
+        assert_eq!(cosine(&[1.0, 0.0], &[0.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn cosine_opposite_is_minus_one() {
+        let v = vec![1.0f32, 2.0, 3.0];
+        let w: Vec<f32> = v.iter().map(|x| -x).collect();
+        assert!((cosine(&v, &w) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_zero_vector_is_zero_not_nan() {
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut out = vec![1.0f32, 2.0];
+        axpy(&mut out, 2.0, &[3.0, 4.0]);
+        assert_eq!(out, vec![7.0, 10.0]);
+        scale(&mut out, 0.5);
+        assert_eq!(out, vec![3.5, 5.0]);
+    }
+
+    #[test]
+    fn stats() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
+        assert!((ppl((16.0f64).ln()) - 16.0).abs() < 1e-9);
+    }
+}

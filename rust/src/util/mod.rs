@@ -1,0 +1,8 @@
+//! Substrate utilities the fixed crate universe forced us to build:
+//! a PRNG ([`rng`]), a JSON reader/writer ([`json`]), vector math
+//! ([`math`]) and a property-testing harness ([`prop`]).
+
+pub mod json;
+pub mod math;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,275 @@
+//! End-to-end integration: the full DiLoCo stack over real artifacts,
+//! metamorphic algorithm identities, and the checkpoint round-trip.
+
+use diloco::checkpoint;
+use diloco::config::{ComputeSchedule, ExperimentConfig, OuterOptConfig};
+use diloco::coordinator::Coordinator;
+use diloco::data::batch::BatchIter;
+use diloco::metrics::RunMetrics;
+use diloco::runtime::{Runtime, Tensors};
+use diloco::util::rng::Rng;
+use diloco::worker::Worker;
+use std::rc::Rc;
+
+fn artifacts_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+fn runtime() -> Option<Rc<Runtime>> {
+    let dir = artifacts_dir();
+    std::path::Path::new(&dir)
+        .join("nano.manifest.json")
+        .exists()
+        .then(|| Rc::new(Runtime::load(&dir, "nano").unwrap()))
+}
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default(&artifacts_dir(), "nano");
+    cfg.workers = 4;
+    cfg.schedule = ComputeSchedule::Constant(4);
+    cfg.inner_steps = 10;
+    cfg.rounds = 4;
+    cfg.pretrain_steps = 10;
+    cfg.eval_batches = 2;
+    cfg.data.n_docs = 120;
+    cfg.data.doc_len = 140;
+    cfg
+}
+
+#[test]
+fn diloco_learns_end_to_end() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let coord = Coordinator::new(small_cfg(), rt).unwrap();
+    let report = coord.run().unwrap();
+    let m = &report.metrics;
+    // The model must actually learn the synthetic language.
+    let first = m.eval_curve.first().unwrap().ppl;
+    let last = m.final_ppl();
+    assert!(
+        last < first * 0.8,
+        "no learning: first ppl {first}, final {last}"
+    );
+    // Loss curve covers pretrain + all rounds.
+    assert_eq!(m.loss_curve.len(), 10 + 4 * 10);
+    // Communication exactly k×T up + k×T down messages.
+    assert_eq!(m.comm_messages, 2 * 4 * 4);
+    // Coordinator (non-compute) overhead must stay small even at nano
+    // scale — the §Perf L3 target (<15% here; <5% at micro+).
+    assert!(
+        m.phases.overhead_fraction() < 0.35,
+        "coordinator overhead {:.1}%",
+        100.0 * m.phases.overhead_fraction()
+    );
+}
+
+#[test]
+fn sgd_lr1_k1_round_equals_worker_trajectory() {
+    // Metamorphic identity: with k=1 and OuterOpt = SGD(lr=1),
+    // θ(t) = θ(t-1) - 1·(θ(t-1) - θ_worker) = θ_worker — DiLoCo reduces
+    // to the worker's own trajectory ("souping" degenerate case).
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.workers = 1;
+    cfg.schedule = ComputeSchedule::Constant(1);
+    cfg.outer_opt = OuterOptConfig::Sgd { lr: 1.0 };
+    cfg.pretrain_steps = 0;
+    cfg.comm.drop_prob = 0.0;
+    let coord = Coordinator::new(cfg.clone(), rt.clone()).unwrap();
+    let init = rt.init_params().unwrap();
+    let report = coord.run_from(Some(init.clone())).unwrap();
+
+    // Replicate the single worker's trajectory by hand: same shard, same
+    // rng stream (worker 0 uses seed child(100)), same step offset.
+    let mcfg = &rt.manifest.config;
+    let mut w = Worker::new(
+        0,
+        init,
+        Tensors::zeros(&rt.manifest),
+        BatchIter::new(
+            coord.dataset.shards[0].clone(),
+            mcfg.batch_size,
+            mcfg.seq_len,
+            cfg.rng().child(100),
+        ),
+    );
+    let mut losses = Vec::new();
+    w.run_inner_steps(&rt, cfg.rounds * cfg.inner_steps, &mut losses)
+        .unwrap();
+    for (a, b) in report.final_params.leaves().iter().zip(w.params.leaves()) {
+        for (x, y) in a.iter().zip(b) {
+            assert!(
+                (x - y).abs() < 1e-5,
+                "k=1 SGD(lr=1) DiLoCo must equal the raw trajectory: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn nesterov_beats_frozen_model() {
+    // Sanity on optimizer direction: one DiLoCo run must end with lower
+    // eval nll than the frozen pretrained model.
+    let Some(rt) = runtime() else { return };
+    let cfg = small_cfg();
+    let coord = Coordinator::new(cfg, rt.clone()).unwrap();
+    let init = rt.init_params().unwrap();
+    let frozen = coord.evaluate(&init).unwrap();
+    let report = coord.run_from(Some(init)).unwrap();
+    assert!(report.metrics.final_nll() < frozen.mean_nll - 0.3);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_training() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 1;
+    cfg.pretrain_steps = 0;
+    let coord = Coordinator::new(cfg, rt.clone()).unwrap();
+    let report = coord.run().unwrap();
+    let path = std::env::temp_dir().join("diloco_integration.ckpt");
+    let path = path.to_str().unwrap();
+    checkpoint::save(path, &rt.manifest, &report.final_params).unwrap();
+    let loaded = checkpoint::load(path, &rt.manifest).unwrap();
+    assert_eq!(&loaded, &report.final_params);
+    // Evaluation of the reloaded params must match exactly.
+    let a = coord.evaluate(&report.final_params).unwrap();
+    let b = coord.evaluate(&loaded).unwrap();
+    assert_eq!(a.mean_nll, b.mean_nll);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn weighted_vs_uniform_average_differ_on_imbalanced_shards() {
+    // With heavily imbalanced non-iid shards, §6.1 weighting must change
+    // the outcome (guards against weights being silently dropped).
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.workers = 2;
+    cfg.schedule = ComputeSchedule::Constant(2);
+    cfg.rounds = 2;
+    cfg.pretrain_steps = 0;
+    cfg.data.n_topics = 2;
+    cfg.data.n_docs = 90; // topic imbalance comes from doc lengths
+    cfg.data.doc_len = 100;
+    cfg.data.mix = 0.4; // reassignments create count imbalance
+    cfg.seed = 3;
+
+    let mut uniform_cfg = cfg.clone();
+    uniform_cfg.weighted_average = false;
+    let init = rt.init_params().unwrap();
+
+    let weighted = Coordinator::new(cfg, rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    let uniform = Coordinator::new(uniform_cfg, rt)
+        .unwrap()
+        .run_from(Some(init))
+        .unwrap();
+    let max_diff = weighted
+        .final_params
+        .leaves()
+        .iter()
+        .zip(uniform.final_params.leaves())
+        .flat_map(|(a, b)| a.iter().zip(b).map(|(x, y)| (x - y).abs()))
+        .fold(0f32, f32::max);
+    assert!(
+        max_diff > 1e-6,
+        "weighted averaging had no effect on imbalanced shards"
+    );
+}
+
+#[test]
+fn drop_injection_is_seeded_and_counted() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.comm.drop_prob = 0.5;
+    cfg.rounds = 6;
+    cfg.pretrain_steps = 0;
+    cfg.seed = 11;
+    let r1 = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run()
+        .unwrap();
+    let r2 = Coordinator::new(cfg, rt).unwrap().run().unwrap();
+    assert_eq!(r1.drops_per_worker, r2.drops_per_worker);
+    let total: usize = r1.drops_per_worker.iter().sum();
+    assert_eq!(total as u64, r1.metrics.comm_dropped);
+    // 4 workers × 6 rounds × p=0.5 ⇒ expect drops, but not all 24.
+    assert!(total > 0 && total < 24, "drops {total}");
+}
+
+#[test]
+fn pruning_reduces_billed_communication() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 2;
+    cfg.pretrain_steps = 0;
+    let init = rt.init_params().unwrap();
+    let full = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    cfg.prune_frac = 0.75;
+    let pruned = Coordinator::new(cfg, rt)
+        .unwrap()
+        .run_from(Some(init))
+        .unwrap();
+    // Uploads shrink to ~28% (25% values + bitmap); downloads (full
+    // parameter broadcast) are unchanged, so total lands near 64%.
+    assert!(
+        (pruned.metrics.comm_bytes as f64) < 0.72 * full.metrics.comm_bytes as f64,
+        "75% pruning must cut upload bytes: {} vs {}",
+        pruned.metrics.comm_bytes,
+        full.metrics.comm_bytes
+    );
+    // …and the model still learns.
+    assert!(pruned.metrics.final_ppl().is_finite());
+}
+
+#[test]
+fn micro_model_composes_too() {
+    // Second artifact set (table 4 path): one short run on micro.
+    let dir = artifacts_dir();
+    if !std::path::Path::new(&dir).join("micro.manifest.json").exists() {
+        eprintln!("skipping: micro artifacts not built");
+        return;
+    }
+    let rt = Rc::new(Runtime::load(&dir, "micro").unwrap());
+    let mut cfg = ExperimentConfig::paper_default(&dir, "micro");
+    cfg.workers = 2;
+    cfg.schedule = ComputeSchedule::Constant(2);
+    cfg.inner_steps = 5;
+    cfg.rounds = 1;
+    cfg.pretrain_steps = 0;
+    cfg.eval_batches = 1;
+    cfg.data.n_docs = 80;
+    cfg.data.doc_len = 200;
+    let coord = Coordinator::new(cfg, rt).unwrap();
+    let report = coord.run().unwrap();
+    assert!(report.metrics.final_ppl().is_finite());
+    assert_eq!(report.metrics.loss_curve.len(), 5);
+}
+
+#[test]
+fn plain_train_matches_run_pretrain_phase() {
+    // run() with pretrain_steps=N and rounds→0-equivalent must produce the
+    // same pretrain loss prefix as plain_train with the same seed.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.pretrain_steps = 8;
+    cfg.rounds = 1;
+    cfg.inner_steps = 1;
+    let coord = Coordinator::new(cfg.clone(), rt.clone()).unwrap();
+    let report = coord.run().unwrap();
+
+    let coord2 = Coordinator::new(cfg, rt.clone()).unwrap();
+    let mut m = RunMetrics::new("plain");
+    coord2
+        .plain_train(rt.init_params().unwrap(), 0.0, 8, &mut m, 0)
+        .unwrap();
+    assert_eq!(&report.metrics.loss_curve[..8], &m.loss_curve[..]);
+}
