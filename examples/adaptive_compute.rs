@@ -10,7 +10,7 @@
 use diloco::config::{ComputeSchedule, ExperimentConfig};
 use diloco::coordinator::Coordinator;
 use diloco::runtime::Runtime;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".into());
@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     base.data.non_iid = false; // the paper's adaptive study is i.i.d.
     base.eval_every_rounds = 2;
 
-    let rt = Rc::new(Runtime::load(&base.artifacts_dir, &base.model)?);
+    let rt = Arc::new(Runtime::load(&base.artifacts_dir, &base.model)?);
 
     // A volunteer pool that doubles when evening volunteers join, and a
     // karma cluster that halves after quota is spent.

@@ -12,7 +12,7 @@
 use diloco::config::{ComputeSchedule, ExperimentConfig};
 use diloco::coordinator::Coordinator;
 use diloco::runtime::Runtime;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".into());
@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    let rt = Rc::new(Runtime::load(&cfg.artifacts_dir, &cfg.model)?);
+    let rt = Arc::new(Runtime::load(&cfg.artifacts_dir, &cfg.model)?);
     let mcfg = &rt.manifest.config;
     println!(
         "e2e: {} — {} params, batch {}×{}, vocab {}, k={} H={} T={} (+{} pretrain)",

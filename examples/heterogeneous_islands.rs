@@ -12,7 +12,7 @@
 use diloco::config::ExperimentConfig;
 use diloco::coordinator::Coordinator;
 use diloco::runtime::Runtime;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".into());
@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     cfg.comm.drop_prob = 0.3;
     cfg.prune_frac = 0.5;
 
-    let rt = Rc::new(Runtime::load(&cfg.artifacts_dir, &cfg.model)?);
+    let rt = Arc::new(Runtime::load(&cfg.artifacts_dir, &cfg.model)?);
     println!(
         "8 islands, {} params each, WAN 200 Mb/s / 150 ms, 30% uplink loss, \
          50% sign-pruned outer gradients",

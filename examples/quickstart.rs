@@ -9,7 +9,7 @@
 use diloco::config::ExperimentConfig;
 use diloco::coordinator::Coordinator;
 use diloco::runtime::Runtime;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".into());
@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Load the AOT artifacts (python ran once at `make artifacts`;
     //    from here on the stack is rust + PJRT only).
-    let rt = Rc::new(Runtime::load(&cfg.artifacts_dir, &cfg.model)?);
+    let rt = Arc::new(Runtime::load(&cfg.artifacts_dir, &cfg.model)?);
     println!(
         "model: {} ({} params), kernels = {}",
         rt.manifest.config.name,

@@ -15,8 +15,10 @@ use diloco::config::{DataConfig, OuterOptConfig};
 use diloco::coordinator::{average, opt::OuterOpt, prune};
 use diloco::data::batch::BatchIter;
 use diloco::data::Dataset;
+use diloco::engine::{self, InnerPhaseExecutor, ParallelIslands, Sequential};
 use diloco::runtime::{Tensors, Value};
 use diloco::util::rng::Rng;
+use diloco::worker::Worker;
 
 fn main() -> anyhow::Result<()> {
     let ctx = BenchCtx::new("microbench_hotpath");
@@ -162,7 +164,73 @@ fn main() -> anyhow::Result<()> {
         "per worker per round".into(),
     ]);
 
+    // Engine comparison: the same k=4 × H=25 inner phase through the
+    // sequential reference executor and the parallel-islands executor —
+    // the island-parallelism speedup is measured here, not asserted.
+    let k = 4usize;
+    let h = 25usize;
+    let make_workers = || -> Vec<Worker> {
+        (0..k)
+            .map(|i| {
+                Worker::new(
+                    i,
+                    params.clone(),
+                    zeros.clone(),
+                    BatchIter::new(
+                        ds.shards[i % ds.shards.len()].clone(),
+                        mcfg.batch_size,
+                        mcfg.seq_len,
+                        Rng::new(42 + i as u64),
+                    ),
+                )
+            })
+            .collect()
+    };
+    // Warm every chunk artifact once so compile time skews neither side;
+    // workers are built OUTSIDE the timed closures so the serial setup
+    // cost (param clones, shard clones) doesn't dilute the measured
+    // speedup — reps keep training the same workers, which repeats the
+    // identical k×h-step workload.
+    engine::run_inner_phase(&Sequential, &rt, &mut make_workers(), h)?;
+    let mut ws_seq = make_workers();
+    let t_seq = time_median(3, || {
+        engine::run_inner_phase(&Sequential, &rt, &mut ws_seq, h).unwrap();
+    });
+    let parallel = ParallelIslands::new(0);
+    let mut ws_par = make_workers();
+    let t_par = time_median(3, || {
+        engine::run_inner_phase(&parallel, &rt, &mut ws_par, h).unwrap();
+    });
+    let par_threads = parallel.resolved_threads(k);
+    table.row(vec![
+        "inner_phase_seq_k4".into(),
+        format!("{:.2}", t_seq * 1e3),
+        format!("{:.2}", t_seq * 1e3 / (k * h) as f64),
+        format!("{k} islands × {h} steps, 1 thread"),
+    ]);
+    table.row(vec![
+        "inner_phase_par_k4".into(),
+        format!("{:.2}", t_par * 1e3),
+        format!("{:.2}", t_par * 1e3 / (k * h) as f64),
+        format!("{k} islands × {h} steps, {} engine", parallel.name()),
+    ]);
     ctx.emit(&table);
+
+    println!(
+        "\nengine: sequential {:.1} ms vs parallel {:.1} ms at k={k} on {par_threads} threads \
+         → {:.2}x inner-phase speedup",
+        t_seq * 1e3,
+        t_par * 1e3,
+        t_seq / t_par
+    );
+    ctx.emit_csv(
+        "engine",
+        &format!(
+            "engine,threads,k,h,median_s,speedup\nsequential,1,{k},{h},{t_seq:.6},1.00\n\
+             parallel,{par_threads},{k},{h},{t_par:.6},{:.3}\n",
+            t_seq / t_par
+        ),
+    );
 
     // Headline §Perf ratio: chunked vs stepwise per-step cost.
     let t1 = run_steps("train_step", 1)?;

@@ -22,8 +22,15 @@ pub enum Scale {
 
 impl Scale {
     pub fn from_env() -> Scale {
-        match std::env::var("SCALE").as_deref() {
-            Ok("paper") => Scale::Paper,
+        Scale::from_env_var(std::env::var("SCALE").ok().as_deref())
+    }
+
+    /// Pure selector — injectable so tests never mutate process env
+    /// (`cargo test` runs tests concurrently; `set_var`/`remove_var`
+    /// race across threads).
+    pub fn from_env_var(v: Option<&str>) -> Scale {
+        match v {
+            Some("paper") => Scale::Paper,
             _ => Scale::Scaled,
         }
     }
@@ -192,7 +199,8 @@ mod tests {
 
     #[test]
     fn scale_default_is_scaled() {
-        std::env::remove_var("SCALE");
-        assert_eq!(Scale::from_env(), Scale::Scaled);
+        assert_eq!(Scale::from_env_var(None), Scale::Scaled);
+        assert_eq!(Scale::from_env_var(Some("paper")), Scale::Paper);
+        assert_eq!(Scale::from_env_var(Some("anything-else")), Scale::Scaled);
     }
 }

@@ -12,9 +12,9 @@
 //!   T×H after pretrain: 160 ↔ 64k
 
 use super::Scale;
-use crate::config::{ComputeSchedule, ExperimentConfig, OuterOptConfig};
+use crate::config::{ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig};
 use crate::runtime::Runtime;
-use std::rc::Rc;
+use std::sync::Arc;
 
 pub fn artifacts_dir() -> String {
     std::env::var("ARTIFACTS_DIR")
@@ -22,10 +22,10 @@ pub fn artifacts_dir() -> String {
 }
 
 /// Load the runtime for a preset, or explain how to build artifacts.
-pub fn load_runtime(model: &str) -> Rc<Runtime> {
+pub fn load_runtime(model: &str) -> Arc<Runtime> {
     let dir = artifacts_dir();
     match Runtime::load(&dir, model) {
-        Ok(rt) => Rc::new(rt),
+        Ok(rt) => Arc::new(rt),
         Err(e) => {
             eprintln!(
                 "cannot load {model} artifacts from {dir}: {e}\n\
@@ -36,9 +36,23 @@ pub fn load_runtime(model: &str) -> Rc<Runtime> {
     }
 }
 
+/// Engine override for benches: `ENGINE=sequential|parallel[:N]` swaps
+/// the inner-phase executor without editing bench sources (default:
+/// auto — parallel islands whenever k ≥ 2).
+pub fn engine_from_env() -> EngineConfig {
+    match EngineConfig::from_env_var(std::env::var("ENGINE").ok().as_deref()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("bad ENGINE env: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
 /// The scaled main setting (paper: 150M, k=8, H=500, T=128, 24k pretrain).
 pub fn base_config(scale: Scale) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::paper_default(&artifacts_dir(), "nano");
+    cfg.engine = engine_from_env();
     match scale {
         Scale::Scaled => {
             cfg.workers = 8;

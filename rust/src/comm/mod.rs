@@ -8,6 +8,13 @@
 //! clock lets Table 2's "Time" column be *measured*: compute time from
 //! per-step costs, communication time from the fabric — overlapping
 //! workers take the max, as islands run in parallel.
+//!
+//! **Determinism contract:** a drop decision is a *pure function* of
+//! `(fabric seed, round, worker_id)` — never of how many messages were
+//! sent before it. Uploads may therefore land in any order (sequential
+//! loop, parallel islands, future async variants) and the communication
+//! outcome is identical. This replaced a shared sequentially-consumed
+//! RNG and intentionally changed seeded drop patterns once.
 
 use crate::util::rng::Rng;
 
@@ -43,7 +50,9 @@ pub struct SimNet {
     bandwidth_bps: f64,
     latency_s: f64,
     drop_prob: f64,
-    rng: Rng,
+    /// Base stream for keyed drop decisions; never advanced — per-message
+    /// decisions derive fresh children from `(round, worker)`.
+    drop_rng: Rng,
     stats: CommStats,
     /// Per-round transfer times, reset by `end_round`.
     round_transfers: Vec<f64>,
@@ -57,7 +66,7 @@ impl SimNet {
             bandwidth_bps,
             latency_s,
             drop_prob,
-            rng,
+            drop_rng: rng,
             stats: CommStats::default(),
             round_transfers: Vec::new(),
         }
@@ -68,12 +77,31 @@ impl SimNet {
         self.latency_s + bytes as f64 / self.bandwidth_bps
     }
 
-    /// Attempt an upload of `bytes` from a worker; returns `false` if the
-    /// message is dropped (worker reboot / packet loss — Fig 8 semantics:
-    /// the coordinator simply does not receive this outer gradient).
-    pub fn try_send(&mut self, bytes: u64, dir: Direction) -> bool {
+    /// Keyed drop decision — pure in `(fabric seed, round, worker)`, so
+    /// the outcome is independent of message order.
+    pub fn drops(&self, round: usize, worker: usize) -> bool {
+        if self.drop_prob <= 0.0 {
+            return false;
+        }
+        self.drop_rng
+            .child(round as u64)
+            .child(worker as u64)
+            .coin(self.drop_prob)
+    }
+
+    /// Attempt an upload of `bytes` from `worker` in `round`; returns
+    /// `false` if the message is dropped (worker reboot / packet loss —
+    /// Fig 8 semantics: the coordinator simply does not receive this
+    /// outer gradient). The drop decision is keyed, never sequential.
+    pub fn try_send(
+        &mut self,
+        bytes: u64,
+        dir: Direction,
+        round: usize,
+        worker: usize,
+    ) -> bool {
         self.stats.messages += 1;
-        if self.drop_prob > 0.0 && self.rng.coin(self.drop_prob) {
+        if self.drops(round, worker) {
             self.stats.dropped += 1;
             return false;
         }
@@ -139,8 +167,8 @@ mod tests {
     #[test]
     fn billing_accumulates_by_direction() {
         let mut n = net(0.0);
-        assert!(n.try_send(100, Direction::Up));
-        assert!(n.try_send(300, Direction::Down));
+        assert!(n.try_send(100, Direction::Up, 0, 0));
+        assert!(n.try_send(300, Direction::Down, 0, 1));
         assert_eq!(n.stats().bytes_up, 100);
         assert_eq!(n.stats().bytes_down, 300);
         assert_eq!(n.stats().total_bytes(), 400);
@@ -150,8 +178,8 @@ mod tests {
     #[test]
     fn round_cost_is_max_not_sum() {
         let mut n = net(0.0);
-        n.try_send(1_000_000, Direction::Up); // 1.01 s
-        n.try_send(500_000, Direction::Up); // 0.51 s
+        n.try_send(1_000_000, Direction::Up, 0, 0); // 1.01 s
+        n.try_send(500_000, Direction::Up, 0, 1); // 0.51 s
         n.end_round();
         assert!((n.stats().sim_comm_seconds - 1.01).abs() < 1e-9);
     }
@@ -167,9 +195,11 @@ mod tests {
     fn drop_rate_matches_probability() {
         let mut n = net(0.3);
         let mut dropped = 0;
-        for _ in 0..10_000 {
-            if !n.try_send(10, Direction::Up) {
-                dropped += 1;
+        for round in 0..1000 {
+            for worker in 0..10 {
+                if !n.try_send(10, Direction::Up, round, worker) {
+                    dropped += 1;
+                }
             }
         }
         let rate = dropped as f64 / 10_000.0;
@@ -180,9 +210,56 @@ mod tests {
     #[test]
     fn dropped_messages_are_not_billed() {
         let mut n = net(1.0);
-        assert!(!n.try_send(100, Direction::Up));
+        assert!(!n.try_send(100, Direction::Up, 0, 0));
         assert_eq!(n.stats().bytes_up, 0);
         n.end_round();
         assert_eq!(n.stats().sim_comm_seconds, 0.0);
+    }
+
+    #[test]
+    fn keyed_drops_are_order_independent() {
+        // The same (seed, round, worker) keys must give the same per-key
+        // outcome whatever order uploads land in — the contract that lets
+        // parallel islands share one fabric.
+        let keys: Vec<(usize, usize)> =
+            (0..16).flat_map(|r| (0..8).map(move |w| (r, w))).collect();
+        let mut reversed = keys.clone();
+        reversed.reverse();
+        let mut shuffled = keys.clone();
+        Rng::new(99).shuffle(&mut shuffled);
+
+        let outcomes = |order: &[(usize, usize)]| {
+            let mut n = net(0.5);
+            let mut out: Vec<((usize, usize), bool)> = order
+                .iter()
+                .map(|&(r, w)| ((r, w), n.try_send(10, Direction::Up, r, w)))
+                .collect();
+            out.sort();
+            (out, n.stats().dropped)
+        };
+        let (a, da) = outcomes(&keys);
+        let (b, db) = outcomes(&reversed);
+        let (c, dc) = outcomes(&shuffled);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        assert_eq!(da, db);
+        assert_eq!(da, dc);
+        // And the pure predicate agrees with what try_send did.
+        let n = net(0.5);
+        for ((r, w), sent) in &a {
+            assert_eq!(n.drops(*r, *w), !sent);
+        }
+        // Sanity: a 50% fabric over 128 keys both drops and delivers.
+        assert!(da > 0 && (da as usize) < keys.len());
+    }
+
+    #[test]
+    fn keyed_drops_vary_across_keys_and_seeds() {
+        let n = net(0.5);
+        let per_key: Vec<bool> = (0..64).map(|w| n.drops(0, w)).collect();
+        assert!(per_key.iter().any(|&d| d) && per_key.iter().any(|&d| !d));
+        let other = SimNet::new(1e6, 0.01, 0.5, Rng::new(12345));
+        let differs = (0..64).any(|w| n.drops(0, w) != other.drops(0, w));
+        assert!(differs, "drop pattern must depend on the fabric seed");
     }
 }

@@ -41,6 +41,75 @@ impl OuterOptConfig {
     }
 }
 
+/// Which [`crate::engine::InnerPhaseExecutor`] runs the islands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineConfig {
+    /// Parallel when the run can have ≥ 2 concurrent workers, sequential
+    /// otherwise (the default).
+    Auto,
+    /// Islands run back-to-back on one thread (reference path).
+    Sequential,
+    /// Islands run on real OS threads; `threads` caps the pool
+    /// (0 = one per available core).
+    Parallel { threads: usize },
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig::Auto
+    }
+}
+
+impl EngineConfig {
+    /// Build the executor for a run whose worker pool peaks at `max_k`.
+    pub fn build(&self, max_k: usize) -> Box<dyn crate::engine::InnerPhaseExecutor> {
+        match self {
+            EngineConfig::Sequential => Box::new(crate::engine::Sequential),
+            EngineConfig::Parallel { threads } => {
+                Box::new(crate::engine::ParallelIslands::new(*threads))
+            }
+            EngineConfig::Auto => {
+                if max_k >= 2 {
+                    Box::new(crate::engine::ParallelIslands::new(0))
+                } else {
+                    Box::new(crate::engine::Sequential)
+                }
+            }
+        }
+    }
+
+    /// Parse `auto` / `sequential` / `parallel` / `parallel:N`.
+    pub fn parse(s: &str) -> anyhow::Result<EngineConfig> {
+        match s {
+            "auto" => Ok(EngineConfig::Auto),
+            "sequential" | "seq" => Ok(EngineConfig::Sequential),
+            "parallel" => Ok(EngineConfig::Parallel { threads: 0 }),
+            other => {
+                if let Some(n) = other.strip_prefix("parallel:") {
+                    let threads = n
+                        .trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad engine thread count {n:?}: {e}"))?;
+                    Ok(EngineConfig::Parallel { threads })
+                } else {
+                    anyhow::bail!(
+                        "unknown engine {other:?} (want auto|sequential|parallel[:N])"
+                    )
+                }
+            }
+        }
+    }
+
+    /// Injectable env override (`ENGINE=sequential` etc.) — pure function
+    /// of its argument so tests never mutate process env.
+    pub fn from_env_var(v: Option<&str>) -> anyhow::Result<EngineConfig> {
+        match v {
+            None => Ok(EngineConfig::Auto),
+            Some(s) => EngineConfig::parse(s),
+        }
+    }
+}
+
 /// How many workers are active each round (paper Fig. 7 schedules).
 #[derive(Clone, Debug, PartialEq)]
 pub enum ComputeSchedule {
@@ -170,6 +239,8 @@ pub struct ExperimentConfig {
     pub sync_inner_opt: bool,
     pub data: DataConfig,
     pub comm: CommConfig,
+    /// Inner-phase executor (sequential reference vs parallel islands).
+    pub engine: EngineConfig,
     /// Evaluate every this many rounds (0 = only at end).
     pub eval_every_rounds: usize,
     /// Validation batches per evaluation.
@@ -194,6 +265,7 @@ impl ExperimentConfig {
             sync_inner_opt: false,
             data: DataConfig::default(),
             comm: CommConfig::default(),
+            engine: EngineConfig::Auto,
             eval_every_rounds: 1,
             eval_batches: 4,
         }
@@ -254,6 +326,23 @@ impl ExperimentConfig {
             doc.f64_or("comm.bandwidth_bps", cfg.comm.bandwidth_bps)?;
         cfg.comm.latency_s = doc.f64_or("comm.latency_s", cfg.comm.latency_s)?;
         cfg.comm.drop_prob = doc.f64_or("comm.drop_prob", cfg.comm.drop_prob)?;
+
+        let engine = doc.str_or("engine.kind", "auto")?;
+        cfg.engine = EngineConfig::parse(&engine)?;
+        let threads = doc.usize_or("engine.threads", 0)?;
+        if threads > 0 {
+            cfg.engine = match cfg.engine {
+                EngineConfig::Sequential => anyhow::bail!(
+                    "engine.threads conflicts with engine.kind = \"sequential\""
+                ),
+                EngineConfig::Parallel { threads: t } if t != 0 && t != threads => {
+                    anyhow::bail!(
+                        "engine.threads = {threads} conflicts with engine.kind = {engine:?}"
+                    )
+                }
+                _ => EngineConfig::Parallel { threads },
+            };
+        }
 
         cfg.eval_every_rounds =
             doc.usize_or("eval.every_rounds", cfg.eval_every_rounds)?;
@@ -383,6 +472,78 @@ mod tests {
     #[test]
     fn from_toml_rejects_unknown_opt() {
         let doc = TomlDoc::parse("[outer_opt]\nkind = \"lion\"").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn engine_parse_language() {
+        assert_eq!(EngineConfig::parse("auto").unwrap(), EngineConfig::Auto);
+        assert_eq!(
+            EngineConfig::parse("sequential").unwrap(),
+            EngineConfig::Sequential
+        );
+        assert_eq!(
+            EngineConfig::parse("parallel").unwrap(),
+            EngineConfig::Parallel { threads: 0 }
+        );
+        assert_eq!(
+            EngineConfig::parse("parallel:4").unwrap(),
+            EngineConfig::Parallel { threads: 4 }
+        );
+        assert!(EngineConfig::parse("gpu").is_err());
+        assert!(EngineConfig::parse("parallel:x").is_err());
+    }
+
+    #[test]
+    fn engine_env_override_is_pure() {
+        assert_eq!(
+            EngineConfig::from_env_var(None).unwrap(),
+            EngineConfig::Auto
+        );
+        assert_eq!(
+            EngineConfig::from_env_var(Some("sequential")).unwrap(),
+            EngineConfig::Sequential
+        );
+        assert!(EngineConfig::from_env_var(Some("bogus")).is_err());
+    }
+
+    #[test]
+    fn engine_auto_builds_by_worker_count() {
+        use crate::engine::InnerPhaseExecutor as _;
+        assert_eq!(EngineConfig::Auto.build(1).name(), "sequential");
+        assert_eq!(EngineConfig::Auto.build(4).name(), "parallel");
+        assert_eq!(EngineConfig::Sequential.build(8).name(), "sequential");
+        assert_eq!(
+            EngineConfig::Parallel { threads: 2 }.build(1).name(),
+            "parallel"
+        );
+    }
+
+    #[test]
+    fn from_toml_engine_knob() {
+        let doc = TomlDoc::parse("[engine]\nkind = \"parallel\"\nthreads = 3").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.engine, EngineConfig::Parallel { threads: 3 });
+        let doc = TomlDoc::parse("[engine]\nkind = \"sequential\"").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.engine, EngineConfig::Sequential);
+        // Bare threads cap implies the parallel engine.
+        let doc = TomlDoc::parse("[engine]\nthreads = 2").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.engine, EngineConfig::Parallel { threads: 2 });
+        // Matching redundant specs are fine.
+        let doc = TomlDoc::parse("[engine]\nkind = \"parallel:2\"\nthreads = 2").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.engine, EngineConfig::Parallel { threads: 2 });
+    }
+
+    #[test]
+    fn from_toml_engine_conflicts_rejected() {
+        // Same contradictions the CLI rejects must fail here too, not
+        // silently pick a winner.
+        let doc = TomlDoc::parse("[engine]\nkind = \"sequential\"\nthreads = 4").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[engine]\nkind = \"parallel:8\"\nthreads = 2").unwrap();
         assert!(ExperimentConfig::from_toml(&doc).is_err());
     }
 }

@@ -15,8 +15,9 @@
 
 use crate::comm::{Direction, SimNet};
 use crate::coordinator::Coordinator;
+use crate::engine::{InnerPhaseExecutor as _, IslandOutput, IslandTask};
 use crate::metrics::{RunMetrics, Stopwatch};
-use crate::runtime::{Tensors, ValueView};
+use crate::runtime::{Runtime, Tensors, ValueView};
 use crate::util::math;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -75,33 +76,56 @@ pub fn run_big_batch(
 
     let eval_interval = (cfg.inner_steps * cfg.eval_every_rounds.max(1)).max(1);
     for s in 0..steps {
-        // Gradient phase across the k (simulated) replicas.
+        // Gradient phase across the k (simulated) replicas, dispatched
+        // through the coordinator's engine: each replica is one island
+        // task returning its gradients as the payload; the fold below
+        // runs in replica order, so the averaged gradient is identical
+        // under sequential and parallel execution.
+        let params_ref = &params;
+        let rt_ref: &Runtime = rt;
+        let tasks: Vec<IslandTask<'_>> = iters
+            .iter_mut()
+            .map(|it| {
+                Box::new(move || -> anyhow::Result<IslandOutput> {
+                    // wall_s includes batch prep (same convention as the
+                    // DiLoCo inner phase); compute_s is PJRT-only.
+                    let t0 = std::time::Instant::now();
+                    let batch = it.next_batch();
+                    let mut inputs = params_ref.to_views();
+                    inputs.push(ValueView::I32(&batch.tokens));
+                    inputs.push(ValueView::I32(&batch.targets));
+                    let t_exec = std::time::Instant::now();
+                    let mut out = rt_ref.execute_views("grad_step", &inputs)?;
+                    let dt = t_exec.elapsed().as_secs_f64();
+                    let loss = out.pop().unwrap().scalar_f32()?;
+                    let grads = Tensors::from_values(&rt_ref.manifest, out)?;
+                    Ok(IslandOutput {
+                        losses: vec![loss],
+                        compute_s: dt,
+                        wall_s: t0.elapsed().as_secs_f64(),
+                        payload: Some(grads),
+                    })
+                }) as IslandTask<'_>
+            })
+            .collect();
+        let outs = coord.engine().run_islands(tasks)?;
+
         let mut grad_sum: Option<Tensors> = None;
         let mut losses = Vec::with_capacity(k);
         let mut slowest = 0.0f64;
         let mut serial = 0.0f64;
-        for it in iters.iter_mut() {
-            let batch = it.next_batch();
-            let mut inputs = params.to_views();
-            inputs.push(ValueView::I32(&batch.tokens));
-            inputs.push(ValueView::I32(&batch.targets));
-            let t0 = std::time::Instant::now();
-            let mut out = {
-                let _t = Stopwatch::new(&mut metrics.phases.inner_compute_s);
-                rt.execute_views("grad_step", &inputs)?
-            };
-            let dt = t0.elapsed().as_secs_f64();
-            slowest = slowest.max(dt);
-            serial += dt;
-            let loss = out.pop().unwrap().scalar_f32()?;
-            losses.push(loss as f64);
-            let grads = Tensors::from_values(&rt.manifest, out)?;
+        for (replica, out) in outs.into_iter().enumerate() {
+            slowest = slowest.max(out.compute_s);
+            serial += out.compute_s;
+            metrics.phases.inner_compute_s += out.wall_s;
+            losses.push(out.losses[0] as f64);
+            let grads = out.payload.expect("grad task returns gradients");
             match &mut grad_sum {
                 None => grad_sum = Some(grads),
                 Some(acc) => acc.axpy(1.0, &grads),
             }
             if mode == BigBatchMode::DataParallel && k > 1 {
-                net.try_send(payload, Direction::Up);
+                net.try_send(payload, Direction::Up, s, replica);
             }
         }
         let mut grads = grad_sum.expect("k >= 1");
@@ -156,14 +180,14 @@ mod tests {
     use super::*;
     use crate::config::ExperimentConfig;
     use crate::runtime::Runtime;
-    use std::rc::Rc;
+    use std::sync::Arc;
 
     fn setup() -> Option<(Coordinator, Tensors)> {
         let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
         if !std::path::Path::new(dir).join("nano.manifest.json").exists() {
             return None;
         }
-        let rt = Rc::new(Runtime::load(dir, "nano").unwrap());
+        let rt = Arc::new(Runtime::load(dir, "nano").unwrap());
         let mut cfg = ExperimentConfig::paper_default(dir, "nano");
         cfg.data.n_docs = 60;
         cfg.data.doc_len = 120;

@@ -5,7 +5,10 @@
 //! starts from `pretrain_steps` of plain training (paper Fig 3), then
 //! executes T outer rounds. Each round: the schedule (Fig 7) picks the
 //! active workers; each active worker runs H inner AdamW steps through the
-//! AOT artifacts; outer gradients are optionally sign-pruned (Table 6),
+//! AOT artifacts — dispatched through the configured [`crate::engine`]
+//! executor, so islands run on real OS threads under `ParallelIslands`
+//! with bitwise-identical results to the sequential reference path (see
+//! DESIGN.md §determinism); outer gradients are optionally sign-pruned (Table 6),
 //! shipped over the simulated fabric with drop injection (Fig 8),
 //! weighted-averaged (§6.1), and applied by the outer optimizer (Fig 6).
 //! Fresh parameters are re-dispatched to every worker that communicated;
@@ -22,11 +25,12 @@ use crate::comm::{Direction, SimNet};
 use crate::config::ExperimentConfig;
 use crate::data::batch::{BatchIter, EvalSet};
 use crate::data::Dataset;
+use crate::engine::{self, InnerPhaseExecutor};
 use crate::metrics::{EvalPoint, RunMetrics, Stopwatch};
 use crate::runtime::{Runtime, Tensors};
 use crate::util::math;
 use crate::worker::Worker;
-use std::rc::Rc;
+use std::sync::Arc;
 
 pub use stats::RoundStats;
 
@@ -41,16 +45,19 @@ pub struct DilocoReport {
 
 pub struct Coordinator {
     pub cfg: ExperimentConfig,
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     pub dataset: Dataset,
     evalset: EvalSet,
+    /// Inner-phase executor (built once from `cfg.engine` against the
+    /// run's peak worker count).
+    exec: Box<dyn InnerPhaseExecutor>,
 }
 
 impl Coordinator {
     /// Build the data pipeline for `cfg` against an already-loaded runtime
     /// (runtimes are reused across bench variants — compilation is paid
     /// once per artifact set).
-    pub fn new(cfg: ExperimentConfig, rt: Rc<Runtime>) -> anyhow::Result<Coordinator> {
+    pub fn new(cfg: ExperimentConfig, rt: Arc<Runtime>) -> anyhow::Result<Coordinator> {
         let mcfg = &rt.manifest.config;
         anyhow::ensure!(
             mcfg.name == cfg.model,
@@ -66,11 +73,17 @@ impl Coordinator {
             mcfg.seq_len,
             cfg.eval_batches,
         );
-        Ok(Coordinator { cfg, rt, dataset, evalset })
+        let exec = cfg.engine.build(max_k);
+        Ok(Coordinator { cfg, rt, dataset, evalset, exec })
     }
 
-    pub fn runtime(&self) -> &Rc<Runtime> {
+    pub fn runtime(&self) -> &Arc<Runtime> {
         &self.rt
+    }
+
+    /// The executor island phases dispatch through.
+    pub fn engine(&self) -> &dyn InnerPhaseExecutor {
+        self.exec.as_ref()
     }
 
     /// Mean nll / PPL of `params` on the fixed validation windows.
@@ -122,10 +135,16 @@ impl Coordinator {
         let mut done = 0usize;
         while done < steps {
             let h = (steps - done).min(self.cfg.inner_steps.max(1));
-            {
-                let _t = Stopwatch::new(&mut metrics.phases.inner_compute_s);
-                worker.run_inner_steps(&self.rt, h, &mut metrics.loss_curve)?;
-            }
+            let phase = engine::run_inner_phase(
+                self.exec.as_ref(),
+                &self.rt,
+                std::slice::from_mut(&mut worker),
+                h,
+            )?;
+            metrics.phases.inner_compute_s += phase.total_wall_s();
+            metrics
+                .loss_curve
+                .extend_from_slice(&phase.per_worker_losses[0]);
             done += h;
             let at_boundary = eval_every > 0
                 && (done / self.cfg.inner_steps.max(1))
@@ -233,24 +252,16 @@ impl Coordinator {
                 starts.push(w.params.clone());
             }
 
-            // Inner phase: H steps per active worker, losses averaged
-            // across workers per step index (islands run in parallel).
-            let mut per_worker_losses: Vec<Vec<f32>> = Vec::with_capacity(k_t);
-            let mut round_compute = 0.0f64;
-            for w in active.iter_mut() {
-                let before = w.compute_seconds;
-                let mut losses = Vec::with_capacity(cfg.inner_steps);
-                {
-                    let _t = Stopwatch::new(&mut metrics.phases.inner_compute_s);
-                    w.run_inner_steps(&self.rt, cfg.inner_steps, &mut losses)?;
-                }
-                round_compute = round_compute.max(w.compute_seconds - before);
-                per_worker_losses.push(losses);
-            }
-            metrics.sim_compute_seconds += round_compute;
+            // Inner phase: H steps per active worker, dispatched through
+            // the engine (real threads under ParallelIslands). Losses are
+            // averaged across workers per step index, folding in worker
+            // order regardless of which island finished first.
+            let phase =
+                engine::run_inner_phase(self.exec.as_ref(), &self.rt, active, cfg.inner_steps)?;
+            metrics.sim_compute_seconds += phase.max_compute_s();
+            metrics.phases.inner_compute_s += phase.total_wall_s();
             for s in 0..cfg.inner_steps {
-                let avg = per_worker_losses.iter().map(|l| l[s]).sum::<f32>()
-                    / k_t as f32;
+                let avg = phase.per_worker_losses.iter().map(|l| l[s]).sum::<f32>() / k_t as f32;
                 metrics.loss_curve.push(avg);
             }
 
@@ -268,11 +279,13 @@ impl Coordinator {
                     payload
                 };
                 // k=1 "accelerating a single worker" (Fig 9): the outer
-                // step is local, nothing crosses the fabric.
+                // step is local, nothing crosses the fabric. Uploads are
+                // keyed by (round, worker) so drop outcomes don't depend
+                // on arrival order.
                 let ok = if k_t == 1 {
                     true
                 } else {
-                    net.try_send(bytes, Direction::Up)
+                    net.try_send(bytes, Direction::Up, t, w.id)
                 };
                 if ok {
                     uploaded[i] = true;
@@ -346,12 +359,12 @@ mod tests {
     use super::*;
     use crate::config::{ComputeSchedule, OuterOptConfig};
 
-    fn runtime() -> Option<Rc<Runtime>> {
+    fn runtime() -> Option<Arc<Runtime>> {
         let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
         std::path::Path::new(dir)
             .join("nano.manifest.json")
             .exists()
-            .then(|| Rc::new(Runtime::load(dir, "nano").unwrap()))
+            .then(|| Arc::new(Runtime::load(dir, "nano").unwrap()))
     }
 
     fn fast_cfg() -> ExperimentConfig {

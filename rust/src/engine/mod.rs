@@ -1,0 +1,338 @@
+//! Inner-phase execution engine — how island work actually runs.
+//!
+//! DiLoCo's premise is k islands training *concurrently* between rare
+//! synchronizations, but execution strategy is a deployment concern, not
+//! an algorithm concern. This module separates the two: the coordinator
+//! describes a phase as one independent task per island, and an
+//! [`InnerPhaseExecutor`] decides how those tasks map onto OS threads.
+//!
+//! Two implementations ship:
+//!
+//! * [`Sequential`] — the reference path: tasks run back-to-back on the
+//!   calling thread, exactly like the pre-engine coordinator loop.
+//! * [`ParallelIslands`] — tasks run under [`std::thread::scope`] with a
+//!   configurable thread cap; islands execute truly concurrently against
+//!   the shared (`Sync`) [`Runtime`].
+//!
+//! **Determinism contract:** outputs are returned in *island order*
+//! (task i of the input vector is output i), never completion order, so
+//! every downstream reduction — loss averaging, gradient sums, comm
+//! billing — folds in the same order under either executor. Island tasks
+//! are data-independent (each owns its worker's state and batch stream),
+//! so the two executors produce bitwise-identical results; the
+//! `parallel_matches_sequential_bitwise` integration test enforces this.
+//!
+//! Timing is likewise accumulated *locally* per island and reduced
+//! deterministically by the caller: `max` over islands models simulated
+//! wall-clock (islands overlap), `sum` models total CPU-seconds burned.
+
+use crate::runtime::Runtime;
+use crate::worker::Worker;
+use std::time::Instant;
+
+/// What one island task reports back.
+pub struct IslandOutput {
+    /// Per-step losses, in step order.
+    pub losses: Vec<f32>,
+    /// Seconds spent inside PJRT executions (per-island compute).
+    pub compute_s: f64,
+    /// End-to-end wall seconds of the task (compute + batch prep).
+    pub wall_s: f64,
+    /// Optional task result (e.g. the DP baseline's gradient tensors).
+    pub payload: Option<crate::runtime::Tensors>,
+}
+
+/// One island's unit of work. Boxed so heterogeneous phases (inner
+/// steps, gradient computation) share one executor.
+pub type IslandTask<'env> =
+    Box<dyn FnOnce() -> anyhow::Result<IslandOutput> + Send + 'env>;
+
+/// Strategy for running one phase of independent island tasks.
+pub trait InnerPhaseExecutor: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Run every task; outputs come back in island order. The first
+    /// failing island (again in island order, not completion order)
+    /// aborts the phase.
+    fn run_islands<'env>(
+        &self,
+        tasks: Vec<IslandTask<'env>>,
+    ) -> anyhow::Result<Vec<IslandOutput>>;
+}
+
+/// Reference executor: islands run back-to-back on the calling thread.
+pub struct Sequential;
+
+impl InnerPhaseExecutor for Sequential {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn run_islands<'env>(
+        &self,
+        tasks: Vec<IslandTask<'env>>,
+    ) -> anyhow::Result<Vec<IslandOutput>> {
+        tasks.into_iter().map(|t| t()).collect()
+    }
+}
+
+/// Parallel executor: islands run on real OS threads (capped), mirroring
+/// the paper's k-islands-in-parallel wall-clock model.
+pub struct ParallelIslands {
+    /// Maximum worker threads; 0 = one per available core.
+    pub max_threads: usize,
+}
+
+impl ParallelIslands {
+    pub fn new(max_threads: usize) -> ParallelIslands {
+        ParallelIslands { max_threads }
+    }
+
+    /// Threads actually used for a phase of `n_tasks` islands.
+    pub fn resolved_threads(&self, n_tasks: usize) -> usize {
+        let cap = if self.max_threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            self.max_threads
+        };
+        cap.min(n_tasks).max(1)
+    }
+}
+
+impl InnerPhaseExecutor for ParallelIslands {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn run_islands<'env>(
+        &self,
+        mut tasks: Vec<IslandTask<'env>>,
+    ) -> anyhow::Result<Vec<IslandOutput>> {
+        let n = tasks.len();
+        let threads = self.resolved_threads(n);
+        if n <= 1 || threads == 1 {
+            return Sequential.run_islands(tasks);
+        }
+
+        // Contiguous chunks of islands per thread; each thread writes into
+        // its own disjoint slice of result slots, so no locks and no
+        // completion-order dependence anywhere.
+        let chunk = n.div_ceil(threads);
+        let mut slots: Vec<Option<anyhow::Result<IslandOutput>>> =
+            (0..n).map(|_| None).collect();
+        let mut task_groups: Vec<Vec<IslandTask<'env>>> = Vec::new();
+        while !tasks.is_empty() {
+            let rest = tasks.split_off(tasks.len().min(chunk));
+            task_groups.push(std::mem::replace(&mut tasks, rest));
+        }
+        std::thread::scope(|s| {
+            for (group, out) in task_groups.into_iter().zip(slots.chunks_mut(chunk)) {
+                s.spawn(move || {
+                    for (task, slot) in group.into_iter().zip(out.iter_mut()) {
+                        *slot = Some(task());
+                    }
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|r| r.expect("island thread filled its slot"))
+            .collect()
+    }
+}
+
+/// Deterministic reduction of one finished inner phase.
+pub struct InnerPhaseReport {
+    /// Per-worker loss traces, in worker order.
+    pub per_worker_losses: Vec<Vec<f32>>,
+    per_worker_compute_s: Vec<f64>,
+    per_worker_wall_s: Vec<f64>,
+}
+
+impl InnerPhaseReport {
+    /// Slowest island's PJRT compute — the simulated wall-clock cost of
+    /// the phase (islands overlap).
+    pub fn max_compute_s(&self) -> f64 {
+        self.per_worker_compute_s.iter().fold(0.0, |a, &x| a.max(x))
+    }
+
+    /// Total CPU-seconds across islands — the phase's entry in
+    /// `phases.inner_compute_s` (a work counter, not wall time: under
+    /// the parallel engine it exceeds elapsed time by design).
+    pub fn total_wall_s(&self) -> f64 {
+        self.per_worker_wall_s.iter().sum()
+    }
+}
+
+/// Run `h` inner steps on every worker through `exec`, reducing timing
+/// in worker order. This is the coordinator's single entry point into
+/// the engine for DiLoCo rounds and plain training alike.
+pub fn run_inner_phase(
+    exec: &dyn InnerPhaseExecutor,
+    rt: &Runtime,
+    workers: &mut [Worker],
+    h: usize,
+) -> anyhow::Result<InnerPhaseReport> {
+    let tasks: Vec<IslandTask<'_>> = workers
+        .iter_mut()
+        .map(|w| {
+            Box::new(move || -> anyhow::Result<IslandOutput> {
+                let before = w.compute_seconds;
+                let t0 = Instant::now();
+                let mut losses = Vec::with_capacity(h);
+                w.run_inner_steps(rt, h, &mut losses)?;
+                Ok(IslandOutput {
+                    losses,
+                    compute_s: w.compute_seconds - before,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                    payload: None,
+                })
+            }) as IslandTask<'_>
+        })
+        .collect();
+    let outs = exec.run_islands(tasks)?;
+    let mut report = InnerPhaseReport {
+        per_worker_losses: Vec::with_capacity(outs.len()),
+        per_worker_compute_s: Vec::with_capacity(outs.len()),
+        per_worker_wall_s: Vec::with_capacity(outs.len()),
+    };
+    for o in outs {
+        report.per_worker_losses.push(o.losses);
+        report.per_worker_compute_s.push(o.compute_s);
+        report.per_worker_wall_s.push(o.wall_s);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn counting_tasks(
+        n: usize,
+        started: &AtomicUsize,
+    ) -> Vec<IslandTask<'_>> {
+        (0..n)
+            .map(|i| {
+                Box::new(move || -> anyhow::Result<IslandOutput> {
+                    started.fetch_add(1, Ordering::SeqCst);
+                    Ok(IslandOutput {
+                        losses: vec![i as f32],
+                        compute_s: i as f64,
+                        wall_s: 1.0,
+                        payload: None,
+                    })
+                }) as IslandTask<'_>
+            })
+            .collect()
+    }
+
+    fn check_island_order(exec: &dyn InnerPhaseExecutor, n: usize) {
+        let started = AtomicUsize::new(0);
+        let outs = exec.run_islands(counting_tasks(n, &started)).unwrap();
+        assert_eq!(started.load(Ordering::SeqCst), n);
+        assert_eq!(outs.len(), n);
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.losses, vec![i as f32], "output {i} out of island order");
+        }
+    }
+
+    #[test]
+    fn sequential_preserves_island_order() {
+        check_island_order(&Sequential, 7);
+    }
+
+    #[test]
+    fn parallel_preserves_island_order() {
+        // More islands than threads → chunking must still land outputs in
+        // island order; also the degenerate 1-thread and 1-task cases.
+        for threads in [0, 1, 2, 3, 16] {
+            let exec = ParallelIslands::new(threads);
+            check_island_order(&exec, 7);
+            check_island_order(&exec, 1);
+        }
+    }
+
+    #[test]
+    fn parallel_actually_uses_threads() {
+        // Two tasks that can only finish if they overlap in time: each
+        // waits for the other to start.
+        use std::sync::Barrier;
+        let barrier = Barrier::new(2);
+        let b = &barrier;
+        let tasks: Vec<IslandTask<'_>> = (0..2)
+            .map(|i| {
+                Box::new(move || -> anyhow::Result<IslandOutput> {
+                    b.wait();
+                    Ok(IslandOutput {
+                        losses: vec![i as f32],
+                        compute_s: 0.0,
+                        wall_s: 0.0,
+                        payload: None,
+                    })
+                }) as IslandTask<'_>
+            })
+            .collect();
+        let outs = ParallelIslands::new(2).run_islands(tasks).unwrap();
+        assert_eq!(outs.len(), 2);
+    }
+
+    #[test]
+    fn first_error_in_island_order_wins() {
+        fn failing_tasks() -> Vec<IslandTask<'static>> {
+            (0..4)
+                .map(|i| {
+                    Box::new(move || -> anyhow::Result<IslandOutput> {
+                        if i % 2 == 1 {
+                            anyhow::bail!("island {i} failed")
+                        }
+                        Ok(IslandOutput {
+                            losses: vec![],
+                            compute_s: 0.0,
+                            wall_s: 0.0,
+                            payload: None,
+                        })
+                    }) as IslandTask<'static>
+                })
+                .collect()
+        }
+        for exec in [&ParallelIslands::new(4) as &dyn InnerPhaseExecutor, &Sequential] {
+            let err = exec.run_islands(failing_tasks()).unwrap_err();
+            assert!(
+                err.to_string().contains("island 1"),
+                "{}: wrong island won: {err}",
+                exec.name()
+            );
+        }
+    }
+
+    #[test]
+    fn report_reductions_are_max_and_sum() {
+        let outs = vec![
+            IslandOutput { losses: vec![1.0], compute_s: 2.0, wall_s: 3.0, payload: None },
+            IslandOutput { losses: vec![2.0], compute_s: 5.0, wall_s: 4.0, payload: None },
+        ];
+        let mut report = InnerPhaseReport {
+            per_worker_losses: Vec::new(),
+            per_worker_compute_s: Vec::new(),
+            per_worker_wall_s: Vec::new(),
+        };
+        for o in outs {
+            report.per_worker_losses.push(o.losses);
+            report.per_worker_compute_s.push(o.compute_s);
+            report.per_worker_wall_s.push(o.wall_s);
+        }
+        assert_eq!(report.max_compute_s(), 5.0);
+        assert_eq!(report.total_wall_s(), 7.0);
+    }
+
+    #[test]
+    fn thread_cap_resolution() {
+        assert_eq!(ParallelIslands::new(3).resolved_threads(8), 3);
+        assert_eq!(ParallelIslands::new(16).resolved_threads(2), 2);
+        assert!(ParallelIslands::new(0).resolved_threads(64) >= 1);
+    }
+}

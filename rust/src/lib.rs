@@ -6,9 +6,11 @@
 //! Architecture (see `DESIGN.md`):
 //!
 //! * **Layer 3 (this crate)** — the paper's coordination contribution:
-//!   round orchestration ([`coordinator`]), outer optimizers
-//!   ([`coordinator::opt`]), the simulated wide-area fabric ([`comm`]),
-//!   data sharding ([`data`]), metrics, checkpoints, config and CLI.
+//!   round orchestration ([`coordinator`]), the island execution engine
+//!   ([`engine`] — sequential reference path or truly parallel OS
+//!   threads, bitwise-identical), outer optimizers ([`coordinator::opt`]),
+//!   the simulated wide-area fabric ([`comm`]), data sharding ([`data`]),
+//!   metrics, checkpoints, config and CLI.
 //! * **Layer 2/1 (build-time python, never on the training path)** — the
 //!   transformer fwd/bwd + fused AdamW and the Pallas kernels, lowered
 //!   once by `python/compile/aot.py` into `artifacts/*.hlo.txt` which
@@ -24,6 +26,7 @@ pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod metrics;
 pub mod runtime;
 pub mod util;

@@ -12,11 +12,12 @@
 //!   diloco data --topics 8 --docs 400 --workers 8 --non-iid
 
 use diloco::config::toml::TomlDoc;
-use diloco::config::ExperimentConfig;
+use diloco::config::{EngineConfig, ExperimentConfig};
 use diloco::coordinator::Coordinator;
 use diloco::data::Dataset;
+use diloco::engine::InnerPhaseExecutor as _;
 use diloco::runtime::Runtime;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Minimal flag parser: `--key value` and `--flag` booleans.
 struct Args {
@@ -80,6 +81,7 @@ fn print_help() {
         "diloco — Distributed Low-Communication training (DiLoCo)\n\n\
          USAGE: diloco <train|eval|data|inspect> [--flags]\n\n\
          train   --config <exp.toml> [--out runs/] [--ckpt out.ckpt]\n\
+         \x20       [--engine auto|sequential|parallel] [--threads N]\n\
          eval    --ckpt <file> [--artifacts artifacts] [--model nano]\n\
          data    [--topics 8] [--docs 400] [--workers 8] [--non-iid] [--seed 0]\n\
          inspect [--artifacts artifacts] [--model nano]"
@@ -87,24 +89,42 @@ fn print_help() {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let cfg = match args.get("config") {
+    let mut cfg = match args.get("config") {
         Some(path) => ExperimentConfig::from_toml(&TomlDoc::load(path)?)?,
         None => {
             eprintln!("no --config given; using built-in nano defaults");
             ExperimentConfig::paper_default(&args.get_or("artifacts", "artifacts"), "nano")
         }
     };
+    if let Some(engine) = args.get("engine") {
+        cfg.engine = EngineConfig::parse(engine)?;
+    }
+    if let Some(threads) = args.get("threads") {
+        let threads: usize = threads
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --threads {threads:?}: {e}"))?;
+        cfg.engine = match cfg.engine {
+            EngineConfig::Sequential => {
+                anyhow::bail!("--threads conflicts with --engine sequential")
+            }
+            EngineConfig::Parallel { threads: t } if t != 0 && t != threads => {
+                anyhow::bail!("--threads {threads} conflicts with --engine parallel:{t}")
+            }
+            _ => EngineConfig::Parallel { threads },
+        };
+    }
     println!(
-        "DiLoCo: model={} k={} H={} T={} pretrain={} outer={} non_iid={}",
+        "DiLoCo: model={} k={} H={} T={} pretrain={} outer={} non_iid={} engine={:?}",
         cfg.model,
         cfg.workers,
         cfg.inner_steps,
         cfg.rounds,
         cfg.pretrain_steps,
         cfg.outer_opt.name(),
-        cfg.data.non_iid
+        cfg.data.non_iid,
+        cfg.engine
     );
-    let rt = Rc::new(Runtime::load(&cfg.artifacts_dir, &cfg.model)?);
+    let rt = Arc::new(Runtime::load(&cfg.artifacts_dir, &cfg.model)?);
     println!(
         "artifacts: {} params, kernels={}, {} artifacts compiled lazily",
         rt.manifest.config.param_count,
@@ -112,6 +132,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         rt.manifest.artifacts.len()
     );
     let coord = Coordinator::new(cfg, rt)?;
+    println!("engine: {}", coord.engine().name());
     let report = coord.run()?;
 
     let m = &report.metrics;
@@ -149,7 +170,7 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     let ckpt = args
         .get("ckpt")
         .ok_or_else(|| anyhow::anyhow!("--ckpt required"))?;
-    let rt = Rc::new(Runtime::load(&dir, &model)?);
+    let rt = Arc::new(Runtime::load(&dir, &model)?);
     let params = diloco::checkpoint::load(ckpt, &rt.manifest)?;
     let mut cfg = ExperimentConfig::paper_default(&dir, &model);
     cfg.seed = args.get_or("seed", "0").parse()?;

@@ -20,6 +20,15 @@ pub struct EvalPoint {
 }
 
 /// Wall-clock phase accounting (real seconds on this host).
+///
+/// Single-threaded phases (outer opt, eval) are timed with [`Stopwatch`]
+/// on the coordinator thread. The inner phase is different: under the
+/// parallel engine every island accumulates its own seconds locally and
+/// the engine reduces them deterministically in worker order —
+/// `inner_compute_s` is the *sum* across islands (total CPU-seconds of
+/// useful work; exceeds elapsed time when islands overlap), while the
+/// per-round *max* feeds `RunMetrics::sim_compute_seconds` (islands run
+/// concurrently, so simulated wall-clock is the slowest island).
 #[derive(Clone, Debug, Default)]
 pub struct PhaseTimes {
     pub inner_compute_s: f64,
@@ -139,6 +148,11 @@ impl RunMetrics {
 }
 
 /// Scoped wall-clock timer: `let _t = Stopwatch::new(&mut acc);`.
+///
+/// Borrows the accumulator `&mut`, so it is inherently single-threaded —
+/// use it for coordinator-thread phases only. Island threads must not
+/// share one accumulator; they time locally and the engine reduces
+/// (see [`PhaseTimes`]).
 pub struct Stopwatch<'a> {
     start: Instant,
     acc: &'a mut f64,

@@ -7,6 +7,13 @@
 //! it back and decomposes it against the manifest's output specs, so
 //! callers deal in `Tensors` (host `f32`/`i32` leaf vectors) only.
 //!
+//! `Runtime` is `Send + Sync`: the compile cache and execution counters
+//! sit behind mutexes, and island threads execute concurrently against
+//! shared `Arc<Artifact>`s (the PJRT C API guarantees `Execute` is
+//! thread-safe on one loaded executable). This is what lets the
+//! [`crate::engine::ParallelIslands`] executor run k workers on real OS
+//! threads over a single runtime.
+//!
 //! Python never runs here — the artifacts are self-contained HLO.
 
 pub mod manifest;
@@ -15,10 +22,9 @@ pub mod tensors;
 pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest, Role};
 pub use tensors::Tensors;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// Host-side value fed to / read from an artifact execution.
 #[derive(Clone, Debug)]
@@ -75,20 +81,39 @@ impl Value {
     }
 }
 
+/// PJRT client handle asserted thread-safe.
+///
+/// SAFETY: the PJRT C API specifies that client operations (`Compile`,
+/// buffer transfers) may be issued from any thread; the `xla` wrapper
+/// only lacks the marker traits because it holds a raw pointer. All
+/// mutation of *our* state is separately guarded by mutexes.
+struct SharedClient(xla::PjRtClient);
+unsafe impl Send for SharedClient {}
+unsafe impl Sync for SharedClient {}
+
+/// Loaded-executable handle asserted thread-safe.
+///
+/// SAFETY: `PJRT_LoadedExecutable_Execute` is documented thread-safe —
+/// concurrent executions of one executable are the normal multi-replica
+/// serving path; the wrapper type is `!Send` only via its raw pointer.
+struct SharedExe(xla::PjRtLoadedExecutable);
+unsafe impl Send for SharedExe {}
+unsafe impl Sync for SharedExe {}
+
 /// A compiled artifact + its manifest spec.
 pub struct Artifact {
     pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+    exe: SharedExe,
 }
 
 /// Loaded artifact set for one model preset, bound to a PJRT CPU client.
 pub struct Runtime {
     pub manifest: Manifest,
     dir: PathBuf,
-    client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, Rc<Artifact>>>,
+    client: SharedClient,
+    cache: Mutex<HashMap<String, Arc<Artifact>>>,
     /// Executions performed, by artifact key (perf accounting).
-    exec_counts: RefCell<HashMap<String, u64>>,
+    exec_counts: Mutex<HashMap<String, u64>>,
 }
 
 impl Runtime {
@@ -101,15 +126,19 @@ impl Runtime {
         Ok(Runtime {
             manifest,
             dir,
-            client,
-            cache: RefCell::new(HashMap::new()),
-            exec_counts: RefCell::new(HashMap::new()),
+            client: SharedClient(client),
+            cache: Mutex::new(HashMap::new()),
+            exec_counts: Mutex::new(HashMap::new()),
         })
     }
 
-    /// Compile (or fetch cached) an artifact by manifest key.
-    pub fn artifact(&self, key: &str) -> anyhow::Result<Rc<Artifact>> {
-        if let Some(a) = self.cache.borrow().get(key) {
+    /// Compile (or fetch cached) an artifact by manifest key. The cache
+    /// lock is held across compilation so concurrent islands touching the
+    /// same cold key block on one compile instead of racing N compiles;
+    /// compilation happens once per (process, key).
+    pub fn artifact(&self, key: &str) -> anyhow::Result<Arc<Artifact>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(a) = cache.get(key) {
             return Ok(a.clone());
         }
         let spec = self.manifest.artifact(key)?.clone();
@@ -121,10 +150,11 @@ impl Runtime {
             .map_err(|e| anyhow::anyhow!("parsing {path_str}: {e}"))?;
         let exe = self
             .client
+            .0
             .compile(&xla::XlaComputation::from_proto(&proto))
             .map_err(|e| anyhow::anyhow!("compiling {key}: {e}"))?;
-        let artifact = Rc::new(Artifact { spec, exe });
-        self.cache.borrow_mut().insert(key.to_string(), artifact.clone());
+        let artifact = Arc::new(Artifact { spec, exe: SharedExe(exe) });
+        cache.insert(key.to_string(), artifact.clone());
         Ok(artifact)
     }
 
@@ -175,11 +205,13 @@ impl Runtime {
         }
         *self
             .exec_counts
-            .borrow_mut()
+            .lock()
+            .unwrap()
             .entry(key.to_string())
             .or_insert(0) += 1;
         let out = artifact
             .exe
+            .0
             .execute::<xla::Literal>(&literals)
             .map_err(|e| anyhow::anyhow!("executing {key}: {e}"))?;
         anyhow::ensure!(
@@ -249,7 +281,7 @@ impl Runtime {
 
     /// Per-artifact execution counters (for perf accounting / tests).
     pub fn exec_counts(&self) -> HashMap<String, u64> {
-        self.exec_counts.borrow().clone()
+        self.exec_counts.lock().unwrap().clone()
     }
 
     // ---- high-level steps the coordinator uses --------------------------
@@ -280,6 +312,16 @@ impl Runtime {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn runtime_is_send_and_sync() {
+        // Compile-time contract the parallel engine depends on: a shared
+        // `&Runtime` (and cached `Arc<Artifact>`s) may cross threads.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Runtime>();
+        assert_send_sync::<Arc<Artifact>>();
+        assert_send_sync::<Tensors>();
+    }
 
     fn runtime() -> Option<Runtime> {
         let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");

@@ -10,6 +10,12 @@
 //! Per the paper, the AdamW state is *worker-local*: DiLoCo synchronizes
 //! parameters only (syncing m/v costs 3× communication for no quality
 //! gain — appendix "Inner Optimizer States").
+//!
+//! A `Worker` owns all of its state (params, m/v, batch stream, timers)
+//! and is therefore `Send`: the [`crate::engine::ParallelIslands`]
+//! executor moves `&mut Worker`s onto island threads. `compute_seconds`
+//! accumulates locally on the worker, never through shared metrics —
+//! the engine reduces per-worker times deterministically afterwards.
 
 use crate::data::batch::BatchIter;
 use crate::runtime::{Runtime, Tensors, Value, ValueView};
@@ -156,6 +162,13 @@ impl Worker {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn worker_is_send() {
+        // The parallel engine moves workers across threads.
+        fn assert_send<T: Send>() {}
+        assert_send::<Worker>();
+    }
 
     fn runtime() -> Option<Runtime> {
         let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");

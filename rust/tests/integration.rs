@@ -2,25 +2,25 @@
 //! metamorphic algorithm identities, and the checkpoint round-trip.
 
 use diloco::checkpoint;
-use diloco::config::{ComputeSchedule, ExperimentConfig, OuterOptConfig};
+use diloco::config::{ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig};
 use diloco::coordinator::Coordinator;
 use diloco::data::batch::BatchIter;
 use diloco::metrics::RunMetrics;
 use diloco::runtime::{Runtime, Tensors};
 use diloco::util::rng::Rng;
 use diloco::worker::Worker;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn artifacts_dir() -> String {
     concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
 }
 
-fn runtime() -> Option<Rc<Runtime>> {
+fn runtime() -> Option<Arc<Runtime>> {
     let dir = artifacts_dir();
     std::path::Path::new(&dir)
         .join("nano.manifest.json")
         .exists()
-        .then(|| Rc::new(Runtime::load(&dir, "nano").unwrap()))
+        .then(|| Arc::new(Runtime::load(&dir, "nano").unwrap()))
 }
 
 fn small_cfg() -> ExperimentConfig {
@@ -238,7 +238,7 @@ fn micro_model_composes_too() {
         eprintln!("skipping: micro artifacts not built");
         return;
     }
-    let rt = Rc::new(Runtime::load(&dir, "micro").unwrap());
+    let rt = Arc::new(Runtime::load(&dir, "micro").unwrap());
     let mut cfg = ExperimentConfig::paper_default(&dir, "micro");
     cfg.workers = 2;
     cfg.schedule = ComputeSchedule::Constant(2);
@@ -252,6 +252,49 @@ fn micro_model_composes_too() {
     let report = coord.run().unwrap();
     assert!(report.metrics.final_ppl().is_finite());
     assert_eq!(report.metrics.loss_curve.len(), 5);
+}
+
+#[test]
+fn parallel_matches_sequential_bitwise() {
+    // The engine acceptance criterion: ParallelIslands must reproduce the
+    // Sequential reference path *bitwise* — final params, loss curves,
+    // and communication outcomes — for a k=4 run with drop injection
+    // (keyed drops are what make this possible under reordering).
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.comm.drop_prob = 0.3;
+    cfg.seed = 5;
+    let init = rt.init_params().unwrap();
+
+    let run = |engine: EngineConfig| {
+        let mut cfg = cfg.clone();
+        cfg.engine = engine;
+        Coordinator::new(cfg, rt.clone())
+            .unwrap()
+            .run_from(Some(init.clone()))
+            .unwrap()
+    };
+    let seq = run(EngineConfig::Sequential);
+    for threads in [0, 2, 4] {
+        let par = run(EngineConfig::Parallel { threads });
+        assert_eq!(
+            par.final_params, seq.final_params,
+            "threads={threads}: final params diverged"
+        );
+        assert_eq!(
+            par.metrics.loss_curve, seq.metrics.loss_curve,
+            "threads={threads}: loss curves diverged"
+        );
+        assert_eq!(par.metrics.eval_curve.len(), seq.metrics.eval_curve.len());
+        for (a, b) in par.metrics.eval_curve.iter().zip(&seq.metrics.eval_curve) {
+            assert_eq!(a.mean_nll, b.mean_nll, "threads={threads}: eval diverged");
+        }
+        assert_eq!(par.metrics.comm_messages, seq.metrics.comm_messages);
+        assert_eq!(par.metrics.comm_bytes, seq.metrics.comm_bytes);
+        assert_eq!(par.metrics.comm_dropped, seq.metrics.comm_dropped);
+        assert_eq!(par.drops_per_worker, seq.drops_per_worker);
+        assert_eq!(par.round_stats.len(), seq.round_stats.len());
+    }
 }
 
 #[test]

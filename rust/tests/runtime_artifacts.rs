@@ -6,18 +6,18 @@
 use diloco::config::OuterOptConfig;
 use diloco::coordinator::opt::OuterOpt;
 use diloco::runtime::{Runtime, Tensors, Value};
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn artifacts_dir() -> String {
     concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
 }
 
-fn runtime(model: &str) -> Option<Rc<Runtime>> {
+fn runtime(model: &str) -> Option<Arc<Runtime>> {
     let dir = artifacts_dir();
     std::path::Path::new(&dir)
         .join(format!("{model}.manifest.json"))
         .exists()
-        .then(|| Rc::new(Runtime::load(&dir, model).expect("runtime loads")))
+        .then(|| Arc::new(Runtime::load(&dir, model).expect("runtime loads")))
 }
 
 fn batch(rt: &Runtime, steps: usize, shift: i32) -> (Vec<i32>, Vec<i32>) {
