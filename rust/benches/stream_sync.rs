@@ -1,0 +1,108 @@
+//! Streaming partial-sync sweep — schedule × codec vs the monolithic
+//! full-precision baseline (Streaming DiLoCo, arXiv:2501.18512 +
+//! DiLoCoX quantization, arXiv:2506.21263).
+//!
+//! Every variant runs the same scaled main setting from the same
+//! pretrained checkpoint; the interesting columns are per-round upload
+//! bytes (staggered ships 1/P of the model per round, q8 ≈4× fewer
+//! bytes), the simulated communication barrier (overlapped hides it
+//! behind compute), the deterministic codec error, and the final PPL
+//! cost of each regime. Paste the printed JSON fragment into
+//! `BENCH_engine.json` at the repo root to extend the perf trajectory.
+
+use diloco::bench::scenarios::{base_config, fmt, load_runtime, rel_pct, stream_grid};
+use diloco::bench::{BenchCtx, Table};
+use diloco::coordinator::Coordinator;
+use diloco::metrics::RunMetrics;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new("stream_sync");
+    let base = base_config(ctx.scale);
+    let rt = load_runtime(&base.model);
+
+    // Shared pretrained start so variants differ only in sync regime.
+    let coord0 = Coordinator::new(base.clone(), rt.clone())?;
+    let mut pre = RunMetrics::new("pretrain");
+    let pretrained =
+        coord0.plain_train(rt.init_params()?, 0.0, base.pretrain_steps, &mut pre, 0)?;
+
+    let mut table = Table::new(
+        "Streaming sync — schedule × codec (baseline pinned by golden trace)",
+        &[
+            "variant",
+            "up_MB/round",
+            "up_vs_base",
+            "sim_comm_s",
+            "sim_wall_s",
+            "codec_err",
+            "final_ppl",
+            "ppl_vs_base",
+        ],
+    );
+    let mut rows: Vec<(String, f64, f64, f64, f64, f64)> = Vec::new();
+    let mut json_rows = String::new();
+    for (label, stream) in stream_grid() {
+        let mut cfg = base.clone();
+        cfg.stream = stream;
+        cfg.validate()?;
+        let coord = Coordinator::new(cfg.clone(), rt.clone())?;
+        let report = coord.run_from(Some(pretrained.clone()))?;
+        let m = &report.metrics;
+        let up_per_round = m.comm_bytes_up as f64 / cfg.rounds as f64 / 1e6;
+        rows.push((
+            label.to_string(),
+            up_per_round,
+            m.comm_bytes_up as f64,
+            m.sim_comm_seconds,
+            m.sim_wall_seconds(),
+            m.final_ppl(),
+        ));
+        json_rows.push_str(&format!(
+            "      {{ \"variant\": \"{label}\", \"up_mb_per_round\": {up_per_round:.4}, \
+             \"sim_comm_s\": {:.4}, \"sim_wall_s\": {:.2}, \"codec_err_l2\": {:.4e}, \
+             \"final_ppl\": {:.4} }},\n",
+            m.sim_comm_seconds,
+            m.sim_wall_seconds(),
+            m.codec_err_l2,
+            m.final_ppl()
+        ));
+        let last = rows.last().unwrap();
+        table.row(vec![
+            label.to_string(),
+            format!("{:.3}", last.1),
+            rel_pct(last.2, rows[0].2),
+            format!("{:.2}", last.3),
+            format!("{:.1}", last.4),
+            format!("{:.2e}", report.metrics.codec_err_l2),
+            fmt(last.5),
+            rel_pct(last.5, rows[0].5),
+        ]);
+    }
+    ctx.emit(&table);
+    println!(
+        "\nBENCH_engine.json stream_sync rows (paste into the current PR entry):\n{json_rows}"
+    );
+
+    // Invariants the sweep must exhibit (hard-fail so regressions in the
+    // billing model are caught by running the bench, not by eyeballing).
+    let base_up = rows[0].2;
+    for (label, _, up, ..) in &rows[1..] {
+        if label.starts_with("staggered") || label.contains("q8") || label.contains("f16")
+        {
+            assert!(
+                *up < base_up,
+                "{label}: expected fewer upload bytes than baseline ({up} vs {base_up})"
+            );
+        }
+    }
+    let overlapped = rows
+        .iter()
+        .find(|r| r.0.starts_with("overlapped"))
+        .expect("grid has an overlapped row");
+    assert!(
+        overlapped.3 < rows[0].3,
+        "overlapped schedule must shrink the communication barrier"
+    );
+    ctx.finish();
+    Ok(())
+}

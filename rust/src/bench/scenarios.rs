@@ -12,7 +12,11 @@
 //!   T×H after pretrain: 160 ↔ 64k
 
 use super::Scale;
-use crate::config::{ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig};
+use crate::comm::codec::Codec;
+use crate::config::{
+    ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig, StreamConfig,
+    SyncSchedule,
+};
 use crate::runtime::Runtime;
 use std::sync::Arc;
 
@@ -85,6 +89,26 @@ pub fn base_config(scale: Scale) -> ExperimentConfig {
     cfg
 }
 
+/// Streaming-sync scenario family: the schedule × codec grid the
+/// `stream_sync` bench sweeps. Row 0 is the monolithic full-precision
+/// baseline (bitwise-pinned by the golden-trace suite); the rest
+/// exercise partial sync (Streaming DiLoCo), compression (DiLoCoX), and
+/// compute-overlapped transfers — the per-round sync-byte reductions
+/// land in `BENCH_engine.json`.
+pub fn stream_grid() -> Vec<(&'static str, StreamConfig)> {
+    let every = SyncSchedule::EveryRound;
+    let stag = SyncSchedule::Staggered;
+    let over = SyncSchedule::Overlapped;
+    vec![
+        ("baseline_f32", StreamConfig { fragments: 1, schedule: every, codec: Codec::F32 }),
+        ("every_f16", StreamConfig { fragments: 1, schedule: every, codec: Codec::F16 }),
+        ("every_q8", StreamConfig { fragments: 4, schedule: every, codec: Codec::Q8 }),
+        ("staggered4_f32", StreamConfig { fragments: 4, schedule: stag, codec: Codec::F32 }),
+        ("staggered4_q8", StreamConfig { fragments: 4, schedule: stag, codec: Codec::Q8 }),
+        ("overlapped4_f32", StreamConfig { fragments: 4, schedule: over, codec: Codec::F32 }),
+    ]
+}
+
 /// Total inner steps after pretraining (T×H) for the base setting — kept
 /// constant across H sweeps so variants are compute-matched.
 pub fn step_budget(scale: Scale) -> usize {
@@ -131,6 +155,25 @@ mod tests {
         assert_eq!(cfg.rounds, 128);
         assert_eq!(cfg.pretrain_steps, 24_000);
         assert_eq!(cfg.model, "150m");
+    }
+
+    #[test]
+    fn stream_grid_covers_schedules_and_codecs() {
+        let grid = stream_grid();
+        assert_eq!(grid[0].1, StreamConfig::default(), "row 0 is the baseline");
+        for sched in [
+            SyncSchedule::EveryRound,
+            SyncSchedule::Staggered,
+            SyncSchedule::Overlapped,
+        ] {
+            assert!(grid.iter().any(|(_, s)| s.schedule == sched), "{sched:?}");
+        }
+        for codec in [Codec::F32, Codec::F16, Codec::Q8] {
+            assert!(grid.iter().any(|(_, s)| s.codec == codec), "{codec:?}");
+        }
+        for (label, s) in &grid {
+            s.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
+        }
     }
 
     #[test]

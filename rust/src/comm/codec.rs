@@ -1,0 +1,337 @@
+//! Outer-gradient wire codecs (DiLoCoX-style compression).
+//!
+//! DiLoCo already communicates ~500× less than synchronous data
+//! parallelism by syncing rarely; the follow-up work (DiLoCoX,
+//! arXiv:2506.21263) compresses what *is* sent. A [`Codec`] transforms an
+//! outer-gradient payload before it crosses the [`super::SimNet`]:
+//! the coordinator always averages the **dequantized** values, so the
+//! quantization error is part of the simulated algorithm, not just of the
+//! byte accounting, and every round's error is reported deterministically
+//! (`RoundStats::codec_err_l2`).
+//!
+//! **Determinism contract:** `transcode` is a pure elementwise function
+//! of its input (no RNG, no dithering), so traces are reproducible and
+//! the `f32` codec is bitwise exact — the default configuration stays on
+//! the golden trace.
+
+use super::fragment::LeafSlice;
+
+/// How an outer-gradient fragment is encoded on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// Full precision — bitwise exact, 4 bytes/element (the default).
+    F32,
+    /// IEEE half precision, round-to-nearest-even, 2 bytes/element.
+    F16,
+    /// 8-bit uniform quantization per leaf slice (min/scale sidecar),
+    /// 1 byte/element + 8 bytes per slice.
+    Q8,
+}
+
+impl Codec {
+    pub fn parse(s: &str) -> anyhow::Result<Codec> {
+        match s {
+            "f32" => Ok(Codec::F32),
+            "f16" => Ok(Codec::F16),
+            "q8" => Ok(Codec::Q8),
+            other => anyhow::bail!("unknown codec {other:?} (want f32|f16|q8)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::F16 => "f16",
+            Codec::Q8 => "q8",
+        }
+    }
+
+    /// Billed wire bytes for a payload of `n_elements` spread over
+    /// `n_slices` contiguous leaf slices.
+    pub fn encoded_bytes(&self, n_elements: usize, n_slices: usize) -> u64 {
+        match self {
+            Codec::F32 => 4 * n_elements as u64,
+            Codec::F16 => 2 * n_elements as u64,
+            // 1 byte/value + f32 (min, scale) sidecar per slice.
+            Codec::Q8 => n_elements as u64 + 8 * n_slices as u64,
+        }
+    }
+
+    /// Encode + decode `values` in place (what the receiver will see) and
+    /// return the squared L2 dequantization error, accumulated in f64 in
+    /// slice order — deterministic for a given input.
+    pub fn transcode(&self, values: &mut [f32], slices: &[LeafSlice]) -> f64 {
+        match self {
+            Codec::F32 => 0.0,
+            Codec::F16 => {
+                let mut err_sq = 0.0f64;
+                for x in values.iter_mut() {
+                    let orig = *x;
+                    *x = f16_bits_to_f32(f32_to_f16_bits(orig));
+                    let e = (orig - *x) as f64;
+                    err_sq += e * e;
+                }
+                err_sq
+            }
+            Codec::Q8 => {
+                let mut err_sq = 0.0f64;
+                let mut off = 0usize;
+                for s in slices {
+                    let part = &mut values[off..off + s.len()];
+                    err_sq += q8_roundtrip(part);
+                    off += s.len();
+                }
+                debug_assert_eq!(off, values.len(), "slice lens cover payload");
+                err_sq
+            }
+        }
+    }
+}
+
+/// Uniform 8-bit round trip over one contiguous slice; returns the
+/// squared error. `scale = (max - min) / 255`; a constant slice encodes
+/// exactly (scale 0 ⇒ every value decodes to `min`).
+fn q8_roundtrip(values: &mut [f32]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in values.iter() {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let scale = (hi - lo) / 255.0;
+    let mut err_sq = 0.0f64;
+    for x in values.iter_mut() {
+        let orig = *x;
+        *x = if scale == 0.0 {
+            lo
+        } else {
+            let q = ((orig - lo) / scale).round().clamp(0.0, 255.0);
+            lo + q * scale
+        };
+        let e = (orig - *x) as f64;
+        err_sq += e * e;
+    }
+    err_sq
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 255 {
+        // Inf / NaN (quiet the NaN payload into one bit).
+        return sign | 0x7c00 | u16::from(mant != 0) << 9;
+    }
+    let e = exp - 127 + 15; // rebased target exponent
+    if e >= 31 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflows past the smallest subnormal → ±0
+        }
+        // Subnormal: M = round(1.mant × 2^(e-15) / 2^-24).
+        let mant = mant | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = (mant >> shift) as u16;
+        let rem = mant & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round_up = rem > halfway || (rem == halfway && half & 1 == 1);
+        return sign | (half + u16::from(round_up));
+    }
+    // Normal: 10-bit mantissa, ties-to-even; a rounding carry into the
+    // exponent (possibly up to inf) is correct by construction.
+    let h = ((e as u32) << 10) as u16 | (mant >> 13) as u16;
+    let rem = mant & 0x1fff;
+    let round_up = rem > 0x1000 || (rem == 0x1000 && h & 1 == 1);
+    sign | h.wrapping_add(u16::from(round_up))
+}
+
+/// IEEE 754 binary16 bits → f32 (exact — every f16 is an f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign_neg = h & 0x8000 != 0;
+    let exp = (h >> 10) & 0x1f;
+    let mant = (h & 0x3ff) as u32;
+    let v = if exp == 0 {
+        // ±0 and subnormals: M × 2^-24 (exactly representable in f32).
+        mant as f32 * (1.0 / 16_777_216.0)
+    } else if exp == 31 {
+        if mant != 0 {
+            f32::NAN
+        } else {
+            f32::INFINITY
+        }
+    } else {
+        f32::from_bits(((exp as u32 + 112) << 23) | (mant << 13))
+    };
+    if sign_neg {
+        -v
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn one_slice(n: usize) -> Vec<LeafSlice> {
+        vec![LeafSlice { leaf: 0, start: 0, end: n }]
+    }
+
+    #[test]
+    fn parse_and_names() {
+        for c in [Codec::F32, Codec::F16, Codec::Q8] {
+            assert_eq!(Codec::parse(c.name()).unwrap(), c);
+        }
+        assert!(Codec::parse("q4").is_err());
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(Codec::F32.encoded_bytes(100, 3), 400);
+        assert_eq!(Codec::F16.encoded_bytes(100, 3), 200);
+        assert_eq!(Codec::Q8.encoded_bytes(100, 3), 124);
+    }
+
+    #[test]
+    fn f32_codec_is_exact() {
+        let mut v = vec![0.1f32, -2.5, 1e-20, 3.4e38];
+        let orig = v.clone();
+        let err = Codec::F32.transcode(&mut v, &one_slice(4));
+        assert_eq!(v, orig);
+        assert_eq!(err, 0.0);
+    }
+
+    #[test]
+    fn f16_roundtrip_exact_on_representable_values() {
+        // Values exactly representable in f16 must survive bitwise.
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, 6.103_515_6e-5] {
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn f16_special_values() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(
+            f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)),
+            f32::NEG_INFINITY
+        );
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Overflow saturates to inf, deep underflow flushes to signed zero.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e9)), f32::INFINITY);
+        let tiny = f16_bits_to_f32(f32_to_f16_bits(1e-12));
+        assert_eq!(tiny, 0.0);
+        let ntiny = f16_bits_to_f32(f32_to_f16_bits(-1e-12));
+        assert_eq!(ntiny, 0.0);
+        assert!(ntiny.is_sign_negative());
+    }
+
+    #[test]
+    fn f16_relative_error_bound() {
+        check("f16 round trip stays within 2^-11 relative error", 100, |g| {
+            let v = g.f32_vec(1..50, 4.0);
+            for &x in &v {
+                let y = f16_bits_to_f32(f32_to_f16_bits(x));
+                let tol = x.abs() as f64 * (1.0 / 2048.0) + 1e-7;
+                assert!(
+                    ((x - y) as f64).abs() <= tol,
+                    "f16({x}) = {y} off by more than {tol}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn q8_error_bounded_by_half_step() {
+        check("q8 error ≤ (max-min)/510 per element", 100, |g| {
+            let mut v = g.f32_vec(2..80, 3.0);
+            let orig = v.clone();
+            let lo = orig.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = orig.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let n = v.len();
+            Codec::Q8.transcode(&mut v, &one_slice(n));
+            let half_step = ((hi - lo) as f64 / 255.0) / 2.0 + 1e-6;
+            for (a, b) in orig.iter().zip(&v) {
+                assert!(
+                    ((a - b) as f64).abs() <= half_step,
+                    "q8 moved {a} to {b}, step/2 = {half_step}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn q8_constant_slice_is_exact() {
+        let mut v = vec![0.25f32; 9];
+        let err = Codec::Q8.transcode(&mut v, &one_slice(9));
+        assert!(v.iter().all(|&x| x == 0.25));
+        assert_eq!(err, 0.0);
+    }
+
+    #[test]
+    fn q8_endpoints_land_on_grid() {
+        // min encodes exactly (q = 0); max lands on the last grid point,
+        // within one float rounding of itself.
+        let mut v = vec![-1.0f32, 0.33, 1.0];
+        Codec::Q8.transcode(&mut v, &one_slice(3));
+        assert_eq!(v[0], -1.0);
+        assert!((v[2] - 1.0).abs() < 1e-5, "{}", v[2]);
+    }
+
+    #[test]
+    fn q8_quantizes_per_slice() {
+        // Two slices with very different ranges must not share a scale:
+        // the small-magnitude slice keeps fine resolution (a shared scale
+        // of ~2000/255 would flatten ±0.001 to the same grid point).
+        let mut v = vec![1000.0f32, -1000.0, 0.001, -0.001];
+        let slices = vec![
+            LeafSlice { leaf: 0, start: 0, end: 2 },
+            LeafSlice { leaf: 1, start: 0, end: 2 },
+        ];
+        Codec::Q8.transcode(&mut v, &slices);
+        assert!((v[0] - 1000.0).abs() < 0.01);
+        assert!((v[2] - 0.001).abs() < 1e-5, "{}", v[2]);
+        assert!((v[3] + 0.001).abs() < 1e-5, "{}", v[3]);
+        assert!(v[2] > v[3], "fine structure lost to a shared scale");
+    }
+
+    #[test]
+    fn transcode_error_matches_reported() {
+        check("reported err² equals recomputed err²", 50, |g| {
+            let orig = g.f32_vec(1..60, 2.0);
+            for codec in [Codec::F16, Codec::Q8] {
+                let mut v = orig.clone();
+                let n = v.len();
+                let err = codec.transcode(&mut v, &one_slice(n));
+                let recomputed: f64 = orig
+                    .iter()
+                    .zip(&v)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum();
+                assert_eq!(err, recomputed, "{:?}", codec);
+            }
+        });
+    }
+
+    #[test]
+    fn f16_transcode_is_idempotent() {
+        check("transcoding twice equals once", 50, |g| {
+            let mut v = g.f32_vec(1..40, 3.0);
+            let n = v.len();
+            Codec::F16.transcode(&mut v, &one_slice(n));
+            let once = v.clone();
+            let err2 = Codec::F16.transcode(&mut v, &one_slice(n));
+            assert_eq!(v, once);
+            assert_eq!(err2, 0.0);
+        });
+    }
+}

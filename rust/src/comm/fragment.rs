@@ -1,0 +1,223 @@
+//! Parameter-space fragmentation for streaming partial synchronization.
+//!
+//! Streaming DiLoCo (arXiv:2501.18512) synchronizes *fragments* of the
+//! model on a staggered schedule instead of shipping one monolithic
+//! outer gradient. A [`FragmentPlan`] partitions the flattened parameter
+//! space into `P` contiguous, near-equal element ranges and maps each
+//! back onto `(leaf, sub-range)` slices of a [`Tensors`] tree, so every
+//! layer (billing, codecs, averaging, outer-optimizer state) can address
+//! "fragment f" without knowing the leaf structure.
+//!
+//! `P = 1` yields a single fragment covering every element — the
+//! monolithic path, bitwise identical to the pre-streaming fabric.
+
+use crate::runtime::Tensors;
+
+/// One contiguous run of elements inside one parameter leaf.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LeafSlice {
+    pub leaf: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl LeafSlice {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+}
+
+/// A fixed partition of the flattened parameter space into fragments.
+#[derive(Clone, Debug)]
+pub struct FragmentPlan {
+    fragments: Vec<Vec<LeafSlice>>,
+    elements: Vec<usize>,
+    total_elements: usize,
+}
+
+impl FragmentPlan {
+    /// Split `leaf_sizes` into (up to) `requested` contiguous fragments.
+    /// The count is clamped to `[1, total_elements]` so no fragment is
+    /// ever empty; fragment `f` covers flat range
+    /// `[f·N/P, (f+1)·N/P)`.
+    pub fn new(leaf_sizes: &[usize], requested: usize) -> FragmentPlan {
+        let total: usize = leaf_sizes.iter().sum();
+        let p = requested.max(1).min(total.max(1));
+        let mut fragments = Vec::with_capacity(p);
+        let mut elements = Vec::with_capacity(p);
+        for f in 0..p {
+            let lo = f * total / p;
+            let hi = (f + 1) * total / p;
+            let mut slices = Vec::new();
+            let mut off = 0usize;
+            for (leaf, &n) in leaf_sizes.iter().enumerate() {
+                let a = lo.max(off);
+                let b = hi.min(off + n);
+                if a < b {
+                    slices.push(LeafSlice { leaf, start: a - off, end: b - off });
+                }
+                off += n;
+            }
+            elements.push(hi - lo);
+            fragments.push(slices);
+        }
+        FragmentPlan { fragments, elements, total_elements: total }
+    }
+
+    /// Plan over the leaves of an existing tensor tree.
+    pub fn for_tensors(t: &Tensors, requested: usize) -> FragmentPlan {
+        let sizes: Vec<usize> = t.leaves().iter().map(|l| l.len()).collect();
+        FragmentPlan::new(&sizes, requested)
+    }
+
+    pub fn n_fragments(&self) -> usize {
+        self.fragments.len()
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.total_elements
+    }
+
+    /// The `(leaf, range)` slices making up fragment `f`.
+    pub fn slices(&self, f: usize) -> &[LeafSlice] {
+        &self.fragments[f]
+    }
+
+    pub fn elements(&self, f: usize) -> usize {
+        self.elements[f]
+    }
+
+    /// Flatten fragment `f` of `t` into one contiguous payload.
+    pub fn extract(&self, t: &Tensors, f: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.elements[f]);
+        for s in &self.fragments[f] {
+            out.extend_from_slice(&t.leaves()[s.leaf][s.start..s.end]);
+        }
+        out
+    }
+
+    /// Write a flat payload back into fragment `f` of `into`.
+    pub fn scatter(&self, values: &[f32], f: usize, into: &mut Tensors) {
+        assert_eq!(values.len(), self.elements[f], "payload arity");
+        let mut off = 0usize;
+        for s in &self.fragments[f] {
+            into.leaves_mut()[s.leaf][s.start..s.end]
+                .copy_from_slice(&values[off..off + s.len()]);
+            off += s.len();
+        }
+    }
+
+    /// Copy fragment `f` from one tensor tree to another (bitwise).
+    pub fn copy_fragment(&self, from: &Tensors, into: &mut Tensors, f: usize) {
+        for s in &self.fragments[f] {
+            let src = &from.leaves()[s.leaf][s.start..s.end];
+            into.leaves_mut()[s.leaf][s.start..s.end].copy_from_slice(src);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn toy(leaves: &[&[f32]]) -> Tensors {
+        Tensors::from_raw(leaves.iter().map(|l| l.to_vec()).collect())
+    }
+
+    #[test]
+    fn single_fragment_covers_everything() {
+        let plan = FragmentPlan::new(&[3, 5, 2], 1);
+        assert_eq!(plan.n_fragments(), 1);
+        assert_eq!(plan.elements(0), 10);
+        assert_eq!(
+            plan.slices(0),
+            &[
+                LeafSlice { leaf: 0, start: 0, end: 3 },
+                LeafSlice { leaf: 1, start: 0, end: 5 },
+                LeafSlice { leaf: 2, start: 0, end: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn fragments_partition_disjointly() {
+        check("fragments tile the element space exactly once", 60, |g| {
+            let n_leaves = g.usize_in(1..6);
+            let sizes: Vec<usize> =
+                (0..n_leaves).map(|_| g.usize_in(1..40)).collect();
+            let total: usize = sizes.iter().sum();
+            let p = g.usize_in(1..20);
+            let plan = FragmentPlan::new(&sizes, p);
+            assert_eq!(plan.n_fragments(), p.min(total));
+            // Count coverage of every (leaf, element) coordinate.
+            let mut seen: Vec<Vec<u32>> =
+                sizes.iter().map(|&n| vec![0; n]).collect();
+            let mut sum = 0;
+            for f in 0..plan.n_fragments() {
+                let mut frag_elems = 0;
+                for s in plan.slices(f) {
+                    assert!(!s.is_empty(), "empty slice emitted");
+                    for i in s.start..s.end {
+                        seen[s.leaf][i] += 1;
+                    }
+                    frag_elems += s.len();
+                }
+                assert_eq!(frag_elems, plan.elements(f));
+                sum += frag_elems;
+            }
+            assert_eq!(sum, total);
+            assert!(seen.iter().flatten().all(|&c| c == 1), "overlap or gap");
+        });
+    }
+
+    #[test]
+    fn fragment_sizes_near_equal() {
+        let plan = FragmentPlan::new(&[100], 7);
+        let sizes: Vec<usize> = (0..7).map(|f| plan.elements(f)).collect();
+        let (lo, hi) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        assert!(hi - lo <= 1, "{sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn requested_count_is_clamped() {
+        assert_eq!(FragmentPlan::new(&[3], 10).n_fragments(), 3);
+        assert_eq!(FragmentPlan::new(&[3], 0).n_fragments(), 1);
+    }
+
+    #[test]
+    fn extract_scatter_roundtrip() {
+        check("scatter(extract(t)) reassembles t bitwise", 60, |g| {
+            let a = g.f32_vec(1..20, 5.0);
+            let b = g.f32_vec(1..20, 5.0);
+            let t = toy(&[&a, &b]);
+            let p = g.usize_in(1..8);
+            let plan = FragmentPlan::for_tensors(&t, p);
+            let mut rebuilt = t.clone();
+            rebuilt.scale(0.0);
+            for f in 0..plan.n_fragments() {
+                let vals = plan.extract(&t, f);
+                plan.scatter(&vals, f, &mut rebuilt);
+            }
+            assert_eq!(rebuilt, t);
+        });
+    }
+
+    #[test]
+    fn copy_fragment_moves_only_that_fragment() {
+        let src = toy(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let mut dst = toy(&[&[0.0, 0.0], &[0.0, 0.0]]);
+        let plan = FragmentPlan::for_tensors(&src, 2);
+        plan.copy_fragment(&src, &mut dst, 0);
+        let got: Vec<f32> = dst.iter_flat().collect();
+        assert_eq!(got, vec![1.0, 2.0, 0.0, 0.0]);
+    }
+}

@@ -9,6 +9,7 @@
 pub mod presets;
 pub mod toml;
 
+use crate::comm::codec::Codec;
 use crate::util::rng::Rng;
 use toml::TomlDoc;
 
@@ -107,6 +108,129 @@ impl EngineConfig {
             None => Ok(EngineConfig::Auto),
             Some(s) => EngineConfig::parse(s),
         }
+    }
+}
+
+/// Which fragments synchronize each round, and how the transfer cost is
+/// charged (Streaming DiLoCo, arXiv:2501.18512).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncSchedule {
+    /// All fragments every round, transfer billed as a sync barrier —
+    /// with one fragment this is classic DiLoCo, bitwise identical to
+    /// the pre-streaming fabric.
+    EveryRound,
+    /// Fragment `round mod P` each round: each round ships 1/P of the
+    /// model, every fragment still syncs every P rounds.
+    Staggered,
+    /// All fragments every round, but the transfer overlaps the *next*
+    /// round's inner compute instead of blocking at a barrier.
+    Overlapped,
+}
+
+impl SyncSchedule {
+    pub fn parse(s: &str) -> anyhow::Result<SyncSchedule> {
+        match s {
+            "every-round" | "every_round" | "every" => Ok(SyncSchedule::EveryRound),
+            "staggered" => Ok(SyncSchedule::Staggered),
+            "overlapped" => Ok(SyncSchedule::Overlapped),
+            other => anyhow::bail!(
+                "unknown sync schedule {other:?} (want every-round|staggered|overlapped)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncSchedule::EveryRound => "every-round",
+            SyncSchedule::Staggered => "staggered",
+            SyncSchedule::Overlapped => "overlapped",
+        }
+    }
+
+    /// Fragments (out of `p`) that synchronize in round `round`.
+    pub fn fragments_due(&self, round: usize, p: usize) -> Vec<usize> {
+        match self {
+            SyncSchedule::EveryRound | SyncSchedule::Overlapped => (0..p).collect(),
+            SyncSchedule::Staggered => vec![round % p.max(1)],
+        }
+    }
+
+    /// Whether the round's transfer time is deferred into the next
+    /// inner phase instead of billed as a barrier.
+    pub fn defers_barrier(&self) -> bool {
+        matches!(self, SyncSchedule::Overlapped)
+    }
+}
+
+/// Streaming partial-sync fabric configuration (`[stream]` in TOML,
+/// `--stream fragments=4,schedule=staggered,codec=q8` on the CLI).
+///
+/// The default — one fragment, every-round schedule, f32 codec — is the
+/// monolithic full-precision sync and reproduces pre-streaming traces
+/// bitwise (the golden-trace suite pins this).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StreamConfig {
+    /// Number of parameter fragments P (≥ 1; clamped to the parameter
+    /// count at plan time).
+    pub fragments: usize,
+    pub schedule: SyncSchedule,
+    /// Outer-gradient wire codec.
+    pub codec: Codec,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            fragments: 1,
+            schedule: SyncSchedule::EveryRound,
+            codec: Codec::F32,
+        }
+    }
+}
+
+impl StreamConfig {
+    /// Parse the CLI mini-language:
+    /// `fragments=4,schedule=staggered,codec=q8` (keys optional, any
+    /// order; omitted keys keep their defaults).
+    pub fn parse(s: &str) -> anyhow::Result<StreamConfig> {
+        let mut cfg = StreamConfig::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad --stream item {part:?} (want key=value)"))?;
+            match key.trim() {
+                "fragments" => {
+                    cfg.fragments = value.trim().parse().map_err(|e| {
+                        anyhow::anyhow!("bad fragment count {value:?}: {e}")
+                    })?
+                }
+                "schedule" => cfg.schedule = SyncSchedule::parse(value.trim())?,
+                "codec" => cfg.codec = Codec::parse(value.trim())?,
+                other => anyhow::bail!(
+                    "unknown --stream key {other:?} (want fragments|schedule|codec)"
+                ),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.fragments >= 1,
+            "stream.fragments must be >= 1 (got {})",
+            self.fragments
+        );
+        Ok(())
+    }
+
+    /// True for the monolithic full-precision default.
+    pub fn is_monolithic(&self) -> bool {
+        *self == StreamConfig::default()
     }
 }
 
@@ -239,6 +363,8 @@ pub struct ExperimentConfig {
     pub sync_inner_opt: bool,
     pub data: DataConfig,
     pub comm: CommConfig,
+    /// Streaming partial-sync fabric: fragments × schedule × codec.
+    pub stream: StreamConfig,
     /// Inner-phase executor (sequential reference vs parallel islands).
     pub engine: EngineConfig,
     /// Evaluate every this many rounds (0 = only at end).
@@ -265,6 +391,7 @@ impl ExperimentConfig {
             sync_inner_opt: false,
             data: DataConfig::default(),
             comm: CommConfig::default(),
+            stream: StreamConfig::default(),
             engine: EngineConfig::Auto,
             eval_every_rounds: 1,
             eval_batches: 4,
@@ -278,6 +405,36 @@ impl ExperimentConfig {
 
     pub fn rng(&self) -> Rng {
         Rng::new(self.seed)
+    }
+
+    /// Cross-field invariants. Every config entry point (TOML, CLI
+    /// overrides) funnels through this, so malformed settings surface as
+    /// proper `anyhow` errors instead of panics deep in the run.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.workers >= 1, "diloco.workers must be >= 1");
+        anyhow::ensure!(self.inner_steps >= 1, "diloco.inner_steps must be >= 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.prune_frac),
+            "diloco.prune_frac must be in [0, 1] (got {})",
+            self.prune_frac
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.comm.drop_prob),
+            "comm.drop_prob must be in [0, 1] (got {})",
+            self.comm.drop_prob
+        );
+        anyhow::ensure!(
+            self.comm.bandwidth_bps > 0.0,
+            "comm.bandwidth_bps must be positive"
+        );
+        self.stream.validate()?;
+        anyhow::ensure!(
+            !(self.prune_frac > 0.0 && self.stream.codec != Codec::F32),
+            "sign-pruning (diloco.prune_frac > 0) composes with the f32 codec only; \
+             got codec {:?}",
+            self.stream.codec.name()
+        );
+        Ok(())
     }
 
     /// Load from the TOML subset; missing keys fall back to
@@ -344,9 +501,16 @@ impl ExperimentConfig {
             };
         }
 
+        cfg.stream.fragments = doc.usize_or("stream.fragments", cfg.stream.fragments)?;
+        let schedule = doc.str_or("stream.schedule", cfg.stream.schedule.name())?;
+        cfg.stream.schedule = SyncSchedule::parse(&schedule)?;
+        let codec = doc.str_or("stream.codec", cfg.stream.codec.name())?;
+        cfg.stream.codec = Codec::parse(&codec)?;
+
         cfg.eval_every_rounds =
             doc.usize_or("eval.every_rounds", cfg.eval_every_rounds)?;
         cfg.eval_batches = doc.usize_or("eval.batches", cfg.eval_batches)?;
+        cfg.validate()?;
         Ok(cfg)
     }
 }
@@ -430,7 +594,7 @@ mod tests {
     }
 
     #[test]
-    fn from_toml_roundtrip() {
+    fn from_toml_roundtrip() -> anyhow::Result<()> {
         let doc = TomlDoc::parse(
             r#"
             seed = 7
@@ -450,9 +614,8 @@ mod tests {
             [comm]
             drop_prob = 0.3
             "#,
-        )
-        .unwrap();
-        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        )?;
+        let cfg = ExperimentConfig::from_toml(&doc)?;
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.inner_steps, 50);
@@ -460,13 +623,92 @@ mod tests {
         assert!(!cfg.data.non_iid);
         assert_eq!(cfg.comm.drop_prob, 0.3);
         assert_eq!(cfg.schedule, ComputeSchedule::Ramp { from: 1, to: 4 });
-        match cfg.outer_opt {
-            OuterOptConfig::Adam { lr, eps, .. } => {
-                assert!((lr - 0.3).abs() < 1e-6);
-                assert!((eps - 0.1).abs() < 1e-6);
+        // Unparsed sections keep their defaults.
+        assert_eq!(cfg.stream, StreamConfig::default());
+        // A wrong optimizer variant is a proper error, not a test panic —
+        // mirrors how config validation reports through anyhow.
+        let OuterOptConfig::Adam { lr, eps, .. } = cfg.outer_opt else {
+            anyhow::bail!("wrong opt {:?}", cfg.outer_opt.name());
+        };
+        assert!((lr - 0.3).abs() < 1e-6);
+        assert!((eps - 0.1).abs() < 1e-6);
+        Ok(())
+    }
+
+    #[test]
+    fn from_toml_stream_section() -> anyhow::Result<()> {
+        let doc = TomlDoc::parse(
+            "[stream]\nfragments = 4\nschedule = \"staggered\"\ncodec = \"q8\"",
+        )?;
+        let cfg = ExperimentConfig::from_toml(&doc)?;
+        assert_eq!(
+            cfg.stream,
+            StreamConfig {
+                fragments: 4,
+                schedule: SyncSchedule::Staggered,
+                codec: Codec::Q8,
             }
-            other => panic!("wrong opt {other:?}"),
+        );
+        assert!(!cfg.stream.is_monolithic());
+        assert!(ExperimentConfig::paper_default("a", "nano")
+            .stream
+            .is_monolithic());
+        Ok(())
+    }
+
+    #[test]
+    fn from_toml_rejects_malformed_stream_section() {
+        // Negative paths surface as anyhow errors through validate(),
+        // never as panics.
+        for bad in [
+            "[stream]\nfragments = 0",
+            "[stream]\ncodec = \"q4\"",
+            "[stream]\nschedule = \"round-robin\"",
+            "[stream]\nfragments = -3",
+            // Pruning composes with the f32 codec only.
+            "[diloco]\nprune_frac = 0.5\n[stream]\ncodec = \"q8\"",
+        ] {
+            let Ok(doc) = TomlDoc::parse(bad) else { continue };
+            let err = ExperimentConfig::from_toml(&doc)
+                .expect_err(&format!("{bad:?} must be rejected"));
+            assert!(!format!("{err:#}").is_empty());
         }
+    }
+
+    #[test]
+    fn stream_cli_mini_language() {
+        let s = StreamConfig::parse("fragments=4,schedule=staggered,codec=q8").unwrap();
+        assert_eq!(s.fragments, 4);
+        assert_eq!(s.schedule, SyncSchedule::Staggered);
+        assert_eq!(s.codec, Codec::Q8);
+        // Partial specs keep defaults.
+        let s = StreamConfig::parse("codec=f16").unwrap();
+        assert_eq!(s.fragments, 1);
+        assert_eq!(s.schedule, SyncSchedule::EveryRound);
+        assert_eq!(s.codec, Codec::F16);
+        assert!(StreamConfig::parse("fragments=0").is_err());
+        assert!(StreamConfig::parse("fragments=two").is_err());
+        assert!(StreamConfig::parse("bogus=1").is_err());
+        assert!(StreamConfig::parse("fragments").is_err());
+    }
+
+    #[test]
+    fn sync_schedule_fragments_due() {
+        let every = SyncSchedule::EveryRound;
+        assert_eq!(every.fragments_due(5, 3), vec![0, 1, 2]);
+        assert!(!every.defers_barrier());
+        let stag = SyncSchedule::Staggered;
+        assert_eq!(stag.fragments_due(0, 4), vec![0]);
+        assert_eq!(stag.fragments_due(6, 4), vec![2]);
+        assert_eq!(stag.fragments_due(3, 1), vec![0]);
+        let over = SyncSchedule::Overlapped;
+        assert_eq!(over.fragments_due(1, 2), vec![0, 1]);
+        assert!(over.defers_barrier());
+        // Parse round-trips every schedule name.
+        for s in [every, stag, over] {
+            assert_eq!(SyncSchedule::parse(s.name()).unwrap(), s);
+        }
+        assert!(SyncSchedule::parse("sometimes").is_err());
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! is beneficial).
 
 use crate::runtime::Tensors;
+use crate::util::math;
 
 /// Weighted average of deltas. `weights` need not be normalized; they are
 /// divided by their sum. Panics on empty input or all-zero weights.
@@ -25,6 +26,25 @@ pub fn weighted_average(deltas: &[Tensors], weights: &[f64]) -> Tensors {
 /// Uniform average.
 pub fn average(deltas: &[Tensors]) -> Tensors {
     weighted_average(deltas, &vec![1.0; deltas.len()])
+}
+
+/// Weighted average of flat fragment payloads — the streaming fabric's
+/// per-fragment reduction. Performs the *same* scalar operations in the
+/// same order as [`weighted_average`] (normalize, scale the first
+/// payload, axpy the rest), so a single fragment covering the whole
+/// parameter space reproduces the monolithic average bitwise — the
+/// property tests below pin that equivalence.
+pub fn weighted_average_flat(payloads: &[Vec<f32>], weights: &[f64]) -> Vec<f32> {
+    assert!(!payloads.is_empty(), "no fragment payloads to average");
+    assert_eq!(payloads.len(), weights.len());
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "all-zero averaging weights");
+    let mut acc = payloads[0].clone();
+    math::scale(&mut acc, (weights[0] / total) as f32);
+    for (p, &w) in payloads[1..].iter().zip(&weights[1..]) {
+        math::axpy(&mut acc, (w / total) as f32, p);
+    }
+    acc
 }
 
 #[cfg(test)]
@@ -85,6 +105,71 @@ mod tests {
             let b = average(&reversed);
             for (x, y) in a.iter_flat().zip(b.iter_flat()) {
                 assert!((x - y).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_single_fragment_average_matches_legacy_bitwise() {
+        // The streaming fabric's P = 1 path must be indistinguishable
+        // from the monolithic average — exact bit equality, not toleranced.
+        check("flat average (P=1) == legacy average bitwise", 60, |g| {
+            let k = g.usize_in(1..6);
+            let len = g.usize_in(1..40);
+            let deltas: Vec<Tensors> = (0..k)
+                .map(|_| {
+                    let mut v = g.f32_vec(len..len + 1, 3.0);
+                    v.resize(len, 0.0);
+                    t(&v)
+                })
+                .collect();
+            let weights: Vec<f64> =
+                (0..k).map(|_| g.f64_in(0.1..5.0)).collect();
+            let legacy = weighted_average(&deltas, &weights);
+            let payloads: Vec<Vec<f32>> = deltas
+                .iter()
+                .map(|d| d.iter_flat().collect())
+                .collect();
+            let flat = weighted_average_flat(&payloads, &weights);
+            let legacy_flat: Vec<f32> = legacy.iter_flat().collect();
+            assert_eq!(flat.len(), legacy_flat.len());
+            for (a, b) in flat.iter().zip(&legacy_flat) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_fragmented_average_assembles_to_legacy_bitwise() {
+        // Splitting the parameter space into P fragments, averaging each
+        // independently, and reassembling must equal the monolithic
+        // average bitwise when every fragment has the same contributors.
+        use crate::comm::fragment::FragmentPlan;
+        check("per-fragment average assembles to legacy", 40, |g| {
+            let k = g.usize_in(1..5);
+            let len = g.usize_in(2..40);
+            let p = g.usize_in(1..8);
+            let deltas: Vec<Tensors> = (0..k)
+                .map(|_| {
+                    let mut v = g.f32_vec(len..len + 1, 2.0);
+                    v.resize(len, 0.0);
+                    t(&v)
+                })
+                .collect();
+            let weights: Vec<f64> =
+                (0..k).map(|_| g.f64_in(0.1..5.0)).collect();
+            let legacy = weighted_average(&deltas, &weights);
+            let plan = FragmentPlan::for_tensors(&deltas[0], p);
+            let mut assembled = deltas[0].clone();
+            assembled.scale(0.0);
+            for f in 0..plan.n_fragments() {
+                let payloads: Vec<Vec<f32>> =
+                    deltas.iter().map(|d| plan.extract(d, f)).collect();
+                let avg = weighted_average_flat(&payloads, &weights);
+                plan.scatter(&avg, f, &mut assembled);
+            }
+            for (a, b) in assembled.iter_flat().zip(legacy.iter_flat()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
             }
         });
     }

@@ -9,11 +9,16 @@
 //! executor, so islands run on real OS threads under `ParallelIslands`
 //! with bitwise-identical results to the sequential reference path (see
 //! DESIGN.md §determinism); outer gradients are optionally sign-pruned (Table 6),
-//! shipped over the simulated fabric with drop injection (Fig 8),
-//! weighted-averaged (§6.1), and applied by the outer optimizer (Fig 6).
-//! Fresh parameters are re-dispatched to every worker that communicated;
-//! a worker whose upload dropped keeps training from its own parameters,
-//! exactly as the paper specifies.
+//! split into the streaming fabric's fragments ([`crate::comm::fragment`]),
+//! encoded by the configured codec ([`crate::comm::codec`]), shipped over
+//! the simulated fabric with per-fragment drop injection (Fig 8),
+//! weighted-averaged per fragment (§6.1), and applied through the outer
+//! optimizer's per-fragment state (Fig 6). Fresh fragment values are
+//! re-dispatched to every worker that landed them; a fragment whose
+//! upload dropped keeps training from the worker's own parameters,
+//! exactly as the paper specifies — with one fragment (the default) this
+//! is classic DiLoCo, bitwise identical to the pre-streaming loop
+//! (DESIGN.md §8 documents the streaming layer and its schedules).
 
 pub mod average;
 pub mod baselines;
@@ -21,7 +26,9 @@ pub mod opt;
 pub mod prune;
 pub mod stats;
 
-use crate::comm::{Direction, SimNet};
+use crate::comm::codec::Codec;
+use crate::comm::fragment::FragmentPlan;
+use crate::comm::{Direction, RoundComm, SimNet};
 use crate::config::ExperimentConfig;
 use crate::data::batch::{BatchIter, EvalSet};
 use crate::data::Dataset;
@@ -39,8 +46,12 @@ pub struct DilocoReport {
     pub metrics: RunMetrics,
     pub round_stats: Vec<RoundStats>,
     pub final_params: Tensors,
-    /// Rounds in which each worker's outer gradient was dropped.
+    /// Rounds in which at least one of each worker's fragment uploads
+    /// was dropped (with one fragment: rounds the outer gradient
+    /// dropped, as before).
     pub drops_per_worker: Vec<usize>,
+    /// Fabric billing per round, in round order (golden-trace input).
+    pub comm_per_round: Vec<RoundComm>,
 }
 
 pub struct Coordinator {
@@ -224,9 +235,24 @@ impl Coordinator {
                 w
             })
             .collect();
-        // Workers desynced by a dropped upload keep local params (Fig 8).
-        let mut synced = vec![true; max_k];
+        // Streaming partial-sync plan: the parameter space split into P
+        // fragments (P = 1 ⇒ the monolithic pre-streaming hot path,
+        // bitwise identical — the golden-trace suite pins it).
+        let plan = FragmentPlan::for_tensors(&zeros, cfg.stream.fragments);
+        let n_frag = plan.n_fragments();
+        let codec = cfg.stream.codec;
+        // refs[w] — the last global values worker w adopted, per
+        // fragment: the baseline its outer gradient is measured against.
+        let mut refs: Vec<Tensors> = (0..max_k).map(|_| global.clone()).collect();
+        // pending_adopt[w][f] — worker w re-adopts the current global
+        // fragment f at its next active round (all true initially: every
+        // worker starts synced, exactly as the monolithic loop did).
+        let mut pending_adopt: Vec<Vec<bool>> = vec![vec![true; n_frag]; max_k];
         let mut drops_per_worker = vec![0usize; max_k];
+        // Transfer time deferred into the next inner phase (overlapped
+        // schedule); 0.0 under barrier schedules.
+        let mut carry_comm_s = 0.0f64;
+        let mut codec_err_sq_total = 0.0f64;
 
         let mut net = SimNet::new(
             cfg.comm.bandwidth_bps,
@@ -240,91 +266,196 @@ impl Coordinator {
 
         for t in 0..cfg.rounds {
             let k_t = cfg.schedule.workers_at(t, cfg.rounds).min(max_k).max(1);
+            let due = cfg.stream.schedule.fragments_due(t, n_frag);
             let active = &mut workers[..k_t];
 
-            // Re-dispatch θ(t-1) to synced workers; desynced ones continue
-            // from their own parameters.
-            let mut starts: Vec<Tensors> = Vec::with_capacity(k_t);
+            // Re-dispatch: every fragment whose sync the worker completed
+            // adopts the current global values; other fragments keep the
+            // worker's local progress (Fig 8 desync, and between-sync
+            // drift under the staggered schedule).
             for w in active.iter_mut() {
-                if synced[w.id] {
-                    w.set_params(global.clone());
+                let pa = &mut pending_adopt[w.id];
+                for (f, flag) in pa.iter_mut().enumerate() {
+                    if *flag {
+                        plan.copy_fragment(&global, &mut w.params, f);
+                        plan.copy_fragment(&global, &mut refs[w.id], f);
+                        *flag = false;
+                    }
                 }
-                starts.push(w.params.clone());
             }
 
             // Inner phase: H steps per active worker, dispatched through
             // the engine (real threads under ParallelIslands). Losses are
             // averaged across workers per step index, folding in worker
-            // order regardless of which island finished first.
+            // order regardless of which island finished first. A deferred
+            // transfer from the previous round overlaps this phase.
             let phase =
                 engine::run_inner_phase(self.exec.as_ref(), &self.rt, active, cfg.inner_steps)?;
-            metrics.sim_compute_seconds += phase.max_compute_s();
+            metrics.sim_compute_seconds += phase.overlapped_compute_s(carry_comm_s);
+            carry_comm_s = 0.0;
             metrics.phases.inner_compute_s += phase.total_wall_s();
             for s in 0..cfg.inner_steps {
                 let avg = phase.per_worker_losses.iter().map(|l| l[s]).sum::<f32>() / k_t as f32;
                 metrics.loss_curve.push(avg);
             }
 
-            // Communication phase: prune, upload (drops possible), average.
+            // Communication phase: prune, encode + upload each due
+            // fragment (per-fragment keyed drops), average per fragment.
             let _outer_timer = Stopwatch::new(&mut metrics.phases.outer_opt_s);
-            let mut received: Vec<Tensors> = Vec::with_capacity(k_t);
-            let mut weights: Vec<f64> = Vec::with_capacity(k_t);
-            let mut uploaded = vec![false; k_t];
-            for (i, w) in active.iter_mut().enumerate() {
-                let mut delta = starts[i].delta(&w.params);
-                let bytes = if cfg.prune_frac > 0.0 {
+            if k_t > 1 {
+                metrics.comm_bytes_up_baseline += k_t as u64 * payload;
+            }
+            // Per due fragment: received payloads + weights, worker order.
+            let mut frag_rx: Vec<Vec<Vec<f32>>> = vec![Vec::new(); due.len()];
+            let mut frag_wts: Vec<Vec<f64>> = vec![Vec::new(); due.len()];
+            // sent[i][di] — worker i landed due fragment di this round.
+            let mut sent = vec![vec![false; due.len()]; k_t];
+            // Full (fragment-assembled) deltas of contributing workers,
+            // for the round's cosine/norm statistics.
+            let mut received_assembled: Vec<Tensors> = Vec::new();
+            let mut codec_err_sq = 0.0f64;
+            for (i, w) in active.iter().enumerate() {
+                let mut delta = refs[w.id].delta(&w.params);
+                // Sign-pruning (Table 6) applies to the whole outer
+                // gradient before fragmenting; each fragment bills its
+                // proportional share of the pruned payload (exact at P=1).
+                let pruned_payload = if cfg.prune_frac > 0.0 {
                     let zeroed = prune::prune_sign(&mut delta, cfg.prune_frac);
-                    prune::pruned_payload_bytes(delta.total_elements(), zeroed)
+                    Some(prune::pruned_payload_bytes(delta.total_elements(), zeroed))
                 } else {
-                    payload
+                    None
                 };
-                // k=1 "accelerating a single worker" (Fig 9): the outer
-                // step is local, nothing crosses the fabric. Uploads are
-                // keyed by (round, worker) so drop outcomes don't depend
-                // on arrival order.
-                let ok = if k_t == 1 {
-                    true
+                let weight = if cfg.weighted_average && cfg.data.non_iid {
+                    self.dataset.shard_doc_counts
+                        [w.id % self.dataset.shard_doc_counts.len()]
+                        as f64
                 } else {
-                    net.try_send(bytes, Direction::Up, t, w.id)
+                    1.0
                 };
-                if ok {
-                    uploaded[i] = true;
-                    received.push(delta);
-                    weights.push(if cfg.weighted_average && cfg.data.non_iid {
-                        self.dataset.shard_doc_counts
-                            [w.id % self.dataset.shard_doc_counts.len()]
-                            as f64
+                // With the exact f32 codec the received values ARE the
+                // delta's, so the stats tensor can reuse `delta` instead
+                // of being re-assembled (the default hot path moves it,
+                // exactly like the pre-streaming loop did).
+                let lossless = codec == Codec::F32 || k_t == 1;
+                let mut assembled: Option<Tensors> = None;
+                let mut dropped_any = false;
+                for (di, &f) in due.iter().enumerate() {
+                    let mut vals = plan.extract(&delta, f);
+                    // k=1 "accelerating a single worker" (Fig 9): the
+                    // outer step is local, nothing crosses the fabric —
+                    // no codec, no billing, no drops.
+                    let err_sq = if k_t == 1 {
+                        0.0
                     } else {
-                        1.0
-                    });
-                } else {
+                        codec.transcode(&mut vals, plan.slices(f))
+                    };
+                    let bytes = match pruned_payload {
+                        Some(total) => {
+                            total * plan.elements(f) as u64
+                                / plan.total_elements() as u64
+                        }
+                        None => codec
+                            .encoded_bytes(plan.elements(f), plan.slices(f).len()),
+                    };
+                    let ok = if k_t == 1 {
+                        true
+                    } else {
+                        net.try_send_fragment(bytes, Direction::Up, t, w.id, f)
+                    };
+                    if ok {
+                        codec_err_sq += err_sq;
+                        if !lossless {
+                            let a = assembled.get_or_insert_with(|| zeros.clone());
+                            plan.scatter(&vals, f, a);
+                        }
+                        frag_rx[di].push(vals);
+                        frag_wts[di].push(weight);
+                        sent[i][di] = true;
+                    } else {
+                        dropped_any = true;
+                        // The worker keeps training this fragment from
+                        // its own parameters; rebase its reference so the
+                        // next upload covers only post-drop progress —
+                        // the monolithic Fig-8 semantics, per fragment.
+                        plan.copy_fragment(&w.params, &mut refs[w.id], f);
+                    }
+                }
+                if dropped_any {
                     drops_per_worker[w.id] += 1;
+                }
+                let sent_any = sent[i].iter().any(|&s| s);
+                if sent_any {
+                    let a = match assembled {
+                        Some(a) => a,
+                        None if !dropped_any && due.len() == n_frag => delta,
+                        None => {
+                            // Lossless but partial: keep only the
+                            // fragments that actually landed.
+                            let mut a = zeros.clone();
+                            for (di, &f) in due.iter().enumerate() {
+                                if sent[i][di] {
+                                    plan.copy_fragment(&delta, &mut a, f);
+                                }
+                            }
+                            a
+                        }
+                    };
+                    received_assembled.push(a);
                 }
             }
 
-            if !received.is_empty() {
-                let avg = average::weighted_average(&received, &weights);
-                round_stats.push(stats::round_stats(t, &received, &avg));
-                outer.step(&mut global, &avg);
+            // Outer step, one fragment at a time: each synced fragment is
+            // averaged over its own contributors and applied through its
+            // own slice of the outer-optimizer state.
+            let mut fragments_synced = 0usize;
+            let mut avg_assembled: Option<Tensors> = None;
+            for (di, &f) in due.iter().enumerate() {
+                if frag_rx[di].is_empty() {
+                    continue;
+                }
+                let avg = average::weighted_average_flat(&frag_rx[di], &frag_wts[di]);
+                outer.step_fragment(&mut global, &avg, plan.slices(f), f);
+                plan.scatter(&avg, f, avg_assembled.get_or_insert_with(|| zeros.clone()));
+                fragments_synced += 1;
+            }
+            if let Some(avg) = &avg_assembled {
+                let mut rs = stats::round_stats(t, &received_assembled, avg);
+                rs.fragments_synced = fragments_synced;
+                rs.codec_err_l2 = codec_err_sq.sqrt();
+                round_stats.push(rs);
+                codec_err_sq_total += codec_err_sq;
                 anyhow::ensure!(
                     global.all_finite(),
                     "outer step produced non-finite parameters at round {t}"
                 );
             }
 
-            // Download: workers that communicated get θ(t); others stay
-            // desynced until their next successful round.
+            // Download: every fragment a worker landed comes back as
+            // fresh global values (adopted at its next active round);
+            // fragments it lost stay desynced until their next
+            // successful sync. Broadcasts are full-precision.
             for (i, w) in active.iter().enumerate() {
-                if uploaded[i] {
-                    if k_t > 1 {
-                        net.send_reliable(payload, Direction::Down);
+                for (di, &f) in due.iter().enumerate() {
+                    if sent[i][di] {
+                        if k_t > 1 {
+                            net.send_reliable_to(
+                                4 * plan.elements(f) as u64,
+                                Direction::Down,
+                                w.id,
+                            );
+                        }
+                        pending_adopt[w.id][f] = true;
                     }
-                    synced[w.id] = true;
-                } else {
-                    synced[w.id] = false;
                 }
             }
-            net.end_round();
+            // Overlapped rounds defer their transfer into the next inner
+            // phase; the final round has no next phase, so it closes as
+            // a normal barrier and its billing row says so.
+            if cfg.stream.schedule.defers_barrier() && t + 1 < cfg.rounds {
+                carry_comm_s = net.end_round_deferred();
+            } else {
+                net.end_round();
+            }
             drop(_outer_timer);
 
             // Evaluation of the *global* model.
@@ -344,12 +475,14 @@ impl Coordinator {
         metrics.comm_messages = cs.messages;
         metrics.comm_dropped = cs.dropped;
         metrics.sim_comm_seconds = cs.sim_comm_seconds;
+        metrics.codec_err_l2 = codec_err_sq_total.sqrt();
 
         Ok(DilocoReport {
             metrics,
             round_stats,
             final_params: global,
             drops_per_worker,
+            comm_per_round: cs.per_round.clone(),
         })
     }
 }

@@ -11,6 +11,16 @@
 //! artifact implements the same Nesterov recurrence and is cross-checked
 //! against this module in the integration tests.
 
+//! **Streaming fragments.** Under the streaming fabric every fragment is
+//! its own outer-optimization problem: [`OuterOpt::step_fragment`]
+//! applies the update to one fragment's slice of the parameter space
+//! only, touching only that slice of the momentum / Adam state, with a
+//! per-fragment step counter for Adam bias correction (fragments sync at
+//! different cadences under the staggered schedule). The monolithic
+//! [`OuterOpt::step`] is fragment 0 covering everything, and performs
+//! bit-identical arithmetic to the pre-streaming implementation.
+
+use crate::comm::fragment::LeafSlice;
 use crate::config::OuterOptConfig;
 use crate::runtime::Tensors;
 
@@ -33,7 +43,9 @@ pub enum OuterOpt {
         b1: f32,
         b2: f32,
         eps: f32,
-        t: u64,
+        /// Per-fragment step counts (index = fragment id) for bias
+        /// correction; grown on demand.
+        t: Vec<u64>,
         m: Tensors,
         v: Tensors,
     },
@@ -55,7 +67,7 @@ impl OuterOpt {
                 b1,
                 b2,
                 eps,
-                t: 0,
+                t: Vec::new(),
                 m: zeros.clone(),
                 v: zeros.clone(),
             },
@@ -63,44 +75,86 @@ impl OuterOpt {
     }
 
     /// Apply one outer update in place: `params ← params - update(delta)`.
+    /// The monolithic path — fragment 0 spanning every parameter leaf.
     pub fn step(&mut self, params: &mut Tensors, delta: &Tensors) {
+        let slices: Vec<LeafSlice> = params
+            .leaves()
+            .iter()
+            .enumerate()
+            .map(|(leaf, l)| LeafSlice { leaf, start: 0, end: l.len() })
+            .collect();
+        let flat: Vec<f32> = delta.iter_flat().collect();
+        self.step_fragment(params, &flat, &slices, 0);
+    }
+
+    /// Apply one outer update to the parameter slices of a single
+    /// fragment, using that fragment's slice of the optimizer state.
+    /// `avg` is the fragment's averaged outer gradient, flattened in
+    /// slice order. Elementwise arithmetic matches the pre-streaming
+    /// whole-tensor implementation exactly (same scalar ops, same
+    /// per-element order), so a full-coverage fragment is bitwise
+    /// identical to the legacy `step`.
+    pub fn step_fragment(
+        &mut self,
+        params: &mut Tensors,
+        avg: &[f32],
+        slices: &[LeafSlice],
+        fragment: usize,
+    ) {
+        debug_assert_eq!(
+            avg.len(),
+            slices.iter().map(|s| s.len()).sum::<usize>(),
+            "payload does not tile the fragment"
+        );
         match self {
             OuterOpt::Sgd { lr } => {
-                params.axpy(-*lr, delta);
+                let c = -*lr;
+                for_slices(params, slices, avg, |p, d| *p += c * d);
             }
             OuterOpt::SgdM { lr, mu, mom } => {
                 // Heavy ball: mom ← μ·mom + Δ; θ ← θ - lr·mom
-                mom.scale(*mu);
-                mom.axpy(1.0, delta);
-                params.axpy(-*lr, mom);
+                let (mu, c) = (*mu, -*lr);
+                for_slices2(params, mom, slices, avg, |p, m, d| {
+                    *m *= mu;
+                    *m += 1.0 * d;
+                    *p += c * *m;
+                });
             }
             OuterOpt::Nesterov { lr, mu, mom } => {
                 // PyTorch convention (matches kernels/ref.py):
                 // mom ← μ·mom + Δ; θ ← θ - lr·(Δ + μ·mom)
-                mom.scale(*mu);
-                mom.axpy(1.0, delta);
-                params.axpy(-*lr, delta);
-                params.axpy(-*lr * *mu, mom);
+                let (mu, c1, c2) = (*mu, -*lr, -*lr * *mu);
+                for_slices2(params, mom, slices, avg, |p, m, d| {
+                    *m *= mu;
+                    *m += 1.0 * d;
+                    *p += c1 * d;
+                    *p += c2 * *m;
+                });
             }
             OuterOpt::Adam { lr, b1, b2, eps, t, m, v } => {
-                *t += 1;
-                let bc1 = 1.0 - (*b1 as f64).powi(*t as i32);
-                let bc2 = 1.0 - (*b2 as f64).powi(*t as i32);
-                for ((p_leaf, m_leaf), (v_leaf, d_leaf)) in params
-                    .leaves_mut()
-                    .iter_mut()
-                    .zip(m.leaves_mut())
-                    .zip(v.leaves_mut().iter_mut().zip(delta.leaves()))
-                {
-                    for i in 0..p_leaf.len() {
-                        let g = d_leaf[i];
-                        m_leaf[i] = *b1 * m_leaf[i] + (1.0 - *b1) * g;
-                        v_leaf[i] = *b2 * v_leaf[i] + (1.0 - *b2) * g * g;
+                if t.len() <= fragment {
+                    t.resize(fragment + 1, 0);
+                }
+                t[fragment] += 1;
+                let steps = t[fragment];
+                let bc1 = 1.0 - (*b1 as f64).powi(steps as i32);
+                let bc2 = 1.0 - (*b2 as f64).powi(steps as i32);
+                let (lr, b1, b2, eps) = (*lr, *b1, *b2, *eps);
+                let mut off = 0usize;
+                for s in slices {
+                    let p_leaf = &mut params.leaves_mut()[s.leaf];
+                    let m_leaf = &mut m.leaves_mut()[s.leaf];
+                    let v_leaf = &mut v.leaves_mut()[s.leaf];
+                    for (j, i) in (s.start..s.end).enumerate() {
+                        let g = avg[off + j];
+                        m_leaf[i] = b1 * m_leaf[i] + (1.0 - b1) * g;
+                        v_leaf[i] = b2 * v_leaf[i] + (1.0 - b2) * g * g;
                         let m_hat = m_leaf[i] as f64 / bc1;
                         let v_hat = v_leaf[i] as f64 / bc2;
                         p_leaf[i] -=
-                            (*lr as f64 * m_hat / (v_hat.sqrt() + *eps as f64)) as f32;
+                            (lr as f64 * m_hat / (v_hat.sqrt() + eps as f64)) as f32;
                     }
+                    off += s.len();
                 }
             }
         }
@@ -113,6 +167,43 @@ impl OuterOpt {
             OuterOpt::Nesterov { .. } => "nesterov",
             OuterOpt::Adam { .. } => "adam",
         }
+    }
+}
+
+/// Visit `f(param, avg)` over every fragment element, in slice order.
+fn for_slices(
+    params: &mut Tensors,
+    slices: &[LeafSlice],
+    avg: &[f32],
+    mut f: impl FnMut(&mut f32, f32),
+) {
+    let mut off = 0usize;
+    for s in slices {
+        let p = &mut params.leaves_mut()[s.leaf][s.start..s.end];
+        for (pi, &d) in p.iter_mut().zip(&avg[off..off + s.len()]) {
+            f(pi, d);
+        }
+        off += s.len();
+    }
+}
+
+/// As [`for_slices`], with a second tensor tree (optimizer state).
+fn for_slices2(
+    params: &mut Tensors,
+    state: &mut Tensors,
+    slices: &[LeafSlice],
+    avg: &[f32],
+    mut f: impl FnMut(&mut f32, &mut f32, f32),
+) {
+    let mut off = 0usize;
+    for s in slices {
+        let n = s.len();
+        let p_leaf = &mut params.leaves_mut()[s.leaf];
+        let s_leaf = &mut state.leaves_mut()[s.leaf];
+        for (j, i) in (s.start..s.end).enumerate() {
+            f(&mut p_leaf[i], &mut s_leaf[i], avg[off + j]);
+        }
+        off += n;
     }
 }
 
@@ -217,6 +308,82 @@ mod tests {
         for (x, g) in p.iter_flat().zip([0.5f32, -0.5, 2.0, -2.0]) {
             assert!((x + 0.3 * g.signum()).abs() < 1e-4, "{x} vs {}", g.signum());
         }
+    }
+
+    #[test]
+    fn prop_fragment_steps_assemble_to_monolithic_bitwise() {
+        // Applying each fragment's slice of the averaged delta through
+        // step_fragment must equal one monolithic step bitwise, for
+        // every optimizer, over several rounds (momentum state carries).
+        use crate::comm::fragment::FragmentPlan;
+        check("Σ fragment steps == monolithic step", 30, |g| {
+            let len = g.usize_in(2..40);
+            let n = if len % 2 == 1 { len + 1 } else { len };
+            let init: Vec<f32> = g.f32_vec(n..n + 1, 2.0);
+            let mut init = init;
+            init.resize(n, 0.0);
+            let p = g.usize_in(1..6);
+            for cfg in [
+                OuterOptConfig::Sgd { lr: 0.5 },
+                OuterOptConfig::SgdM { lr: 0.5, mu: 0.8 },
+                OuterOptConfig::Nesterov { lr: 0.7, mu: 0.9 },
+                OuterOptConfig::Adam { lr: 0.3, b1: 0.9, b2: 0.95, eps: 0.1 },
+            ] {
+                let mut mono = tensors_from(&init);
+                let mut frag = mono.clone();
+                let mut z = mono.clone();
+                z.scale(0.0);
+                let mut opt_mono = OuterOpt::new(&cfg, &z);
+                let mut opt_frag = OuterOpt::new(&cfg, &z);
+                let plan = FragmentPlan::for_tensors(&mono, p);
+                for _round in 0..3 {
+                    let mut d = g.f32_vec(n..n + 1, 1.0);
+                    d.resize(n, 0.0);
+                    let delta = tensors_from(&d);
+                    opt_mono.step(&mut mono, &delta);
+                    // Every fragment steps once per round, so each
+                    // per-fragment Adam counter matches the monolithic t.
+                    for f in 0..plan.n_fragments() {
+                        let payload = plan.extract(&delta, f);
+                        opt_frag.step_fragment(&mut frag, &payload, plan.slices(f), f);
+                    }
+                }
+                for (a, b) in mono.iter_flat().zip(frag.iter_flat()) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{}: {a} != {b}",
+                        opt_mono.name()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn adam_bias_correction_is_per_fragment() {
+        // Fragment 1 stepping for the first time must get first-step
+        // bias correction even after fragment 0 has stepped many times
+        // (staggered schedules sync fragments at different cadences).
+        use crate::comm::fragment::LeafSlice;
+        let mut p = tensors_from(&[0.0, 0.0, 0.0, 0.0]);
+        let mut z = p.clone();
+        z.scale(0.0);
+        let cfg = OuterOptConfig::Adam { lr: 0.3, b1: 0.9, b2: 0.999, eps: 1e-8 };
+        let mut opt = OuterOpt::new(&cfg, &z);
+        // p has two leaves of 2; fragment 0 = leaf 0, fragment 1 = leaf 1.
+        let f0 = [LeafSlice { leaf: 0, start: 0, end: 2 }];
+        let f1 = [LeafSlice { leaf: 1, start: 0, end: 2 }];
+        for _ in 0..5 {
+            opt.step_fragment(&mut p, &[0.5, 0.5], &f0, 0);
+        }
+        opt.step_fragment(&mut p, &[0.5, 0.5], &f1, 1);
+        // First Adam step ⇒ update ≈ lr·sign(g) on fragment 1.
+        let got: Vec<f32> = p.iter_flat().collect();
+        assert!((got[2] + 0.3).abs() < 1e-4, "{}", got[2]);
+        assert!((got[3] + 0.3).abs() < 1e-4, "{}", got[3]);
+        // Fragment 0 advanced 5 steps and moved further.
+        assert!(got[0] < got[2], "{} vs {}", got[0], got[2]);
     }
 
     #[test]

@@ -5,7 +5,9 @@ use crate::runtime::Tensors;
 use crate::util::math;
 
 /// Mean ± stddev of cosine similarity over all worker pairs, and the
-/// norm of the averaged delta — one record per round.
+/// norm of the averaged delta — one record per round. Under the
+/// streaming fabric the deltas cover only the round's synced fragments
+/// (zero elsewhere), and the codec fields account for lossy encoding.
 #[derive(Clone, Copy, Debug)]
 pub struct RoundStats {
     pub round: usize,
@@ -13,6 +15,13 @@ pub struct RoundStats {
     pub cos_std: f64,
     pub avg_delta_norm: f64,
     pub per_worker_norm_mean: f64,
+    /// How many fragments completed an outer step this round (1 for the
+    /// monolithic default; < P under drops or a staggered schedule).
+    pub fragments_synced: usize,
+    /// Deterministic L2 norm of the dequantization error introduced by
+    /// the outer-gradient codec across every payload received this
+    /// round; exactly 0.0 for the f32 codec.
+    pub codec_err_l2: f64,
 }
 
 /// Pairwise cosine similarities among deltas (k·(k-1)/2 values).
@@ -36,6 +45,10 @@ pub fn round_stats(round: usize, deltas: &[Tensors], avg: &Tensors) -> RoundStat
         cos_std: math::stddev(&cosines),
         avg_delta_norm: avg.l2_norm(),
         per_worker_norm_mean: math::mean(&norms),
+        // The coordinator overwrites these with the round's streaming
+        // outcome; defaults describe a lossless monolithic sync.
+        fragments_synced: 1,
+        codec_err_l2: 0.0,
     }
 }
 

@@ -164,6 +164,15 @@ impl InnerPhaseReport {
     pub fn total_wall_s(&self) -> f64 {
         self.per_worker_wall_s.iter().sum()
     }
+
+    /// Simulated cost of this phase when a deferred transfer from the
+    /// previous round's streaming sync is still in flight (Streaming
+    /// DiLoCo's overlapped schedule): communication hides behind
+    /// compute, so the phase costs whichever is slower. With no carry
+    /// (`0.0`) this is exactly [`Self::max_compute_s`].
+    pub fn overlapped_compute_s(&self, in_flight_comm_s: f64) -> f64 {
+        self.max_compute_s().max(in_flight_comm_s)
+    }
 }
 
 /// Run `h` inner steps on every worker through `exec`, reducing timing
@@ -327,6 +336,11 @@ mod tests {
         }
         assert_eq!(report.max_compute_s(), 5.0);
         assert_eq!(report.total_wall_s(), 7.0);
+        // Overlap accounting: in-flight comm hides behind compute until
+        // it exceeds the slowest island, then dominates the phase.
+        assert_eq!(report.overlapped_compute_s(0.0), 5.0);
+        assert_eq!(report.overlapped_compute_s(3.0), 5.0);
+        assert_eq!(report.overlapped_compute_s(9.0), 9.0);
     }
 
     #[test]

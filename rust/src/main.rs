@@ -12,7 +12,7 @@
 //!   diloco data --topics 8 --docs 400 --workers 8 --non-iid
 
 use diloco::config::toml::TomlDoc;
-use diloco::config::{EngineConfig, ExperimentConfig};
+use diloco::config::{EngineConfig, ExperimentConfig, StreamConfig};
 use diloco::coordinator::Coordinator;
 use diloco::data::Dataset;
 use diloco::engine::InnerPhaseExecutor as _;
@@ -82,6 +82,8 @@ fn print_help() {
          USAGE: diloco <train|eval|data|inspect> [--flags]\n\n\
          train   --config <exp.toml> [--out runs/] [--ckpt out.ckpt]\n\
          \x20       [--engine auto|sequential|parallel] [--threads N]\n\
+         \x20       [--stream fragments=4,schedule=staggered,codec=q8]\n\
+         \x20       (schedules: every-round|staggered|overlapped; codecs: f32|f16|q8)\n\
          eval    --ckpt <file> [--artifacts artifacts] [--model nano]\n\
          data    [--topics 8] [--docs 400] [--workers 8] [--non-iid] [--seed 0]\n\
          inspect [--artifacts artifacts] [--model nano]"
@@ -113,6 +115,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             _ => EngineConfig::Parallel { threads },
         };
     }
+    if let Some(stream) = args.get("stream") {
+        cfg.stream = StreamConfig::parse(stream)?;
+    }
+    cfg.validate()?;
     println!(
         "DiLoCo: model={} k={} H={} T={} pretrain={} outer={} non_iid={} engine={:?}",
         cfg.model,
@@ -124,6 +130,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.data.non_iid,
         cfg.engine
     );
+    if !cfg.stream.is_monolithic() {
+        println!(
+            "stream: fragments={} schedule={} codec={}",
+            cfg.stream.fragments,
+            cfg.stream.schedule.name(),
+            cfg.stream.codec.name()
+        );
+    }
     let rt = Arc::new(Runtime::load(&cfg.artifacts_dir, &cfg.model)?);
     println!(
         "artifacts: {} params, kernels={}, {} artifacts compiled lazily",
@@ -152,6 +166,16 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         m.sim_comm_seconds,
         100.0 * m.phases.overhead_fraction()
     );
+    if !coord.cfg.stream.is_monolithic() {
+        println!(
+            "stream: {:.2} MB up vs {:.2} MB monolithic baseline \
+             ({:.1}x less); codec err L2 {:.3e}",
+            m.comm_bytes_up as f64 / 1e6,
+            m.comm_bytes_up_baseline as f64 / 1e6,
+            m.up_savings_factor(),
+            m.codec_err_l2
+        );
+    }
 
     if let Some(out) = args.get("out") {
         m.write_curves(out)?;

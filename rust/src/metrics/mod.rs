@@ -70,7 +70,16 @@ pub struct RunMetrics {
     pub comm_dropped: u64,
     pub sim_comm_seconds: f64,
     /// Simulated compute seconds (steps × per-step cost on the islands).
+    /// Under the streaming `overlapped` schedule this also absorbs
+    /// transfer time that hid behind compute.
     pub sim_compute_seconds: f64,
+    /// Upload bytes a monolithic full-precision every-round sync would
+    /// have billed for the same run — the denominator of the streaming /
+    /// codec savings factor.
+    pub comm_bytes_up_baseline: u64,
+    /// Total L2 dequantization error introduced by the outer-gradient
+    /// codec across the run (0.0 for f32).
+    pub codec_err_l2: f64,
 }
 
 impl RunMetrics {
@@ -89,6 +98,16 @@ impl RunMetrics {
     /// Simulated wall-clock: compute + communication barriers.
     pub fn sim_wall_seconds(&self) -> f64 {
         self.sim_compute_seconds + self.sim_comm_seconds
+    }
+
+    /// Upload-byte reduction vs a monolithic full-precision every-round
+    /// sync (>1 = streaming/codec saved communication); NaN when no
+    /// baseline was recorded.
+    pub fn up_savings_factor(&self) -> f64 {
+        if self.comm_bytes_up_baseline == 0 || self.comm_bytes_up == 0 {
+            return f64::NAN;
+        }
+        self.comm_bytes_up_baseline as f64 / self.comm_bytes_up as f64
     }
 
     /// Mean of the last `n` inner losses (smoothed terminal loss).
@@ -128,8 +147,10 @@ impl RunMetrics {
         m.insert("final_nll".into(), Json::Num(self.final_nll()));
         m.insert("steps".into(), Json::Num(self.loss_curve.len() as f64));
         m.insert("comm_bytes".into(), Json::Num(self.comm_bytes as f64));
+        m.insert("comm_bytes_up".into(), Json::Num(self.comm_bytes_up as f64));
         m.insert("comm_messages".into(), Json::Num(self.comm_messages as f64));
         m.insert("comm_dropped".into(), Json::Num(self.comm_dropped as f64));
+        m.insert("codec_err_l2".into(), Json::Num(self.codec_err_l2));
         m.insert("sim_wall_s".into(), Json::Num(self.sim_wall_seconds()));
         m.insert(
             "overhead_frac".into(),

@@ -1,0 +1,207 @@
+//! Golden-trace regression suite — the tier-1 safety net for the
+//! default (monolithic, full-precision) sync path.
+//!
+//! `golden_trace_default_config` runs the tiny nano preset for 3 rounds
+//! and asserts the *exact* per-round eval-loss / drop / comm-byte trace
+//! against `tests/golden/diloco_nano_tiny.json`. Floats are serialized
+//! with shortest-roundtrip formatting, so comparison is bit-exact: any
+//! change to the default hot path — averaging order, drop keying,
+//! billing, optimizer arithmetic — trips this test.
+//!
+//! Regeneration (only after an *intentional* trace change, with the diff
+//! reviewed):
+//!
+//! ```text
+//! UPDATE_GOLDEN=1 cargo test --release --test golden_trace -- --ignored
+//! ```
+//!
+//! The suite needs the AOT artifacts (`make artifacts`) and is `#[ignore]`d
+//! so plain `cargo test` stays artifact-free; CI runs it via
+//! `cargo test --release -- --ignored` (see .github/workflows/ci.yml).
+
+use diloco::config::{ComputeSchedule, ExperimentConfig};
+use diloco::coordinator::{Coordinator, DilocoReport};
+use diloco::runtime::Runtime;
+use diloco::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn artifacts_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden"))
+        .join("diloco_nano_tiny.json")
+}
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = artifacts_dir();
+    std::path::Path::new(&dir)
+        .join("nano.manifest.json")
+        .exists()
+        .then(|| Arc::new(Runtime::load(&dir, "nano").unwrap()))
+}
+
+/// The tiny golden preset: 2 workers × 3 rounds × 5 inner steps on nano,
+/// evaluated every round. Deliberately small — the suite must stay fast
+/// enough to run on every push.
+fn tiny_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default(&artifacts_dir(), "nano");
+    cfg.seed = 0;
+    cfg.workers = 2;
+    cfg.schedule = ComputeSchedule::Constant(2);
+    cfg.inner_steps = 5;
+    cfg.rounds = 3;
+    cfg.pretrain_steps = 0;
+    cfg.eval_every_rounds = 1;
+    cfg.eval_batches = 1;
+    cfg.data.n_docs = 60;
+    cfg.data.doc_len = 120;
+    cfg
+}
+
+/// Serialize the per-round trace of a finished run. Every number here is
+/// deterministic given the config seed; floats round-trip bit-exactly
+/// through `util::json`.
+fn trace_json(cfg: &ExperimentConfig, report: &DilocoReport) -> Json {
+    let m = &report.metrics;
+    assert_eq!(m.eval_curve.len(), cfg.rounds, "one eval point per round");
+    assert_eq!(report.comm_per_round.len(), cfg.rounds);
+    let rounds: Vec<Json> = (0..cfg.rounds)
+        .map(|t| {
+            let c = &report.comm_per_round[t];
+            let losses =
+                &m.loss_curve[t * cfg.inner_steps..(t + 1) * cfg.inner_steps];
+            let loss_mean =
+                losses.iter().map(|&x| x as f64).sum::<f64>() / losses.len() as f64;
+            let mut r = BTreeMap::new();
+            r.insert("round".into(), Json::Num(t as f64));
+            r.insert("eval_nll".into(), Json::Num(m.eval_curve[t].mean_nll));
+            r.insert("loss_mean".into(), Json::Num(loss_mean));
+            r.insert("bytes_up".into(), Json::Num(c.bytes_up as f64));
+            r.insert("bytes_down".into(), Json::Num(c.bytes_down as f64));
+            r.insert("messages".into(), Json::Num(c.messages as f64));
+            r.insert("dropped".into(), Json::Num(c.dropped as f64));
+            Json::Obj(r)
+        })
+        .collect();
+    let mut o = BTreeMap::new();
+    o.insert("rounds".into(), Json::Arr(rounds));
+    o.insert("final_param_l2".into(), Json::Num(report.final_params.l2_norm()));
+    o.insert("comm_dropped_total".into(), Json::Num(m.comm_dropped as f64));
+    o.insert(
+        "drops_per_worker".into(),
+        Json::Arr(
+            report
+                .drops_per_worker
+                .iter()
+                .map(|&d| Json::Num(d as f64))
+                .collect(),
+        ),
+    );
+    Json::Obj(o)
+}
+
+fn run_trace(cfg: ExperimentConfig, rt: Arc<Runtime>) -> Json {
+    let coord = Coordinator::new(cfg.clone(), rt).unwrap();
+    let report = coord.run().unwrap();
+    trace_json(&cfg, &report)
+}
+
+/// The tier-1 golden check. `#[ignore]`d: needs artifacts; run with
+/// `cargo test --release -- --ignored` (locally or in the CI golden job).
+#[test]
+#[ignore]
+fn golden_trace_default_config() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping golden trace: run `make artifacts` first");
+        return;
+    };
+
+    // Two regimes: the bitwise-pinned default, and a seeded drop-injection
+    // variant that additionally pins the keyed-drop pattern.
+    let mut drops_cfg = tiny_cfg();
+    drops_cfg.seed = 11;
+    drops_cfg.comm.drop_prob = 0.35;
+    let mut traces = BTreeMap::new();
+    traces.insert("default".to_string(), run_trace(tiny_cfg(), rt.clone()));
+    traces.insert("drops".to_string(), run_trace(drops_cfg, rt));
+    let got = Json::Obj(traces);
+
+    let path = golden_path();
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, got.dump() + "\n").unwrap();
+        eprintln!("golden trace rewritten at {}", path.display());
+        return;
+    }
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        // First run on a machine with artifacts: seed the snapshot so
+        // subsequent runs enforce it, and say so loudly.
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, got.dump() + "\n").unwrap();
+        eprintln!(
+            "golden trace BOOTSTRAPPED at {} — commit it; future runs enforce it",
+            path.display()
+        );
+        return;
+    };
+    let want = Json::parse(text.trim()).expect("golden snapshot parses");
+    assert_eq!(
+        got,
+        want,
+        "\ndefault-path trace diverged from the golden snapshot.\n\
+         If (and only if) this change is intentional, regenerate with\n\
+         UPDATE_GOLDEN=1 cargo test --release --test golden_trace -- --ignored\n\
+         got:  {}\nwant: {}",
+        got.dump(),
+        want.dump()
+    );
+}
+
+/// Runs without artifacts: if a snapshot is checked in, it must parse
+/// and have the golden shape (guards against hand-edited snapshots).
+#[test]
+fn golden_snapshot_schema_if_present() {
+    let Ok(text) = std::fs::read_to_string(golden_path()) else {
+        return;
+    };
+    let v = Json::parse(text.trim()).expect("golden snapshot parses");
+    for key in ["default", "drops"] {
+        let trace = v.get(key).unwrap_or_else(|| panic!("missing trace {key:?}"));
+        let rounds = trace.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 3, "{key}: tiny preset runs 3 rounds");
+        for r in rounds {
+            for field in [
+                "round", "eval_nll", "loss_mean", "bytes_up", "bytes_down",
+                "messages", "dropped",
+            ] {
+                assert!(r.get(field).is_some(), "{key}: round missing {field:?}");
+            }
+        }
+        assert!(trace.get("final_param_l2").is_some());
+        assert!(trace.get("drops_per_worker").is_some());
+    }
+}
+
+/// The comparison is only as strong as the serialization: every f64 must
+/// survive dump → parse bit-exactly (shortest-roundtrip formatting).
+#[test]
+fn trace_floats_roundtrip_bit_exactly() {
+    for x in [
+        0.1f64,
+        1.0 / 3.0,
+        2.0f64.sqrt(),
+        6.02e23,
+        1e-17,
+        123456789.123456789,
+        f64::MIN_POSITIVE,
+        4096.0,
+    ] {
+        let dumped = Json::Num(x).dump();
+        let parsed = Json::parse(&dumped).unwrap();
+        let Json::Num(y) = parsed else { panic!("not a number: {dumped}") };
+        assert_eq!(x.to_bits(), y.to_bits(), "{x} -> {dumped} -> {y}");
+    }
+}

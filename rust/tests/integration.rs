@@ -2,7 +2,11 @@
 //! metamorphic algorithm identities, and the checkpoint round-trip.
 
 use diloco::checkpoint;
-use diloco::config::{ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig};
+use diloco::comm::codec::Codec;
+use diloco::config::{
+    ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig, StreamConfig,
+    SyncSchedule,
+};
 use diloco::coordinator::Coordinator;
 use diloco::data::batch::BatchIter;
 use diloco::metrics::RunMetrics;
@@ -295,6 +299,206 @@ fn parallel_matches_sequential_bitwise() {
         assert_eq!(par.drops_per_worker, seq.drops_per_worker);
         assert_eq!(par.round_stats.len(), seq.round_stats.len());
     }
+}
+
+#[test]
+fn fragmented_every_round_matches_monolithic_bitwise() {
+    // The streaming acceptance criterion, one level up from the unit
+    // props: with the every-round schedule, the f32 codec, and no drops,
+    // fragmenting the sync must be invisible — final params, losses, and
+    // eval points bitwise equal to the monolithic P=1 run; only message
+    // granularity (and not byte totals) may change.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 3;
+    let init = rt.init_params().unwrap();
+    let run = |fragments: usize| {
+        let mut cfg = cfg.clone();
+        cfg.stream.fragments = fragments;
+        Coordinator::new(cfg, rt.clone())
+            .unwrap()
+            .run_from(Some(init.clone()))
+            .unwrap()
+    };
+    let mono = run(1);
+    for p in [2, 4, 7] {
+        let frag = run(p);
+        assert_eq!(
+            frag.final_params, mono.final_params,
+            "P={p}: final params diverged"
+        );
+        assert_eq!(frag.metrics.loss_curve, mono.metrics.loss_curve);
+        for (a, b) in frag
+            .metrics
+            .eval_curve
+            .iter()
+            .zip(&mono.metrics.eval_curve)
+        {
+            assert_eq!(a.mean_nll, b.mean_nll, "P={p}: eval diverged");
+        }
+        assert_eq!(frag.metrics.comm_bytes_up, mono.metrics.comm_bytes_up);
+        assert_eq!(frag.metrics.comm_bytes, mono.metrics.comm_bytes);
+        assert_eq!(
+            frag.metrics.comm_messages,
+            mono.metrics.comm_messages * p as u64,
+            "P={p}: one message per fragment in each direction"
+        );
+        assert_eq!(frag.metrics.codec_err_l2, 0.0);
+        for rs in &frag.round_stats {
+            assert_eq!(rs.fragments_synced, p);
+        }
+        // Fragmenting must never *reduce* the simulated barrier: one
+        // worker's fragments serialize on its link, so P messages cost
+        // the monolithic serialization plus P-1 extra latencies.
+        assert!(
+            frag.metrics.sim_comm_seconds > mono.metrics.sim_comm_seconds,
+            "P={p}: {} vs {}",
+            frag.metrics.sim_comm_seconds,
+            mono.metrics.sim_comm_seconds
+        );
+    }
+}
+
+#[test]
+fn staggered_schedule_cuts_per_round_bytes() {
+    // staggered(P) ships one fragment (≈1/P of the model) per round in
+    // each direction, so total bytes shrink by ≈P× — while the run still
+    // learns and every fragment keeps syncing, once every P rounds.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 8; // two full staggered cycles at P=4
+    let init = rt.init_params().unwrap();
+    let baseline = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    cfg.stream = StreamConfig {
+        fragments: 4,
+        schedule: SyncSchedule::Staggered,
+        codec: Codec::F32,
+    };
+    let stag = Coordinator::new(cfg, rt)
+        .unwrap()
+        .run_from(Some(init))
+        .unwrap();
+    let (b, s) = (
+        baseline.metrics.comm_bytes_up as f64,
+        stag.metrics.comm_bytes_up as f64,
+    );
+    assert!(
+        s < 0.30 * b,
+        "staggered(4) must cut upload bytes ≈4×: {s} vs {b}"
+    );
+    assert!(stag.metrics.final_ppl().is_finite());
+    assert_eq!(stag.round_stats.len(), 8);
+    for rs in &stag.round_stats {
+        assert_eq!(rs.fragments_synced, 1, "one fragment per staggered round");
+    }
+}
+
+#[test]
+fn q8_codec_cuts_bytes_and_reports_error() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 2;
+    cfg.pretrain_steps = 0;
+    let init = rt.init_params().unwrap();
+    let f32_run = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    cfg.stream.codec = Codec::Q8;
+    cfg.stream.fragments = 4;
+    let q8 = Coordinator::new(cfg, rt)
+        .unwrap()
+        .run_from(Some(init))
+        .unwrap();
+    // Uploads shrink to ~1/4 (1 byte/element + per-slice sidecars);
+    // downloads stay full precision, so totals land in between.
+    assert!(
+        (q8.metrics.comm_bytes_up as f64) < 0.30 * f32_run.metrics.comm_bytes_up as f64,
+        "q8 upload bytes: {} vs {}",
+        q8.metrics.comm_bytes_up,
+        f32_run.metrics.comm_bytes_up
+    );
+    assert!(q8.metrics.up_savings_factor() > 3.0);
+    // Lossy encoding is accounted: a deterministic, nonzero error per
+    // synced round, and the run still trains to a finite perplexity.
+    assert!(q8.metrics.codec_err_l2 > 0.0);
+    for rs in &q8.round_stats {
+        assert!(rs.codec_err_l2 > 0.0, "round {}", rs.round);
+    }
+    assert!(f32_run.metrics.codec_err_l2 == 0.0);
+    assert!(q8.metrics.final_ppl().is_finite());
+    assert!(q8.final_params.all_finite());
+}
+
+#[test]
+fn overlapped_schedule_hides_barrier_not_math() {
+    // Overlapped streaming changes *accounting only*: the sync math is
+    // every-round, so params match the default bitwise, while the
+    // simulated communication barrier nearly vanishes (deferred
+    // transfers hide behind the next round's compute; only the final
+    // round's transfer remains a barrier).
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.pretrain_steps = 0;
+    let init = rt.init_params().unwrap();
+    let blocking = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    cfg.stream.schedule = SyncSchedule::Overlapped;
+    let overlapped = Coordinator::new(cfg.clone(), rt)
+        .unwrap()
+        .run_from(Some(init))
+        .unwrap();
+    assert_eq!(overlapped.final_params, blocking.final_params);
+    assert_eq!(overlapped.metrics.loss_curve, blocking.metrics.loss_curve);
+    assert_eq!(overlapped.metrics.comm_bytes, blocking.metrics.comm_bytes);
+    assert!(
+        overlapped.metrics.sim_comm_seconds < blocking.metrics.sim_comm_seconds / 2.0,
+        "overlap must hide most of the barrier: {} vs {}",
+        overlapped.metrics.sim_comm_seconds,
+        blocking.metrics.sim_comm_seconds
+    );
+    // Billing rows: every deferred round records zero barrier; the final
+    // round has no next phase to hide behind, so it closes as a barrier.
+    let rows = &overlapped.comm_per_round;
+    assert!(rows[..rows.len() - 1].iter().all(|r| r.barrier_s == 0.0));
+    assert!(rows.last().unwrap().barrier_s > 0.0);
+    assert!(blocking.comm_per_round.iter().all(|r| r.barrier_s > 0.0));
+    // Per-round barrier rows account for the whole barrier bill.
+    let row_sum: f64 = rows.iter().map(|r| r.barrier_s).sum();
+    assert!((row_sum - overlapped.metrics.sim_comm_seconds).abs() < 1e-12);
+}
+
+#[test]
+fn fragment_drops_desync_independently() {
+    // With P=2 and heavy drops, a worker can lose one fragment and land
+    // the other; per-fragment desync must keep every run deterministic
+    // and the drop totals consistent between report and fabric.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.comm.drop_prob = 0.5;
+    cfg.pretrain_steps = 0;
+    cfg.rounds = 6;
+    cfg.seed = 9;
+    cfg.stream.fragments = 2;
+    let r1 = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run()
+        .unwrap();
+    let r2 = Coordinator::new(cfg, rt).unwrap().run().unwrap();
+    assert_eq!(r1.final_params, r2.final_params);
+    assert_eq!(r1.drops_per_worker, r2.drops_per_worker);
+    assert_eq!(r1.metrics.comm_dropped, r2.metrics.comm_dropped);
+    // Fragment messages dropped ≥ worker-rounds affected (a worker-round
+    // can lose both fragments).
+    let worker_rounds: usize = r1.drops_per_worker.iter().sum();
+    assert!(r1.metrics.comm_dropped as usize >= worker_rounds);
+    assert!(worker_rounds > 0, "p=0.5 over 48 fragment sends must drop some");
+    assert!(r1.metrics.final_ppl().is_finite());
 }
 
 #[test]
