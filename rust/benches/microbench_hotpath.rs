@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     // Data pipeline.
     let data_cfg = DataConfig { n_docs: 120, doc_len: 120, ..DataConfig::default() };
     let t_dataset = time_median(3, || {
-        let _ = Dataset::build(&data_cfg, 8, mcfg.vocab_size, 0);
+        let _ = Dataset::build(&data_cfg, 8, mcfg.vocab_size, 0).unwrap();
     });
     table.row(vec![
         "dataset_build".into(),
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
         "corpus+BPE+shard (once per run)".into(),
     ]);
 
-    let ds = Dataset::build(&data_cfg, 8, mcfg.vocab_size, 0);
+    let ds = Dataset::build(&data_cfg, 8, mcfg.vocab_size, 0).unwrap();
     let mut iter = BatchIter::new(
         ds.shards[0].clone(),
         mcfg.batch_size,

@@ -1,0 +1,132 @@
+//! Sync-topology sweep — star vs ring vs gossip vs hierarchical, with
+//! and without outer-gradient quantization (NoLoCo, arXiv:2506.10911;
+//! DiLoCoX, arXiv:2506.21263).
+//!
+//! Every variant runs the same scaled main setting from the same
+//! pretrained checkpoint; the interesting columns are per-round WAN
+//! bytes (gossip halves the star total, hierarchical cuts root-link
+//! flows from k to G, ring pays ~2× bytes to remove the hub), the
+//! simulated barrier, the consensus distance of the decentralized
+//! modes, and the final (consensus) PPL. The f32 byte counts are
+//! hard-asserted against the DESIGN.md §9 analytic formulas, so a
+//! billing regression fails the bench rather than skewing the table.
+//! Paste the printed JSON fragment into `BENCH_engine.json`.
+
+use diloco::bench::scenarios::{base_config, fmt, load_runtime, rel_pct, topology_grid};
+use diloco::bench::{BenchCtx, Table};
+use diloco::config::TopologyConfig;
+use diloco::coordinator::Coordinator;
+use diloco::metrics::RunMetrics;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new("topology");
+    let base = base_config(ctx.scale);
+    let rt = load_runtime(&base.model);
+
+    // Shared pretrained start so variants differ only in sync topology.
+    let coord0 = Coordinator::new(base.clone(), rt.clone())?;
+    let mut pre = RunMetrics::new("pretrain");
+    let pretrained =
+        coord0.plain_train(rt.init_params()?, 0.0, base.pretrain_steps, &mut pre, 0)?;
+
+    let payload = rt.manifest.param_bytes() as u64;
+    let (k, rounds) = (base.workers as u64, base.rounds as u64);
+
+    let mut table = Table::new(
+        "Sync topologies — WAN bytes, barrier, consensus (star pinned by golden trace)",
+        &[
+            "variant",
+            "up_MB/round",
+            "up_vs_star",
+            "msgs/round",
+            "sim_comm_s",
+            "consensus_d",
+            "final_ppl",
+            "ppl_vs_star",
+        ],
+    );
+    let mut rows: Vec<(String, f64, f64, f64, f64)> = Vec::new();
+    let mut json_rows = String::new();
+    for (label, topology, codec) in topology_grid() {
+        let mut cfg = base.clone();
+        cfg.topology = topology;
+        cfg.stream.codec = codec;
+        cfg.validate()?;
+        let coord = Coordinator::new(cfg.clone(), rt.clone())?;
+        let report = coord.run_from(Some(pretrained.clone()))?;
+        let m = &report.metrics;
+        let up_per_round = m.comm_bytes_up as f64 / rounds as f64 / 1e6;
+        let consensus_d = report
+            .round_stats
+            .last()
+            .map(|rs| rs.consensus_dist)
+            .unwrap_or(0.0);
+
+        // Analytic f32 WAN-byte formulas (DESIGN.md §9) — exact.
+        if codec == diloco::comm::codec::Codec::F32 {
+            let expect_up = match topology {
+                TopologyConfig::Star => rounds * k * payload,
+                TopologyConfig::Ring => rounds * 2 * (k - 1) * payload,
+                TopologyConfig::Gossip => rounds * k * payload,
+                TopologyConfig::Hierarchical { groups } => {
+                    rounds * groups as u64 * payload
+                }
+            };
+            assert_eq!(
+                m.comm_bytes_up, expect_up,
+                "{label}: billed {} up bytes, formula says {expect_up}",
+                m.comm_bytes_up
+            );
+        }
+
+        json_rows.push_str(&format!(
+            "      {{ \"variant\": \"{label}\", \"up_mb_per_round\": {up_per_round:.4}, \
+             \"msgs_per_round\": {:.1}, \"sim_comm_s\": {:.4}, \"sim_wall_s\": {:.2}, \
+             \"consensus_dist\": {consensus_d:.4e}, \"final_ppl\": {:.4} }},\n",
+            m.comm_messages as f64 / rounds as f64,
+            m.sim_comm_seconds,
+            m.sim_wall_seconds(),
+            m.final_ppl()
+        ));
+        rows.push((
+            label.to_string(),
+            up_per_round,
+            m.comm_bytes_up as f64,
+            m.sim_comm_seconds,
+            m.final_ppl(),
+        ));
+        let last = rows.last().unwrap();
+        table.row(vec![
+            label.to_string(),
+            format!("{:.3}", last.1),
+            rel_pct(last.2, rows[0].2),
+            format!("{:.1}", m.comm_messages as f64 / rounds as f64),
+            format!("{:.2}", last.3),
+            format!("{consensus_d:.2e}"),
+            fmt(last.4),
+            rel_pct(last.4, rows[0].4),
+        ]);
+    }
+    ctx.emit(&table);
+    println!(
+        "\nBENCH_engine.json topology rows (paste into the current PR entry):\n{json_rows}"
+    );
+
+    // Cross-variant invariants: gossip halves star's total (no
+    // broadcast), hierarchical cuts uploads k/G ×, ring pays ~2× uploads
+    // but runs with no hub at all.
+    let star_up = rows[0].2;
+    let gossip = rows.iter().find(|r| r.0 == "gossip_f32").expect("grid row");
+    assert!(
+        gossip.2 == star_up,
+        "gossip uploads equal star's uploads (but nothing comes back down)"
+    );
+    let hier = rows.iter().find(|r| r.0 == "hier2_f32").expect("grid row");
+    assert!(
+        hier.2 < 0.5 * star_up,
+        "hierarchical(2) must cut WAN uploads vs star: {} vs {star_up}",
+        hier.2
+    );
+    ctx.finish();
+    Ok(())
+}

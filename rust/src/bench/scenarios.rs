@@ -15,7 +15,7 @@ use super::Scale;
 use crate::comm::codec::Codec;
 use crate::config::{
     ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig, StreamConfig,
-    SyncSchedule,
+    SyncSchedule, TopologyConfig,
 };
 use crate::runtime::Runtime;
 use std::sync::Arc;
@@ -109,6 +109,25 @@ pub fn stream_grid() -> Vec<(&'static str, StreamConfig)> {
     ]
 }
 
+/// Sync-topology scenario family: the topology × codec grid the
+/// `topology` bench sweeps. Row 0 is the star full-precision baseline
+/// (the bitwise-pinned default); ring and gossip exercise the
+/// decentralized per-replica modes (NoLoCo), hierarchical the two-level
+/// DiLoCoX sync — per-round WAN-byte counts per topology follow the
+/// DESIGN.md §9 cost table and are hard-asserted by the bench.
+pub fn topology_grid() -> Vec<(&'static str, TopologyConfig, Codec)> {
+    use TopologyConfig::{Gossip, Hierarchical, Ring, Star};
+    vec![
+        ("star_f32", Star, Codec::F32),
+        ("star_q8", Star, Codec::Q8),
+        ("ring_f32", Ring, Codec::F32),
+        ("gossip_f32", Gossip, Codec::F32),
+        ("gossip_q8", Gossip, Codec::Q8),
+        ("hier2_f32", Hierarchical { groups: 2 }, Codec::F32),
+        ("hier2_q8", Hierarchical { groups: 2 }, Codec::Q8),
+    ]
+}
+
 /// Total inner steps after pretraining (T×H) for the base setting — kept
 /// constant across H sweeps so variants are compute-matched.
 pub fn step_budget(scale: Scale) -> usize {
@@ -173,6 +192,27 @@ mod tests {
         }
         for (label, s) in &grid {
             s.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
+        }
+    }
+
+    #[test]
+    fn topology_grid_covers_all_topologies() {
+        let grid = topology_grid();
+        assert_eq!(
+            (grid[0].1, grid[0].2),
+            (TopologyConfig::Star, Codec::F32),
+            "row 0 is the bitwise-pinned star baseline"
+        );
+        for name in ["star", "ring", "gossip", "hierarchical"] {
+            assert!(grid.iter().any(|(_, t, _)| t.name() == name), "{name}");
+        }
+        for (label, t, codec) in &grid {
+            t.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
+            // Every variant must survive full config validation.
+            let mut cfg = ExperimentConfig::paper_default("a", "nano");
+            cfg.topology = *t;
+            cfg.stream.codec = *codec;
+            cfg.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
         }
     }
 

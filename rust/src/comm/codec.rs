@@ -17,6 +17,19 @@
 use super::fragment::LeafSlice;
 
 /// How an outer-gradient fragment is encoded on the wire.
+///
+/// ```
+/// use diloco::comm::codec::Codec;
+/// use diloco::comm::fragment::LeafSlice;
+///
+/// let mut payload = vec![1.0f32, -2.0, 0.5];
+/// let slices = [LeafSlice { leaf: 0, start: 0, end: 3 }];
+/// let err = Codec::F32.transcode(&mut payload, &slices);
+/// assert_eq!(err, 0.0);                       // f32 is bitwise exact
+/// assert_eq!(payload, vec![1.0, -2.0, 0.5]);
+/// // q8 bills 1 byte/element plus an 8-byte (min, scale) sidecar per slice.
+/// assert_eq!(Codec::Q8.encoded_bytes(100, 2), 116);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Codec {
     /// Full precision — bitwise exact, 4 bytes/element (the default).

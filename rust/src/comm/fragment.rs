@@ -32,6 +32,23 @@ impl LeafSlice {
 }
 
 /// A fixed partition of the flattened parameter space into fragments.
+///
+/// ```
+/// use diloco::comm::fragment::FragmentPlan;
+/// use diloco::runtime::Tensors;
+///
+/// // Two parameter leaves (3 + 5 elements) split into two fragments.
+/// let plan = FragmentPlan::new(&[3, 5], 2);
+/// assert_eq!(plan.n_fragments(), 2);
+/// assert_eq!(plan.elements(0) + plan.elements(1), plan.total_elements());
+///
+/// // extract → scatter round-trips a fragment bitwise.
+/// let t = Tensors::from_raw(vec![vec![1.0, 2.0, 3.0], vec![4.0; 5]]);
+/// let payload = plan.extract(&t, 0);
+/// let mut out = Tensors::from_raw(vec![vec![0.0; 3], vec![0.0; 5]]);
+/// plan.scatter(&payload, 0, &mut out);
+/// assert_eq!(out.leaves()[0], vec![1.0, 2.0, 3.0]);
+/// ```
 #[derive(Clone, Debug)]
 pub struct FragmentPlan {
     fragments: Vec<Vec<LeafSlice>>,

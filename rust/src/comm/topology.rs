@@ -1,0 +1,735 @@
+//! Pluggable synchronization topologies — who exchanges outer gradients
+//! with whom, each round.
+//!
+//! DiLoCo's Algorithm 1 is a **star**: every island ships its outer
+//! gradient to one coordinator, which averages and broadcasts. Follow-up
+//! work replaces that reduction without touching the inner loop:
+//! NoLoCo (arXiv:2506.10911) uses dynamic pairwise **gossip** averaging
+//! with no coordinator at all, and DiLoCoX (arXiv:2506.21263) stacks a
+//! two-level **hierarchical** sync for decentralized clusters. This
+//! module makes the reduction a pluggable axis: a [`Topology`] yields,
+//! per round, a deterministic set of directed [`Transfer`]s (what the
+//! [`super::SimNet`] bills) plus a row-stochastic mixing matrix (what
+//! the replicas average).
+//!
+//! Four implementations ship:
+//!
+//! * [`Star`] — all-to-coordinator with §6.1 weights; one global model
+//!   replica. The coordinator's hot path *is* this schedule, kept
+//!   bitwise-identical to the pre-topology loop.
+//! * [`Ring`] — a bandwidth-optimal ring all-reduce: `2(k−1)` hops of
+//!   `1/k`-sized chunks, all k lanes busy every hop. Every replica ends
+//!   with the same (full, weighted) average; state is per-replica.
+//! * [`Gossip`] — seeded random pairwise exchanges à la NoLoCo: each
+//!   round a fresh seeded permutation pairs the islands, each pair
+//!   averages, unpaired islands keep their own gradient.
+//! * [`Hierarchical`] — intra-group star onto a group leader, then an
+//!   inter-group star onto the root, à la DiLoCoX. Intra-group hops ride
+//!   free datacenter links; only leader ↔ root hops cross the billed
+//!   WAN, so the root sees `G` flows instead of `k`.
+//!
+//! **Determinism contract** (extends DESIGN.md §4): a topology's
+//! transfer schedule and mixing matrix are pure functions of
+//! `(topology config, seed, round, k)` — never of execution order or
+//! delivery timing. Gossip's pairing derives from a per-round child of
+//! the run seed; drop decisions stay keyed, now on
+//! `(fabric seed, round, worker, fragment, hop)` via
+//! [`super::SimNet::try_send_hop`], with hop 0 reproducing the legacy
+//! key so star traces are unchanged bitwise.
+//!
+//! # Examples
+//!
+//! A gossip round is a deterministic pairing — same seed and round, same
+//! pairs, in any call order:
+//!
+//! ```
+//! use diloco::comm::topology::Gossip;
+//!
+//! let topo = Gossip { seed: 7 };
+//! let a = topo.pairs(3, 8);
+//! let b = topo.pairs(3, 8);
+//! assert_eq!(a, b);           // pure in (seed, round, k)
+//! assert_eq!(a.len(), 4);     // 8 islands -> 4 disjoint pairs
+//! ```
+//!
+//! Mixing matrices are row-stochastic once normalized:
+//!
+//! ```
+//! use diloco::comm::topology::{row_stochastic, Gossip, Topology};
+//!
+//! let topo = Gossip { seed: 0 };
+//! let w = vec![1.0; 4];
+//! let raw = topo.mixing_raw(0, 4, &w, &[true; 4]);
+//! for row in row_stochastic(&raw) {
+//!     assert!((row.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+//! }
+//! ```
+
+use super::Direction;
+use crate::util::rng::Rng;
+
+/// Hop index of a worker's first-hop upload — the legacy drop key.
+pub const HOP_UPLOAD: usize = 0;
+/// Hop index of a hierarchical group leader's aggregate upload to the
+/// root coordinator (the droppable WAN hop of [`Hierarchical`]).
+pub const HOP_LEADER_UP: usize = 1;
+
+/// An endpoint of a [`Transfer`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Node {
+    /// A training island (worker id).
+    Worker(usize),
+    /// The root coordinator (star and hierarchical only).
+    Hub,
+}
+
+/// One directed hop of a round's synchronization schedule.
+///
+/// `lane = Some(w)` bills the transfer on worker `w`'s WAN link through
+/// the existing [`super::SimNet`] lane machinery (messages on one lane
+/// serialize, distinct lanes overlap); `lane = None` marks a free local
+/// hop (hierarchical intra-group links, which the WAN model does not
+/// bill). Droppable transfers are keyed on
+/// `(fabric seed, round, sender, fragment, hop)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Transfer {
+    pub from: Node,
+    pub to: Node,
+    /// Worker whose WAN link carries the bytes; `None` = free local hop.
+    pub lane: Option<usize>,
+    pub dir: Direction,
+    /// Worker whose outer-gradient contribution rides this transfer —
+    /// the drop key's worker component, and the replica excluded from
+    /// receivers' mixing rows when the transfer drops.
+    pub sender: usize,
+    /// Hop index within the round (drop-key component).
+    pub hop: usize,
+    /// Keyed-droppable (`true`) vs reliable (`false`).
+    pub droppable: bool,
+    /// `Some((c, of))`: the transfer carries near-equal chunk `c` of
+    /// `of` of the fragment payload (ring hops); `None`: the whole
+    /// fragment payload.
+    pub chunk: Option<(usize, usize)>,
+}
+
+/// A synchronization topology: the per-round transfer schedule plus the
+/// mixing matrix that turns per-worker outer gradients into per-replica
+/// updates.
+///
+/// Centralized topologies ([`Star`], [`Hierarchical`]) keep one global
+/// model replica (`n_replicas = 1`); decentralized topologies ([`Ring`],
+/// [`Gossip`]) keep one replica — model plus outer-optimizer state — per
+/// worker.
+pub trait Topology: Send + Sync {
+    /// Stable name (config / report label).
+    fn name(&self) -> &'static str;
+
+    /// `true` when every worker keeps its own model replica and outer
+    /// state; `false` when a single global replica exists.
+    fn is_decentralized(&self) -> bool;
+
+    /// Independent model replicas maintained for `k` workers.
+    fn n_replicas(&self, k: usize) -> usize {
+        if self.is_decentralized() {
+            k
+        } else {
+            1
+        }
+    }
+
+    /// The deterministic, ordered transfer schedule for `round` over `k`
+    /// active workers. Download transfers of centralized topologies are
+    /// declared unconditionally; the coordinator only executes them for
+    /// workers whose upload landed.
+    fn transfers(&self, round: usize, k: usize) -> Vec<Transfer>;
+
+    /// Raw (unnormalized) mixing rows, one per replica: entry `[r][j]`
+    /// is the weight replica `r` gives worker `j`'s outer gradient.
+    /// `weights` are the §6.1 per-worker averaging weights and
+    /// `landed[j]` says whether worker `j`'s outgoing contribution was
+    /// delivered. Rows normalize to the row-stochastic mixing matrix
+    /// (see [`row_stochastic`]); consumers feed the raw rows to
+    /// [`crate::coordinator::average::weighted_average_refs`], which
+    /// normalizes with the same scalar operations as the monolithic
+    /// star average — keeping star bitwise-stable.
+    fn mixing_raw(
+        &self,
+        round: usize,
+        k: usize,
+        weights: &[f64],
+        landed: &[bool],
+    ) -> Vec<Vec<f64>>;
+
+    /// The row-stochastic mixing matrix (normalized [`Self::mixing_raw`]).
+    fn mixing_matrix(
+        &self,
+        round: usize,
+        k: usize,
+        weights: &[f64],
+        landed: &[bool],
+    ) -> Vec<Vec<f64>> {
+        row_stochastic(&self.mixing_raw(round, k, weights, landed))
+    }
+}
+
+/// Normalize raw mixing rows so each row sums to 1 (all-zero rows stay
+/// zero — a replica that received nothing mixes nothing).
+pub fn row_stochastic(rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    rows.iter()
+        .map(|row| {
+            let s: f64 = row.iter().sum();
+            row.iter()
+                .map(|&x| if s > 0.0 { x / s } else { 0.0 })
+                .collect()
+        })
+        .collect()
+}
+
+/// Elements in near-equal chunk `c` of `of` over `n` elements — the
+/// size of flat range `[c·n/of, (c+1)·n/of)`, exactly as
+/// [`crate::comm::fragment::FragmentPlan`] splits fragments. Ring hops
+/// and their analytic byte formulas both use this, so billed and
+/// expected bytes agree to the byte.
+pub fn chunk_elems(n: usize, c: usize, of: usize) -> usize {
+    (c + 1) * n / of - c * n / of
+}
+
+/// DiLoCo's star: every worker uploads to the hub (droppable, legacy
+/// hop-0 key), the hub broadcasts fresh parameters back.
+pub struct Star;
+
+impl Topology for Star {
+    fn name(&self) -> &'static str {
+        "star"
+    }
+
+    fn is_decentralized(&self) -> bool {
+        false
+    }
+
+    fn transfers(&self, _round: usize, k: usize) -> Vec<Transfer> {
+        if k <= 1 {
+            return Vec::new(); // k = 1: local outer step, nothing crosses the fabric
+        }
+        let mut out = Vec::with_capacity(2 * k);
+        for w in 0..k {
+            out.push(Transfer {
+                from: Node::Worker(w),
+                to: Node::Hub,
+                lane: Some(w),
+                dir: Direction::Up,
+                sender: w,
+                hop: HOP_UPLOAD,
+                droppable: true,
+                chunk: None,
+            });
+        }
+        for w in 0..k {
+            out.push(Transfer {
+                from: Node::Hub,
+                to: Node::Worker(w),
+                lane: Some(w),
+                dir: Direction::Down,
+                sender: w,
+                hop: HOP_UPLOAD,
+                droppable: false,
+                chunk: None,
+            });
+        }
+        out
+    }
+
+    fn mixing_raw(
+        &self,
+        _round: usize,
+        k: usize,
+        weights: &[f64],
+        landed: &[bool],
+    ) -> Vec<Vec<f64>> {
+        vec![(0..k)
+            .map(|j| if landed[j] { weights[j] } else { 0.0 })
+            .collect()]
+    }
+}
+
+/// Ring all-reduce: reduce-scatter then all-gather, `2(k−1)` hops of
+/// `1/k`-sized chunks. Every hop keeps all `k` lanes busy (lane-
+/// overlapped), and each hop moves every chunk exactly once, so the
+/// billed total is exactly `2(k−1) × Σ_chunks bytes(chunk)` per
+/// fragment. The collective is reliable (a dropped chunk would corrupt
+/// every replica's sum), so `[comm] drop_prob > 0` is rejected for this
+/// topology at config validation.
+pub struct Ring;
+
+impl Topology for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn is_decentralized(&self) -> bool {
+        true
+    }
+
+    fn transfers(&self, _round: usize, k: usize) -> Vec<Transfer> {
+        if k <= 1 {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(2 * (k - 1) * k);
+        for hop in 0..2 * (k - 1) {
+            for w in 0..k {
+                out.push(Transfer {
+                    from: Node::Worker(w),
+                    to: Node::Worker((w + 1) % k),
+                    lane: Some(w),
+                    dir: Direction::Up,
+                    sender: w,
+                    hop,
+                    droppable: false,
+                    chunk: Some(((w + hop) % k, k)),
+                });
+            }
+        }
+        out
+    }
+
+    fn mixing_raw(
+        &self,
+        _round: usize,
+        k: usize,
+        weights: &[f64],
+        _landed: &[bool],
+    ) -> Vec<Vec<f64>> {
+        // Every replica ends the all-reduce holding the same full
+        // weighted average — identical rows, identical to star's row.
+        (0..k).map(|_| weights.to_vec()).collect()
+    }
+}
+
+/// NoLoCo-style gossip: each round, a fresh seeded permutation pairs
+/// the islands; each pair exchanges outer gradients (two directed,
+/// individually droppable sends) and averages. With an odd island
+/// count, one island sits the round out (identity mixing row).
+pub struct Gossip {
+    /// Run seed; the per-round pairing derives from
+    /// `Rng::new(seed).child(GOSSIP_STREAM).child(round)`.
+    pub seed: u64,
+}
+
+/// Child-stream tag separating the gossip pairing from every other
+/// consumer of the run seed.
+const GOSSIP_STREAM: u64 = 0x676f_7373;
+
+impl Gossip {
+    /// The round's disjoint pairs, deterministic in `(seed, round, k)`.
+    pub fn pairs(&self, round: usize, k: usize) -> Vec<(usize, usize)> {
+        let mut order: Vec<usize> = (0..k).collect();
+        Rng::new(self.seed)
+            .child(GOSSIP_STREAM)
+            .child(round as u64)
+            .shuffle(&mut order);
+        order.chunks_exact(2).map(|p| (p[0], p[1])).collect()
+    }
+}
+
+impl Topology for Gossip {
+    fn name(&self) -> &'static str {
+        "gossip"
+    }
+
+    fn is_decentralized(&self) -> bool {
+        true
+    }
+
+    fn transfers(&self, round: usize, k: usize) -> Vec<Transfer> {
+        if k <= 1 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for (a, b) in self.pairs(round, k) {
+            for (src, dst) in [(a, b), (b, a)] {
+                out.push(Transfer {
+                    from: Node::Worker(src),
+                    to: Node::Worker(dst),
+                    lane: Some(src),
+                    dir: Direction::Up,
+                    sender: src,
+                    hop: HOP_UPLOAD,
+                    droppable: true,
+                    chunk: None,
+                });
+            }
+        }
+        out
+    }
+
+    fn mixing_raw(
+        &self,
+        round: usize,
+        k: usize,
+        weights: &[f64],
+        landed: &[bool],
+    ) -> Vec<Vec<f64>> {
+        // Identity rows (every island keeps its own gradient), then each
+        // delivered pair send opens the partner's entry. A one-sided
+        // drop mixes one-sidedly, exactly what the fabric delivered.
+        let mut rows: Vec<Vec<f64>> = (0..k)
+            .map(|i| {
+                let mut row = vec![0.0; k];
+                row[i] = weights[i];
+                row
+            })
+            .collect();
+        for (a, b) in self.pairs(round, k) {
+            if landed[a] {
+                rows[b][a] = weights[a];
+            }
+            if landed[b] {
+                rows[a][b] = weights[b];
+            }
+        }
+        rows
+    }
+}
+
+/// DiLoCoX-style two-level sync: workers aggregate onto a group leader
+/// over free intra-group links, leaders exchange with the root over the
+/// billed WAN. The root link carries `G` flows instead of `k`; a
+/// dropped leader hop (keyed `(round, leader, fragment, hop 1)`)
+/// excludes — and desyncs — the whole group for that fragment.
+///
+/// Like [`Star`], the coordinator's centralized round loop executes
+/// this schedule *inline* (it shares the star hot path, which must stay
+/// on the golden trace) rather than consuming
+/// [`Topology::transfers`]; this declaration is the schedule's
+/// specification, and the integration byte-formula tests pin the two in
+/// agreement — change them together.
+pub struct Hierarchical {
+    /// Number of groups `G` (clamped to `[1, k]` per round).
+    pub groups: usize,
+}
+
+/// Contiguous group partition: group `g` of `G` covers worker range
+/// `[g·k/G, (g+1)·k/G)`; the first member is the leader. Empty groups
+/// (when `G > k`) are dropped.
+pub fn hier_groups(k: usize, groups: usize) -> Vec<Vec<usize>> {
+    let g = groups.clamp(1, k.max(1));
+    (0..g)
+        .map(|i| (i * k / g..(i + 1) * k / g).collect::<Vec<usize>>())
+        .filter(|m| !m.is_empty())
+        .collect()
+}
+
+impl Topology for Hierarchical {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+
+    fn is_decentralized(&self) -> bool {
+        false
+    }
+
+    fn transfers(&self, _round: usize, k: usize) -> Vec<Transfer> {
+        if k <= 1 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let groups = hier_groups(k, self.groups);
+        for group in &groups {
+            let leader = group[0];
+            for &m in &group[1..] {
+                out.push(Transfer {
+                    from: Node::Worker(m),
+                    to: Node::Worker(leader),
+                    lane: None, // intra-group: free datacenter link
+                    dir: Direction::Up,
+                    sender: m,
+                    hop: HOP_UPLOAD,
+                    droppable: false,
+                    chunk: None,
+                });
+            }
+            out.push(Transfer {
+                from: Node::Worker(leader),
+                to: Node::Hub,
+                lane: Some(leader),
+                dir: Direction::Up,
+                sender: leader,
+                hop: HOP_LEADER_UP,
+                droppable: true,
+                chunk: None,
+            });
+        }
+        for group in &groups {
+            let leader = group[0];
+            out.push(Transfer {
+                from: Node::Hub,
+                to: Node::Worker(leader),
+                lane: Some(leader),
+                dir: Direction::Down,
+                sender: leader,
+                hop: HOP_LEADER_UP,
+                droppable: false,
+                chunk: None,
+            });
+            for &m in &group[1..] {
+                out.push(Transfer {
+                    from: Node::Worker(leader),
+                    to: Node::Worker(m),
+                    lane: None,
+                    dir: Direction::Down,
+                    sender: m,
+                    hop: HOP_UPLOAD,
+                    droppable: false,
+                    chunk: None,
+                });
+            }
+        }
+        out
+    }
+
+    fn mixing_raw(
+        &self,
+        _round: usize,
+        k: usize,
+        weights: &[f64],
+        landed: &[bool],
+    ) -> Vec<Vec<f64>> {
+        // Same single consensus row as star: the two-level weighted
+        // average composes exactly (leaders forward weighted partial
+        // sums), so the flat worker-order reduction is used verbatim —
+        // `landed` is already group-masked by the caller.
+        Star.mixing_raw(0, k, weights, landed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::average::{weighted_average_flat, weighted_average_refs};
+    use crate::util::prop::check;
+
+    fn all_true(k: usize) -> Vec<bool> {
+        vec![true; k]
+    }
+
+    #[test]
+    fn star_schedule_shape() {
+        let ts = Star.transfers(0, 4);
+        assert_eq!(ts.len(), 8);
+        assert_eq!(ts.iter().filter(|t| t.dir == Direction::Up).count(), 4);
+        for t in &ts {
+            assert_eq!(t.lane, Some(t.sender));
+            assert_eq!(t.hop, HOP_UPLOAD);
+            assert_eq!(t.chunk, None);
+            assert_eq!(t.droppable, t.dir == Direction::Up);
+            if t.dir == Direction::Up {
+                assert_eq!(t.to, Node::Hub);
+            } else {
+                assert_eq!(t.from, Node::Hub);
+            }
+        }
+        assert!(Star.transfers(0, 1).is_empty(), "k=1 is a local outer step");
+        assert_eq!(Star.n_replicas(8), 1);
+    }
+
+    #[test]
+    fn ring_hops_cover_every_chunk_each_hop() {
+        for k in [2, 3, 5, 8] {
+            let ts = Ring.transfers(0, k);
+            assert_eq!(ts.len(), 2 * (k - 1) * k);
+            for hop in 0..2 * (k - 1) {
+                let mut chunks: Vec<usize> = ts
+                    .iter()
+                    .filter(|t| t.hop == hop)
+                    .map(|t| t.chunk.unwrap().0)
+                    .collect();
+                chunks.sort_unstable();
+                assert_eq!(chunks, (0..k).collect::<Vec<_>>(), "hop {hop} of k={k}");
+            }
+            // Lane-overlapped: every hop uses every lane exactly once.
+            for hop in 0..2 * (k - 1) {
+                let mut lanes: Vec<usize> = ts
+                    .iter()
+                    .filter(|t| t.hop == hop)
+                    .map(|t| t.lane.unwrap())
+                    .collect();
+                lanes.sort_unstable();
+                assert_eq!(lanes, (0..k).collect::<Vec<_>>());
+            }
+            assert!(ts.iter().all(|t| !t.droppable), "ring is reliable");
+        }
+        assert!(Ring.transfers(0, 1).is_empty());
+        assert_eq!(Ring.n_replicas(8), 8);
+    }
+
+    #[test]
+    fn chunk_elems_tile_exactly() {
+        for n in [1usize, 7, 64, 1000] {
+            for of in [1usize, 2, 3, 7, 16] {
+                let total: usize = (0..of).map(|c| chunk_elems(n, c, of)).sum();
+                assert_eq!(total, n, "n={n} of={of}");
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_pairs_are_seeded_permutations() {
+        let topo = Gossip { seed: 42 };
+        for k in [2usize, 5, 8, 9] {
+            for round in 0..6 {
+                let pairs = topo.pairs(round, k);
+                assert_eq!(pairs.len(), k / 2);
+                let mut seen: Vec<usize> =
+                    pairs.iter().flat_map(|&(a, b)| [a, b]).collect();
+                seen.sort_unstable();
+                seen.dedup();
+                assert_eq!(seen.len(), 2 * (k / 2), "pairs must be disjoint");
+                assert!(seen.iter().all(|&w| w < k));
+                // Determinism: same (seed, round, k) -> same pairs.
+                assert_eq!(pairs, topo.pairs(round, k));
+            }
+        }
+        // Different rounds and different seeds reshuffle.
+        let a: Vec<_> = (0..16).map(|r| topo.pairs(r, 8)).collect();
+        assert!(a.windows(2).any(|w| w[0] != w[1]), "pairing never varies");
+        let other = Gossip { seed: 43 };
+        assert!(
+            (0..16).any(|r| topo.pairs(r, 8) != other.pairs(r, 8)),
+            "pairing ignores the seed"
+        );
+    }
+
+    #[test]
+    fn gossip_mixing_is_row_stochastic_and_pairwise() {
+        let topo = Gossip { seed: 3 };
+        for k in [2usize, 4, 7] {
+            for round in 0..4 {
+                let w = vec![1.0; k];
+                let m = topo.mixing_matrix(round, k, &w, &all_true(k));
+                assert_eq!(m.len(), k);
+                let mut paired = 0;
+                for (i, row) in m.iter().enumerate() {
+                    assert!((row.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+                    assert!(row.iter().all(|&x| x >= 0.0));
+                    let nonzero = row.iter().filter(|&&x| x > 0.0).count();
+                    assert!(nonzero == 1 || nonzero == 2);
+                    assert!(row[i] > 0.0, "a replica always keeps itself");
+                    if nonzero == 2 {
+                        paired += 1;
+                        assert!((row[i] - 0.5).abs() < 1e-12, "pairwise mean");
+                    }
+                }
+                assert_eq!(paired, 2 * (k / 2));
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_one_sided_drop_mixes_one_sidedly() {
+        let topo = Gossip { seed: 0 };
+        let k = 4;
+        let (a, b) = topo.pairs(0, k)[0];
+        // a's outgoing send dropped: b keeps only itself, a still mixes b.
+        let mut landed = all_true(k);
+        landed[a] = false;
+        let m = topo.mixing_matrix(0, k, &vec![1.0; k], &landed);
+        assert_eq!(m[b][a], 0.0);
+        assert!((m[b][b] - 1.0).abs() < 1e-12);
+        assert!((m[a][b] - 0.5).abs() < 1e-12);
+        assert!((m[a][a] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hier_groups_partition_contiguously() {
+        for k in [1usize, 2, 5, 8] {
+            for g in [1usize, 2, 3, 8, 20] {
+                let groups = hier_groups(k, g);
+                let flat: Vec<usize> = groups.iter().flatten().copied().collect();
+                assert_eq!(flat, (0..k).collect::<Vec<_>>(), "k={k} g={g}");
+                assert!(groups.len() <= g.max(1));
+                assert!(groups.iter().all(|m| !m.is_empty()));
+            }
+        }
+        assert_eq!(hier_groups(8, 2), vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+    }
+
+    #[test]
+    fn hierarchical_bills_only_leader_lanes() {
+        let topo = Hierarchical { groups: 2 };
+        let ts = topo.transfers(0, 8);
+        let wan: Vec<&Transfer> = ts.iter().filter(|t| t.lane.is_some()).collect();
+        // 2 leader uploads + 2 root downloads cross the WAN; member hops
+        // are free local links.
+        assert_eq!(wan.len(), 4);
+        for t in &wan {
+            assert!(matches!(t.lane, Some(0) | Some(4)), "{t:?}");
+            assert_eq!(t.hop, HOP_LEADER_UP);
+            assert_eq!(t.droppable, t.dir == Direction::Up);
+        }
+        assert_eq!(ts.iter().filter(|t| t.lane.is_none()).count(), 2 * 6);
+        assert_eq!(topo.n_replicas(8), 1);
+    }
+
+    #[test]
+    fn prop_ring_average_equals_star_average_bitwise() {
+        // The decentralized ring must reproduce star's weighted average
+        // bit-for-bit: identical raw mixing rows feed identical scalar
+        // operations (normalize, scale first, axpy rest — fixed order).
+        check("ring mixing row == star mixing row, bitwise avg", 50, |g| {
+            let k = g.usize_in(1..7);
+            let len = g.usize_in(1..40);
+            let payloads: Vec<Vec<f32>> = (0..k)
+                .map(|_| {
+                    let mut v = g.f32_vec(len..len + 1, 2.0);
+                    v.resize(len, 0.0);
+                    v
+                })
+                .collect();
+            let weights: Vec<f64> = (0..k).map(|_| g.f64_in(0.1..5.0)).collect();
+            let star_rows = Star.mixing_raw(0, k, &weights, &vec![true; k]);
+            let ring_rows = Ring.mixing_raw(0, k, &weights, &vec![true; k]);
+            let star_avg = weighted_average_flat(&payloads, &star_rows[0]);
+            let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
+            for row in &ring_rows {
+                assert_eq!(row, &star_rows[0], "ring rows must equal star's row");
+                let ring_avg = weighted_average_refs(&refs, row);
+                for (a, b) in ring_avg.iter().zip(&star_avg) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn mixing_matrices_are_row_stochastic_under_partial_delivery() {
+        let topos: Vec<Box<dyn Topology>> = vec![
+            Box::new(Star),
+            Box::new(Ring),
+            Box::new(Gossip { seed: 5 }),
+            Box::new(Hierarchical { groups: 2 }),
+        ];
+        let k = 6;
+        let weights: Vec<f64> = (0..k).map(|i| 1.0 + i as f64).collect();
+        let landed = vec![true, false, true, true, false, true];
+        for topo in &topos {
+            let m = topo.mixing_matrix(2, k, &weights, &landed);
+            assert_eq!(m.len(), topo.n_replicas(k), "{}", topo.name());
+            for row in &m {
+                let s: f64 = row.iter().sum();
+                assert!(
+                    (s - 1.0).abs() < 1e-12 || s == 0.0,
+                    "{}: row sums to {s}",
+                    topo.name()
+                );
+                assert!(row.iter().all(|&x| (0.0..=1.0).contains(&x)));
+            }
+        }
+    }
+
+    #[test]
+    fn star_mixing_masks_dropped_workers() {
+        let w = vec![2.0, 3.0, 5.0];
+        let rows = Star.mixing_raw(0, 3, &w, &[true, false, true]);
+        assert_eq!(rows, vec![vec![2.0, 0.0, 5.0]]);
+    }
+}

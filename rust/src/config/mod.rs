@@ -111,8 +111,130 @@ impl EngineConfig {
     }
 }
 
+/// Which synchronization topology moves outer gradients between islands
+/// (`[topology]` in TOML, `--topology` on the CLI) — see
+/// [`crate::comm::topology`] for the schedules themselves.
+///
+/// The default, [`TopologyConfig::Star`], is DiLoCo's all-to-coordinator
+/// reduction and reproduces the pre-topology loop bitwise. `Ring` and
+/// `Gossip` are decentralized: every worker keeps its own model replica
+/// and outer-optimizer state, and the run reports per-replica and
+/// consensus perplexity plus a consensus-distance metric.
+///
+/// ```
+/// use diloco::config::TopologyConfig;
+///
+/// assert_eq!(TopologyConfig::parse("star").unwrap(), TopologyConfig::default());
+/// assert_eq!(
+///     TopologyConfig::parse("hierarchical:4").unwrap(),
+///     TopologyConfig::Hierarchical { groups: 4 },
+/// );
+/// assert!(TopologyConfig::parse("mesh").is_err());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyConfig {
+    /// All-to-coordinator star (Algorithm 1; the default).
+    Star,
+    /// Ring all-reduce: `2(k−1)` lane-overlapped hops of `1/k` chunks,
+    /// one model + outer state per worker (all replicas stay equal).
+    Ring,
+    /// Seeded random pairwise gossip averaging (NoLoCo,
+    /// arXiv:2506.10911); one model + outer state per worker.
+    Gossip,
+    /// Two-level star: intra-group aggregation onto a leader over free
+    /// local links, then leader ↔ root over the billed WAN (DiLoCoX,
+    /// arXiv:2506.21263).
+    Hierarchical {
+        /// Number of groups `G` (clamped to the active worker count).
+        groups: usize,
+    },
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        TopologyConfig::Star
+    }
+}
+
+impl TopologyConfig {
+    /// Parse `star` / `ring` / `gossip` / `hierarchical[:G]`.
+    pub fn parse(s: &str) -> anyhow::Result<TopologyConfig> {
+        match s {
+            "star" => Ok(TopologyConfig::Star),
+            "ring" => Ok(TopologyConfig::Ring),
+            "gossip" => Ok(TopologyConfig::Gossip),
+            "hierarchical" | "hier" => Ok(TopologyConfig::Hierarchical { groups: 2 }),
+            other => {
+                if let Some(g) = other
+                    .strip_prefix("hierarchical:")
+                    .or_else(|| other.strip_prefix("hier:"))
+                {
+                    let groups: usize = g.trim().parse().map_err(|e| {
+                        anyhow::anyhow!("bad hierarchical group count {g:?}: {e}")
+                    })?;
+                    anyhow::ensure!(groups >= 1, "hierarchical needs >= 1 group");
+                    Ok(TopologyConfig::Hierarchical { groups })
+                } else {
+                    anyhow::bail!(
+                        "unknown topology {other:?} \
+                         (want star|ring|gossip|hierarchical[:G])"
+                    )
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyConfig::Star => "star",
+            TopologyConfig::Ring => "ring",
+            TopologyConfig::Gossip => "gossip",
+            TopologyConfig::Hierarchical { .. } => "hierarchical",
+        }
+    }
+
+    /// Decentralized topologies keep one model replica + outer state per
+    /// worker; centralized ones keep a single global replica.
+    pub fn is_decentralized(&self) -> bool {
+        matches!(self, TopologyConfig::Ring | TopologyConfig::Gossip)
+    }
+
+    /// Build the runtime schedule; `seed` feeds gossip's per-round
+    /// pairing stream.
+    pub fn build(&self, seed: u64) -> Box<dyn crate::comm::topology::Topology> {
+        use crate::comm::topology as topo;
+        match *self {
+            TopologyConfig::Star => Box::new(topo::Star),
+            TopologyConfig::Ring => Box::new(topo::Ring),
+            TopologyConfig::Gossip => Box::new(topo::Gossip { seed }),
+            TopologyConfig::Hierarchical { groups } => {
+                Box::new(topo::Hierarchical { groups })
+            }
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if let TopologyConfig::Hierarchical { groups } = self {
+            anyhow::ensure!(
+                *groups >= 1,
+                "topology.groups must be >= 1 (got {groups})"
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Which fragments synchronize each round, and how the transfer cost is
 /// charged (Streaming DiLoCo, arXiv:2501.18512).
+///
+/// ```
+/// use diloco::config::SyncSchedule;
+///
+/// let stag = SyncSchedule::parse("staggered").unwrap();
+/// assert_eq!(stag.fragments_due(5, 4), vec![1]); // fragment (round mod P)
+/// assert!(!stag.defers_barrier());
+/// assert!(SyncSchedule::parse("overlapped").unwrap().defers_barrier());
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SyncSchedule {
     /// All fragments every round, transfer billed as a sync barrier —
@@ -365,6 +487,8 @@ pub struct ExperimentConfig {
     pub comm: CommConfig,
     /// Streaming partial-sync fabric: fragments × schedule × codec.
     pub stream: StreamConfig,
+    /// Synchronization topology: star | ring | gossip | hierarchical.
+    pub topology: TopologyConfig,
     /// Inner-phase executor (sequential reference vs parallel islands).
     pub engine: EngineConfig,
     /// Evaluate every this many rounds (0 = only at end).
@@ -392,6 +516,7 @@ impl ExperimentConfig {
             data: DataConfig::default(),
             comm: CommConfig::default(),
             stream: StreamConfig::default(),
+            topology: TopologyConfig::Star,
             engine: EngineConfig::Auto,
             eval_every_rounds: 1,
             eval_batches: 4,
@@ -428,11 +553,59 @@ impl ExperimentConfig {
             "comm.bandwidth_bps must be positive"
         );
         self.stream.validate()?;
+        self.topology.validate()?;
         anyhow::ensure!(
             !(self.prune_frac > 0.0 && self.stream.codec != Codec::F32),
             "sign-pruning (diloco.prune_frac > 0) composes with the f32 codec only; \
              got codec {:?}",
             self.stream.codec.name()
+        );
+        anyhow::ensure!(
+            !(self.topology == TopologyConfig::Ring && self.comm.drop_prob > 0.0),
+            "the ring all-reduce is a reliable collective (a dropped chunk would \
+             corrupt every replica); drop injection (comm.drop_prob > 0) composes \
+             with star|gossip|hierarchical"
+        );
+        anyhow::ensure!(
+            !(self.topology == TopologyConfig::Ring && self.prune_frac > 0.0),
+            "sign-pruning produces sparse payloads the ring's dense chunk billing \
+             cannot represent; pruning composes with star|gossip"
+        );
+        // Data invariants — previously hard `assert!` panics deep inside
+        // `data::shard::shard_corpus`; surfaced here so every config
+        // entry point reports them as proper errors before a run starts.
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.data.holdout),
+            "data.holdout must be in [0, 1) (got {})",
+            self.data.holdout
+        );
+        let max_k = self.schedule.max_workers(self.rounds).max(self.workers);
+        // Mirror Dataset::build's holdout selection exactly (a strided
+        // pick capped at n_hold), so validation neither under- nor
+        // over-counts the training documents left for sharding.
+        let n = self.data.n_docs;
+        let n_hold = ((n as f64) * self.data.holdout).ceil() as usize;
+        let train_docs = if n == 0 {
+            0
+        } else {
+            let stride = n.div_ceil(n_hold.max(1));
+            n - n.div_ceil(stride).min(n_hold)
+        };
+        anyhow::ensure!(
+            train_docs >= max_k,
+            "data.docs = {} leaves {} training documents after the {:.0}% holdout \
+             — fewer than the {} worker shards the schedule needs",
+            self.data.n_docs,
+            train_docs,
+            100.0 * self.data.holdout,
+            max_k
+        );
+        anyhow::ensure!(
+            !(self.prune_frac > 0.0
+                && matches!(self.topology, TopologyConfig::Hierarchical { .. })),
+            "the hierarchical leader hop ships a dense re-aggregated payload, so \
+             sign-pruned sparse uploads would be billed inconsistently; pruning \
+             composes with star|gossip"
         );
         Ok(())
     }
@@ -500,6 +673,33 @@ impl ExperimentConfig {
                 _ => EngineConfig::Parallel { threads },
             };
         }
+
+        let topo_kind = doc.str_or("topology.kind", "")?;
+        let topo_groups = doc.usize_or("topology.groups", 0)?;
+        anyhow::ensure!(
+            topo_groups > 0 || doc.get("topology.groups").is_none(),
+            "topology.groups must be >= 1 (got 0)"
+        );
+        cfg.topology = match (topo_kind.as_str(), topo_groups) {
+            ("", 0) => TopologyConfig::Star,
+            // A bare group count implies the hierarchical topology, like
+            // a bare engine.threads implies the parallel engine.
+            ("", g) => TopologyConfig::Hierarchical { groups: g },
+            (kind, 0) => TopologyConfig::parse(kind)?,
+            (kind, g) => match TopologyConfig::parse(kind)? {
+                TopologyConfig::Hierarchical { groups } => {
+                    anyhow::ensure!(
+                        !kind.contains(':') || groups == g,
+                        "topology.groups = {g} conflicts with topology.kind = {kind:?}"
+                    );
+                    TopologyConfig::Hierarchical { groups: g }
+                }
+                other => anyhow::bail!(
+                    "topology.groups = {g} conflicts with topology.kind = {:?}",
+                    other.name()
+                ),
+            },
+        };
 
         cfg.stream.fragments = doc.usize_or("stream.fragments", cfg.stream.fragments)?;
         let schedule = doc.str_or("stream.schedule", cfg.stream.schedule.name())?;
@@ -709,6 +909,103 @@ mod tests {
             assert_eq!(SyncSchedule::parse(s.name()).unwrap(), s);
         }
         assert!(SyncSchedule::parse("sometimes").is_err());
+    }
+
+    #[test]
+    fn topology_parse_language() {
+        assert_eq!(TopologyConfig::parse("star").unwrap(), TopologyConfig::Star);
+        assert_eq!(TopologyConfig::parse("ring").unwrap(), TopologyConfig::Ring);
+        assert_eq!(
+            TopologyConfig::parse("gossip").unwrap(),
+            TopologyConfig::Gossip
+        );
+        assert_eq!(
+            TopologyConfig::parse("hierarchical").unwrap(),
+            TopologyConfig::Hierarchical { groups: 2 }
+        );
+        assert_eq!(
+            TopologyConfig::parse("hier:4").unwrap(),
+            TopologyConfig::Hierarchical { groups: 4 }
+        );
+        assert!(TopologyConfig::parse("hierarchical:0").is_err());
+        assert!(TopologyConfig::parse("hierarchical:x").is_err());
+        assert!(TopologyConfig::parse("mesh").is_err());
+        // Name round-trips (hierarchical re-parses to the default G).
+        for t in [TopologyConfig::Star, TopologyConfig::Ring, TopologyConfig::Gossip] {
+            assert_eq!(TopologyConfig::parse(t.name()).unwrap(), t);
+            assert!(!t.name().is_empty());
+        }
+        assert!(TopologyConfig::Ring.is_decentralized());
+        assert!(TopologyConfig::Gossip.is_decentralized());
+        assert!(!TopologyConfig::Star.is_decentralized());
+        assert!(!TopologyConfig::Hierarchical { groups: 2 }.is_decentralized());
+    }
+
+    #[test]
+    fn from_toml_topology_section() -> anyhow::Result<()> {
+        let doc = TomlDoc::parse("[topology]\nkind = \"gossip\"")?;
+        assert_eq!(
+            ExperimentConfig::from_toml(&doc)?.topology,
+            TopologyConfig::Gossip
+        );
+        // A bare group count implies the hierarchical topology.
+        let doc = TomlDoc::parse("[topology]\ngroups = 4")?;
+        assert_eq!(
+            ExperimentConfig::from_toml(&doc)?.topology,
+            TopologyConfig::Hierarchical { groups: 4 }
+        );
+        // kind + groups compose when they agree (or kind has no :G).
+        let doc = TomlDoc::parse("[topology]\nkind = \"hierarchical\"\ngroups = 3")?;
+        assert_eq!(
+            ExperimentConfig::from_toml(&doc)?.topology,
+            TopologyConfig::Hierarchical { groups: 3 }
+        );
+        // Absent section keeps the star default.
+        let doc = TomlDoc::parse("seed = 1")?;
+        assert_eq!(
+            ExperimentConfig::from_toml(&doc)?.topology,
+            TopologyConfig::Star
+        );
+        Ok(())
+    }
+
+    #[test]
+    fn from_toml_rejects_malformed_topology() {
+        for bad in [
+            "[topology]\nkind = \"mesh\"",
+            "[topology]\nkind = \"ring\"\ngroups = 2",
+            "[topology]\nkind = \"hierarchical:4\"\ngroups = 2",
+            "[topology]\nkind = \"hierarchical\"\ngroups = 0",
+            "[topology]\ngroups = 0",
+            "[topology]\nkind = \"ring\"\n[comm]\ndrop_prob = 0.3",
+            "[topology]\nkind = \"ring\"\n[diloco]\nprune_frac = 0.5",
+            "[topology]\nkind = \"hierarchical\"\n[diloco]\nprune_frac = 0.5",
+        ] {
+            let Ok(doc) = TomlDoc::parse(bad) else { continue };
+            ExperimentConfig::from_toml(&doc)
+                .expect_err(&format!("{bad:?} must be rejected"));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_too_few_training_docs() {
+        // The old behavior was a hard assert deep in shard_corpus; the
+        // invariant now surfaces as a proper error at validation time.
+        let mut cfg = ExperimentConfig::paper_default("a", "nano");
+        cfg.workers = 8;
+        cfg.schedule = ComputeSchedule::Constant(8);
+        cfg.data.n_docs = 6;
+        let err = cfg.validate().expect_err("6 docs over 8 shards");
+        assert!(format!("{err:#}").contains("training documents"));
+        cfg.data.n_docs = 400;
+        cfg.validate().unwrap();
+        // The schedule's peak counts, not just diloco.workers.
+        cfg.schedule = ComputeSchedule::Ramp { from: 1, to: 500 };
+        assert!(cfg.validate().is_err());
+        // holdout = 1.0 would hold out everything.
+        cfg.schedule = ComputeSchedule::Constant(2);
+        cfg.data.holdout = 1.0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

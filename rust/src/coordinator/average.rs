@@ -35,11 +35,32 @@ pub fn average(deltas: &[Tensors]) -> Tensors {
 /// parameter space reproduces the monolithic average bitwise — the
 /// property tests below pin that equivalence.
 pub fn weighted_average_flat(payloads: &[Vec<f32>], weights: &[f64]) -> Vec<f32> {
+    let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
+    weighted_average_refs(&refs, weights)
+}
+
+/// As [`weighted_average_flat`], over borrowed payload slices — the
+/// sync-topology mixing step ([`crate::comm::topology`]) averages the
+/// same wire payloads once per receiving replica, so it borrows instead
+/// of cloning. Scalar operations and their order are identical to
+/// [`weighted_average`] / [`weighted_average_flat`]; the topology
+/// property tests pin the bitwise equivalence (ring row == star row ⇒
+/// ring average == star average, bit for bit).
+///
+/// ```
+/// use diloco::coordinator::average::weighted_average_refs;
+///
+/// let a = [0.0f32, 2.0];
+/// let b = [4.0f32, 6.0];
+/// let avg = weighted_average_refs(&[&a, &b], &[1.0, 1.0]);
+/// assert_eq!(avg, vec![2.0, 4.0]);
+/// ```
+pub fn weighted_average_refs(payloads: &[&[f32]], weights: &[f64]) -> Vec<f32> {
     assert!(!payloads.is_empty(), "no fragment payloads to average");
     assert_eq!(payloads.len(), weights.len());
     let total: f64 = weights.iter().sum();
     assert!(total > 0.0, "all-zero averaging weights");
-    let mut acc = payloads[0].clone();
+    let mut acc = payloads[0].to_vec();
     math::scale(&mut acc, (weights[0] / total) as f32);
     for (p, &w) in payloads[1..].iter().zip(&weights[1..]) {
         math::axpy(&mut acc, (w / total) as f32, p);

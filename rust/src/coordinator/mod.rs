@@ -19,6 +19,15 @@
 //! exactly as the paper specifies — with one fragment (the default) this
 //! is classic DiLoCo, bitwise identical to the pre-streaming loop
 //! (DESIGN.md §8 documents the streaming layer and its schedules).
+//!
+//! The *shape* of the reduction is itself pluggable
+//! ([`crate::comm::topology`], DESIGN.md §9): the default star keeps the
+//! single global replica above; the hierarchical topology keeps the same
+//! math but routes it through group leaders so only `G` flows cross the
+//! billed WAN; the decentralized topologies (ring, gossip) keep one
+//! model + outer-optimizer state per worker and run a mixing-matrix
+//! round loop instead, reporting per-replica and consensus perplexity
+//! plus a consensus-distance metric.
 
 pub mod average;
 pub mod baselines;
@@ -28,8 +37,8 @@ pub mod stats;
 
 use crate::comm::codec::Codec;
 use crate::comm::fragment::FragmentPlan;
-use crate::comm::{Direction, RoundComm, SimNet};
-use crate::config::ExperimentConfig;
+use crate::comm::{topology, Direction, RoundComm, SimNet};
+use crate::config::{ExperimentConfig, TopologyConfig};
 use crate::data::batch::{BatchIter, EvalSet};
 use crate::data::Dataset;
 use crate::engine::{self, InnerPhaseExecutor};
@@ -45,13 +54,24 @@ pub use stats::RoundStats;
 pub struct DilocoReport {
     pub metrics: RunMetrics,
     pub round_stats: Vec<RoundStats>,
+    /// The global model under centralized topologies (star,
+    /// hierarchical); the uniform consensus of the replicas under
+    /// decentralized topologies (ring, gossip).
     pub final_params: Tensors,
     /// Rounds in which at least one of each worker's fragment uploads
     /// was dropped (with one fragment: rounds the outer gradient
-    /// dropped, as before).
+    /// dropped, as before). Under the hierarchical topology a dropped
+    /// leader hop counts against every member of the group.
     pub drops_per_worker: Vec<usize>,
     /// Fabric billing per round, in round order (golden-trace input).
     pub comm_per_round: Vec<RoundComm>,
+    /// Final per-replica models (decentralized topologies only; empty
+    /// for star/hierarchical, whose single replica is `final_params`).
+    pub replica_params: Vec<Tensors>,
+    /// Final per-replica evaluations, in replica order (decentralized
+    /// topologies only) — the consensus eval is the last point of
+    /// `metrics.eval_curve`.
+    pub replica_evals: Vec<EvalPoint>,
 }
 
 pub struct Coordinator {
@@ -69,6 +89,7 @@ impl Coordinator {
     /// (runtimes are reused across bench variants — compilation is paid
     /// once per artifact set).
     pub fn new(cfg: ExperimentConfig, rt: Arc<Runtime>) -> anyhow::Result<Coordinator> {
+        cfg.validate()?;
         let mcfg = &rt.manifest.config;
         anyhow::ensure!(
             mcfg.name == cfg.model,
@@ -77,7 +98,7 @@ impl Coordinator {
             cfg.model
         );
         let max_k = cfg.schedule.max_workers(cfg.rounds).max(cfg.workers);
-        let dataset = Dataset::build(&cfg.data, max_k, mcfg.vocab_size, cfg.seed);
+        let dataset = Dataset::build(&cfg.data, max_k, mcfg.vocab_size, cfg.seed)?;
         let evalset = EvalSet::new(
             &dataset.holdout,
             mcfg.batch_size,
@@ -176,7 +197,8 @@ impl Coordinator {
         self.run_from(None)
     }
 
-    /// As [`run`], but optionally starting from caller-provided parameters.
+    /// As [`Coordinator::run`], but optionally starting from
+    /// caller-provided parameters.
     /// A provided `init` is treated as *already pretrained* for
     /// `cfg.pretrain_steps` steps (shared warm start across bench
     /// variants): the pretrain phase is skipped but the workers' global
@@ -213,6 +235,20 @@ impl Coordinator {
             }
         };
         let mut global = global;
+
+        // Decentralized topologies (ring, gossip) keep one replica per
+        // worker and mix peer-to-peer — a structurally different round
+        // loop. Star and hierarchical continue below with the single
+        // global replica (the star path is the PR-2 loop, bitwise).
+        if cfg.topology.is_decentralized() {
+            return self.run_decentralized(global, metrics);
+        }
+        // Hierarchical topology: contiguous worker groups whose leaders
+        // carry the only billed WAN hops (None = star default).
+        let hier_cfg = match cfg.topology {
+            TopologyConfig::Hierarchical { groups } => Some(groups),
+            _ => None,
+        };
 
         // Worker pool sized to the schedule's maximum.
         let max_k = cfg.schedule.max_workers(cfg.rounds).max(1);
@@ -268,6 +304,8 @@ impl Coordinator {
             let k_t = cfg.schedule.workers_at(t, cfg.rounds).min(max_k).max(1);
             let due = cfg.stream.schedule.fragments_due(t, n_frag);
             let active = &mut workers[..k_t];
+            let hier_groups: Option<Vec<Vec<usize>>> =
+                hier_cfg.map(|g| topology::hier_groups(k_t, g));
 
             // Re-dispatch: every fragment whose sync the worker completed
             // adopts the current global values; other fragments keep the
@@ -314,6 +352,38 @@ impl Coordinator {
             // for the round's cosine/norm statistics.
             let mut received_assembled: Vec<Tensors> = Vec::new();
             let mut codec_err_sq = 0.0f64;
+            // Hierarchical delivery: one droppable aggregate per (group,
+            // due fragment) on the leader's WAN lane, keyed
+            // (round, leader, fragment, hop 1). Member payloads ride
+            // free intra-group links, so a dropped leader hop excludes
+            // — and desyncs — the whole group for that fragment.
+            let hier_landed: Option<Vec<Vec<bool>>> = hier_groups.as_ref().map(|gs| {
+                due.iter()
+                    .map(|&f| {
+                        let mut landed = vec![false; k_t];
+                        for g in gs {
+                            let ok = if k_t == 1 {
+                                true
+                            } else {
+                                let bytes = codec
+                                    .encoded_bytes(plan.elements(f), plan.slices(f).len());
+                                net.try_send_hop(
+                                    bytes,
+                                    Direction::Up,
+                                    t,
+                                    g[0],
+                                    f,
+                                    topology::HOP_LEADER_UP,
+                                )
+                            };
+                            for &m in g {
+                                landed[m] = ok;
+                            }
+                        }
+                        landed
+                    })
+                    .collect()
+            });
             for (i, w) in active.iter().enumerate() {
                 let mut delta = refs[w.id].delta(&w.params);
                 // Sign-pruning (Table 6) applies to the whole outer
@@ -357,10 +427,17 @@ impl Coordinator {
                         None => codec
                             .encoded_bytes(plan.elements(f), plan.slices(f).len()),
                     };
-                    let ok = if k_t == 1 {
-                        true
-                    } else {
-                        net.try_send_fragment(bytes, Direction::Up, t, w.id, f)
+                    let ok = match &hier_landed {
+                        // Hierarchical: the group leader's hop already
+                        // decided this fragment's fate for every member.
+                        Some(landed) => landed[di][w.id],
+                        None => {
+                            if k_t == 1 {
+                                true
+                            } else {
+                                net.try_send_fragment(bytes, Direction::Up, t, w.id, f)
+                            }
+                        }
                     };
                     if ok {
                         codec_err_sq += err_sq;
@@ -437,7 +514,7 @@ impl Coordinator {
             for (i, w) in active.iter().enumerate() {
                 for (di, &f) in due.iter().enumerate() {
                     if sent[i][di] {
-                        if k_t > 1 {
+                        if k_t > 1 && hier_groups.is_none() {
                             net.send_reliable_to(
                                 4 * plan.elements(f) as u64,
                                 Direction::Down,
@@ -445,6 +522,23 @@ impl Coordinator {
                             );
                         }
                         pending_adopt[w.id][f] = true;
+                    }
+                }
+            }
+            // Hierarchical return path: one full-precision payload from
+            // the root to each landed group's leader; the leader→member
+            // fan-out rides the free intra-group links.
+            if let (Some(gs), Some(landed), true) = (&hier_groups, &hier_landed, k_t > 1)
+            {
+                for (di, &f) in due.iter().enumerate() {
+                    for g in gs {
+                        if landed[di][g[0]] {
+                            net.send_reliable_to(
+                                4 * plan.elements(f) as u64,
+                                Direction::Down,
+                                g[0],
+                            );
+                        }
                     }
                 }
             }
@@ -483,6 +577,320 @@ impl Coordinator {
             final_params: global,
             drops_per_worker,
             comm_per_round: cs.per_round.clone(),
+            replica_params: Vec::new(),
+            replica_evals: Vec::new(),
+        })
+    }
+
+    /// Decentralized round loop (ring, gossip topologies): every worker
+    /// keeps its own model replica and outer-optimizer state. Each round
+    /// the topology's deterministic transfer schedule moves the
+    /// (fragmented, codec-encoded) outer gradients between peers over
+    /// the billed fabric, and every replica applies its own row of the
+    /// mixing matrix through its own outer optimizer. The eval curve
+    /// tracks the uniform *consensus* of the active replicas; the final
+    /// report adds per-replica models and evals plus a per-round
+    /// consensus-distance metric in the round stats.
+    fn run_decentralized(
+        &self,
+        global: Tensors,
+        mut metrics: RunMetrics,
+    ) -> anyhow::Result<DilocoReport> {
+        let cfg = &self.cfg;
+        let mcfg = &self.rt.manifest.config;
+        let rng = cfg.rng();
+        let topo = cfg.topology.build(cfg.seed);
+
+        let max_k = cfg.schedule.max_workers(cfg.rounds).max(1);
+        let zeros = Tensors::zeros(&self.rt.manifest);
+        let mut workers: Vec<Worker> = (0..max_k)
+            .map(|i| {
+                let shard = self.dataset.shards[i % self.dataset.shards.len()].clone();
+                let mut w = Worker::new(
+                    i,
+                    global.clone(),
+                    zeros.clone(),
+                    BatchIter::new(
+                        shard,
+                        mcfg.batch_size,
+                        mcfg.seq_len,
+                        rng.child(100 + i as u64),
+                    ),
+                );
+                w.step = cfg.pretrain_steps as f64;
+                w
+            })
+            .collect();
+        let plan = FragmentPlan::for_tensors(&zeros, cfg.stream.fragments);
+        let n_frag = plan.n_fragments();
+        let codec = cfg.stream.codec;
+        // One model replica + outer-optimizer state per worker, all
+        // starting from the shared (pretrained) initialization.
+        let mut replicas: Vec<Tensors> = (0..max_k).map(|_| global.clone()).collect();
+        let mut outers = opt::OuterOpt::replicated(&cfg.outer_opt, &zeros, max_k);
+        let mut refs: Vec<Tensors> = (0..max_k).map(|_| global.clone()).collect();
+        let mut pending_adopt: Vec<Vec<bool>> = vec![vec![true; n_frag]; max_k];
+        let mut drops_per_worker = vec![0usize; max_k];
+        let mut carry_comm_s = 0.0f64;
+        let mut codec_err_sq_total = 0.0f64;
+
+        let mut net = SimNet::new(
+            cfg.comm.bandwidth_bps,
+            cfg.comm.latency_s,
+            cfg.comm.drop_prob,
+            rng.child(7),
+        );
+        let mut round_stats = Vec::with_capacity(cfg.rounds);
+        let payload = self.rt.manifest.param_bytes() as u64;
+        // Uniform consensus of the active replicas, refreshed per round
+        // — what the eval curve and `final_params` report.
+        let mut consensus = global.clone();
+        let mut last_k = 1usize.min(max_k).max(1);
+
+        for t in 0..cfg.rounds {
+            let k_t = cfg.schedule.workers_at(t, cfg.rounds).min(max_k).max(1);
+            last_k = k_t;
+            let due = cfg.stream.schedule.fragments_due(t, n_frag);
+            let active = &mut workers[..k_t];
+
+            // Every worker re-adopts its own replica's freshly stepped
+            // fragments — there is no central model to download.
+            for w in active.iter_mut() {
+                let pa = &mut pending_adopt[w.id];
+                for (f, flag) in pa.iter_mut().enumerate() {
+                    if *flag {
+                        plan.copy_fragment(&replicas[w.id], &mut w.params, f);
+                        plan.copy_fragment(&replicas[w.id], &mut refs[w.id], f);
+                        *flag = false;
+                    }
+                }
+            }
+
+            let phase =
+                engine::run_inner_phase(self.exec.as_ref(), &self.rt, active, cfg.inner_steps)?;
+            metrics.sim_compute_seconds += phase.overlapped_compute_s(carry_comm_s);
+            carry_comm_s = 0.0;
+            metrics.phases.inner_compute_s += phase.total_wall_s();
+            for s in 0..cfg.inner_steps {
+                let avg = phase.per_worker_losses.iter().map(|l| l[s]).sum::<f32>() / k_t as f32;
+                metrics.loss_curve.push(avg);
+            }
+
+            let _outer_timer = Stopwatch::new(&mut metrics.phases.outer_opt_s);
+            if k_t > 1 {
+                metrics.comm_bytes_up_baseline += k_t as u64 * payload;
+            }
+
+            // Outer gradients, §6.1 weights, and wire payloads per
+            // worker, in worker order (the deterministic fold order).
+            // payloads[di][w] holds the *transcoded* wire values of due
+            // fragment di from worker w — what every receiver (and the
+            // sender itself) mixes, so codec loss is part of the
+            // simulated algorithm exactly as on the star path.
+            let mut weights: Vec<f64> = Vec::with_capacity(k_t);
+            let mut worker_bytes: Vec<Vec<u64>> = Vec::with_capacity(k_t);
+            let mut payloads: Vec<Vec<Vec<f32>>> = vec![Vec::new(); due.len()];
+            // Assembled wire-value deltas for the round statistics.
+            let mut received_assembled: Vec<Tensors> = Vec::with_capacity(k_t);
+            // Lossless full coverage (the f32 every-round default): the
+            // wire values ARE the delta's, so the stats tensor moves the
+            // delta instead of being re-assembled — same fast path as
+            // the star loop.
+            let lossless_full =
+                (codec == Codec::F32 || k_t == 1) && due.len() == n_frag;
+            let mut codec_err_sq = 0.0f64;
+            for w in active.iter() {
+                let mut delta = refs[w.id].delta(&w.params);
+                let pruned_payload = if cfg.prune_frac > 0.0 {
+                    let zeroed = prune::prune_sign(&mut delta, cfg.prune_frac);
+                    Some(prune::pruned_payload_bytes(delta.total_elements(), zeroed))
+                } else {
+                    None
+                };
+                weights.push(if cfg.weighted_average && cfg.data.non_iid {
+                    self.dataset.shard_doc_counts
+                        [w.id % self.dataset.shard_doc_counts.len()]
+                        as f64
+                } else {
+                    1.0
+                });
+                let mut bytes_per_frag = Vec::with_capacity(due.len());
+                let mut assembled: Option<Tensors> = None;
+                for (di, &f) in due.iter().enumerate() {
+                    let mut vals = plan.extract(&delta, f);
+                    // k = 1: the outer step is local — no codec, no fabric.
+                    if k_t > 1 {
+                        codec_err_sq += codec.transcode(&mut vals, plan.slices(f));
+                    }
+                    bytes_per_frag.push(match pruned_payload {
+                        Some(total) => {
+                            total * plan.elements(f) as u64
+                                / plan.total_elements() as u64
+                        }
+                        None => codec
+                            .encoded_bytes(plan.elements(f), plan.slices(f).len()),
+                    });
+                    if !lossless_full {
+                        plan.scatter(
+                            &vals,
+                            f,
+                            assembled.get_or_insert_with(|| zeros.clone()),
+                        );
+                    }
+                    payloads[di].push(vals);
+                }
+                worker_bytes.push(bytes_per_frag);
+                received_assembled.push(match assembled {
+                    Some(a) => a,
+                    None => delta,
+                });
+            }
+
+            let transfers = topo.transfers(t, k_t);
+            let mut dropped_any = vec![false; k_t];
+            let mut fragments_synced = 0usize;
+            let mut avg_assembled: Option<Tensors> = None;
+            for (di, &f) in due.iter().enumerate() {
+                // Execute the fragment's transfer schedule against the
+                // fabric; landed[s] = worker s's outgoing contribution
+                // was delivered to its receiver(s).
+                let mut landed = vec![true; k_t];
+                if k_t > 1 {
+                    for tr in &transfers {
+                        let Some(lane) = tr.lane else { continue };
+                        let bytes = match tr.chunk {
+                            Some((c, of)) => codec.encoded_bytes(
+                                topology::chunk_elems(plan.elements(f), c, of),
+                                1,
+                            ),
+                            None => worker_bytes[tr.sender][di],
+                        };
+                        if tr.droppable {
+                            debug_assert_eq!(lane, tr.sender, "droppable hops bill the sender's lane");
+                            if !net.try_send_hop(bytes, tr.dir, t, tr.sender, f, tr.hop) {
+                                landed[tr.sender] = false;
+                                dropped_any[tr.sender] = true;
+                            }
+                        } else {
+                            net.send_reliable_to(bytes, tr.dir, lane);
+                        }
+                    }
+                }
+
+                // Mixing + per-replica outer steps, replica order. Raw
+                // rows feed the same normalize/scale/axpy scalar ops as
+                // the star average, so the all-landed uniform case is
+                // bitwise-equal to the star path per replica.
+                let rows = topo.mixing_raw(t, k_t, &weights, &landed);
+                let mix = |row: &[f64]| -> Option<Vec<f32>> {
+                    let mut pl: Vec<&[f32]> = Vec::with_capacity(k_t);
+                    let mut wt: Vec<f64> = Vec::with_capacity(k_t);
+                    for (j, &wgt) in row.iter().enumerate() {
+                        if wgt > 0.0 {
+                            pl.push(&payloads[di][j]);
+                            wt.push(wgt);
+                        }
+                    }
+                    (!pl.is_empty())
+                        .then(|| average::weighted_average_refs(&pl, &wt))
+                };
+                // All-equal rows (the ring) share one mixed average
+                // instead of recomputing k bit-identical ones.
+                let shared = (rows.len() > 1
+                    && rows.windows(2).all(|w| w[0] == w[1]))
+                .then(|| mix(&rows[0]))
+                .flatten();
+                for (r, row) in rows.iter().enumerate() {
+                    let owned;
+                    let mixed: &[f32] = if let Some(m) = &shared {
+                        m
+                    } else if let Some(m) = mix(row) {
+                        owned = m;
+                        &owned
+                    } else {
+                        continue;
+                    };
+                    outers[r].step_fragment(&mut replicas[r], mixed, plan.slices(f), f);
+                    pending_adopt[r][f] = true;
+                }
+                fragments_synced += 1;
+                // Field average over every active worker — the analogue
+                // of the star's received average, for the round stats.
+                let all_refs: Vec<&[f32]> =
+                    payloads[di].iter().map(|p| p.as_slice()).collect();
+                let avg = average::weighted_average_refs(&all_refs, &weights);
+                plan.scatter(&avg, f, avg_assembled.get_or_insert_with(|| zeros.clone()));
+            }
+
+            for (w, dropped) in dropped_any.iter().enumerate() {
+                if *dropped {
+                    drops_per_worker[w] += 1;
+                }
+            }
+            if let Some(avg) = &avg_assembled {
+                let mut rs = stats::round_stats(t, &received_assembled, avg);
+                rs.fragments_synced = fragments_synced;
+                rs.codec_err_l2 = codec_err_sq.sqrt();
+                consensus = average::average(&replicas[..k_t]);
+                rs.consensus_dist =
+                    stats::consensus_distance(&replicas[..k_t], &consensus);
+                round_stats.push(rs);
+                codec_err_sq_total += codec_err_sq;
+                for r in &replicas[..k_t] {
+                    anyhow::ensure!(
+                        r.all_finite(),
+                        "outer step produced non-finite parameters at round {t}"
+                    );
+                }
+            }
+
+            if cfg.stream.schedule.defers_barrier() && t + 1 < cfg.rounds {
+                carry_comm_s = net.end_round_deferred();
+            } else {
+                net.end_round();
+            }
+            drop(_outer_timer);
+
+            // Evaluation of the *consensus* model.
+            let at_eval = cfg.eval_every_rounds > 0
+                && (t + 1) % cfg.eval_every_rounds == 0;
+            if at_eval || t + 1 == cfg.rounds {
+                let _t = Stopwatch::new(&mut metrics.phases.eval_s);
+                let mut p = self.evaluate(&consensus)?;
+                p.step = cfg.pretrain_steps + (t + 1) * cfg.inner_steps;
+                metrics.eval_curve.push(p);
+            }
+        }
+
+        let cs = net.stats();
+        metrics.comm_bytes = cs.total_bytes();
+        metrics.comm_bytes_up = cs.bytes_up;
+        metrics.comm_messages = cs.messages;
+        metrics.comm_dropped = cs.dropped;
+        metrics.sim_comm_seconds = cs.sim_comm_seconds;
+        metrics.codec_err_l2 = codec_err_sq_total.sqrt();
+        let comm_per_round = cs.per_round.clone();
+
+        // Per-replica finals: each island's own model, evaluated once.
+        let mut replica_evals = Vec::with_capacity(last_k);
+        if cfg.rounds > 0 {
+            let _t = Stopwatch::new(&mut metrics.phases.eval_s);
+            for r in replicas[..last_k].iter() {
+                let mut p = self.evaluate(r)?;
+                p.step = cfg.pretrain_steps + cfg.rounds * cfg.inner_steps;
+                replica_evals.push(p);
+            }
+        }
+        replicas.truncate(last_k);
+
+        Ok(DilocoReport {
+            metrics,
+            round_stats,
+            final_params: consensus,
+            drops_per_worker,
+            comm_per_round,
+            replica_params: replicas,
+            replica_evals,
         })
     }
 }

@@ -52,6 +52,26 @@ pub enum OuterOpt {
 }
 
 impl OuterOpt {
+    /// One independent optimizer state per model replica — decentralized
+    /// sync topologies (ring, gossip; see [`crate::comm::topology`])
+    /// keep one model *and one outer momentum / Adam state* per worker,
+    /// so each replica's trajectory is self-consistent even when the
+    /// replicas disagree.
+    ///
+    /// ```
+    /// use diloco::config::OuterOptConfig;
+    /// use diloco::coordinator::opt::OuterOpt;
+    /// use diloco::runtime::Tensors;
+    ///
+    /// let zeros = Tensors::from_raw(vec![vec![0.0; 4]]);
+    /// let opts = OuterOpt::replicated(&OuterOptConfig::paper_default(), &zeros, 3);
+    /// assert_eq!(opts.len(), 3);
+    /// assert!(opts.iter().all(|o| o.name() == "nesterov"));
+    /// ```
+    pub fn replicated(cfg: &OuterOptConfig, zeros: &Tensors, n: usize) -> Vec<OuterOpt> {
+        (0..n).map(|_| OuterOpt::new(cfg, zeros)).collect()
+    }
+
     /// Build from config; `zeros` supplies the state shape.
     pub fn new(cfg: &OuterOptConfig, zeros: &Tensors) -> OuterOpt {
         match *cfg {

@@ -22,6 +22,36 @@ pub struct RoundStats {
     /// the outer-gradient codec across every payload received this
     /// round; exactly 0.0 for the f32 codec.
     pub codec_err_l2: f64,
+    /// Mean L2 distance of the per-worker model replicas from their
+    /// uniform consensus after the round's outer steps — the agreement
+    /// metric of decentralized topologies (ring, gossip). Exactly 0.0
+    /// for centralized topologies, whose single replica *is* the
+    /// consensus, and stays ~0 for the ring (every replica applies the
+    /// same full average).
+    pub consensus_dist: f64,
+}
+
+/// Mean L2 distance of `replicas` from `consensus` (their uniform mean).
+///
+/// ```
+/// use diloco::coordinator::stats::consensus_distance;
+/// use diloco::runtime::Tensors;
+///
+/// let a = Tensors::from_raw(vec![vec![1.0, 0.0]]);
+/// let b = Tensors::from_raw(vec![vec![-1.0, 0.0]]);
+/// let mid = Tensors::from_raw(vec![vec![0.0, 0.0]]);
+/// let d = consensus_distance(&[a, b], &mid);
+/// assert!((d - 1.0).abs() < 1e-9); // each replica sits 1.0 from the mean
+/// ```
+pub fn consensus_distance(replicas: &[Tensors], consensus: &Tensors) -> f64 {
+    if replicas.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = replicas
+        .iter()
+        .map(|r| r.delta(consensus).l2_norm())
+        .sum();
+    sum / replicas.len() as f64
 }
 
 /// Pairwise cosine similarities among deltas (k·(k-1)/2 values).
@@ -45,10 +75,11 @@ pub fn round_stats(round: usize, deltas: &[Tensors], avg: &Tensors) -> RoundStat
         cos_std: math::stddev(&cosines),
         avg_delta_norm: avg.l2_norm(),
         per_worker_norm_mean: math::mean(&norms),
-        // The coordinator overwrites these with the round's streaming
-        // outcome; defaults describe a lossless monolithic sync.
+        // The coordinator overwrites these with the round's streaming /
+        // topology outcome; defaults describe a lossless centralized sync.
         fragments_synced: 1,
         codec_err_l2: 0.0,
+        consensus_dist: 0.0,
     }
 }
 
@@ -80,6 +111,19 @@ mod tests {
         assert!(pairwise_cosines(&[t(&[1.0])]).is_empty());
         let s = round_stats(0, &[t(&[1.0])], &t(&[1.0]));
         assert_eq!(s.cos_mean, 0.0); // mean of empty = 0 by convention
+    }
+
+    #[test]
+    fn consensus_distance_basics() {
+        let a = t(&[2.0, 0.0]);
+        let b = t(&[0.0, 2.0]);
+        let mid = crate::coordinator::average::average(&[a.clone(), b.clone()]);
+        // mid = (1,1); each replica is √2 away.
+        let d = consensus_distance(&[a.clone(), b], &mid);
+        assert!((d - 2f64.sqrt()).abs() < 1e-6, "{d}");
+        // Identical replicas agree exactly; empty input is 0 by convention.
+        assert_eq!(consensus_distance(&[a.clone(), a.clone()], &a), 0.0);
+        assert_eq!(consensus_distance(&[], &mid), 0.0);
     }
 
     #[test]

@@ -31,8 +31,16 @@ pub struct Dataset {
 }
 
 impl Dataset {
-    /// Build corpus → tokenizer → shards for `k` workers.
-    pub fn build(cfg: &DataConfig, k: usize, vocab_size: usize, seed: u64) -> Dataset {
+    /// Build corpus → tokenizer → shards for `k` workers. Fails (with a
+    /// proper error, not a panic) when the corpus cannot cover `k`
+    /// non-empty shards; [`crate::config::ExperimentConfig::validate`]
+    /// rejects such configurations up front.
+    pub fn build(
+        cfg: &DataConfig,
+        k: usize,
+        vocab_size: usize,
+        seed: u64,
+    ) -> anyhow::Result<Dataset> {
         let rng = Rng::new(seed);
         let corpus = Corpus::synthesize(cfg, &mut rng.child(1));
         let tokenizer = Tokenizer::train(&corpus, vocab_size, &mut rng.child(2));
@@ -51,19 +59,19 @@ impl Dataset {
             }
         }
 
-        let plan = shard_corpus(&corpus, &train_idx, k, cfg, &mut rng.child(3));
+        let plan = shard_corpus(&corpus, &train_idx, k, cfg, &mut rng.child(3))?;
         let shards: Vec<Vec<i32>> = plan
             .doc_assignment
             .iter()
             .map(|docs| tokenize_stream(&corpus, docs, &tokenizer))
             .collect();
         let holdout = tokenize_stream(&corpus, &hold_idx, &tokenizer);
-        Dataset {
+        Ok(Dataset {
             tokenizer,
             shards,
             shard_doc_counts: plan.doc_assignment.iter().map(|d| d.len()).collect(),
             holdout,
-        }
+        })
     }
 }
 
@@ -94,7 +102,7 @@ mod tests {
 
     #[test]
     fn dataset_builds_and_covers_all_shards() {
-        let ds = Dataset::build(&small_cfg(), 4, 256, 0);
+        let ds = Dataset::build(&small_cfg(), 4, 256, 0).unwrap();
         assert_eq!(ds.shards.len(), 4);
         assert!(ds.shards.iter().all(|s| s.len() > 100));
         assert!(ds.holdout.len() > 50);
@@ -104,15 +112,15 @@ mod tests {
 
     #[test]
     fn dataset_is_deterministic() {
-        let a = Dataset::build(&small_cfg(), 2, 256, 7);
-        let b = Dataset::build(&small_cfg(), 2, 256, 7);
+        let a = Dataset::build(&small_cfg(), 2, 256, 7).unwrap();
+        let b = Dataset::build(&small_cfg(), 2, 256, 7).unwrap();
         assert_eq!(a.shards, b.shards);
         assert_eq!(a.holdout, b.holdout);
     }
 
     #[test]
     fn tokens_within_vocab() {
-        let ds = Dataset::build(&small_cfg(), 2, 256, 1);
+        let ds = Dataset::build(&small_cfg(), 2, 256, 1).unwrap();
         for s in ds.shards.iter().chain(std::iter::once(&ds.holdout)) {
             assert!(s.iter().all(|&t| (0..256).contains(&t)));
         }

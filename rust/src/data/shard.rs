@@ -22,17 +22,22 @@ impl ShardPlan {
 }
 
 /// Assign `train_docs` (indices into `corpus.docs`) to `k` shards.
+///
+/// Degenerate inputs (zero shards, fewer documents than shards) are
+/// proper [`anyhow`] errors, not panics — [`crate::config::ExperimentConfig::validate`]
+/// checks the same invariants up front so misconfigured runs fail at
+/// config time with the same message shape.
 pub fn shard_corpus(
     corpus: &Corpus,
     train_docs: &[usize],
     k: usize,
     cfg: &DataConfig,
     rng: &mut Rng,
-) -> ShardPlan {
-    assert!(k > 0, "need at least one shard");
-    assert!(
+) -> anyhow::Result<ShardPlan> {
+    anyhow::ensure!(k > 0, "need at least one shard");
+    anyhow::ensure!(
         train_docs.len() >= k,
-        "cannot spread {} docs over {k} shards",
+        "cannot spread {} documents over {k} shards",
         train_docs.len()
     );
     let mut assignment = vec![Vec::new(); k];
@@ -58,13 +63,16 @@ pub fn shard_corpus(
         if assignment[i].is_empty() {
             let donor = (0..k)
                 .max_by_key(|&j| assignment[j].len())
-                .expect("k > 0");
-            assert!(assignment[donor].len() > 1, "not enough docs to repair");
+                .expect("k > 0 ensured above");
+            anyhow::ensure!(
+                assignment[donor].len() > 1,
+                "not enough documents to repair empty shard {i}"
+            );
             let doc = assignment[donor].pop().unwrap();
             assignment[i].push(doc);
         }
     }
-    ShardPlan { doc_assignment: assignment }
+    Ok(ShardPlan { doc_assignment: assignment })
 }
 
 #[cfg(test)]
@@ -88,7 +96,7 @@ mod tests {
     fn non_iid_shards_are_topic_pure() {
         let (corpus, cfg) = setup(4, 40);
         let docs: Vec<usize> = (0..40).collect();
-        let plan = shard_corpus(&corpus, &docs, 4, &cfg, &mut Rng::new(1));
+        let plan = shard_corpus(&corpus, &docs, 4, &cfg, &mut Rng::new(1)).unwrap();
         for (shard, docs) in plan.doc_assignment.iter().enumerate() {
             for &d in docs {
                 assert_eq!(corpus.docs[d].topic % 4, shard);
@@ -101,7 +109,7 @@ mod tests {
         let (corpus, mut cfg) = setup(4, 40);
         cfg.non_iid = false;
         let docs: Vec<usize> = (0..40).collect();
-        let plan = shard_corpus(&corpus, &docs, 8, &cfg, &mut Rng::new(2));
+        let plan = shard_corpus(&corpus, &docs, 8, &cfg, &mut Rng::new(2)).unwrap();
         assert!(plan.counts().iter().all(|&c| c == 5));
         let mut all: Vec<usize> =
             plan.doc_assignment.iter().flatten().copied().collect();
@@ -113,7 +121,7 @@ mod tests {
     fn more_shards_than_topics_still_nonempty() {
         let (corpus, cfg) = setup(4, 64);
         let docs: Vec<usize> = (0..64).collect();
-        let plan = shard_corpus(&corpus, &docs, 16, &cfg, &mut Rng::new(3));
+        let plan = shard_corpus(&corpus, &docs, 16, &cfg, &mut Rng::new(3)).unwrap();
         assert_eq!(plan.doc_assignment.len(), 16);
         assert!(plan.counts().iter().all(|&c| c >= 1));
         assert_eq!(plan.counts().iter().sum::<usize>(), 64);
@@ -124,7 +132,7 @@ mod tests {
         let (corpus, mut cfg) = setup(8, 400);
         cfg.mix = 1.0; // fully mixed = iid-like
         let docs: Vec<usize> = (0..400).collect();
-        let plan = shard_corpus(&corpus, &docs, 8, &cfg, &mut Rng::new(4));
+        let plan = shard_corpus(&corpus, &docs, 8, &cfg, &mut Rng::new(4)).unwrap();
         // With full mixing, shard 0 should hold many topics, not one.
         let topics: std::collections::HashSet<usize> = plan.doc_assignment[0]
             .iter()
@@ -134,10 +142,20 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn too_few_docs_panics() {
+    fn too_few_docs_is_an_error_not_a_panic() {
         let (corpus, cfg) = setup(2, 4);
         let docs: Vec<usize> = (0..2).collect();
-        shard_corpus(&corpus, &docs, 4, &cfg, &mut Rng::new(5));
+        let err = shard_corpus(&corpus, &docs, 4, &cfg, &mut Rng::new(5))
+            .expect_err("2 docs over 4 shards");
+        assert!(format!("{err:#}").contains("2 documents over 4 shards"));
+    }
+
+    #[test]
+    fn zero_shards_is_an_error_not_a_panic() {
+        let (corpus, cfg) = setup(2, 8);
+        let docs: Vec<usize> = (0..8).collect();
+        let err = shard_corpus(&corpus, &docs, 0, &cfg, &mut Rng::new(6))
+            .expect_err("k = 0");
+        assert!(format!("{err:#}").contains("at least one shard"));
     }
 }

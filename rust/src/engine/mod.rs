@@ -61,6 +61,26 @@ pub trait InnerPhaseExecutor: Send + Sync {
 }
 
 /// Reference executor: islands run back-to-back on the calling thread.
+///
+/// ```
+/// use diloco::engine::{InnerPhaseExecutor, IslandOutput, IslandTask, Sequential};
+///
+/// let tasks: Vec<IslandTask<'static>> = (0..3)
+///     .map(|i| {
+///         Box::new(move || {
+///             Ok(IslandOutput {
+///                 losses: vec![i as f32],
+///                 compute_s: 0.0,
+///                 wall_s: 0.0,
+///                 payload: None,
+///             })
+///         }) as IslandTask<'static>
+///     })
+///     .collect();
+/// let outs = Sequential.run_islands(tasks).unwrap();
+/// // Island order, never completion order — the determinism contract.
+/// assert_eq!(outs[2].losses, vec![2.0]);
+/// ```
 pub struct Sequential;
 
 impl InnerPhaseExecutor for Sequential {

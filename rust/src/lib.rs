@@ -9,8 +9,11 @@
 //!   round orchestration ([`coordinator`]), the island execution engine
 //!   ([`engine`] — sequential reference path or truly parallel OS
 //!   threads, bitwise-identical), outer optimizers ([`coordinator::opt`]),
-//!   the simulated wide-area fabric ([`comm`]), data sharding ([`data`]),
-//!   metrics, checkpoints, config and CLI.
+//!   the simulated wide-area fabric ([`comm`]) with its streaming
+//!   fragment/codec layers ([`comm::fragment`], [`comm::codec`]) and
+//!   pluggable sync topologies ([`comm::topology`] — star, ring
+//!   all-reduce, NoLoCo-style gossip, DiLoCoX-style hierarchical), data
+//!   sharding ([`data`]), metrics, checkpoints, config and CLI.
 //! * **Layer 2/1 (build-time python, never on the training path)** — the
 //!   transformer fwd/bwd + fused AdamW and the Pallas kernels, lowered
 //!   once by `python/compile/aot.py` into `artifacts/*.hlo.txt` which
@@ -19,6 +22,22 @@
 //! The hot path is rust-only: device-resident parameter/optimizer buffers
 //! stepped by `execute_b`, with host round-trips only at the H-step round
 //! boundaries — exactly the communication pattern the paper exploits.
+//!
+//! # Configuring a run
+//!
+//! Every experiment is one [`ExperimentConfig`] — built programmatically,
+//! or parsed from the TOML subset ([`config::toml`]) by the CLI. The
+//! communication axes compose: `[stream]` picks fragments × schedule ×
+//! codec, `[topology]` picks who exchanges outer gradients with whom.
+//!
+//! ```
+//! use diloco::config::{ExperimentConfig, TopologyConfig};
+//!
+//! let mut cfg = ExperimentConfig::paper_default("artifacts", "nano");
+//! assert_eq!(cfg.topology, TopologyConfig::Star); // classic DiLoCo
+//! cfg.topology = TopologyConfig::parse("gossip").unwrap();
+//! cfg.validate().unwrap();
+//! ```
 
 pub mod bench;
 pub mod checkpoint;

@@ -12,7 +12,7 @@
 //!   diloco data --topics 8 --docs 400 --workers 8 --non-iid
 
 use diloco::config::toml::TomlDoc;
-use diloco::config::{EngineConfig, ExperimentConfig, StreamConfig};
+use diloco::config::{EngineConfig, ExperimentConfig, StreamConfig, TopologyConfig};
 use diloco::coordinator::Coordinator;
 use diloco::data::Dataset;
 use diloco::engine::InnerPhaseExecutor as _;
@@ -84,6 +84,7 @@ fn print_help() {
          \x20       [--engine auto|sequential|parallel] [--threads N]\n\
          \x20       [--stream fragments=4,schedule=staggered,codec=q8]\n\
          \x20       (schedules: every-round|staggered|overlapped; codecs: f32|f16|q8)\n\
+         \x20       [--topology star|ring|gossip|hierarchical[:G]]\n\
          eval    --ckpt <file> [--artifacts artifacts] [--model nano]\n\
          data    [--topics 8] [--docs 400] [--workers 8] [--non-iid] [--seed 0]\n\
          inspect [--artifacts artifacts] [--model nano]"
@@ -118,9 +119,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if let Some(stream) = args.get("stream") {
         cfg.stream = StreamConfig::parse(stream)?;
     }
+    if let Some(topology) = args.get("topology") {
+        cfg.topology = TopologyConfig::parse(topology)?;
+    }
     cfg.validate()?;
     println!(
-        "DiLoCo: model={} k={} H={} T={} pretrain={} outer={} non_iid={} engine={:?}",
+        "DiLoCo: model={} k={} H={} T={} pretrain={} outer={} non_iid={} engine={:?} \
+         topology={}",
         cfg.model,
         cfg.workers,
         cfg.inner_steps,
@@ -128,7 +133,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.pretrain_steps,
         cfg.outer_opt.name(),
         cfg.data.non_iid,
-        cfg.engine
+        cfg.engine,
+        cfg.topology.name()
     );
     if !cfg.stream.is_monolithic() {
         println!(
@@ -176,6 +182,22 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             m.codec_err_l2
         );
     }
+    if coord.cfg.topology.is_decentralized() {
+        let dist = report
+            .round_stats
+            .last()
+            .map(|rs| rs.consensus_dist)
+            .unwrap_or(0.0);
+        println!(
+            "topology {}: {} replicas, consensus dist {:.3e} (eval curve = consensus model)",
+            coord.cfg.topology.name(),
+            report.replica_evals.len(),
+            dist
+        );
+        for (r, p) in report.replica_evals.iter().enumerate() {
+            println!("  replica {r}: nll {:.4}  ppl {:.3}", p.mean_nll, p.ppl);
+        }
+    }
 
     if let Some(out) = args.get("out") {
         m.write_curves(out)?;
@@ -219,7 +241,7 @@ fn cmd_data(args: &Args) -> anyhow::Result<()> {
     let k: usize = args.get_or("workers", "8").parse()?;
     let vocab: usize = args.get_or("vocab", "256").parse()?;
     let seed: u64 = args.get_or("seed", "0").parse()?;
-    let ds = Dataset::build(&cfg, k, vocab, seed);
+    let ds = Dataset::build(&cfg, k, vocab, seed)?;
     println!(
         "corpus: {} docs × ~{} words, {} topics, non_iid={}",
         cfg.n_docs, cfg.doc_len, cfg.n_topics, cfg.non_iid

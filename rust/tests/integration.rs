@@ -5,7 +5,7 @@ use diloco::checkpoint;
 use diloco::comm::codec::Codec;
 use diloco::config::{
     ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig, StreamConfig,
-    SyncSchedule,
+    SyncSchedule, TopologyConfig,
 };
 use diloco::coordinator::Coordinator;
 use diloco::data::batch::BatchIter;
@@ -499,6 +499,225 @@ fn fragment_drops_desync_independently() {
     assert!(r1.metrics.comm_dropped as usize >= worker_rounds);
     assert!(worker_rounds > 0, "p=0.5 over 48 fragment sends must drop some");
     assert!(r1.metrics.final_ppl().is_finite());
+}
+
+#[test]
+fn star_topology_is_the_pr2_loop_bitwise() {
+    // `topology = "star"` must be *the* monolithic coordinator loop —
+    // same math, same billing, same drop keys — not a reimplementation:
+    // an explicitly-parsed star config reproduces the default config's
+    // run trace bitwise, drops included (the golden-trace suite pins the
+    // same path against its snapshot).
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.comm.drop_prob = 0.3;
+    cfg.seed = 7;
+    let default_run = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run()
+        .unwrap();
+    cfg.topology = TopologyConfig::parse("star").unwrap();
+    let star = Coordinator::new(cfg, rt).unwrap().run().unwrap();
+    assert_eq!(star.final_params, default_run.final_params);
+    assert_eq!(star.metrics.loss_curve, default_run.metrics.loss_curve);
+    assert_eq!(star.metrics.comm_bytes, default_run.metrics.comm_bytes);
+    assert_eq!(star.metrics.comm_messages, default_run.metrics.comm_messages);
+    assert_eq!(star.drops_per_worker, default_run.drops_per_worker);
+    assert_eq!(star.comm_per_round, default_run.comm_per_round);
+    assert!(star.replica_params.is_empty() && star.replica_evals.is_empty());
+}
+
+#[test]
+fn ring_replicas_match_star_bitwise() {
+    // The topology acceptance criterion: with no drops and the exact
+    // codec, the ring all-reduce computes the same weighted average as
+    // the star through the same scalar-op order, so every ring replica
+    // must equal the star's global model *bitwise* — only the billing
+    // pattern (2(k−1) chunked hops, no hub, no broadcast) differs.
+    let Some(rt) = runtime() else { return };
+    let cfg = small_cfg();
+    let init = rt.init_params().unwrap();
+    let run = |topology: TopologyConfig| {
+        let mut cfg = cfg.clone();
+        cfg.topology = topology;
+        Coordinator::new(cfg, rt.clone())
+            .unwrap()
+            .run_from(Some(init.clone()))
+            .unwrap()
+    };
+    let star = run(TopologyConfig::Star);
+    let ring = run(TopologyConfig::Ring);
+    assert_eq!(ring.replica_params.len(), 4);
+    for (r, params) in ring.replica_params.iter().enumerate() {
+        assert_eq!(params, &star.final_params, "replica {r} diverged from star");
+    }
+    assert_eq!(ring.metrics.loss_curve, star.metrics.loss_curve);
+    assert_eq!(ring.replica_evals.len(), 4);
+    // Identical replicas ⇒ consensus distance is float noise at most.
+    for rs in &ring.round_stats {
+        assert!(rs.consensus_dist < 1e-4, "round {}: {}", rs.round, rs.consensus_dist);
+    }
+    assert!(star.round_stats.iter().all(|rs| rs.consensus_dist == 0.0));
+    // Billing: 2(k−1) chunk hops per worker per round, nothing down.
+    let payload = rt.manifest.param_bytes() as u64;
+    let (k, rounds) = (4u64, cfg.rounds as u64);
+    assert_eq!(ring.metrics.comm_bytes_up, rounds * 2 * (k - 1) * payload);
+    assert_eq!(ring.metrics.comm_bytes, ring.metrics.comm_bytes_up);
+    assert_eq!(ring.metrics.comm_messages, rounds * 2 * (k - 1) * k);
+    assert_eq!(ring.metrics.comm_dropped, 0);
+}
+
+#[test]
+fn gossip_halves_star_traffic_and_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 6;
+    cfg.topology = TopologyConfig::Gossip;
+    let init = rt.init_params().unwrap();
+    let r1 = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    let r2 = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    assert_eq!(r1.final_params, r2.final_params, "gossip pairing must be seeded");
+    assert_eq!(r1.metrics.loss_curve, r2.metrics.loss_curve);
+    // Each of the k workers sends its payload to its partner once per
+    // round; nothing is broadcast back — exactly half the star's bytes
+    // (star: k up + k down).
+    let payload = rt.manifest.param_bytes() as u64;
+    let (k, rounds) = (4u64, cfg.rounds as u64);
+    assert_eq!(r1.metrics.comm_bytes_up, rounds * k * payload);
+    assert_eq!(r1.metrics.comm_bytes, r1.metrics.comm_bytes_up, "no downloads");
+    assert_eq!(r1.metrics.comm_messages, rounds * k);
+    // Pairwise-only mixing leaves genuine disagreement between replicas.
+    assert!(r1.round_stats.last().unwrap().consensus_dist > 0.0);
+    assert_eq!(r1.replica_params.len(), 4);
+    assert_eq!(r1.replica_evals.len(), 4);
+    assert!(r1.metrics.final_ppl().is_finite());
+    for p in &r1.replica_evals {
+        assert!(p.ppl.is_finite());
+    }
+    assert!(r1.final_params.all_finite());
+}
+
+#[test]
+fn gossip_drops_are_keyed_and_counted() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.topology = TopologyConfig::Gossip;
+    cfg.comm.drop_prob = 0.5;
+    cfg.pretrain_steps = 0;
+    cfg.rounds = 6;
+    cfg.seed = 9;
+    let r1 = Coordinator::new(cfg.clone(), rt.clone()).unwrap().run().unwrap();
+    let r2 = Coordinator::new(cfg, rt).unwrap().run().unwrap();
+    assert_eq!(r1.final_params, r2.final_params);
+    assert_eq!(r1.drops_per_worker, r2.drops_per_worker);
+    // One send per worker per round (P = 1), so dropped messages and
+    // per-worker drop rounds tally exactly.
+    let total: usize = r1.drops_per_worker.iter().sum();
+    assert_eq!(total as u64, r1.metrics.comm_dropped);
+    assert!(total > 0 && total < 24, "p=0.5 over 24 sends: {total}");
+    assert!(r1.metrics.final_ppl().is_finite());
+}
+
+#[test]
+fn hierarchical_matches_star_math_with_fewer_wan_bytes() {
+    // DiLoCoX's two-level sync changes *routing only*: with no drops the
+    // contributor set and the flat weighted average are identical to
+    // star, so params and curves match bitwise while the billed WAN
+    // carries G leader flows instead of k worker flows.
+    let Some(rt) = runtime() else { return };
+    let cfg = small_cfg();
+    let init = rt.init_params().unwrap();
+    let run = |topology: TopologyConfig| {
+        let mut cfg = cfg.clone();
+        cfg.topology = topology;
+        Coordinator::new(cfg, rt.clone())
+            .unwrap()
+            .run_from(Some(init.clone()))
+            .unwrap()
+    };
+    let star = run(TopologyConfig::Star);
+    let hier = run(TopologyConfig::Hierarchical { groups: 2 });
+    assert_eq!(hier.final_params, star.final_params);
+    assert_eq!(hier.metrics.loss_curve, star.metrics.loss_curve);
+    for (a, b) in hier.metrics.eval_curve.iter().zip(&star.metrics.eval_curve) {
+        assert_eq!(a.mean_nll, b.mean_nll);
+    }
+    let payload = rt.manifest.param_bytes() as u64;
+    let (g, rounds) = (2u64, cfg.rounds as u64);
+    assert_eq!(hier.metrics.comm_bytes_up, rounds * g * payload);
+    assert_eq!(hier.metrics.comm_bytes, rounds * 2 * g * payload);
+    assert_eq!(hier.metrics.comm_messages, rounds * 2 * g);
+    assert!(hier.metrics.comm_bytes < star.metrics.comm_bytes);
+    assert!(hier.replica_params.is_empty(), "centralized: one global replica");
+}
+
+#[test]
+fn hierarchical_leader_drop_desyncs_whole_group() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.topology = TopologyConfig::Hierarchical { groups: 2 };
+    cfg.comm.drop_prob = 0.5;
+    cfg.pretrain_steps = 0;
+    cfg.rounds = 6;
+    cfg.seed = 11;
+    let r1 = Coordinator::new(cfg.clone(), rt.clone()).unwrap().run().unwrap();
+    let r2 = Coordinator::new(cfg, rt).unwrap().run().unwrap();
+    assert_eq!(r1.final_params, r2.final_params);
+    assert_eq!(r1.drops_per_worker, r2.drops_per_worker);
+    // Groups are [0,1] and [2,3]: a dropped leader hop affects every
+    // member of its group identically.
+    assert_eq!(r1.drops_per_worker[0], r1.drops_per_worker[1]);
+    assert_eq!(r1.drops_per_worker[2], r1.drops_per_worker[3]);
+    // Each dropped leader message counts against both group members.
+    let total: usize = r1.drops_per_worker.iter().sum();
+    assert_eq!(total as u64, 2 * r1.metrics.comm_dropped);
+    assert!(total > 0, "p=0.5 over 12 leader hops must drop some");
+    assert!(r1.metrics.final_ppl().is_finite());
+}
+
+#[test]
+fn gossip_composes_with_staggered_fragments() {
+    // Topology × streaming: gossip over a staggered 2-fragment schedule
+    // ships one fragment per worker per round and stays deterministic.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.topology = TopologyConfig::Gossip;
+    cfg.stream = StreamConfig {
+        fragments: 2,
+        schedule: SyncSchedule::Staggered,
+        codec: Codec::F32,
+    };
+    cfg.rounds = 4;
+    let init = rt.init_params().unwrap();
+    let r1 = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    let r2 = Coordinator::new(cfg.clone(), rt)
+        .unwrap()
+        .run_from(Some(init))
+        .unwrap();
+    assert_eq!(r1.final_params, r2.final_params);
+    // One due fragment per round ⇒ k messages per round, ≈half the
+    // payload each round; totals must cover ~1/2 of a full-sync run.
+    assert_eq!(r1.metrics.comm_messages, 4 * 4);
+    let full = 4u64 * 4 * rt.manifest.param_bytes() as u64;
+    assert!(
+        r1.metrics.comm_bytes_up < full * 6 / 10,
+        "staggered(2) gossip: {} vs full {}",
+        r1.metrics.comm_bytes_up,
+        full
+    );
+    assert!(r1.metrics.final_ppl().is_finite());
+    for rs in &r1.round_stats {
+        assert_eq!(rs.fragments_synced, 1);
+    }
 }
 
 #[test]
