@@ -1,0 +1,104 @@
+//! Elastic island membership — the paper's Fig-8-style robustness claim
+//! extended from dropped messages to departed/joined *machines*.
+//!
+//! Sweeps `bench::scenarios::churn_grid`: a static-roster baseline, a
+//! two-worker permanent departure, a leave-then-rejoin schedule (the
+//! worker's parked state is restored), a 4→8 ramp-up, and late joiners
+//! beyond the initial pool. Paper shape: quality degrades gracefully as
+//! compute leaves and recovers as it returns, while communication bills
+//! only the workers actually present each round.
+//!
+//! Hard asserts (deterministic billing model, P=1 f32 star): every
+//! round's upload AND download bytes equal `k_t · B` for the round's
+//! active count `k_t` (0 when `k_t = 1`) — a departed worker bills
+//! nothing in either direction.
+
+use diloco::bench::scenarios::{base_config, churn_grid, fmt, load_runtime, rel_pct};
+use diloco::bench::{BenchCtx, Table};
+use diloco::coordinator::Coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new("churn");
+    let base = base_config(ctx.scale);
+    let rt = load_runtime(&base.model);
+    let payload = rt.manifest.param_bytes() as u64;
+
+    let mut table = Table::new(
+        "Elastic membership — leave/join/ramp rosters (billing hard-asserted)",
+        &[
+            "schedule",
+            "worker_rounds",
+            "pool",
+            "final_ppl",
+            "vs_static",
+            "up_mb",
+            "sim_wall_s",
+        ],
+    );
+    let mut curves = String::from("schedule,round,active_workers,ppl\n");
+    let mut reference = f64::NAN;
+    for (label, churn) in churn_grid() {
+        let mut cfg = base.clone();
+        cfg.eval_every_rounds = 1;
+        cfg.churn = churn;
+        let coord = Coordinator::new(cfg, rt.clone())?;
+        let cfg = &coord.cfg;
+        let report = coord.run()?;
+        let m = &report.metrics;
+        if label == "static" {
+            reference = m.final_ppl();
+        }
+
+        // Per-round billing: exactly the active roster's flows, nothing
+        // from departed workers (k_t = 1 syncs locally, free).
+        let mut worker_rounds = 0usize;
+        for (t, row) in report.comm_per_round.iter().enumerate() {
+            let k_t = cfg.active_ids(t).len() as u64;
+            worker_rounds += k_t as usize;
+            let want = if k_t > 1 { k_t * payload } else { 0 };
+            assert_eq!(
+                row.bytes_up, want,
+                "{label}: round {t} billed {} up bytes for {k_t} active workers",
+                row.bytes_up
+            );
+            assert_eq!(
+                row.bytes_down, want,
+                "{label}: round {t} billed {} down bytes for {k_t} active workers",
+                row.bytes_down
+            );
+        }
+        for (t, rs) in report.round_stats.iter().enumerate() {
+            assert_eq!(
+                rs.active_workers,
+                cfg.active_ids(t).len(),
+                "{label}: round stats roster size"
+            );
+        }
+
+        // Skip the pretrain-phase eval points: one curve row per round.
+        let skip = m.eval_curve.len().saturating_sub(cfg.rounds);
+        for (pt, rs) in m.eval_curve.iter().skip(skip).zip(&report.round_stats) {
+            curves.push_str(&format!(
+                "{label},{},{},{:.4}\n",
+                rs.round, rs.active_workers, pt.ppl
+            ));
+        }
+        table.row(vec![
+            label.to_string(),
+            worker_rounds.to_string(),
+            cfg.pool_size().to_string(),
+            fmt(m.final_ppl()),
+            rel_pct(m.final_ppl(), reference),
+            format!("{:.2}", m.comm_bytes_up as f64 / 1e6),
+            format!("{:.1}", m.sim_wall_seconds()),
+        ]);
+    }
+    ctx.emit(&table);
+    ctx.emit_csv("curves", &curves);
+    println!(
+        "paste into BENCH_engine.json churn rows: see the table above \
+         (worker_rounds/up_mb are deterministic; ppl/wall need this machine)"
+    );
+    ctx.finish();
+    Ok(())
+}

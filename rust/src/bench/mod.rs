@@ -155,6 +155,15 @@ impl BenchCtx {
     }
 }
 
+/// Median of a non-empty sample set. Uses [`f64::total_cmp`], so NaN
+/// samples (a zero-duration division upstream, a corrupted CSV replay)
+/// sort to the end instead of panicking mid-bench.
+pub fn median(samples: &mut [f64]) -> f64 {
+    assert!(!samples.is_empty(), "median of no samples");
+    samples.sort_by(f64::total_cmp);
+    samples[samples.len() / 2]
+}
+
 /// Median-of-runs micro timing (for the hot-path microbench).
 pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     assert!(reps > 0);
@@ -165,8 +174,7 @@ pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
             t0.elapsed().as_secs_f64()
         })
         .collect();
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    samples[samples.len() / 2]
+    median(&mut samples)
 }
 
 #[cfg(test)]
@@ -195,6 +203,19 @@ mod tests {
     fn median_timing_positive() {
         let d = time_median(5, || std::thread::sleep(std::time::Duration::from_micros(100)));
         assert!(d > 0.0);
+    }
+
+    #[test]
+    fn median_survives_nan_samples() {
+        // Regression: `partial_cmp(..).unwrap()` panicked on NaN; total_cmp
+        // must sort NaN to the end and keep the finite median.
+        let mut s = vec![3.0, f64::NAN, 1.0, 2.0, f64::NAN];
+        let m = median(&mut s);
+        assert_eq!(m, 3.0); // [1, 2, 3, NaN, NaN] → index 2
+        let mut finite = vec![5.0, 1.0, 3.0];
+        assert_eq!(median(&mut finite), 3.0);
+        let mut all_nan = vec![f64::NAN, f64::NAN];
+        assert!(median(&mut all_nan).is_nan()); // no panic
     }
 
     #[test]

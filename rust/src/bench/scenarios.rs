@@ -14,8 +14,8 @@
 use super::Scale;
 use crate::comm::codec::Codec;
 use crate::config::{
-    ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig, StreamConfig,
-    SyncSchedule, TopologyConfig,
+    ChurnConfig, ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig,
+    StreamConfig, SyncSchedule, TopologyConfig,
 };
 use crate::runtime::Runtime;
 use std::sync::Arc;
@@ -128,6 +128,26 @@ pub fn topology_grid() -> Vec<(&'static str, TopologyConfig, Codec)> {
     ]
 }
 
+/// Elastic-membership scenario family: the churn schedules the `churn`
+/// bench sweeps against the base (k=8, T=8) setting — the paper's Fig-8
+/// robustness claim extended from lost messages to lost *machines*.
+/// Row 0 is the static roster baseline; the rest exercise permanent
+/// departure, leave-then-rejoin (parked state restored), a growing ramp,
+/// and late joiners beyond the initial pool ("resources that become
+/// available during training"). Every schedule validates against the
+/// base rounds/workers, and the bench hard-asserts per-round comm
+/// billing: a departed worker bills nothing.
+pub fn churn_grid() -> Vec<(&'static str, Option<ChurnConfig>)> {
+    let parse = |s: &str| Some(ChurnConfig::parse(s).expect("churn grid DSL"));
+    vec![
+        ("static", None),
+        ("leave2", parse("leave:w6@r3,leave:w7@r5")),
+        ("leave_rejoin", parse("leave:w5@r2,join:w5@r5")),
+        ("ramp_up", parse("ramp:4..8")),
+        ("late_joiners", parse("join:w8@r4,join:w9@r4")),
+    ]
+}
+
 /// Total inner steps after pretraining (T×H) for the base setting — kept
 /// constant across H sweeps so variants are compute-matched.
 pub fn step_budget(scale: Scale) -> usize {
@@ -213,6 +233,28 @@ mod tests {
             cfg.topology = *t;
             cfg.stream.codec = *codec;
             cfg.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
+        }
+    }
+
+    #[test]
+    fn churn_grid_validates_against_base_shape() {
+        let grid = churn_grid();
+        assert!(grid[0].1.is_none(), "row 0 is the static baseline");
+        let base = base_config(Scale::Scaled);
+        for (label, churn) in &grid {
+            let mut cfg = base.clone();
+            cfg.artifacts_dir = "a".into();
+            cfg.churn = churn.clone();
+            cfg.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
+            if let Some(c) = churn {
+                // Every schedule really changes the roster at some round.
+                let static_roster: Vec<usize> = (0..cfg.workers).collect();
+                assert!(
+                    (0..cfg.rounds).any(|t| cfg.active_ids(t) != static_roster),
+                    "{label}: churn schedule is a no-op"
+                );
+                c.validate(cfg.rounds, cfg.workers).unwrap();
+            }
         }
     }
 

@@ -1,15 +1,39 @@
-//! Checkpointing: save/load parameter (and optimizer) tensors.
+//! Checkpointing: parameter snapshots and full training state.
 //!
-//! Simple self-describing binary format (no serde/npz in the crate
-//! universe): magic + version header, then per leaf: name, shape, f32
-//! little-endian data, followed by a u64 FNV checksum over everything.
-//! Used by the pretrain → DiLoCo warm-start flow (paper Fig 3) and the
-//! CLI's `eval --ckpt`.
+//! Two self-describing binary formats (no serde/npz in the crate
+//! universe), both ending in a u64 FNV checksum over everything before
+//! it:
+//!
+//! * **`DILOCO01`** — parameter-only snapshots (`save` / `load`): magic +
+//!   leaf count, then per leaf: name, shape, element count, f32
+//!   little-endian data. Used by the pretrain → DiLoCo warm-start flow
+//!   (paper Fig 3) and the CLI's `eval --ckpt`.
+//! * **`DILOST01`** — the full [`TrainState`] record (`save_state` /
+//!   `load_state`): round index, global/consensus model, per-replica
+//!   models, outer-optimizer state per fragment, per-worker inner AdamW
+//!   state + RNG stream cursors, per-fragment sync state, and
+//!   carried-over accounting. The resume contract is *bitwise*: training
+//!   2R rounds straight equals training R rounds, saving, and resuming
+//!   for R more (DESIGN.md §10; enforced by the `resume_*` integration
+//!   tests and the CI resume-equivalence job).
+//!
+//! Every length and data range read from disk is bounds-checked against
+//! the remaining body and validated against the manifest shape product
+//! before any allocation, so truncated, oversized, or shape-mismatched
+//! files surface as `anyhow` errors — never as slice panics or absurd
+//! allocations.
 
+use crate::coordinator::opt::OuterOptSnapshot;
 use crate::runtime::{Manifest, Tensors};
 use std::io::{Read, Write};
 
 const MAGIC: &[u8; 8] = b"DILOCO01";
+const STATE_MAGIC: &[u8; 8] = b"DILOST01";
+const STATE_VERSION: u32 = 1;
+/// Sanity caps for untrusted length fields that the manifest cannot
+/// bound (fragment counts, Adam step vectors, kind strings).
+const MAX_FRAGMENTS: usize = 1 << 20;
+const MAX_KIND_LEN: usize = 64;
 
 fn fnv_update(hash: &mut u64, bytes: &[u8]) {
     for &b in bytes {
@@ -18,24 +42,27 @@ fn fnv_update(hash: &mut u64, bytes: &[u8]) {
     }
 }
 
-/// Save tensors with their manifest leaf names/shapes.
-pub fn save(path: &str, manifest: &Manifest, tensors: &Tensors) -> anyhow::Result<()> {
-    let mut buf: Vec<u8> = Vec::new();
-    buf.extend_from_slice(MAGIC);
-    buf.extend_from_slice(&(manifest.params.len() as u32).to_le_bytes());
-    for (spec, leaf) in manifest.params.iter().zip(tensors.leaves()) {
-        let name = spec.name.as_bytes();
-        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
-        buf.extend_from_slice(name);
-        buf.extend_from_slice(&(spec.shape.len() as u32).to_le_bytes());
-        for &d in &spec.shape {
-            buf.extend_from_slice(&(d as u64).to_le_bytes());
-        }
-        buf.extend_from_slice(&(leaf.len() as u64).to_le_bytes());
-        for &x in leaf {
-            buf.extend_from_slice(&x.to_le_bytes());
-        }
-    }
+fn read_file(path: &str) -> anyhow::Result<Vec<u8>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening {path}: {e}"))?
+        .read_to_end(&mut bytes)?;
+    Ok(bytes)
+}
+
+/// Verify the trailing FNV checksum and strip it, returning the body.
+fn checked_body(bytes: &[u8], magic: &[u8; 8]) -> anyhow::Result<&[u8]> {
+    anyhow::ensure!(bytes.len() > magic.len() + 12, "checkpoint too short");
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    fnv_update(&mut hash, body);
+    anyhow::ensure!(hash == stored, "checkpoint checksum mismatch");
+    anyhow::ensure!(&body[..8] == magic, "bad checkpoint magic");
+    Ok(body)
+}
+
+fn write_checked(path: &str, mut buf: Vec<u8>) -> anyhow::Result<()> {
     let mut hash = 0xcbf2_9ce4_8422_2325u64;
     fnv_update(&mut hash, &buf);
     buf.extend_from_slice(&hash.to_le_bytes());
@@ -45,35 +72,158 @@ pub fn save(path: &str, manifest: &Manifest, tensors: &Tensors) -> anyhow::Resul
     Ok(())
 }
 
-/// Load tensors, verifying checksum and manifest compatibility.
+/// Bounds-checked cursor over a checkpoint body. Every read validates
+/// against the remaining length *before* touching the slice, so a
+/// truncated or length-corrupted file can never index out of bounds.
+struct Reader<'a> {
+    body: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(body: &'a [u8], pos: usize) -> Reader<'a> {
+        Reader { body, pos }
+    }
+
+    fn remaining(&self) -> usize {
+        self.body.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.remaining(),
+            "truncated checkpoint: need {n} bytes, {} left",
+            self.remaining()
+        );
+        let s = &self.body[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A length field that must index something in the remaining body:
+    /// rejects values over `cap` before any allocation happens.
+    fn len_capped(&mut self, cap: usize, what: &str) -> anyhow::Result<usize> {
+        let n = self.u64()?;
+        anyhow::ensure!(
+            n <= cap as u64,
+            "checkpoint {what} count {n} exceeds the plausible bound {cap}"
+        );
+        Ok(n as usize)
+    }
+
+    /// One f32 leaf of exactly `want` elements (validated before the
+    /// data range is touched or the vector allocated).
+    fn f32_leaf(&mut self, want: usize, what: &str) -> anyhow::Result<Vec<f32>> {
+        let count = self.u64()?;
+        anyhow::ensure!(
+            count == want as u64,
+            "{what}: checkpoint stores {count} elements, manifest shape product is {want}"
+        );
+        let byte_len = want
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("{what}: element count overflows"))?;
+        let raw = self
+            .take(byte_len)
+            .map_err(|e| anyhow::anyhow!("{what}: {e}"))?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// A manifest-shaped tensor tree: leaf count + per-leaf data, each
+    /// leaf validated against its manifest shape product.
+    fn tensors(&mut self, manifest: &Manifest, what: &str) -> anyhow::Result<Tensors> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(
+            n == manifest.params.len(),
+            "{what}: checkpoint has {n} leaves, manifest wants {}",
+            manifest.params.len()
+        );
+        let mut leaves = Vec::with_capacity(n);
+        for spec in &manifest.params {
+            leaves.push(self.f32_leaf(spec.elements(), &format!("{what}.{}", spec.name))?);
+        }
+        Tensors::from_leaves(manifest, leaves)
+    }
+
+    fn finish(self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.remaining() == 0, "trailing bytes in checkpoint");
+        Ok(())
+    }
+}
+
+fn w_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_f64(buf: &mut Vec<u8>, v: f64) {
+    w_u64(buf, v.to_bits());
+}
+
+fn w_tensors(buf: &mut Vec<u8>, t: &Tensors) {
+    w_u32(buf, t.n_leaves() as u32);
+    for leaf in t.leaves() {
+        w_u64(buf, leaf.len() as u64);
+        for &x in leaf {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+// ---- parameter-only snapshots (DILOCO01) --------------------------------
+
+/// Save tensors with their manifest leaf names/shapes.
+pub fn save(path: &str, manifest: &Manifest, tensors: &Tensors) -> anyhow::Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    w_u32(&mut buf, manifest.params.len() as u32);
+    for (spec, leaf) in manifest.params.iter().zip(tensors.leaves()) {
+        let name = spec.name.as_bytes();
+        w_u32(&mut buf, name.len() as u32);
+        buf.extend_from_slice(name);
+        w_u32(&mut buf, spec.shape.len() as u32);
+        for &d in &spec.shape {
+            w_u64(&mut buf, d as u64);
+        }
+        w_u64(&mut buf, leaf.len() as u64);
+        for &x in leaf {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    write_checked(path, buf)
+}
+
+/// Load tensors, verifying checksum and manifest compatibility. Every
+/// stored length is bounds-checked against the remaining body and
+/// validated against the manifest shape product before the data range is
+/// read, so corrupted or adversarial files error instead of panicking.
 pub fn load(path: &str, manifest: &Manifest) -> anyhow::Result<Tensors> {
-    let mut bytes = Vec::new();
-    std::fs::File::open(path)
-        .map_err(|e| anyhow::anyhow!("opening {path}: {e}"))?
-        .read_to_end(&mut bytes)?;
-    anyhow::ensure!(bytes.len() > MAGIC.len() + 12, "checkpoint too short");
-    let (body, tail) = bytes.split_at(bytes.len() - 8);
-    let stored = u64::from_le_bytes(tail.try_into().unwrap());
-    let mut hash = 0xcbf2_9ce4_8422_2325u64;
-    fnv_update(&mut hash, body);
-    anyhow::ensure!(hash == stored, "checkpoint checksum mismatch");
-    anyhow::ensure!(&body[..8] == MAGIC, "bad checkpoint magic");
+    let bytes = read_file(path)?;
+    let body = checked_body(&bytes, MAGIC)?;
+    let mut r = Reader::new(body, 8);
 
-    let mut pos = 8;
-    let read_u32 = |pos: &mut usize| -> anyhow::Result<u32> {
-        anyhow::ensure!(*pos + 4 <= body.len(), "truncated checkpoint");
-        let v = u32::from_le_bytes(body[*pos..*pos + 4].try_into().unwrap());
-        *pos += 4;
-        Ok(v)
-    };
-    let read_u64 = |pos: &mut usize| -> anyhow::Result<u64> {
-        anyhow::ensure!(*pos + 8 <= body.len(), "truncated checkpoint");
-        let v = u64::from_le_bytes(body[*pos..*pos + 8].try_into().unwrap());
-        *pos += 8;
-        Ok(v)
-    };
-
-    let n = read_u32(&mut pos)? as usize;
+    let n = r.u32()? as usize;
     anyhow::ensure!(
         n == manifest.params.len(),
         "checkpoint has {n} leaves, manifest wants {}",
@@ -81,90 +231,554 @@ pub fn load(path: &str, manifest: &Manifest) -> anyhow::Result<Tensors> {
     );
     let mut leaves = Vec::with_capacity(n);
     for spec in &manifest.params {
-        let name_len = read_u32(&mut pos)? as usize;
-        anyhow::ensure!(pos + name_len <= body.len(), "truncated name");
-        let name = std::str::from_utf8(&body[pos..pos + name_len])
-            .map_err(|_| anyhow::anyhow!("bad leaf name"))?;
+        let name_len = r.u32()? as usize;
+        let name = std::str::from_utf8(r.take(name_len).map_err(|_| {
+            anyhow::anyhow!("truncated name")
+        })?)
+        .map_err(|_| anyhow::anyhow!("bad leaf name"))?;
         anyhow::ensure!(
             name == spec.name,
             "leaf order mismatch: checkpoint {name:?}, manifest {:?}",
             spec.name
         );
-        pos += name_len;
-        let rank = read_u32(&mut pos)? as usize;
-        let mut shape = Vec::with_capacity(rank);
+        let rank = r.u32()? as usize;
+        anyhow::ensure!(
+            rank == spec.shape.len(),
+            "leaf {name}: checkpoint rank {rank}, manifest {}",
+            spec.shape.len()
+        );
+        let mut shape = Vec::with_capacity(rank.min(16));
         for _ in 0..rank {
-            shape.push(read_u64(&mut pos)? as usize);
+            shape.push(r.u64()? as usize);
         }
         anyhow::ensure!(
             shape == spec.shape,
             "leaf {name}: checkpoint shape {shape:?}, manifest {:?}",
             spec.shape
         );
-        let count = read_u64(&mut pos)? as usize;
-        anyhow::ensure!(count == spec.elements(), "leaf {name}: element count");
-        anyhow::ensure!(pos + 4 * count <= body.len(), "truncated data");
-        let mut data = Vec::with_capacity(count);
-        for i in 0..count {
-            let off = pos + 4 * i;
-            data.push(f32::from_le_bytes(body[off..off + 4].try_into().unwrap()));
-        }
-        pos += 4 * count;
-        leaves.push(data);
+        leaves.push(r.f32_leaf(spec.elements(), &format!("leaf {name}"))?);
     }
-    anyhow::ensure!(pos == body.len(), "trailing bytes in checkpoint");
+    r.finish()?;
     Tensors::from_leaves(manifest, leaves)
+}
+
+// ---- full training state (DILOST01) -------------------------------------
+
+/// One worker's checkpointed inner state: model replica view, AdamW
+/// moments, global step counter (drives the baked lr schedule), and the
+/// batch-sampler RNG cursor — everything a resumed worker needs to
+/// continue its exact trajectory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerState {
+    pub params: Tensors,
+    pub opt_m: Tensors,
+    pub opt_v: Tensors,
+    pub step: f64,
+    pub rng: [u64; 4],
+}
+
+/// The full mid-run record of a DiLoCo training job at a round boundary
+/// (see the module docs for the on-disk format and DESIGN.md §10 for the
+/// layout rationale and determinism contract).
+///
+/// Covers both round-loop shapes: centralized topologies (star,
+/// hierarchical) store the single global model in `global` and one outer
+/// optimizer; decentralized topologies (ring, gossip) store the current
+/// consensus in `global` plus one replica and one outer optimizer per
+/// pool worker. Roster state is *not* stored — the active roster is a
+/// pure function of `(churn schedule, round)`, so a resumed run derives
+/// it deterministically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    /// Next round index to execute (the run saved after `round` rounds).
+    pub round: usize,
+    /// Total rounds of the run that wrote this state. Roster derivations
+    /// that depend on the run length (the churn `ramp:`) must resume
+    /// with the same `rounds`, and the coordinator rejects a mismatch.
+    pub total_rounds: usize,
+    /// Round-loop shape this state belongs to.
+    pub decentralized: bool,
+    /// Global model (centralized) / consensus model (decentralized).
+    pub global: Tensors,
+    /// Per-worker model replicas (decentralized only; empty otherwise).
+    pub replicas: Vec<Tensors>,
+    /// Outer-optimizer state: one entry (centralized) or one per pool
+    /// worker (decentralized). Per-fragment momentum/Adam slices live
+    /// inside each snapshot's manifest-shaped tensors.
+    pub outer: Vec<OuterOptSnapshot>,
+    /// Per-worker inner state, indexed by worker id over the full pool
+    /// (parked/departed workers included — that is what makes rejoin
+    /// restore their state).
+    pub workers: Vec<WorkerState>,
+    /// Per-worker sync references (the last global values each worker
+    /// adopted, per fragment).
+    pub refs: Vec<Tensors>,
+    /// pending_adopt[w][f] — worker w re-adopts fragment f at its next
+    /// active round.
+    pub pending_adopt: Vec<Vec<bool>>,
+    /// Rounds in which each worker lost at least one fragment upload.
+    pub drops_per_worker: Vec<usize>,
+    /// Transfer seconds deferred into the next inner phase (overlapped
+    /// streaming schedule).
+    pub carry_comm_s: f64,
+    /// Cumulative squared codec error (kept so the resumed run's
+    /// end-of-run `codec_err_l2` covers the whole training history).
+    pub codec_err_sq_total: f64,
+}
+
+fn w_outer(buf: &mut Vec<u8>, snap: &OuterOptSnapshot) {
+    let kind = snap.kind.as_bytes();
+    w_u32(buf, kind.len() as u32);
+    buf.extend_from_slice(kind);
+    w_u64(buf, snap.t.len() as u64);
+    for &x in &snap.t {
+        w_u64(buf, x);
+    }
+    w_u32(buf, snap.tensors.len() as u32);
+    for t in &snap.tensors {
+        w_tensors(buf, t);
+    }
+}
+
+fn r_outer(r: &mut Reader<'_>, manifest: &Manifest) -> anyhow::Result<OuterOptSnapshot> {
+    let kind_len = r.u32()? as usize;
+    anyhow::ensure!(kind_len <= MAX_KIND_LEN, "outer optimizer kind name too long");
+    let kind = std::str::from_utf8(r.take(kind_len)?)
+        .map_err(|_| anyhow::anyhow!("bad outer optimizer kind"))?
+        .to_string();
+    let t_len = r.len_capped(MAX_FRAGMENTS, "adam step")?;
+    let mut t = Vec::with_capacity(t_len);
+    for _ in 0..t_len {
+        t.push(r.u64()?);
+    }
+    let n_tensors = r.u32()? as usize;
+    anyhow::ensure!(n_tensors <= 2, "outer optimizer stores at most 2 state tensors");
+    let mut tensors = Vec::with_capacity(n_tensors);
+    for i in 0..n_tensors {
+        tensors.push(r.tensors(manifest, &format!("outer[{kind}].state{i}"))?);
+    }
+    Ok(OuterOptSnapshot { kind, t, tensors })
+}
+
+/// Save a full [`TrainState`] (format `DILOST01`, FNV-checksummed).
+pub fn save_state(path: &str, manifest: &Manifest, st: &TrainState) -> anyhow::Result<()> {
+    let pool = st.workers.len();
+    anyhow::ensure!(
+        st.refs.len() == pool && st.pending_adopt.len() == pool
+            && st.drops_per_worker.len() == pool,
+        "inconsistent TrainState: pool {pool}, refs {}, pending {}, drops {}",
+        st.refs.len(),
+        st.pending_adopt.len(),
+        st.drops_per_worker.len()
+    );
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(STATE_MAGIC);
+    w_u32(&mut buf, STATE_VERSION);
+    buf.push(st.decentralized as u8);
+    w_u64(&mut buf, st.round as u64);
+    w_u64(&mut buf, st.total_rounds as u64);
+    w_u64(&mut buf, pool as u64);
+    let n_frag = st.pending_adopt.first().map_or(0, |p| p.len());
+    w_u32(&mut buf, n_frag as u32);
+    w_f64(&mut buf, st.carry_comm_s);
+    w_f64(&mut buf, st.codec_err_sq_total);
+    w_tensors(&mut buf, &st.global);
+    w_u64(&mut buf, st.replicas.len() as u64);
+    for rep in &st.replicas {
+        w_tensors(&mut buf, rep);
+    }
+    w_u64(&mut buf, st.outer.len() as u64);
+    for o in &st.outer {
+        w_outer(&mut buf, o);
+    }
+    for w in &st.workers {
+        w_tensors(&mut buf, &w.params);
+        w_tensors(&mut buf, &w.opt_m);
+        w_tensors(&mut buf, &w.opt_v);
+        w_f64(&mut buf, w.step);
+        for &s in &w.rng {
+            w_u64(&mut buf, s);
+        }
+    }
+    for rf in &st.refs {
+        w_tensors(&mut buf, rf);
+    }
+    for pa in &st.pending_adopt {
+        anyhow::ensure!(
+            pa.len() == n_frag,
+            "inconsistent TrainState: ragged pending_adopt"
+        );
+        buf.extend(pa.iter().map(|&b| b as u8));
+    }
+    for &d in &st.drops_per_worker {
+        w_u64(&mut buf, d as u64);
+    }
+    write_checked(path, buf)
+}
+
+/// Load a [`TrainState`], verifying checksum, version, and manifest
+/// compatibility of every tensor block.
+pub fn load_state(path: &str, manifest: &Manifest) -> anyhow::Result<TrainState> {
+    let bytes = read_file(path)?;
+    let body = checked_body(&bytes, STATE_MAGIC)?;
+    let mut r = Reader::new(body, 8);
+
+    let version = r.u32()?;
+    anyhow::ensure!(
+        version == STATE_VERSION,
+        "unsupported TrainState version {version} (this build reads {STATE_VERSION})"
+    );
+    let decentralized = match r.u8()? {
+        0 => false,
+        1 => true,
+        other => anyhow::bail!("bad TrainState mode byte {other}"),
+    };
+    let round = r.u64()? as usize;
+    let total_rounds = r.u64()? as usize;
+    // Every worker costs at least three manifest-shaped tensor blocks
+    // plus its step and RNG cursor on disk, so the remaining body length
+    // divided by that footprint bounds the pool *tightly* — a corrupted
+    // or adversarial pool field cannot trigger an allocation larger than
+    // a small fraction of the file it arrived in.
+    let tensors_bytes: usize = 4 + manifest
+        .params
+        .iter()
+        .map(|s| 8 + 4 * s.elements())
+        .sum::<usize>();
+    let per_worker = 3 * tensors_bytes + 8 + 32;
+    let pool = r.len_capped(r.remaining() / per_worker.max(1), "worker pool")?;
+    anyhow::ensure!(pool >= 1, "TrainState has an empty worker pool");
+    let n_frag = r.u32()? as usize;
+    anyhow::ensure!(
+        (1..=MAX_FRAGMENTS).contains(&n_frag),
+        "TrainState fragment count {n_frag} out of range"
+    );
+    let carry_comm_s = r.f64()?;
+    let codec_err_sq_total = r.f64()?;
+    let global = r.tensors(manifest, "global")?;
+    let n_replicas = r.len_capped(pool, "replica")?;
+    anyhow::ensure!(
+        if decentralized { n_replicas == pool } else { n_replicas == 0 },
+        "TrainState stores {n_replicas} replicas for a pool of {pool} \
+         (decentralized = {decentralized})"
+    );
+    let mut replicas = Vec::with_capacity(n_replicas);
+    for i in 0..n_replicas {
+        replicas.push(r.tensors(manifest, &format!("replica[{i}]"))?);
+    }
+    let n_outer = r.len_capped(pool, "outer optimizer")?;
+    anyhow::ensure!(
+        n_outer == if decentralized { pool } else { 1 },
+        "TrainState stores {n_outer} outer optimizers for a pool of {pool} \
+         (decentralized = {decentralized})"
+    );
+    let mut outer = Vec::with_capacity(n_outer);
+    for _ in 0..n_outer {
+        outer.push(r_outer(&mut r, manifest)?);
+    }
+    let mut workers = Vec::with_capacity(pool);
+    for i in 0..pool {
+        let params = r.tensors(manifest, &format!("worker[{i}].params"))?;
+        let opt_m = r.tensors(manifest, &format!("worker[{i}].opt_m"))?;
+        let opt_v = r.tensors(manifest, &format!("worker[{i}].opt_v"))?;
+        let step = r.f64()?;
+        let mut rng = [0u64; 4];
+        for s in &mut rng {
+            *s = r.u64()?;
+        }
+        workers.push(WorkerState { params, opt_m, opt_v, step, rng });
+    }
+    let mut refs = Vec::with_capacity(pool);
+    for i in 0..pool {
+        refs.push(r.tensors(manifest, &format!("refs[{i}]"))?);
+    }
+    let mut pending_adopt = Vec::with_capacity(pool);
+    for _ in 0..pool {
+        let row = r.take(n_frag)?;
+        let mut flags = Vec::with_capacity(n_frag);
+        for &b in row {
+            anyhow::ensure!(b <= 1, "bad pending_adopt flag byte {b}");
+            flags.push(b == 1);
+        }
+        pending_adopt.push(flags);
+    }
+    let mut drops_per_worker = Vec::with_capacity(pool);
+    for _ in 0..pool {
+        drops_per_worker.push(r.u64()? as usize);
+    }
+    r.finish()?;
+    Ok(TrainState {
+        round,
+        total_rounds,
+        decentralized,
+        global,
+        replicas,
+        outer,
+        workers,
+        refs,
+        pending_adopt,
+        drops_per_worker,
+        carry_comm_s,
+        codec_err_sq_total,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::manifest::{LeafSpec, ManifestConfig};
+    use std::collections::BTreeMap;
 
-    fn fixture() -> Option<(Manifest, Tensors)> {
-        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-        let path = std::path::Path::new(dir).join("nano.manifest.json");
-        if !path.exists() {
-            return None;
+    /// A synthetic two-leaf manifest — the negative-path tests must run
+    /// everywhere, not only on artifact-capable machines.
+    fn tiny_manifest() -> Manifest {
+        Manifest {
+            config: ManifestConfig {
+                name: "tiny".into(),
+                kernels: "pallas".into(),
+                n_layers: 1,
+                d_model: 2,
+                n_heads: 1,
+                d_head: 2,
+                vocab_size: 8,
+                seq_len: 4,
+                batch_size: 1,
+                param_count: 6,
+                peak_lr: 0.1,
+                warmup_steps: 1,
+                total_steps: 10,
+                weight_decay: 0.0,
+            },
+            params: vec![
+                LeafSpec { name: "w.embed".into(), shape: vec![2, 2] },
+                LeafSpec { name: "w.out".into(), shape: vec![2] },
+            ],
+            artifacts: BTreeMap::new(),
         }
-        let man = Manifest::load(&path).unwrap();
-        let mut t = Tensors::zeros(&man);
-        let mut x = 0.0f32;
-        t.for_each_mut(|v| {
-            *v = x.sin();
-            x += 1.0;
-        });
-        Some((man, t))
+    }
+
+    fn tiny_tensors() -> Tensors {
+        Tensors::from_raw(vec![vec![1.0, -2.0, 3.0, -4.0], vec![0.5, 0.25]])
+    }
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("diloco_{name}_{}.bin", std::process::id()))
+            .to_str()
+            .unwrap()
+            .to_string()
+    }
+
+    /// Strip the checksum, let the caller mutate the body, re-checksum.
+    /// This is how the negative-path tests craft structurally corrupt
+    /// files that still pass the checksum gate — the exact shape of an
+    /// on-disk corruption the old loader turned into a slice panic.
+    fn rewrite_body(path: &str, mutate: impl FnOnce(&mut Vec<u8>)) {
+        let bytes = std::fs::read(path).unwrap();
+        let mut body = bytes[..bytes.len() - 8].to_vec();
+        mutate(&mut body);
+        let mut hash = 0xcbf2_9ce4_8422_2325u64;
+        fnv_update(&mut hash, &body);
+        body.extend_from_slice(&hash.to_le_bytes());
+        std::fs::write(path, &body).unwrap();
+    }
+
+    /// Byte offset of leaf 0's u64 element-count field in a DILOCO01
+    /// file built from `tiny_manifest`: magic(8) + n(4) + name_len(4) +
+    /// name + rank(4) + shape dims (8 each).
+    fn leaf0_count_offset(man: &Manifest) -> usize {
+        8 + 4 + 4 + man.params[0].name.len() + 4 + 8 * man.params[0].shape.len()
     }
 
     #[test]
-    fn roundtrip_exact() {
-        let Some((man, t)) = fixture() else { return };
-        let path = std::env::temp_dir().join("diloco_ckpt_test.bin");
-        let path = path.to_str().unwrap();
-        save(path, &man, &t).unwrap();
-        let loaded = load(path, &man).unwrap();
+    fn roundtrip_exact_synthetic() {
+        let man = tiny_manifest();
+        let t = tiny_tensors();
+        let path = tmp("ckpt_rt");
+        save(&path, &man, &t).unwrap();
+        let loaded = load(&path, &man).unwrap();
         assert_eq!(&loaded, &t);
-        std::fs::remove_file(path).ok();
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
     fn corruption_detected() {
-        let Some((man, t)) = fixture() else { return };
-        let path = std::env::temp_dir().join("diloco_ckpt_corrupt.bin");
-        let path = path.to_str().unwrap();
-        save(path, &man, &t).unwrap();
-        let mut bytes = std::fs::read(path).unwrap();
+        let man = tiny_manifest();
+        let path = tmp("ckpt_corrupt");
+        save(&path, &man, &tiny_tensors()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0xFF;
-        std::fs::write(path, &bytes).unwrap();
-        assert!(load(path, &man).is_err());
-        std::fs::remove_file(path).ok();
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path, &man).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
     fn missing_file_errors_cleanly() {
-        let Some((man, _)) = fixture() else { return };
+        let man = tiny_manifest();
         let err = load("/nonexistent/ckpt.bin", &man).unwrap_err();
         assert!(err.to_string().contains("opening"));
+    }
+
+    #[test]
+    fn truncated_leaf_data_is_an_error_not_a_panic() {
+        // Cut the file mid-way through leaf 0's data (checksum rebuilt so
+        // only the structural validation can catch it).
+        let man = tiny_manifest();
+        let path = tmp("ckpt_trunc");
+        save(&path, &man, &tiny_tensors()).unwrap();
+        rewrite_body(&path, |body| {
+            let cut = leaf0_count_offset(&man) + 8 + 4 * 2; // 2 of 4 elements
+            body.truncate(cut);
+        });
+        let err = load(&path, &man).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("truncated"),
+            "unexpected error: {err:#}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn oversized_leaf_length_is_an_error_not_an_allocation() {
+        // An absurd stored element count (quadrillions) must be rejected
+        // by the shape-product validation before any allocation or slice
+        // indexing — this was the out-of-bounds panic path.
+        let man = tiny_manifest();
+        let path = tmp("ckpt_oversize");
+        save(&path, &man, &tiny_tensors()).unwrap();
+        let off = leaf0_count_offset(&man);
+        rewrite_body(&path, |body| {
+            body[off..off + 8].copy_from_slice(&(u64::MAX / 4).to_le_bytes());
+        });
+        let err = load(&path, &man).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("shape product"),
+            "unexpected error: {err:#}"
+        );
+        // A subtler lie: a count that fits the body but disagrees with
+        // the manifest shape product.
+        save(&path, &man, &tiny_tensors()).unwrap();
+        rewrite_body(&path, |body| {
+            body[off..off + 8].copy_from_slice(&3u64.to_le_bytes());
+        });
+        let err = load(&path, &man).unwrap_err();
+        assert!(format!("{err:#}").contains("shape product"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error() {
+        let man = tiny_manifest();
+        let path = tmp("ckpt_shape");
+        save(&path, &man, &tiny_tensors()).unwrap();
+        // First dim of leaf 0's shape: after magic + n + name_len + name + rank.
+        let off = 8 + 4 + 4 + man.params[0].name.len() + 4;
+        rewrite_body(&path, |body| {
+            body[off..off + 8].copy_from_slice(&7u64.to_le_bytes());
+        });
+        let err = load(&path, &man).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("shape"),
+            "unexpected error: {err:#}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn tiny_state(decentralized: bool) -> TrainState {
+        let man = tiny_manifest();
+        let zeros = Tensors::zeros(&man);
+        let t = tiny_tensors();
+        let pool = 2;
+        let snap = OuterOptSnapshot {
+            kind: "nesterov".into(),
+            t: Vec::new(),
+            tensors: vec![t.clone()],
+        };
+        TrainState {
+            round: 3,
+            total_rounds: 6,
+            decentralized,
+            global: t.clone(),
+            replicas: if decentralized { vec![t.clone(), zeros.clone()] } else { Vec::new() },
+            outer: if decentralized {
+                vec![snap.clone(), snap.clone()]
+            } else {
+                vec![snap]
+            },
+            workers: (0..pool)
+                .map(|i| WorkerState {
+                    params: t.clone(),
+                    opt_m: zeros.clone(),
+                    opt_v: zeros.clone(),
+                    step: 42.0 + i as f64,
+                    rng: [i as u64, 2, 3, 4],
+                })
+                .collect(),
+            refs: vec![t.clone(), t.clone()],
+            pending_adopt: vec![vec![true, false], vec![false, true]],
+            drops_per_worker: vec![1, 0],
+            carry_comm_s: 0.5,
+            codec_err_sq_total: 0.25,
+        }
+    }
+
+    #[test]
+    fn train_state_roundtrips_both_modes() {
+        let man = tiny_manifest();
+        for (tag, dec) in [("cen", false), ("dec", true)] {
+            let st = tiny_state(dec);
+            let path = tmp(&format!("state_rt_{tag}"));
+            save_state(&path, &man, &st).unwrap();
+            let loaded = load_state(&path, &man).unwrap();
+            assert_eq!(loaded, st);
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn train_state_rejects_corruption_and_truncation() {
+        let man = tiny_manifest();
+        let st = tiny_state(true);
+        let path = tmp("state_neg");
+        save_state(&path, &man, &st).unwrap();
+
+        // Bit flip → checksum.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[20] ^= 0xFF;
+        let flipped = tmp("state_neg_flip");
+        std::fs::write(&flipped, &bytes).unwrap();
+        assert!(load_state(&flipped, &man).is_err());
+        std::fs::remove_file(&flipped).ok();
+
+        // Structural truncation with a valid checksum.
+        save_state(&path, &man, &st).unwrap();
+        rewrite_body(&path, |body| {
+            let n = body.len();
+            body.truncate(n - 10);
+        });
+        assert!(load_state(&path, &man).is_err());
+
+        // Wrong magic: a params checkpoint is not a TrainState.
+        let params_path = tmp("state_neg_params");
+        save(&params_path, &man, &tiny_tensors()).unwrap();
+        let err = load_state(&params_path, &man).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+        std::fs::remove_file(&params_path).ok();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn train_state_mode_consistency_enforced() {
+        // A decentralized flag with no replicas (or vice versa) is a
+        // config/state mismatch, not a crash.
+        let man = tiny_manifest();
+        let mut st = tiny_state(false);
+        st.decentralized = true; // now inconsistent: 0 replicas
+        let path = tmp("state_mode");
+        save_state(&path, &man, &st).unwrap();
+        assert!(load_state(&path, &man).is_err());
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -356,6 +356,240 @@ impl StreamConfig {
     }
 }
 
+/// One elastic-membership event: a specific worker leaving or joining
+/// the active roster at a specific round boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnEvent {
+    /// `worker` is inactive from round `round` on (until a later join).
+    Leave { worker: usize, round: usize },
+    /// `worker` is active from round `round` on (until a later leave).
+    /// A joiner warm-starts by adopting the current global (star,
+    /// hierarchical) or consensus (ring, gossip) model at the start of
+    /// its first active round.
+    Join { worker: usize, round: usize },
+}
+
+impl ChurnEvent {
+    pub fn worker(&self) -> usize {
+        match *self {
+            ChurnEvent::Leave { worker, .. } | ChurnEvent::Join { worker, .. } => worker,
+        }
+    }
+
+    pub fn round(&self) -> usize {
+        match *self {
+            ChurnEvent::Leave { round, .. } | ChurnEvent::Join { round, .. } => round,
+        }
+    }
+}
+
+/// Elastic island membership (`[churn]` in TOML, `--churn` on the CLI) —
+/// the paper's robustness claim ("resources becoming unavailable over
+/// time, and vice versa") made concrete: a per-round roster of active
+/// worker ids driven by a small schedule DSL.
+///
+/// DSL: comma-separated items, each one of
+///
+/// * `leave:wW@rR` — worker `W` leaves the roster at round `R`,
+/// * `join:wW@rR`  — worker `W` joins (or rejoins) at round `R`,
+/// * `ramp:A..B`   — the *base* roster (workers `0..k`) ramps linearly
+///   from `A` to `B` workers across the run (at most one `ramp:` item).
+///
+/// Without a `ramp:` the base roster is all `diloco.workers` workers.
+/// Events apply in round order; for one worker the latest event at or
+/// before round `t` wins, so `leave:w3@r2,join:w3@r5` parks worker 3 for
+/// rounds 2–4 and restores it from round 5 on. A departed worker bills
+/// nothing on the fabric and holds no compute; its per-fragment sync
+/// state and (decentralized) outer-momentum are parked and restored on
+/// rejoin.
+///
+/// ```
+/// use diloco::config::ChurnConfig;
+///
+/// let c = ChurnConfig::parse("leave:w3@r10,join:w8@r20,ramp:4..8").unwrap();
+/// assert_eq!(c.events.len(), 2);
+/// assert_eq!(c.ramp, Some((4, 8)));
+/// // Round 0 of 40: base ramp says 4 workers, no events fired yet.
+/// assert_eq!(c.active_ids(0, 40, 4), vec![0, 1, 2, 3]);
+/// assert!(ChurnConfig::parse("leave:3@r10").is_err());
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct ChurnConfig {
+    /// Membership events, sorted by round (stable, so listed order breaks
+    /// same-round ties).
+    pub events: Vec<ChurnEvent>,
+    /// Base-roster linear ramp `(from, to)` across the run's rounds.
+    pub ramp: Option<(usize, usize)>,
+}
+
+impl ChurnConfig {
+    /// Parse the `--churn` DSL (see the type-level docs for the grammar).
+    pub fn parse(s: &str) -> anyhow::Result<ChurnConfig> {
+        let mut cfg = ChurnConfig::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind, spec) = part.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("bad --churn item {part:?} (want leave:wW@rR|join:wW@rR|ramp:A..B)")
+            })?;
+            match kind.trim() {
+                "leave" | "join" => {
+                    let (w, r) = spec.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("bad churn event {part:?} (want {kind}:wW@rR)")
+                    })?;
+                    let worker: usize = w
+                        .trim()
+                        .strip_prefix('w')
+                        .ok_or_else(|| anyhow::anyhow!("bad churn worker {w:?} (want wN)"))?
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad churn worker {w:?}: {e}"))?;
+                    let round: usize = r
+                        .trim()
+                        .strip_prefix('r')
+                        .ok_or_else(|| anyhow::anyhow!("bad churn round {r:?} (want rN)"))?
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad churn round {r:?}: {e}"))?;
+                    cfg.events.push(if kind.trim() == "leave" {
+                        ChurnEvent::Leave { worker, round }
+                    } else {
+                        ChurnEvent::Join { worker, round }
+                    });
+                }
+                "ramp" => {
+                    anyhow::ensure!(cfg.ramp.is_none(), "churn allows one ramp: item");
+                    let (a, b) = spec.split_once("..").ok_or_else(|| {
+                        anyhow::anyhow!("bad churn ramp {spec:?} (want ramp:A..B)")
+                    })?;
+                    let from: usize = a.trim().parse().map_err(|e| {
+                        anyhow::anyhow!("bad churn ramp start {a:?}: {e}")
+                    })?;
+                    let to: usize = b.trim().parse().map_err(|e| {
+                        anyhow::anyhow!("bad churn ramp end {b:?}: {e}")
+                    })?;
+                    anyhow::ensure!(from >= 1, "churn ramp must start >= 1 worker");
+                    cfg.ramp = Some((from, to));
+                }
+                other => anyhow::bail!(
+                    "unknown churn item {other:?} (want leave|join|ramp)"
+                ),
+            }
+        }
+        anyhow::ensure!(
+            !cfg.events.is_empty() || cfg.ramp.is_some(),
+            "empty churn schedule"
+        );
+        // Round order is authoritative (stable: listed order breaks ties).
+        cfg.events.sort_by_key(|e| e.round());
+        Ok(cfg)
+    }
+
+    /// Size of the base roster (workers `0..k`) at round `t` of `total`.
+    fn base_workers(&self, t: usize, total: usize, workers: usize) -> usize {
+        match self.ramp {
+            None => workers,
+            Some((from, to)) => {
+                if total <= 1 {
+                    return to.max(1);
+                }
+                let frac = t as f64 / (total - 1) as f64;
+                let k = from as f64 + frac * (to as f64 - from as f64);
+                k.round().max(1.0) as usize
+            }
+        }
+    }
+
+    /// Sorted ids of the workers active in round `t` (0-based) of a
+    /// `total`-round run whose static worker count is `workers`.
+    pub fn active_ids(&self, t: usize, total: usize, workers: usize) -> Vec<usize> {
+        let base_k = self.base_workers(t, total, workers);
+        let pool = self.pool_size(workers);
+        (0..pool)
+            .filter(|&id| {
+                let mut active = id < base_k;
+                for ev in &self.events {
+                    if ev.worker() == id && ev.round() <= t {
+                        active = matches!(ev, ChurnEvent::Join { .. });
+                    }
+                }
+                active
+            })
+            .collect()
+    }
+
+    /// Worker-pool size the run must allocate: the largest id any base
+    /// roster or *join* event can activate, plus one. Leave events never
+    /// activate anyone, so they cannot grow the pool.
+    pub fn pool_size(&self, workers: usize) -> usize {
+        let mut pool = match self.ramp {
+            None => workers,
+            Some((from, to)) => from.max(to),
+        };
+        for ev in &self.events {
+            if let ChurnEvent::Join { worker, .. } = ev {
+                pool = pool.max(worker + 1);
+            }
+        }
+        pool.max(1)
+    }
+
+    /// Cross-field invariants against the run shape.
+    pub fn validate(&self, rounds: usize, workers: usize) -> anyhow::Result<()> {
+        let pool = self.pool_size(workers);
+        for ev in &self.events {
+            anyhow::ensure!(
+                ev.round() < rounds.max(1),
+                "churn event at round {} but the run has {} rounds",
+                ev.round(),
+                rounds
+            );
+            anyhow::ensure!(
+                ev.worker() < pool,
+                "churn leave names worker {} but no base roster or join \
+                 ever activates an id past {}",
+                ev.worker(),
+                pool - 1
+            );
+        }
+        for t in 0..rounds {
+            anyhow::ensure!(
+                !self.active_ids(t, rounds, workers).is_empty(),
+                "churn schedule leaves round {t} with no active workers"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Training-state checkpointing (`[ckpt]` in TOML; `--save-every` /
+/// `--save-path` / `--resume` on the CLI). `save_every = 0` disables
+/// periodic saves. The determinism contract is *bitwise*: training 2R
+/// rounds straight equals training R rounds, saving, and resuming for R
+/// more (see DESIGN.md §10 and the `resume_*` integration tests).
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct CkptConfig {
+    /// Save the full [`crate::checkpoint::TrainState`] every N rounds
+    /// (0 = never).
+    pub save_every: usize,
+    /// Where periodic saves land (required when `save_every > 0`).
+    pub path: Option<String>,
+    /// Resume a run from a TrainState checkpoint written by a previous
+    /// run of the *same* configuration.
+    pub resume: Option<String>,
+}
+
+impl CkptConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.save_every == 0 || self.path.is_some(),
+            "ckpt.save_every = {} needs ckpt.path",
+            self.save_every
+        );
+        Ok(())
+    }
+}
+
 /// How many workers are active each round (paper Fig. 7 schedules).
 #[derive(Clone, Debug, PartialEq)]
 pub enum ComputeSchedule {
@@ -489,6 +723,11 @@ pub struct ExperimentConfig {
     pub stream: StreamConfig,
     /// Synchronization topology: star | ring | gossip | hierarchical.
     pub topology: TopologyConfig,
+    /// Elastic island membership: per-round active-worker roster driven
+    /// by leave/join/ramp events (None = the static `schedule` roster).
+    pub churn: Option<ChurnConfig>,
+    /// Training-state checkpointing (periodic saves + resume).
+    pub ckpt: CkptConfig,
     /// Inner-phase executor (sequential reference vs parallel islands).
     pub engine: EngineConfig,
     /// Evaluate every this many rounds (0 = only at end).
@@ -517,6 +756,8 @@ impl ExperimentConfig {
             comm: CommConfig::default(),
             stream: StreamConfig::default(),
             topology: TopologyConfig::Star,
+            churn: None,
+            ckpt: CkptConfig::default(),
             engine: EngineConfig::Auto,
             eval_every_rounds: 1,
             eval_batches: 4,
@@ -530,6 +771,33 @@ impl ExperimentConfig {
 
     pub fn rng(&self) -> Rng {
         Rng::new(self.seed)
+    }
+
+    /// Worker-pool size the run allocates: the schedule's peak, the
+    /// static worker count, and every churn-activated id.
+    pub fn pool_size(&self) -> usize {
+        let mut k = self.schedule.max_workers(self.rounds).max(self.workers);
+        if let Some(churn) = &self.churn {
+            k = k.max(churn.pool_size(self.workers));
+        }
+        k.max(1)
+    }
+
+    /// Sorted ids of the workers active in round `t` — the churn roster
+    /// when churn is configured, else the schedule's prefix `0..k_t`
+    /// (the pre-churn behavior, bitwise).
+    pub fn active_ids(&self, t: usize) -> Vec<usize> {
+        match &self.churn {
+            Some(churn) => churn.active_ids(t, self.rounds, self.workers),
+            None => {
+                let k_t = self
+                    .schedule
+                    .workers_at(t, self.rounds)
+                    .min(self.pool_size())
+                    .max(1);
+                (0..k_t).collect()
+            }
+        }
     }
 
     /// Cross-field invariants. Every config entry point (TOML, CLI
@@ -571,6 +839,15 @@ impl ExperimentConfig {
             "sign-pruning produces sparse payloads the ring's dense chunk billing \
              cannot represent; pruning composes with star|gossip"
         );
+        if let Some(churn) = &self.churn {
+            anyhow::ensure!(
+                matches!(self.schedule, ComputeSchedule::Constant(_)),
+                "churn composes with the constant compute schedule only \
+                 (use the churn DSL's ramp:A..B instead of schedule ramps)"
+            );
+            churn.validate(self.rounds, self.workers)?;
+        }
+        self.ckpt.validate()?;
         // Data invariants — previously hard `assert!` panics deep inside
         // `data::shard::shard_corpus`; surfaced here so every config
         // entry point reports them as proper errors before a run starts.
@@ -579,7 +856,7 @@ impl ExperimentConfig {
             "data.holdout must be in [0, 1) (got {})",
             self.data.holdout
         );
-        let max_k = self.schedule.max_workers(self.rounds).max(self.workers);
+        let max_k = self.pool_size();
         // Mirror Dataset::build's holdout selection exactly (a strided
         // pick capped at n_hold), so validation neither under- nor
         // over-counts the training documents left for sharding.
@@ -706,6 +983,21 @@ impl ExperimentConfig {
         cfg.stream.schedule = SyncSchedule::parse(&schedule)?;
         let codec = doc.str_or("stream.codec", cfg.stream.codec.name())?;
         cfg.stream.codec = Codec::parse(&codec)?;
+
+        let churn = doc.str_or("churn.schedule", "")?;
+        if !churn.is_empty() {
+            cfg.churn = Some(ChurnConfig::parse(&churn)?);
+        }
+
+        cfg.ckpt.save_every = doc.usize_or("ckpt.save_every", 0)?;
+        let ckpt_path = doc.str_or("ckpt.path", "")?;
+        if !ckpt_path.is_empty() {
+            cfg.ckpt.path = Some(ckpt_path);
+        }
+        let resume = doc.str_or("ckpt.resume", "")?;
+        if !resume.is_empty() {
+            cfg.ckpt.resume = Some(resume);
+        }
 
         cfg.eval_every_rounds =
             doc.usize_or("eval.every_rounds", cfg.eval_every_rounds)?;
@@ -1006,6 +1298,122 @@ mod tests {
         cfg.schedule = ComputeSchedule::Constant(2);
         cfg.data.holdout = 1.0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn churn_dsl_parse_and_roster() {
+        let c = ChurnConfig::parse("leave:w1@r2,join:w4@r3").unwrap();
+        // Worker 4 is beyond the static count of 3, so the pool grows.
+        assert_eq!(c.pool_size(3), 5);
+        assert_eq!(c.active_ids(0, 6, 3), vec![0, 1, 2]);
+        assert_eq!(c.active_ids(2, 6, 3), vec![0, 2]); // w1 left
+        assert_eq!(c.active_ids(3, 6, 3), vec![0, 2, 4]); // w4 joined
+        // Leave-then-rejoin: the latest event at or before t wins.
+        let c = ChurnConfig::parse("leave:w0@r1,join:w0@r3").unwrap();
+        assert_eq!(c.active_ids(0, 5, 2), vec![0, 1]);
+        assert_eq!(c.active_ids(1, 5, 2), vec![1]);
+        assert_eq!(c.active_ids(2, 5, 2), vec![1]);
+        assert_eq!(c.active_ids(3, 5, 2), vec![0, 1]);
+        // Chronology is authoritative even when listed out of order.
+        let c = ChurnConfig::parse("join:w0@r3,leave:w0@r1").unwrap();
+        assert_eq!(c.active_ids(4, 5, 1), vec![0]);
+        // ramp: replaces the static base roster.
+        let c = ChurnConfig::parse("ramp:1..4").unwrap();
+        assert_eq!(c.active_ids(0, 4, 8), vec![0]);
+        assert_eq!(c.active_ids(3, 4, 8), vec![0, 1, 2, 3]);
+        assert_eq!(c.pool_size(8), 4);
+    }
+
+    #[test]
+    fn churn_dsl_rejects_malformed_items() {
+        for bad in [
+            "",
+            "leave:3@r10",      // missing w prefix
+            "leave:w3",         // missing round
+            "leave:w3@10",      // missing r prefix
+            "join:wx@r1",       // non-numeric worker
+            "ramp:4",           // missing ..
+            "ramp:0..4",        // empty start roster
+            "ramp:1..2,ramp:2..3", // two ramps
+            "pause:w1@r2",      // unknown kind
+        ] {
+            assert!(ChurnConfig::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn churn_validate_catches_bad_schedules() {
+        // Event beyond the run's rounds.
+        let c = ChurnConfig::parse("leave:w0@r9").unwrap();
+        assert!(c.validate(4, 2).is_err());
+        // Every worker gone at round 1.
+        let c = ChurnConfig::parse("leave:w0@r1,leave:w1@r1").unwrap();
+        assert!(c.validate(4, 2).is_err());
+        // A leave naming a worker nothing ever activates is a typo, not
+        // a reason to allocate a bigger pool.
+        let c = ChurnConfig::parse("leave:w9@r1").unwrap();
+        assert!(c.validate(4, 2).is_err());
+        assert_eq!(c.pool_size(2), 2);
+        // Leaving one of two workers is fine.
+        let c = ChurnConfig::parse("leave:w1@r1").unwrap();
+        c.validate(4, 2).unwrap();
+    }
+
+    #[test]
+    fn experiment_config_churn_roster_and_validation() {
+        let mut cfg = ExperimentConfig::paper_default("a", "nano");
+        cfg.workers = 3;
+        cfg.schedule = ComputeSchedule::Constant(3);
+        cfg.rounds = 6;
+        cfg.churn = Some(ChurnConfig::parse("leave:w1@r2,join:w1@r4").unwrap());
+        cfg.validate().unwrap();
+        assert_eq!(cfg.active_ids(0), vec![0, 1, 2]);
+        assert_eq!(cfg.active_ids(2), vec![0, 2]);
+        assert_eq!(cfg.active_ids(4), vec![0, 1, 2]);
+        assert_eq!(cfg.pool_size(), 3);
+        // Without churn, the roster is the schedule prefix (pre-churn
+        // behavior, bitwise).
+        cfg.churn = None;
+        cfg.schedule = ComputeSchedule::Step { first: 1, second: 3 };
+        assert_eq!(cfg.active_ids(0), vec![0]);
+        assert_eq!(cfg.active_ids(5), vec![0, 1, 2]);
+        // Churn composes with the constant schedule only.
+        cfg.churn = Some(ChurnConfig::parse("leave:w1@r2").unwrap());
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn ckpt_config_validation() {
+        let mut cfg = ExperimentConfig::paper_default("a", "nano");
+        cfg.ckpt.save_every = 2;
+        assert!(cfg.validate().is_err(), "save_every without a path");
+        cfg.ckpt.path = Some("state.ckpt".into());
+        cfg.validate().unwrap();
+        cfg.ckpt = CkptConfig { save_every: 0, path: None, resume: Some("x".into()) };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn from_toml_churn_and_ckpt_sections() -> anyhow::Result<()> {
+        let doc = TomlDoc::parse(
+            "[churn]\nschedule = \"leave:w1@r2\"\n\
+             [ckpt]\nsave_every = 2\npath = \"state.ckpt\"\nresume = \"old.ckpt\"",
+        )?;
+        let cfg = ExperimentConfig::from_toml(&doc)?;
+        assert_eq!(cfg.churn, Some(ChurnConfig::parse("leave:w1@r2")?));
+        assert_eq!(cfg.ckpt.save_every, 2);
+        assert_eq!(cfg.ckpt.path.as_deref(), Some("state.ckpt"));
+        assert_eq!(cfg.ckpt.resume.as_deref(), Some("old.ckpt"));
+        // Absent sections keep the defaults.
+        let cfg = ExperimentConfig::from_toml(&TomlDoc::parse("seed = 1")?)?;
+        assert_eq!(cfg.churn, None);
+        assert_eq!(cfg.ckpt, CkptConfig::default());
+        // Malformed churn DSL and ckpt combinations are proper errors.
+        let doc = TomlDoc::parse("[churn]\nschedule = \"leave:3@r1\"")?;
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[ckpt]\nsave_every = 2")?;
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+        Ok(())
     }
 
     #[test]

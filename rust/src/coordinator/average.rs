@@ -28,6 +28,21 @@ pub fn average(deltas: &[Tensors]) -> Tensors {
     weighted_average(deltas, &vec![1.0; deltas.len()])
 }
 
+/// Uniform average over borrowed tensor trees — the consensus of a
+/// (possibly non-contiguous) roster of replicas under elastic
+/// membership. Performs the *same* scalar operations in the same order
+/// as [`average`], so a contiguous roster reproduces it bitwise.
+pub fn uniform_average_refs(ts: &[&Tensors]) -> Tensors {
+    assert!(!ts.is_empty(), "no replicas to average");
+    let total = ts.len() as f64;
+    let mut acc = ts[0].clone();
+    acc.scale((1.0 / total) as f32);
+    for t in &ts[1..] {
+        acc.axpy((1.0 / total) as f32, t);
+    }
+    acc
+}
+
 /// Weighted average of flat fragment payloads — the streaming fabric's
 /// per-fragment reduction. Performs the *same* scalar operations in the
 /// same order as [`weighted_average`] (normalize, scale the first
@@ -94,6 +109,20 @@ mod tests {
         let d = t(&[1.5, -2.5]);
         let avg = average(&[d.clone()]);
         assert_eq!(avg, d);
+    }
+
+    #[test]
+    fn uniform_average_refs_matches_average_bitwise() {
+        // The churn consensus path must be the same arithmetic as the
+        // contiguous-slice consensus it replaced.
+        let a = t(&[1.0, 2.0, 3.0]);
+        let b = t(&[0.1, -5.0, 6.5]);
+        let c = t(&[-1.0, 0.5, 2.5]);
+        let owned = average(&[a.clone(), b.clone(), c.clone()]);
+        let by_ref = uniform_average_refs(&[&a, &b, &c]);
+        for (x, y) in owned.iter_flat().zip(by_ref.iter_flat()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub mod opt;
 pub mod prune;
 pub mod stats;
 
+use crate::checkpoint::{self, TrainState, WorkerState};
 use crate::comm::codec::Codec;
 use crate::comm::fragment::FragmentPlan;
 use crate::comm::{topology, Direction, RoundComm, SimNet};
@@ -97,7 +98,7 @@ impl Coordinator {
             mcfg.name,
             cfg.model
         );
-        let max_k = cfg.schedule.max_workers(cfg.rounds).max(cfg.workers);
+        let max_k = cfg.pool_size();
         let dataset = Dataset::build(&cfg.data, max_k, mcfg.vocab_size, cfg.seed)?;
         let evalset = EvalSet::new(
             &dataset.holdout,
@@ -193,8 +194,92 @@ impl Coordinator {
     }
 
     /// Full DiLoCo run: pretrain warm start, then T rounds of Algorithm 1.
+    /// With `cfg.ckpt.resume` set, the run instead restores the full
+    /// [`TrainState`] from disk and continues from its round — bitwise
+    /// identical to never having stopped (DESIGN.md §10).
     pub fn run(&self) -> anyhow::Result<DilocoReport> {
-        self.run_from(None)
+        match self.cfg.ckpt.resume.clone() {
+            Some(path) => self.resume_from_path(&path),
+            None => self.run_from(None),
+        }
+    }
+
+    /// Resume a run from a [`TrainState`] checkpoint written by a
+    /// previous run of the *same* configuration (same seed, model, data,
+    /// schedule, churn, stream, and topology settings — only `rounds`
+    /// may grow). The pretrain phase is skipped: the state already
+    /// embeds it.
+    pub fn resume_from_path(&self, path: &str) -> anyhow::Result<DilocoReport> {
+        let st = checkpoint::load_state(path, &self.rt.manifest)?;
+        self.resume_from_state(st)
+    }
+
+    /// As [`Coordinator::resume_from_path`], from an in-memory state.
+    pub fn resume_from_state(&self, st: TrainState) -> anyhow::Result<DilocoReport> {
+        let cfg = &self.cfg;
+        anyhow::ensure!(
+            st.decentralized == cfg.topology.is_decentralized(),
+            "checkpoint was written by a {} topology, config wants {} ({})",
+            if st.decentralized { "decentralized" } else { "centralized" },
+            if cfg.topology.is_decentralized() { "decentralized" } else { "centralized" },
+            cfg.topology.name()
+        );
+        anyhow::ensure!(
+            st.round <= cfg.rounds,
+            "checkpoint is at round {} but the run has only {} rounds",
+            st.round,
+            cfg.rounds
+        );
+        // The churn ramp derives historical rosters from the *total*
+        // round count, so growing `rounds` would silently re-derive a
+        // different membership history and corrupt parked state.
+        if let Some(churn) = &cfg.churn {
+            anyhow::ensure!(
+                churn.ramp.is_none() || cfg.rounds == st.total_rounds,
+                "a churn ramp derives rosters from the total round count: \
+                 the checkpoint was written by a {}-round run, config wants {}",
+                st.total_rounds,
+                cfg.rounds
+            );
+        }
+        // The full id-indexed state must cover the pool consistently —
+        // load_state guarantees this for on-disk states, but this entry
+        // point also accepts hand-built in-memory states.
+        let pool = cfg.pool_size();
+        anyhow::ensure!(
+            st.workers.len() == pool
+                && st.refs.len() == pool
+                && st.pending_adopt.len() == pool
+                && st.drops_per_worker.len() == pool,
+            "checkpoint worker pool is {} (refs {}, pending {}, drops {}), \
+             config wants {pool}",
+            st.workers.len(),
+            st.refs.len(),
+            st.pending_adopt.len(),
+            st.drops_per_worker.len()
+        );
+        anyhow::ensure!(
+            st.replicas.len() == if st.decentralized { pool } else { 0 },
+            "checkpoint stores {} replicas for a pool of {pool}",
+            st.replicas.len()
+        );
+        anyhow::ensure!(
+            st.outer.len() == if st.decentralized { pool } else { 1 },
+            "checkpoint stores {} outer optimizers for a pool of {pool}",
+            st.outer.len()
+        );
+        let metrics = RunMetrics::new(&format!(
+            "diloco_k{}_h{}_{}",
+            cfg.workers,
+            cfg.inner_steps,
+            cfg.outer_opt.name()
+        ));
+        let global = st.global.clone();
+        if cfg.topology.is_decentralized() {
+            self.run_decentralized(global, metrics, Some(st))
+        } else {
+            self.run_centralized(global, metrics, Some(st))
+        }
     }
 
     /// As [`Coordinator::run`], but optionally starting from
@@ -206,14 +291,12 @@ impl Coordinator {
     /// from `pretrain_steps`.
     pub fn run_from(&self, init: Option<Tensors>) -> anyhow::Result<DilocoReport> {
         let cfg = &self.cfg;
-        let mcfg = &self.rt.manifest.config;
         let mut metrics = RunMetrics::new(&format!(
             "diloco_k{}_h{}_{}",
             cfg.workers,
             cfg.inner_steps,
             cfg.outer_opt.name()
         ));
-        let rng = cfg.rng();
 
         // θ(0): explicit init (already pretrained) or fresh init followed
         // by the pretraining phase.
@@ -234,15 +317,126 @@ impl Coordinator {
                 }
             }
         };
-        let mut global = global;
-
         // Decentralized topologies (ring, gossip) keep one replica per
         // worker and mix peer-to-peer — a structurally different round
-        // loop. Star and hierarchical continue below with the single
-        // global replica (the star path is the PR-2 loop, bitwise).
+        // loop. Star and hierarchical continue in `run_centralized` with
+        // the single global replica (the star path is the PR-2 loop,
+        // bitwise).
         if cfg.topology.is_decentralized() {
-            return self.run_decentralized(global, metrics);
+            self.run_decentralized(global, metrics, None)
+        } else {
+            self.run_centralized(global, metrics, None)
         }
+    }
+
+    /// Restore the worker pool's inner state (params, AdamW moments,
+    /// step counters, batch-stream RNG cursors) from a checkpoint.
+    fn restore_pool(workers: &mut [Worker], saved: &[WorkerState]) {
+        debug_assert_eq!(workers.len(), saved.len());
+        for (w, ws) in workers.iter_mut().zip(saved) {
+            w.params = ws.params.clone();
+            w.opt_m = ws.opt_m.clone();
+            w.opt_v = ws.opt_v.clone();
+            w.step = ws.step;
+            w.iter.set_rng_state(ws.rng);
+        }
+    }
+
+    /// Snapshot the worker pool's inner state for a [`TrainState`] save.
+    fn snapshot_pool(workers: &[Worker]) -> Vec<WorkerState> {
+        workers
+            .iter()
+            .map(|w| WorkerState {
+                params: w.params.clone(),
+                opt_m: w.opt_m.clone(),
+                opt_v: w.opt_v.clone(),
+                step: w.step,
+                rng: w.iter.rng_state(),
+            })
+            .collect()
+    }
+
+    /// Whether round `t`'s boundary is a periodic-save point.
+    fn save_due(&self, t: usize) -> bool {
+        self.cfg.ckpt.save_every > 0 && (t + 1) % self.cfg.ckpt.save_every == 0
+    }
+
+    /// Write the periodic [`TrainState`] for round boundary `t + 1` —
+    /// the shared tail of both round loops (DESIGN.md §10). Callers gate
+    /// on [`Coordinator::save_due`] so optimizer snapshots are only
+    /// taken when a save actually happens. The state is cloned into an
+    /// owned record before serializing — one transient extra copy of the
+    /// training state per save, acceptable at current model scales; a
+    /// borrow-based writer is the upgrade path if checkpointing ever
+    /// dominates memory at production scale.
+    #[allow(clippy::too_many_arguments)]
+    fn save_state_now(
+        &self,
+        t: usize,
+        decentralized: bool,
+        global: &Tensors,
+        replicas: &[Tensors],
+        outer: Vec<opt::OuterOptSnapshot>,
+        workers: &[Worker],
+        refs: &[Tensors],
+        pending_adopt: &[Vec<bool>],
+        drops_per_worker: &[usize],
+        carry_comm_s: f64,
+        codec_err_sq_total: f64,
+    ) -> anyhow::Result<()> {
+        let path = self
+            .cfg
+            .ckpt
+            .path
+            .as_deref()
+            .ok_or_else(|| anyhow::anyhow!("ckpt.save_every without ckpt.path"))?;
+        let st = TrainState {
+            round: t + 1,
+            total_rounds: self.cfg.rounds,
+            decentralized,
+            global: global.clone(),
+            replicas: replicas.to_vec(),
+            outer,
+            workers: Self::snapshot_pool(workers),
+            refs: refs.to_vec(),
+            pending_adopt: pending_adopt.to_vec(),
+            drops_per_worker: drops_per_worker.to_vec(),
+            carry_comm_s,
+            codec_err_sq_total,
+        };
+        checkpoint::save_state(path, &self.rt.manifest, &st)
+    }
+
+    /// Which pool workers were ever active before `round` — a pure
+    /// function of the config, so a resumed run re-derives it instead of
+    /// checkpointing roster history. Fresh joiners (never active) adopt
+    /// the current global/consensus model and the run's global step
+    /// counter at their first active round; rejoining leavers restore
+    /// their parked state instead.
+    fn ever_active_before(&self, round: usize, pool: usize) -> Vec<bool> {
+        let mut ever = vec![false; pool];
+        for t in 0..round {
+            for id in self.cfg.active_ids(t) {
+                ever[id] = true;
+            }
+        }
+        ever
+    }
+
+    /// Centralized round loop (star, hierarchical topologies): one
+    /// global model, workers upload outer gradients, the coordinator
+    /// averages and steps. `resume` continues a checkpointed run from
+    /// its saved round.
+    fn run_centralized(
+        &self,
+        global: Tensors,
+        mut metrics: RunMetrics,
+        resume: Option<TrainState>,
+    ) -> anyhow::Result<DilocoReport> {
+        let cfg = &self.cfg;
+        let mcfg = &self.rt.manifest.config;
+        let rng = cfg.rng();
+        let mut global = global;
         // Hierarchical topology: contiguous worker groups whose leaders
         // carry the only billed WAN hops (None = star default).
         let hier_cfg = match cfg.topology {
@@ -250,8 +444,8 @@ impl Coordinator {
             _ => None,
         };
 
-        // Worker pool sized to the schedule's maximum.
-        let max_k = cfg.schedule.max_workers(cfg.rounds).max(1);
+        // Worker pool sized to the run's peak roster (schedule and churn).
+        let max_k = cfg.pool_size();
         let zeros = Tensors::zeros(&self.rt.manifest);
         let mut workers: Vec<Worker> = (0..max_k)
             .map(|i| {
@@ -289,6 +483,37 @@ impl Coordinator {
         // schedule); 0.0 under barrier schedules.
         let mut carry_comm_s = 0.0f64;
         let mut codec_err_sq_total = 0.0f64;
+        let mut outer = opt::OuterOpt::new(&cfg.outer_opt, &zeros);
+        let mut start_round = 0usize;
+
+        // Resume: overwrite every piece of mutable loop state with the
+        // checkpointed record. Everything else that shapes the trace —
+        // dataset, fragment plan, drop keys, eval windows — is a pure
+        // function of the config, so nothing more is needed for the
+        // continuation to be bitwise.
+        if let Some(st) = resume {
+            anyhow::ensure!(
+                st.pending_adopt.iter().all(|p| p.len() == n_frag),
+                "checkpoint has {} fragments, config wants {n_frag}",
+                st.pending_adopt.first().map_or(0, |p| p.len())
+            );
+            start_round = st.round;
+            Self::restore_pool(&mut workers, &st.workers);
+            refs = st.refs;
+            pending_adopt = st.pending_adopt;
+            drops_per_worker = st.drops_per_worker;
+            carry_comm_s = st.carry_comm_s;
+            codec_err_sq_total = st.codec_err_sq_total;
+            let snap = st
+                .outer
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("checkpoint has no outer optimizer state"))?;
+            outer = opt::OuterOpt::restore(&cfg.outer_opt, &zeros, snap, n_frag)?;
+        }
+        // Elastic membership: who has ever been active (fresh joiners
+        // warm-start; rejoining leavers restore parked state).
+        let mut ever_active = self.ever_active_before(start_round, max_k);
 
         let mut net = SimNet::new(
             cfg.comm.bandwidth_bps,
@@ -296,39 +521,65 @@ impl Coordinator {
             cfg.comm.drop_prob,
             rng.child(7),
         );
-        let mut outer = opt::OuterOpt::new(&cfg.outer_opt, &zeros);
         let mut round_stats = Vec::with_capacity(cfg.rounds);
         let payload = self.rt.manifest.param_bytes() as u64;
 
-        for t in 0..cfg.rounds {
-            let k_t = cfg.schedule.workers_at(t, cfg.rounds).min(max_k).max(1);
+        for t in start_round..cfg.rounds {
+            // The round's active roster: churn events when configured,
+            // else the schedule's prefix 0..k_t (pre-churn loop, bitwise).
+            let roster = cfg.active_ids(t);
+            let k_t = roster.len();
             let due = cfg.stream.schedule.fragments_due(t, n_frag);
-            let active = &mut workers[..k_t];
             let hier_groups: Option<Vec<Vec<usize>>> =
                 hier_cfg.map(|g| topology::hier_groups(k_t, g));
 
+            // Fresh joiners adopt the current global model and the run's
+            // global step counter at their first active round (a no-op at
+            // round 0, where the pool is initialized exactly like this).
+            if cfg.churn.is_some() {
+                for &id in &roster {
+                    if !ever_active[id] {
+                        for flag in pending_adopt[id].iter_mut() {
+                            *flag = true;
+                        }
+                        workers[id].step =
+                            (cfg.pretrain_steps + t * cfg.inner_steps) as f64;
+                    }
+                    ever_active[id] = true;
+                }
+            }
+
             // Re-dispatch: every fragment whose sync the worker completed
             // adopts the current global values; other fragments keep the
-            // worker's local progress (Fig 8 desync, and between-sync
-            // drift under the staggered schedule).
-            for w in active.iter_mut() {
-                let pa = &mut pending_adopt[w.id];
+            // worker's local progress (Fig 8 desync, between-sync drift
+            // under the staggered schedule, and a departed worker's
+            // parked desync across its absence).
+            for &wid in &roster {
+                let w = &mut workers[wid];
+                let pa = &mut pending_adopt[wid];
                 for (f, flag) in pa.iter_mut().enumerate() {
                     if *flag {
                         plan.copy_fragment(&global, &mut w.params, f);
-                        plan.copy_fragment(&global, &mut refs[w.id], f);
+                        plan.copy_fragment(&global, &mut refs[wid], f);
                         *flag = false;
                     }
                 }
             }
 
             // Inner phase: H steps per active worker, dispatched through
-            // the engine (real threads under ParallelIslands). Losses are
-            // averaged across workers per step index, folding in worker
-            // order regardless of which island finished first. A deferred
-            // transfer from the previous round overlaps this phase.
-            let phase =
-                engine::run_inner_phase(self.exec.as_ref(), &self.rt, active, cfg.inner_steps)?;
+            // the engine (real threads under ParallelIslands) and resized
+            // to the round's roster — departed workers hold no thread.
+            // Losses are averaged across workers per roster index,
+            // folding in roster order regardless of which island finished
+            // first. A deferred transfer from the previous round overlaps
+            // this phase.
+            let phase = engine::run_inner_phase_subset(
+                self.exec.as_ref(),
+                &self.rt,
+                &mut workers,
+                &roster,
+                cfg.inner_steps,
+            )?;
             metrics.sim_compute_seconds += phase.overlapped_compute_s(carry_comm_s);
             carry_comm_s = 0.0;
             metrics.phases.inner_compute_s += phase.total_wall_s();
@@ -343,10 +594,10 @@ impl Coordinator {
             if k_t > 1 {
                 metrics.comm_bytes_up_baseline += k_t as u64 * payload;
             }
-            // Per due fragment: received payloads + weights, worker order.
+            // Per due fragment: received payloads + weights, roster order.
             let mut frag_rx: Vec<Vec<Vec<f32>>> = vec![Vec::new(); due.len()];
             let mut frag_wts: Vec<Vec<f64>> = vec![Vec::new(); due.len()];
-            // sent[i][di] — worker i landed due fragment di this round.
+            // sent[i][di] — roster position i landed fragment di this round.
             let mut sent = vec![vec![false; due.len()]; k_t];
             // Full (fragment-assembled) deltas of contributing workers,
             // for the round's cosine/norm statistics.
@@ -371,7 +622,7 @@ impl Coordinator {
                                     bytes,
                                     Direction::Up,
                                     t,
-                                    g[0],
+                                    roster[g[0]],
                                     f,
                                     topology::HOP_LEADER_UP,
                                 )
@@ -384,8 +635,9 @@ impl Coordinator {
                     })
                     .collect()
             });
-            for (i, w) in active.iter().enumerate() {
-                let mut delta = refs[w.id].delta(&w.params);
+            for (i, &wid) in roster.iter().enumerate() {
+                let w = &workers[wid];
+                let mut delta = refs[wid].delta(&w.params);
                 // Sign-pruning (Table 6) applies to the whole outer
                 // gradient before fragmenting; each fragment bills its
                 // proportional share of the pruned payload (exact at P=1).
@@ -397,7 +649,7 @@ impl Coordinator {
                 };
                 let weight = if cfg.weighted_average && cfg.data.non_iid {
                     self.dataset.shard_doc_counts
-                        [w.id % self.dataset.shard_doc_counts.len()]
+                        [wid % self.dataset.shard_doc_counts.len()]
                         as f64
                 } else {
                     1.0
@@ -429,13 +681,14 @@ impl Coordinator {
                     };
                     let ok = match &hier_landed {
                         // Hierarchical: the group leader's hop already
-                        // decided this fragment's fate for every member.
-                        Some(landed) => landed[di][w.id],
+                        // decided this fragment's fate for every member
+                        // (indexed by roster position).
+                        Some(landed) => landed[di][i],
                         None => {
                             if k_t == 1 {
                                 true
                             } else {
-                                net.try_send_fragment(bytes, Direction::Up, t, w.id, f)
+                                net.try_send_fragment(bytes, Direction::Up, t, wid, f)
                             }
                         }
                     };
@@ -454,11 +707,11 @@ impl Coordinator {
                         // its own parameters; rebase its reference so the
                         // next upload covers only post-drop progress —
                         // the monolithic Fig-8 semantics, per fragment.
-                        plan.copy_fragment(&w.params, &mut refs[w.id], f);
+                        plan.copy_fragment(&w.params, &mut refs[wid], f);
                     }
                 }
                 if dropped_any {
-                    drops_per_worker[w.id] += 1;
+                    drops_per_worker[wid] += 1;
                 }
                 let sent_any = sent[i].iter().any(|&s| s);
                 if sent_any {
@@ -499,6 +752,7 @@ impl Coordinator {
                 let mut rs = stats::round_stats(t, &received_assembled, avg);
                 rs.fragments_synced = fragments_synced;
                 rs.codec_err_l2 = codec_err_sq.sqrt();
+                rs.active_workers = k_t;
                 round_stats.push(rs);
                 codec_err_sq_total += codec_err_sq;
                 anyhow::ensure!(
@@ -510,18 +764,20 @@ impl Coordinator {
             // Download: every fragment a worker landed comes back as
             // fresh global values (adopted at its next active round);
             // fragments it lost stay desynced until their next
-            // successful sync. Broadcasts are full-precision.
-            for (i, w) in active.iter().enumerate() {
+            // successful sync. Broadcasts are full-precision. Departed
+            // workers are not in the roster, so nothing is billed to
+            // them in either direction.
+            for (i, &wid) in roster.iter().enumerate() {
                 for (di, &f) in due.iter().enumerate() {
                     if sent[i][di] {
                         if k_t > 1 && hier_groups.is_none() {
                             net.send_reliable_to(
                                 4 * plan.elements(f) as u64,
                                 Direction::Down,
-                                w.id,
+                                wid,
                             );
                         }
-                        pending_adopt[w.id][f] = true;
+                        pending_adopt[wid][f] = true;
                     }
                 }
             }
@@ -536,7 +792,7 @@ impl Coordinator {
                             net.send_reliable_to(
                                 4 * plan.elements(f) as u64,
                                 Direction::Down,
-                                g[0],
+                                roster[g[0]],
                             );
                         }
                     }
@@ -560,6 +816,25 @@ impl Coordinator {
                 let mut p = self.evaluate(&global)?;
                 p.step = cfg.pretrain_steps + (t + 1) * cfg.inner_steps;
                 metrics.eval_curve.push(p);
+            }
+
+            // Periodic TrainState save — the record captures every bit
+            // of mutable loop state at this round boundary, so a resumed
+            // run continues bitwise (DESIGN.md §10).
+            if self.save_due(t) {
+                self.save_state_now(
+                    t,
+                    false,
+                    &global,
+                    &[],
+                    vec![outer.snapshot()],
+                    &workers,
+                    &refs,
+                    &pending_adopt,
+                    &drops_per_worker,
+                    carry_comm_s,
+                    codec_err_sq_total,
+                )?;
             }
         }
 
@@ -595,13 +870,14 @@ impl Coordinator {
         &self,
         global: Tensors,
         mut metrics: RunMetrics,
+        resume: Option<TrainState>,
     ) -> anyhow::Result<DilocoReport> {
         let cfg = &self.cfg;
         let mcfg = &self.rt.manifest.config;
         let rng = cfg.rng();
         let topo = cfg.topology.build(cfg.seed);
 
-        let max_k = cfg.schedule.max_workers(cfg.rounds).max(1);
+        let max_k = cfg.pool_size();
         let zeros = Tensors::zeros(&self.rt.manifest);
         let mut workers: Vec<Worker> = (0..max_k)
             .map(|i| {
@@ -633,6 +909,40 @@ impl Coordinator {
         let mut drops_per_worker = vec![0usize; max_k];
         let mut carry_comm_s = 0.0f64;
         let mut codec_err_sq_total = 0.0f64;
+        // Uniform consensus of the active replicas, refreshed per round
+        // — what the eval curve and `final_params` report.
+        let mut consensus = global.clone();
+        let mut start_round = 0usize;
+
+        // Resume: overwrite every piece of mutable loop state with the
+        // checkpointed record (the `global` argument already carries the
+        // saved consensus).
+        if let Some(st) = resume {
+            anyhow::ensure!(
+                st.pending_adopt.iter().all(|p| p.len() == n_frag),
+                "checkpoint has {} fragments, config wants {n_frag}",
+                st.pending_adopt.first().map_or(0, |p| p.len())
+            );
+            anyhow::ensure!(
+                st.outer.len() == max_k,
+                "checkpoint has {} outer optimizers, pool wants {max_k}",
+                st.outer.len()
+            );
+            start_round = st.round;
+            Self::restore_pool(&mut workers, &st.workers);
+            replicas = st.replicas;
+            outers = st
+                .outer
+                .into_iter()
+                .map(|snap| opt::OuterOpt::restore(&cfg.outer_opt, &zeros, snap, n_frag))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            refs = st.refs;
+            pending_adopt = st.pending_adopt;
+            drops_per_worker = st.drops_per_worker;
+            carry_comm_s = st.carry_comm_s;
+            codec_err_sq_total = st.codec_err_sq_total;
+        }
+        let mut ever_active = self.ever_active_before(start_round, max_k);
 
         let mut net = SimNet::new(
             cfg.comm.bandwidth_bps,
@@ -642,32 +952,54 @@ impl Coordinator {
         );
         let mut round_stats = Vec::with_capacity(cfg.rounds);
         let payload = self.rt.manifest.param_bytes() as u64;
-        // Uniform consensus of the active replicas, refreshed per round
-        // — what the eval curve and `final_params` report.
-        let mut consensus = global.clone();
-        let mut last_k = 1usize.min(max_k).max(1);
+        let mut last_roster: Vec<usize> = Vec::new();
 
-        for t in 0..cfg.rounds {
-            let k_t = cfg.schedule.workers_at(t, cfg.rounds).min(max_k).max(1);
-            last_k = k_t;
+        for t in start_round..cfg.rounds {
+            let roster = cfg.active_ids(t);
+            let k_t = roster.len();
+            last_roster = roster.clone();
             let due = cfg.stream.schedule.fragments_due(t, n_frag);
-            let active = &mut workers[..k_t];
+
+            // Fresh joiners warm-start from the current *consensus*
+            // model (their replica had never trained); rejoining leavers
+            // keep their parked replica and outer momentum.
+            if cfg.churn.is_some() {
+                for &id in &roster {
+                    if !ever_active[id] {
+                        // A no-op at round 0, where every replica is the
+                        // shared (pretrained) init == the consensus.
+                        replicas[id] = consensus.clone();
+                        for flag in pending_adopt[id].iter_mut() {
+                            *flag = true;
+                        }
+                        workers[id].step =
+                            (cfg.pretrain_steps + t * cfg.inner_steps) as f64;
+                    }
+                    ever_active[id] = true;
+                }
+            }
 
             // Every worker re-adopts its own replica's freshly stepped
             // fragments — there is no central model to download.
-            for w in active.iter_mut() {
-                let pa = &mut pending_adopt[w.id];
+            for &wid in &roster {
+                let w = &mut workers[wid];
+                let pa = &mut pending_adopt[wid];
                 for (f, flag) in pa.iter_mut().enumerate() {
                     if *flag {
-                        plan.copy_fragment(&replicas[w.id], &mut w.params, f);
-                        plan.copy_fragment(&replicas[w.id], &mut refs[w.id], f);
+                        plan.copy_fragment(&replicas[wid], &mut w.params, f);
+                        plan.copy_fragment(&replicas[wid], &mut refs[wid], f);
                         *flag = false;
                     }
                 }
             }
 
-            let phase =
-                engine::run_inner_phase(self.exec.as_ref(), &self.rt, active, cfg.inner_steps)?;
+            let phase = engine::run_inner_phase_subset(
+                self.exec.as_ref(),
+                &self.rt,
+                &mut workers,
+                &roster,
+                cfg.inner_steps,
+            )?;
             metrics.sim_compute_seconds += phase.overlapped_compute_s(carry_comm_s);
             carry_comm_s = 0.0;
             metrics.phases.inner_compute_s += phase.total_wall_s();
@@ -682,11 +1014,11 @@ impl Coordinator {
             }
 
             // Outer gradients, §6.1 weights, and wire payloads per
-            // worker, in worker order (the deterministic fold order).
-            // payloads[di][w] holds the *transcoded* wire values of due
-            // fragment di from worker w — what every receiver (and the
-            // sender itself) mixes, so codec loss is part of the
-            // simulated algorithm exactly as on the star path.
+            // worker, in roster order (the deterministic fold order).
+            // payloads[di][j] holds the *transcoded* wire values of due
+            // fragment di from roster position j — what every receiver
+            // (and the sender itself) mixes, so codec loss is part of
+            // the simulated algorithm exactly as on the star path.
             let mut weights: Vec<f64> = Vec::with_capacity(k_t);
             let mut worker_bytes: Vec<Vec<u64>> = Vec::with_capacity(k_t);
             let mut payloads: Vec<Vec<Vec<f32>>> = vec![Vec::new(); due.len()];
@@ -699,8 +1031,9 @@ impl Coordinator {
             let lossless_full =
                 (codec == Codec::F32 || k_t == 1) && due.len() == n_frag;
             let mut codec_err_sq = 0.0f64;
-            for w in active.iter() {
-                let mut delta = refs[w.id].delta(&w.params);
+            for &wid in &roster {
+                let w = &workers[wid];
+                let mut delta = refs[wid].delta(&w.params);
                 let pruned_payload = if cfg.prune_frac > 0.0 {
                     let zeroed = prune::prune_sign(&mut delta, cfg.prune_frac);
                     Some(prune::pruned_payload_bytes(delta.total_elements(), zeroed))
@@ -709,7 +1042,7 @@ impl Coordinator {
                 };
                 weights.push(if cfg.weighted_average && cfg.data.non_iid {
                     self.dataset.shard_doc_counts
-                        [w.id % self.dataset.shard_doc_counts.len()]
+                        [wid % self.dataset.shard_doc_counts.len()]
                         as f64
                 } else {
                     1.0
@@ -752,8 +1085,11 @@ impl Coordinator {
             let mut avg_assembled: Option<Tensors> = None;
             for (di, &f) in due.iter().enumerate() {
                 // Execute the fragment's transfer schedule against the
-                // fabric; landed[s] = worker s's outgoing contribution
-                // was delivered to its receiver(s).
+                // fabric; the schedule speaks roster *positions*, which
+                // map through `roster` onto worker ids for lane billing
+                // and drop keys (identity when the roster is the static
+                // prefix). landed[s] = position s's outgoing
+                // contribution was delivered to its receiver(s).
                 let mut landed = vec![true; k_t];
                 if k_t > 1 {
                     for tr in &transfers {
@@ -767,12 +1103,19 @@ impl Coordinator {
                         };
                         if tr.droppable {
                             debug_assert_eq!(lane, tr.sender, "droppable hops bill the sender's lane");
-                            if !net.try_send_hop(bytes, tr.dir, t, tr.sender, f, tr.hop) {
+                            if !net.try_send_hop(
+                                bytes,
+                                tr.dir,
+                                t,
+                                roster[tr.sender],
+                                f,
+                                tr.hop,
+                            ) {
                                 landed[tr.sender] = false;
                                 dropped_any[tr.sender] = true;
                             }
                         } else {
-                            net.send_reliable_to(bytes, tr.dir, lane);
+                            net.send_reliable_to(bytes, tr.dir, roster[lane]);
                         }
                     }
                 }
@@ -810,8 +1153,9 @@ impl Coordinator {
                     } else {
                         continue;
                     };
-                    outers[r].step_fragment(&mut replicas[r], mixed, plan.slices(f), f);
-                    pending_adopt[r][f] = true;
+                    let rid = roster[r];
+                    outers[rid].step_fragment(&mut replicas[rid], mixed, plan.slices(f), f);
+                    pending_adopt[rid][f] = true;
                 }
                 fragments_synced += 1;
                 // Field average over every active worker — the analogue
@@ -822,23 +1166,26 @@ impl Coordinator {
                 plan.scatter(&avg, f, avg_assembled.get_or_insert_with(|| zeros.clone()));
             }
 
-            for (w, dropped) in dropped_any.iter().enumerate() {
+            for (pos, dropped) in dropped_any.iter().enumerate() {
                 if *dropped {
-                    drops_per_worker[w] += 1;
+                    drops_per_worker[roster[pos]] += 1;
                 }
             }
             if let Some(avg) = &avg_assembled {
                 let mut rs = stats::round_stats(t, &received_assembled, avg);
                 rs.fragments_synced = fragments_synced;
                 rs.codec_err_l2 = codec_err_sq.sqrt();
-                consensus = average::average(&replicas[..k_t]);
+                rs.active_workers = k_t;
+                let active_replicas: Vec<&Tensors> =
+                    roster.iter().map(|&id| &replicas[id]).collect();
+                consensus = average::uniform_average_refs(&active_replicas);
                 rs.consensus_dist =
-                    stats::consensus_distance(&replicas[..k_t], &consensus);
+                    stats::consensus_distance_refs(&active_replicas, &consensus);
                 round_stats.push(rs);
                 codec_err_sq_total += codec_err_sq;
-                for r in &replicas[..k_t] {
+                for &id in &roster {
                     anyhow::ensure!(
-                        r.all_finite(),
+                        replicas[id].all_finite(),
                         "outer step produced non-finite parameters at round {t}"
                     );
                 }
@@ -860,6 +1207,24 @@ impl Coordinator {
                 p.step = cfg.pretrain_steps + (t + 1) * cfg.inner_steps;
                 metrics.eval_curve.push(p);
             }
+
+            // Periodic TrainState save (DESIGN.md §10): the whole pool —
+            // replicas, per-replica outer state, parked workers included.
+            if self.save_due(t) {
+                self.save_state_now(
+                    t,
+                    true,
+                    &consensus,
+                    &replicas,
+                    outers.iter().map(|o| o.snapshot()).collect(),
+                    &workers,
+                    &refs,
+                    &pending_adopt,
+                    &drops_per_worker,
+                    carry_comm_s,
+                    codec_err_sq_total,
+                )?;
+            }
         }
 
         let cs = net.stats();
@@ -871,17 +1236,32 @@ impl Coordinator {
         metrics.codec_err_l2 = codec_err_sq_total.sqrt();
         let comm_per_round = cs.per_round.clone();
 
-        // Per-replica finals: each island's own model, evaluated once.
-        let mut replica_evals = Vec::with_capacity(last_k);
+        // No round executed (a zero-round run, or a resume whose
+        // checkpoint is already at cfg.rounds): still report the final
+        // roster's replicas, exactly as the straight run did.
+        if last_roster.is_empty() {
+            last_roster = if cfg.rounds > 0 {
+                cfg.active_ids(cfg.rounds - 1)
+            } else {
+                vec![0]
+            };
+        }
+
+        // Per-replica finals: each island in the final roster, evaluated
+        // once on its own model.
+        let mut replica_evals = Vec::with_capacity(last_roster.len());
         if cfg.rounds > 0 {
             let _t = Stopwatch::new(&mut metrics.phases.eval_s);
-            for r in replicas[..last_k].iter() {
-                let mut p = self.evaluate(r)?;
+            for &id in &last_roster {
+                let mut p = self.evaluate(&replicas[id])?;
                 p.step = cfg.pretrain_steps + cfg.rounds * cfg.inner_steps;
                 replica_evals.push(p);
             }
         }
-        replicas.truncate(last_k);
+        let replica_params: Vec<Tensors> = last_roster
+            .iter()
+            .map(|&id| replicas[id].clone())
+            .collect();
 
         Ok(DilocoReport {
             metrics,
@@ -889,7 +1269,7 @@ impl Coordinator {
             final_params: consensus,
             drops_per_worker,
             comm_per_round,
-            replica_params: replicas,
+            replica_params,
             replica_evals,
         })
     }
@@ -932,6 +1312,7 @@ mod tests {
         // 5 pretrain + 2 rounds × 5 inner steps of loss points.
         assert_eq!(report.metrics.loss_curve.len(), 15);
         assert_eq!(report.round_stats.len(), 2);
+        assert!(report.round_stats.iter().all(|rs| rs.active_workers == 2));
         assert!(report.metrics.final_ppl().is_finite());
         assert!(report.final_params.all_finite());
         // Communication: 2 workers × 2 rounds, up + down each.

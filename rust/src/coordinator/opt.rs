@@ -188,6 +188,108 @@ impl OuterOpt {
             OuterOpt::Adam { .. } => "adam",
         }
     }
+
+    /// Snapshot of the mutable optimizer state, for
+    /// [`crate::checkpoint::TrainState`] saves. Hyperparameters are not
+    /// recorded — they are reconstructed from the experiment config on
+    /// resume, and [`OuterOpt::restore`] checks the kinds agree.
+    pub fn snapshot(&self) -> OuterOptSnapshot {
+        match self {
+            OuterOpt::Sgd { .. } => OuterOptSnapshot {
+                kind: "sgd".into(),
+                t: Vec::new(),
+                tensors: Vec::new(),
+            },
+            OuterOpt::SgdM { mom, .. } => OuterOptSnapshot {
+                kind: "sgdm".into(),
+                t: Vec::new(),
+                tensors: vec![mom.clone()],
+            },
+            OuterOpt::Nesterov { mom, .. } => OuterOptSnapshot {
+                kind: "nesterov".into(),
+                t: Vec::new(),
+                tensors: vec![mom.clone()],
+            },
+            OuterOpt::Adam { t, m, v, .. } => OuterOptSnapshot {
+                kind: "adam".into(),
+                t: t.clone(),
+                tensors: vec![m.clone(), v.clone()],
+            },
+        }
+    }
+
+    /// Rebuild an optimizer from config hyperparameters plus a state
+    /// snapshot. Bitwise: stepping the restored optimizer continues the
+    /// saved trajectory exactly (the resume integration tests pin this).
+    /// `max_fragments` bounds the Adam per-fragment step vector (the
+    /// run's fragment count): a longer or absurd-valued `t` from a
+    /// corrupted checkpoint is rejected here instead of silently
+    /// skewing bias correction.
+    pub fn restore(
+        cfg: &OuterOptConfig,
+        zeros: &Tensors,
+        snap: OuterOptSnapshot,
+        max_fragments: usize,
+    ) -> anyhow::Result<OuterOpt> {
+        let mut opt = OuterOpt::new(cfg, zeros);
+        anyhow::ensure!(
+            opt.name() == snap.kind,
+            "checkpoint outer optimizer is {:?}, config wants {:?}",
+            snap.kind,
+            opt.name()
+        );
+        anyhow::ensure!(
+            snap.t.len() <= max_fragments,
+            "outer optimizer snapshot has {} per-fragment step counters, \
+             the run has {max_fragments} fragments",
+            snap.t.len()
+        );
+        anyhow::ensure!(
+            snap.t.iter().all(|&s| s <= u32::MAX as u64),
+            "outer optimizer snapshot has an implausible step counter"
+        );
+        anyhow::ensure!(
+            matches!(cfg, OuterOptConfig::Adam { .. }) || snap.t.is_empty(),
+            "non-Adam outer optimizer snapshot carries step counters"
+        );
+        let want = match &opt {
+            OuterOpt::Sgd { .. } => 0,
+            OuterOpt::SgdM { .. } | OuterOpt::Nesterov { .. } => 1,
+            OuterOpt::Adam { .. } => 2,
+        };
+        anyhow::ensure!(
+            snap.tensors.len() == want,
+            "outer optimizer snapshot has {} state tensors, {:?} wants {want}",
+            snap.tensors.len(),
+            snap.kind
+        );
+        let mut it = snap.tensors.into_iter();
+        match &mut opt {
+            OuterOpt::Sgd { .. } => {}
+            OuterOpt::SgdM { mom, .. } | OuterOpt::Nesterov { mom, .. } => {
+                *mom = it.next().unwrap();
+            }
+            OuterOpt::Adam { t, m, v, .. } => {
+                *t = snap.t;
+                *m = it.next().unwrap();
+                *v = it.next().unwrap();
+            }
+        }
+        Ok(opt)
+    }
+}
+
+/// Serializable mutable state of an [`OuterOpt`] (see
+/// [`OuterOpt::snapshot`] / [`OuterOpt::restore`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OuterOptSnapshot {
+    /// Optimizer kind name, checked against the config on restore.
+    pub kind: String,
+    /// Adam's per-fragment step counters (empty for other kinds).
+    pub t: Vec<u64>,
+    /// Manifest-shaped state tensors: `[mom]` for momentum kinds,
+    /// `[m, v]` for Adam, empty for plain SGD.
+    pub tensors: Vec<Tensors>,
 }
 
 /// Visit `f(param, avg)` over every fragment element, in slice order.
@@ -404,6 +506,68 @@ mod tests {
         assert!((got[3] + 0.3).abs() < 1e-4, "{}", got[3]);
         // Fragment 0 advanced 5 steps and moved further.
         assert!(got[0] < got[2], "{} vs {}", got[0], got[2]);
+    }
+
+    #[test]
+    fn snapshot_restore_continues_trajectory_bitwise() {
+        // For every optimizer kind: step twice straight vs step once,
+        // snapshot, restore into a fresh optimizer, step again — the
+        // parameters must agree bit for bit (the resume contract at the
+        // optimizer layer).
+        for cfg in [
+            OuterOptConfig::Sgd { lr: 0.5 },
+            OuterOptConfig::SgdM { lr: 0.5, mu: 0.8 },
+            OuterOptConfig::Nesterov { lr: 0.7, mu: 0.9 },
+            OuterOptConfig::Adam { lr: 0.3, b1: 0.9, b2: 0.95, eps: 0.1 },
+        ] {
+            let init = tensors_from(&[1.0, -2.0, 0.5, 3.0]);
+            let d1 = tensors_from(&[0.1, 0.2, -0.3, 0.4]);
+            let d2 = tensors_from(&[-0.2, 0.1, 0.5, -0.1]);
+            let mut z = init.clone();
+            z.scale(0.0);
+
+            let mut straight = init.clone();
+            let mut opt = OuterOpt::new(&cfg, &z);
+            opt.step(&mut straight, &d1);
+            opt.step(&mut straight, &d2);
+
+            let mut resumed = init.clone();
+            let mut opt_a = OuterOpt::new(&cfg, &z);
+            opt_a.step(&mut resumed, &d1);
+            let snap = opt_a.snapshot();
+            let mut opt_b = OuterOpt::restore(&cfg, &z, snap, 1).unwrap();
+            opt_b.step(&mut resumed, &d2);
+
+            for (a, b) in straight.iter_flat().zip(resumed.iter_flat()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", opt_b.name());
+            }
+        }
+    }
+
+    #[test]
+    fn restore_rejects_kind_mismatch() {
+        let z = {
+            let mut z = tensors_from(&[0.0, 0.0]);
+            z.scale(0.0);
+            z
+        };
+        let snap = OuterOpt::new(&OuterOptConfig::Sgd { lr: 1.0 }, &z).snapshot();
+        assert!(OuterOpt::restore(
+            &OuterOptConfig::Nesterov { lr: 0.7, mu: 0.9 },
+            &z,
+            snap,
+            1
+        )
+        .is_err());
+        // An Adam snapshot whose step vector outruns the run's fragment
+        // count (a corrupted checkpoint) is rejected, not resized away.
+        let adam = OuterOptConfig::Adam { lr: 0.3, b1: 0.9, b2: 0.95, eps: 0.1 };
+        let mut opt = OuterOpt::new(&adam, &z);
+        let mut p = tensors_from(&[0.0, 0.0]);
+        opt.step(&mut p, &z);
+        let snap = opt.snapshot();
+        assert!(OuterOpt::restore(&adam, &z, snap.clone(), 0).is_err());
+        assert!(OuterOpt::restore(&adam, &z, snap, 1).is_ok());
     }
 
     #[test]

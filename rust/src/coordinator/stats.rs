@@ -29,6 +29,10 @@ pub struct RoundStats {
     /// consensus, and stays ~0 for the ring (every replica applies the
     /// same full average).
     pub consensus_dist: f64,
+    /// Size of the round's active roster (elastic membership: departed
+    /// workers neither compute nor bill, so this can change round to
+    /// round under a `[churn]` schedule).
+    pub active_workers: usize,
 }
 
 /// Mean L2 distance of `replicas` from `consensus` (their uniform mean).
@@ -44,6 +48,14 @@ pub struct RoundStats {
 /// assert!((d - 1.0).abs() < 1e-9); // each replica sits 1.0 from the mean
 /// ```
 pub fn consensus_distance(replicas: &[Tensors], consensus: &Tensors) -> f64 {
+    let refs: Vec<&Tensors> = replicas.iter().collect();
+    consensus_distance_refs(&refs, consensus)
+}
+
+/// As [`consensus_distance`], over borrowed replicas (a roster-selected,
+/// possibly non-contiguous subset under elastic membership). Same
+/// arithmetic, same fold order.
+pub fn consensus_distance_refs(replicas: &[&Tensors], consensus: &Tensors) -> f64 {
     if replicas.is_empty() {
         return 0.0;
     }
@@ -76,10 +88,12 @@ pub fn round_stats(round: usize, deltas: &[Tensors], avg: &Tensors) -> RoundStat
         avg_delta_norm: avg.l2_norm(),
         per_worker_norm_mean: math::mean(&norms),
         // The coordinator overwrites these with the round's streaming /
-        // topology outcome; defaults describe a lossless centralized sync.
+        // topology / roster outcome; defaults describe a lossless
+        // centralized sync where every contributor is active.
         fragments_synced: 1,
         codec_err_l2: 0.0,
         consensus_dist: 0.0,
+        active_workers: deltas.len(),
     }
 }
 

@@ -204,8 +204,45 @@ pub fn run_inner_phase(
     workers: &mut [Worker],
     h: usize,
 ) -> anyhow::Result<InnerPhaseReport> {
+    run_inner_phase_refs(exec, rt, workers.iter_mut().collect(), h)
+}
+
+/// As [`run_inner_phase`], over an arbitrary subset of a worker pool
+/// selected by id. Elastic membership (churn) makes the active roster a
+/// non-contiguous id set, so the engine resizes each round's island
+/// phase to exactly the active workers: departed workers hold no thread,
+/// burn no compute, and appear nowhere in the phase report. Outputs come
+/// back in `ids` order (the determinism contract's fold order).
+pub fn run_inner_phase_subset(
+    exec: &dyn InnerPhaseExecutor,
+    rt: &Runtime,
+    workers: &mut [Worker],
+    ids: &[usize],
+    h: usize,
+) -> anyhow::Result<InnerPhaseReport> {
+    let pool = workers.len();
+    let mut slots: Vec<Option<&mut Worker>> = workers.iter_mut().map(Some).collect();
+    let mut picked: Vec<&mut Worker> = Vec::with_capacity(ids.len());
+    for &id in ids {
+        anyhow::ensure!(id < pool, "roster id {id} outside worker pool of {pool}");
+        let w = slots[id]
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("roster id {id} listed twice"))?;
+        picked.push(w);
+    }
+    run_inner_phase_refs(exec, rt, picked, h)
+}
+
+/// Shared implementation: one island task per borrowed worker, outputs
+/// reduced in the given order.
+fn run_inner_phase_refs(
+    exec: &dyn InnerPhaseExecutor,
+    rt: &Runtime,
+    workers: Vec<&mut Worker>,
+    h: usize,
+) -> anyhow::Result<InnerPhaseReport> {
     let tasks: Vec<IslandTask<'_>> = workers
-        .iter_mut()
+        .into_iter()
         .map(|w| {
             Box::new(move || -> anyhow::Result<IslandOutput> {
                 let before = w.compute_seconds;

@@ -12,7 +12,9 @@
 //!   diloco data --topics 8 --docs 400 --workers 8 --non-iid
 
 use diloco::config::toml::TomlDoc;
-use diloco::config::{EngineConfig, ExperimentConfig, StreamConfig, TopologyConfig};
+use diloco::config::{
+    ChurnConfig, EngineConfig, ExperimentConfig, StreamConfig, TopologyConfig,
+};
 use diloco::coordinator::Coordinator;
 use diloco::data::Dataset;
 use diloco::engine::InnerPhaseExecutor as _;
@@ -85,6 +87,8 @@ fn print_help() {
          \x20       [--stream fragments=4,schedule=staggered,codec=q8]\n\
          \x20       (schedules: every-round|staggered|overlapped; codecs: f32|f16|q8)\n\
          \x20       [--topology star|ring|gossip|hierarchical[:G]]\n\
+         \x20       [--churn leave:w3@r10,join:w8@r20,ramp:4..8]\n\
+         \x20       [--save-every N --save-path state.ckpt] [--resume state.ckpt]\n\
          eval    --ckpt <file> [--artifacts artifacts] [--model nano]\n\
          data    [--topics 8] [--docs 400] [--workers 8] [--non-iid] [--seed 0]\n\
          inspect [--artifacts artifacts] [--model nano]"
@@ -122,6 +126,20 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if let Some(topology) = args.get("topology") {
         cfg.topology = TopologyConfig::parse(topology)?;
     }
+    if let Some(churn) = args.get("churn") {
+        cfg.churn = Some(ChurnConfig::parse(churn)?);
+    }
+    if let Some(every) = args.get("save-every") {
+        cfg.ckpt.save_every = every
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --save-every {every:?}: {e}"))?;
+    }
+    if let Some(path) = args.get("save-path") {
+        cfg.ckpt.path = Some(path.to_string());
+    }
+    if let Some(resume) = args.get("resume") {
+        cfg.ckpt.resume = Some(resume.to_string());
+    }
     cfg.validate()?;
     println!(
         "DiLoCo: model={} k={} H={} T={} pretrain={} outer={} non_iid={} engine={:?} \
@@ -143,6 +161,27 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             cfg.stream.schedule.name(),
             cfg.stream.codec.name()
         );
+    }
+    if let Some(churn) = &cfg.churn {
+        println!(
+            "churn: {} events{} over a pool of {} workers",
+            churn.events.len(),
+            churn
+                .ramp
+                .map(|(a, b)| format!(" + ramp {a}..{b}"))
+                .unwrap_or_default(),
+            cfg.pool_size()
+        );
+    }
+    if cfg.ckpt.save_every > 0 {
+        println!(
+            "ckpt: saving TrainState every {} rounds to {}",
+            cfg.ckpt.save_every,
+            cfg.ckpt.path.as_deref().unwrap_or("?")
+        );
+    }
+    if let Some(resume) = &cfg.ckpt.resume {
+        println!("ckpt: resuming from {resume}");
     }
     let rt = Arc::new(Runtime::load(&cfg.artifacts_dir, &cfg.model)?);
     println!(

@@ -4,8 +4,8 @@
 use diloco::checkpoint;
 use diloco::comm::codec::Codec;
 use diloco::config::{
-    ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig, StreamConfig,
-    SyncSchedule, TopologyConfig,
+    ChurnConfig, ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig,
+    StreamConfig, SyncSchedule, TopologyConfig,
 };
 use diloco::coordinator::Coordinator;
 use diloco::data::batch::BatchIter;
@@ -718,6 +718,243 @@ fn gossip_composes_with_staggered_fragments() {
     for rs in &r1.round_stats {
         assert_eq!(rs.fragments_synced, 1);
     }
+}
+
+fn tmp_state_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("diloco_state_{tag}_{}.bin", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// Assert two reports agree bitwise on params and the given eval tail.
+fn assert_bitwise_tail(
+    straight: &diloco::coordinator::DilocoReport,
+    resumed: &diloco::coordinator::DilocoReport,
+    tail_evals: usize,
+    what: &str,
+) {
+    assert_eq!(
+        resumed.final_params, straight.final_params,
+        "{what}: resumed final params diverged"
+    );
+    let s_tail =
+        &straight.metrics.eval_curve[straight.metrics.eval_curve.len() - tail_evals..];
+    let r_tail =
+        &resumed.metrics.eval_curve[resumed.metrics.eval_curve.len() - tail_evals..];
+    for (a, b) in s_tail.iter().zip(r_tail) {
+        assert_eq!(a.step, b.step, "{what}: eval steps diverged");
+        assert_eq!(a.mean_nll, b.mean_nll, "{what}: eval nll diverged");
+    }
+    assert_eq!(
+        resumed.drops_per_worker, straight.drops_per_worker,
+        "{what}: drop history diverged (it is checkpointed)"
+    );
+}
+
+#[test]
+fn resume_matches_straight_run_bitwise_star() {
+    // THE determinism contract (DESIGN.md §10): 2R rounds straight ==
+    // R rounds + TrainState checkpoint + resume for R more, bit for bit
+    // — with Nesterov momentum, per-worker AdamW state, RNG cursors, and
+    // keyed drop injection all crossing the save/load boundary.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 4;
+    cfg.comm.drop_prob = 0.3;
+    cfg.seed = 5;
+
+    let straight = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run()
+        .unwrap();
+
+    let path = tmp_state_path("star");
+    let mut saver_cfg = cfg.clone();
+    saver_cfg.rounds = 2;
+    saver_cfg.ckpt.save_every = 2;
+    saver_cfg.ckpt.path = Some(path.clone());
+    let saver = Coordinator::new(saver_cfg, rt.clone()).unwrap().run().unwrap();
+    // Saving must not perturb the first R rounds.
+    assert_eq!(
+        &saver.metrics.loss_curve[..],
+        &straight.metrics.loss_curve[..saver.metrics.loss_curve.len()]
+    );
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.ckpt.resume = Some(path.clone());
+    let resumed = Coordinator::new(resume_cfg, rt.clone()).unwrap().run().unwrap();
+    assert_bitwise_tail(&straight, &resumed, 2, "star");
+    // The resumed run re-ran exactly rounds 2..4: its billing rows must
+    // equal the straight run's tail rows.
+    assert_eq!(resumed.comm_per_round.len(), 2);
+    assert_eq!(resumed.comm_per_round[..], straight.comm_per_round[2..]);
+    // Loss curve covers only the resumed rounds (no pretrain, no replay).
+    assert_eq!(
+        resumed.metrics.loss_curve[..],
+        straight.metrics.loss_curve[straight.metrics.loss_curve.len() - 2 * 10..]
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn resume_matches_straight_run_bitwise_ring() {
+    // Same contract on the decentralized loop: per-replica models and
+    // per-replica outer momentum cross the checkpoint boundary.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 4;
+    cfg.topology = TopologyConfig::Ring;
+
+    let straight = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run()
+        .unwrap();
+
+    let path = tmp_state_path("ring");
+    let mut saver_cfg = cfg.clone();
+    saver_cfg.rounds = 2;
+    saver_cfg.ckpt.save_every = 2;
+    saver_cfg.ckpt.path = Some(path.clone());
+    Coordinator::new(saver_cfg, rt.clone()).unwrap().run().unwrap();
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.ckpt.resume = Some(path.clone());
+    let resumed = Coordinator::new(resume_cfg, rt.clone()).unwrap().run().unwrap();
+    assert_bitwise_tail(&straight, &resumed, 2, "ring");
+    assert_eq!(resumed.replica_params.len(), straight.replica_params.len());
+    for (r, (a, b)) in resumed
+        .replica_params
+        .iter()
+        .zip(&straight.replica_params)
+        .enumerate()
+    {
+        assert_eq!(a, b, "replica {r} diverged across resume");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn resume_rejects_mismatched_topology_and_rounds() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 2;
+    let path = tmp_state_path("reject");
+    cfg.ckpt.save_every = 2;
+    cfg.ckpt.path = Some(path.clone());
+    Coordinator::new(cfg.clone(), rt.clone()).unwrap().run().unwrap();
+
+    // Decentralized config refuses a centralized state.
+    let mut ring_cfg = cfg.clone();
+    ring_cfg.ckpt = Default::default();
+    ring_cfg.ckpt.resume = Some(path.clone());
+    ring_cfg.topology = TopologyConfig::Ring;
+    let err = Coordinator::new(ring_cfg, rt.clone())
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("topology"), "{err:#}");
+
+    // A checkpoint beyond the configured rounds is an error.
+    let mut short_cfg = cfg.clone();
+    short_cfg.ckpt = Default::default();
+    short_cfg.ckpt.resume = Some(path.clone());
+    short_cfg.rounds = 1;
+    let err = Coordinator::new(short_cfg, rt)
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("round"), "{err:#}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn churn_roster_is_deterministic_across_engines_and_bills_active_only() {
+    // Elastic membership acceptance: the same (seed, churn schedule)
+    // yields identical eval curves under the sequential and parallel
+    // engines, and a departed worker bills nothing — every round's
+    // traffic is exactly the active roster's flows.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 4;
+    // w1 leaves after round 0, rejoins for round 3; w4 (beyond the
+    // static pool of 4) joins at round 2.
+    cfg.churn =
+        Some(ChurnConfig::parse("leave:w1@r1,join:w1@r3,join:w4@r2").unwrap());
+    let init = rt.init_params().unwrap();
+    let run = |engine: EngineConfig| {
+        let mut cfg = cfg.clone();
+        cfg.engine = engine;
+        Coordinator::new(cfg, rt.clone())
+            .unwrap()
+            .run_from(Some(init.clone()))
+            .unwrap()
+    };
+    let seq = run(EngineConfig::Sequential);
+    let par = run(EngineConfig::Parallel { threads: 0 });
+    assert_eq!(par.final_params, seq.final_params);
+    assert_eq!(par.metrics.loss_curve, seq.metrics.loss_curve);
+    assert_eq!(par.metrics.eval_curve.len(), seq.metrics.eval_curve.len());
+    for (a, b) in par.metrics.eval_curve.iter().zip(&seq.metrics.eval_curve) {
+        assert_eq!(a.mean_nll, b.mean_nll, "churn eval curves diverged");
+    }
+    assert_eq!(par.metrics.comm_bytes, seq.metrics.comm_bytes);
+
+    // Billing: per-round bytes == k_t·B each way (P=1, f32, no drops).
+    let payload = rt.manifest.param_bytes() as u64;
+    let rosters: Vec<Vec<usize>> = (0..4).map(|t| cfg.active_ids(t)).collect();
+    assert_eq!(rosters[0], vec![0, 1, 2, 3]);
+    assert_eq!(rosters[1], vec![0, 2, 3]);
+    assert_eq!(rosters[2], vec![0, 2, 3, 4]);
+    assert_eq!(rosters[3], vec![0, 1, 2, 3, 4]);
+    for (t, row) in seq.comm_per_round.iter().enumerate() {
+        let k_t = rosters[t].len() as u64;
+        assert_eq!(row.bytes_up, k_t * payload, "round {t} up bytes");
+        assert_eq!(row.bytes_down, k_t * payload, "round {t} down bytes");
+        assert_eq!(row.messages, 2 * k_t, "round {t} messages");
+    }
+    for (t, rs) in seq.round_stats.iter().enumerate() {
+        assert_eq!(rs.active_workers, rosters[t].len());
+    }
+    // The pool covers the late joiner.
+    assert_eq!(seq.drops_per_worker.len(), 5);
+    assert!(seq.metrics.final_ppl().is_finite());
+}
+
+#[test]
+fn churn_leaver_rejoins_with_parked_state_and_run_resumes() {
+    // Leave-then-rejoin composed with checkpoint/resume: the rejoin
+    // event lands *inside the resumed segment*, so the roster derivation
+    // and the parked worker state must both cross the save boundary.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 4;
+    cfg.churn = Some(ChurnConfig::parse("leave:w1@r1,join:w1@r3").unwrap());
+
+    let straight = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run()
+        .unwrap();
+    // w1 really sat out rounds 1-2: those rounds bill 3 workers.
+    let payload = rt.manifest.param_bytes() as u64;
+    assert_eq!(straight.comm_per_round[1].bytes_up, 3 * payload);
+    assert_eq!(straight.comm_per_round[2].bytes_up, 3 * payload);
+    assert_eq!(straight.comm_per_round[3].bytes_up, 4 * payload);
+
+    let path = tmp_state_path("churn");
+    let mut saver_cfg = cfg.clone();
+    saver_cfg.ckpt.save_every = 3; // one save, at the end of round 3
+    saver_cfg.ckpt.path = Some(path.clone());
+    let saver = Coordinator::new(saver_cfg, rt.clone()).unwrap().run().unwrap();
+    // A full run that also saves must equal the plain run bitwise.
+    assert_eq!(saver.final_params, straight.final_params);
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.ckpt.resume = Some(path.clone());
+    let resumed = Coordinator::new(resume_cfg, rt).unwrap().run().unwrap();
+    assert_bitwise_tail(&straight, &resumed, 1, "churn+resume");
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]
