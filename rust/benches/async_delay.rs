@@ -1,0 +1,187 @@
+//! Straggler-aware asynchronous outer loop — speed heterogeneity ×
+//! delayed application (DESIGN.md §11; DiLoCoX one-step-delayed
+//! overlap, arXiv:2506.21263, generalized to D rounds, with Streaming
+//! DiLoCo's staleness question, arXiv:2501.18512, made measurable).
+//!
+//! Sweeps `bench::scenarios::async_grid`: the synchronous homogeneous
+//! baseline, a 2× straggler under the synchronous barrier, one- and
+//! two-round delayed application, staleness discounting, and seeded
+//! per-round jitter. Emits a PPL-vs-staleness table plus a per-variant
+//! curve CSV (round, staleness, idle, ppl) for the
+//! wall-clock-vs-heterogeneity plots.
+//!
+//! Hard asserts (deterministic billing model, paper-shape invariants):
+//!
+//! * every variant moves the same total bytes — delay shifts *when*
+//!   transfers bill, never *what* ships, and the end-of-run drain loses
+//!   nothing;
+//! * delayed syncs bill overlapped: every non-final compute round of a
+//!   D > 0 run records a zero barrier, no row (drain rows included)
+//!   ever exceeds the synchronous per-round barrier for the same
+//!   payloads, and the run's total barrier time is strictly below the
+//!   D = 0 run's;
+//! * recorded staleness is exactly `min(D, T−1−r)` per upload round `r`
+//!   (steady state D, tapering only in the drained tail).
+
+use diloco::bench::scenarios::{async_grid, base_config, fmt, load_runtime, rel_pct};
+use diloco::bench::{BenchCtx, Table};
+use diloco::coordinator::Coordinator;
+use diloco::metrics::RunMetrics;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new("async_delay");
+    let base = base_config(ctx.scale);
+    let rt = load_runtime(&base.model);
+
+    // Shared pretrained start so variants differ only in scheduling.
+    let coord0 = Coordinator::new(base.clone(), rt.clone())?;
+    let mut pre = RunMetrics::new("pretrain");
+    let pretrained =
+        coord0.plain_train(rt.init_params()?, 0.0, base.pretrain_steps, &mut pre, 0)?;
+
+    let mut table = Table::new(
+        "Async outer loop — speed × delay (overlap billing hard-asserted)",
+        &[
+            "variant",
+            "delay",
+            "mean_staleness",
+            "sim_comm_s",
+            "sim_wall_s",
+            "idle_s",
+            "final_ppl",
+            "ppl_vs_sync",
+        ],
+    );
+    let mut curves = String::from("variant,round,staleness,idle_s,ppl\n");
+    let mut json_rows = String::new();
+    // (label, delay, comm_rows, sim_comm_s, total_bytes, final_ppl)
+    let mut rows: Vec<(String, usize, Vec<f64>, f64, u64, f64)> = Vec::new();
+    for (label, speed, sync) in async_grid() {
+        let mut cfg = base.clone();
+        cfg.eval_every_rounds = 1;
+        cfg.speed = speed;
+        cfg.sync = sync;
+        cfg.validate()?;
+        let coord = Coordinator::new(cfg.clone(), rt.clone())?;
+        let report = coord.run_from(Some(pretrained.clone()))?;
+        let m = &report.metrics;
+
+        // Staleness bookkeeping: one stats row per upload round (no
+        // drops in this sweep), stamped min(D, T−1−r).
+        assert_eq!(
+            report.round_stats.len(),
+            cfg.rounds,
+            "{label}: every round's batch must eventually apply"
+        );
+        let d = sync.delay_rounds;
+        for rs in &report.round_stats {
+            let want = d.min(cfg.rounds - 1 - rs.round);
+            assert_eq!(
+                rs.staleness, want,
+                "{label}: round {} applied with staleness {} (want {want})",
+                rs.round, rs.staleness
+            );
+        }
+        let mean_staleness = report
+            .round_stats
+            .iter()
+            .map(|rs| rs.staleness as f64)
+            .sum::<f64>()
+            / report.round_stats.len().max(1) as f64;
+
+        let barrier_rows: Vec<f64> =
+            report.comm_per_round.iter().map(|r| r.barrier_s).collect();
+        let total_bytes = m.comm_bytes;
+        for (pt, rs) in m
+            .eval_curve
+            .iter()
+            .skip(m.eval_curve.len().saturating_sub(cfg.rounds))
+            .zip(&report.round_stats)
+        {
+            curves.push_str(&format!(
+                "{label},{},{},{:.4},{:.4}\n",
+                rs.round, rs.staleness, rs.idle_s, pt.ppl
+            ));
+        }
+        json_rows.push_str(&format!(
+            "      {{ \"variant\": \"{label}\", \"delay\": {d}, \
+             \"mean_staleness\": {mean_staleness:.3}, \"sim_comm_s\": {:.4}, \
+             \"sim_wall_s\": {:.2}, \"sim_idle_s\": {:.3}, \"final_ppl\": {:.4} }},\n",
+            m.sim_comm_seconds,
+            m.sim_wall_seconds(),
+            m.sim_idle_seconds,
+            m.final_ppl()
+        ));
+        let ppl = m.final_ppl();
+        table.row(vec![
+            label.to_string(),
+            d.to_string(),
+            format!("{mean_staleness:.2}"),
+            format!("{:.2}", m.sim_comm_seconds),
+            format!("{:.1}", m.sim_wall_seconds()),
+            format!("{:.2}", m.sim_idle_seconds),
+            fmt(ppl),
+            rel_pct(ppl, rows.first().map(|r| r.5).unwrap_or(ppl)),
+        ]);
+        rows.push((
+            label.to_string(),
+            d,
+            barrier_rows,
+            m.sim_comm_seconds,
+            total_bytes,
+            ppl,
+        ));
+    }
+    ctx.emit(&table);
+    ctx.emit_csv("curves", &curves);
+    println!(
+        "\nBENCH_engine.json async_delay rows (paste into the current PR entry):\n{json_rows}"
+    );
+
+    // Invariants (hard-fail: regressions in the overlap-billing model
+    // must be caught by running the bench, not by eyeballing).
+    let (sync_rows, sync_comm_s, sync_bytes) = {
+        let r = &rows[0];
+        assert_eq!(r.1, 0, "row 0 is the synchronous baseline");
+        (r.2.clone(), r.3, r.4)
+    };
+    let sync_barrier_max = sync_rows.iter().cloned().fold(0.0f64, f64::max);
+    for (label, d, barriers, comm_s, bytes, _) in &rows {
+        // Same payloads under every schedule: delay shifts billing
+        // rounds, never byte totals (speed never touches the fabric).
+        assert_eq!(
+            *bytes, sync_bytes,
+            "{label}: moved {bytes} bytes, baseline moved {sync_bytes}"
+        );
+        if *d == 0 {
+            continue;
+        }
+        // Delayed syncs bill overlapped: compute rounds before the last
+        // defer their whole transfer behind the next inner phase...
+        let t = base.rounds;
+        assert!(
+            barriers[..t - 1].iter().all(|&b| b == 0.0),
+            "{label}: a non-final compute round billed a barrier"
+        );
+        // ...the drain tail exists (one row per in-flight batch)...
+        assert_eq!(
+            barriers.len(),
+            t + d,
+            "{label}: want {t} compute rows + {d} drain rows"
+        );
+        // ...no row ever exceeds a synchronous round's barrier for the
+        // same payloads, and the total is strictly smaller.
+        for (i, &b) in barriers.iter().enumerate() {
+            assert!(
+                b <= sync_barrier_max + 1e-9,
+                "{label}: row {i} barrier {b} exceeds the synchronous {sync_barrier_max}"
+            );
+        }
+        assert!(
+            *comm_s < sync_comm_s,
+            "{label}: delayed total barrier {comm_s} not below synchronous {sync_comm_s}"
+        );
+    }
+    ctx.finish();
+    Ok(())
+}

@@ -32,7 +32,9 @@ fn main() -> anyhow::Result<()> {
     for (pre, label) in variants {
         let mut cfg = base.clone();
         cfg.pretrain_steps = pre;
-        let after = total - pre;
+        // Saturating: a smoke-mode budget can be smaller than the sweep's
+        // larger pretrain points; such variants just run their minimum.
+        let after = total.saturating_sub(pre);
         cfg.rounds = (after / cfg.inner_steps).max(1);
         let coord = Coordinator::new(cfg.clone(), rt.clone())?;
         let report = coord.run()?;

@@ -36,6 +36,22 @@ impl Scale {
     }
 }
 
+/// CI smoke mode (`BENCH_SMOKE=1`): benches keep their full variant
+/// grids and every deterministic hard assert (byte formulas, barrier
+/// structure, roster billing — all invariant in T, H, and k), but
+/// [`scenarios::base_config`] shrinks the per-variant step budget so the
+/// whole suite finishes in CI minutes. Wall-clock and PPL columns from a
+/// smoke run are NOT paper-comparable — use the default scaled mode to
+/// fill `BENCH_engine.json`.
+pub fn smoke() -> bool {
+    smoke_from_env_var(std::env::var("BENCH_SMOKE").ok().as_deref())
+}
+
+/// Pure selector behind [`smoke`] (injectable for tests).
+pub fn smoke_from_env_var(v: Option<&str>) -> bool {
+    matches!(v, Some("1") | Some("true"))
+}
+
 /// One table of results, printed to stdout and persisted as CSV.
 pub struct Table {
     pub title: String,

@@ -15,7 +15,7 @@ use super::Scale;
 use crate::comm::codec::Codec;
 use crate::config::{
     ChurnConfig, ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig,
-    StreamConfig, SyncSchedule, TopologyConfig,
+    SpeedConfig, StreamConfig, SyncConfig, SyncSchedule, TopologyConfig,
 };
 use crate::runtime::Runtime;
 use std::sync::Arc;
@@ -86,7 +86,27 @@ pub fn base_config(scale: Scale) -> ExperimentConfig {
             cfg.eval_batches = 8;
         }
     }
+    // CI smoke mode: keep the variant grids and every deterministic
+    // billing assert (they are invariant in T, H, and k — see the grid
+    // tests below), shrink only the per-variant step budget. Numbers
+    // from a smoke run are not paper-comparable.
+    if crate::bench::smoke() {
+        apply_smoke_budget(&mut cfg);
+    }
     cfg
+}
+
+/// The `BENCH_SMOKE=1` workload shrink applied by [`base_config`]:
+/// worker count, rounds, and H-dependent grids stay untouched (the
+/// hard-asserted billing formulas depend on them), only the per-variant
+/// step budget and data size drop. Public so the scenario tests
+/// validate the exact shrunken configs the CI bench-smoke job runs.
+pub fn apply_smoke_budget(cfg: &mut ExperimentConfig) {
+    cfg.pretrain_steps = 8;
+    cfg.inner_steps = 5;
+    cfg.eval_batches = 1;
+    cfg.data.n_docs = 160;
+    cfg.data.doc_len = 100;
 }
 
 /// Streaming-sync scenario family: the schedule × codec grid the
@@ -145,6 +165,27 @@ pub fn churn_grid() -> Vec<(&'static str, Option<ChurnConfig>)> {
         ("leave_rejoin", parse("leave:w5@r2,join:w5@r5")),
         ("ramp_up", parse("ramp:4..8")),
         ("late_joiners", parse("join:w8@r4,join:w9@r4")),
+    ]
+}
+
+/// Async-scheduling scenario family: the speed × delay grid the
+/// `async_delay` bench sweeps against the base (k=8, T=8) setting —
+/// the straggler/staleness axis of DESIGN.md §11. Row 0 is the
+/// synchronous homogeneous baseline (the bitwise-pinned legacy loop);
+/// the rest exercise a 2× straggler under the synchronous barrier
+/// (idle time appears), one- and two-round delayed application
+/// (DiLoCoX-style overlap — the bench hard-asserts the barrier
+/// reduction), staleness discounting, and seeded per-round jitter.
+pub fn async_grid() -> Vec<(&'static str, SpeedConfig, SyncConfig)> {
+    let sp = |s: &str| SpeedConfig::parse(s).expect("speed grid DSL");
+    let sync = |d: usize, g: f64| SyncConfig { delay_rounds: d, discount: g };
+    vec![
+        ("sync_uniform", SpeedConfig::default(), sync(0, 1.0)),
+        ("sync_straggler2x", sp("w0=2.0"), sync(0, 1.0)),
+        ("delay1_uniform", SpeedConfig::default(), sync(1, 1.0)),
+        ("delay1_straggler2x", sp("w0=2.0"), sync(1, 1.0)),
+        ("delay2_discount", SpeedConfig::default(), sync(2, 0.5)),
+        ("delay1_jitter", sp("jitter:0.3"), sync(1, 1.0)),
     ]
 }
 
@@ -255,6 +296,59 @@ mod tests {
                 );
                 c.validate(cfg.rounds, cfg.workers).unwrap();
             }
+        }
+    }
+
+    #[test]
+    fn async_grid_validates_and_covers_both_axes() {
+        let grid = async_grid();
+        assert_eq!(
+            (grid[0].1.clone(), grid[0].2),
+            (SpeedConfig::default(), SyncConfig::default()),
+            "row 0 is the bitwise-pinned synchronous homogeneous baseline"
+        );
+        assert!(grid.iter().any(|(_, s, _)| !s.is_uniform()), "a straggler row");
+        assert!(grid.iter().any(|(_, s, _)| s.jitter > 0.0), "a jitter row");
+        assert!(
+            grid.iter().any(|(_, _, y)| y.delay_rounds > 1),
+            "a deeper-than-one delay row"
+        );
+        assert!(
+            grid.iter().any(|(_, _, y)| y.discount < 1.0),
+            "a discounted row"
+        );
+        let base = base_config(Scale::Scaled);
+        for (label, speed, sync) in &grid {
+            let mut cfg = base.clone();
+            cfg.artifacts_dir = "a".into();
+            cfg.speed = speed.clone();
+            cfg.sync = *sync;
+            cfg.validate().unwrap_or_else(|e| panic!("{label}: {e}"));
+        }
+    }
+
+    #[test]
+    fn smoke_mode_is_env_gated_and_configs_stay_valid() {
+        assert!(!crate::bench::smoke_from_env_var(None));
+        assert!(crate::bench::smoke_from_env_var(Some("1")));
+        assert!(crate::bench::smoke_from_env_var(Some("true")));
+        assert!(!crate::bench::smoke_from_env_var(Some("0")));
+        // Whatever smoke does to the budget, the base config must stay
+        // valid for every scenario family (the CI bench-smoke job runs
+        // them all). Apply the real shrink directly — the env var
+        // itself is process-global and tests must not mutate it.
+        let mut cfg = base_config(Scale::Scaled);
+        cfg.artifacts_dir = "a".into();
+        apply_smoke_budget(&mut cfg);
+        for (label, churn) in churn_grid() {
+            let mut c = cfg.clone();
+            c.churn = churn;
+            c.validate().unwrap_or_else(|e| panic!("smoke churn {label}: {e}"));
+        }
+        for (label, _, sync) in async_grid() {
+            let mut c = cfg.clone();
+            c.sync = sync;
+            c.validate().unwrap_or_else(|e| panic!("smoke async {label}: {e}"));
         }
     }
 

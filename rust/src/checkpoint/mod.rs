@@ -11,8 +11,9 @@
 //! * **`DILOST01`** — the full [`TrainState`] record (`save_state` /
 //!   `load_state`): round index, global/consensus model, per-replica
 //!   models, outer-optimizer state per fragment, per-worker inner AdamW
-//!   state + RNG stream cursors, per-fragment sync state, and
-//!   carried-over accounting. The resume contract is *bitwise*: training
+//!   state + RNG stream cursors, per-fragment sync state, carried-over
+//!   accounting, and (format version 2) the async layer's in-flight
+//!   delayed contribution queue. The resume contract is *bitwise*: training
 //!   2R rounds straight equals training R rounds, saving, and resuming
 //!   for R more (DESIGN.md §10; enforced by the `resume_*` integration
 //!   tests and the CI resume-equivalence job).
@@ -24,12 +25,16 @@
 //! allocations.
 
 use crate::coordinator::opt::OuterOptSnapshot;
+use crate::coordinator::stats::RoundStats;
 use crate::runtime::{Manifest, Tensors};
 use std::io::{Read, Write};
 
 const MAGIC: &[u8; 8] = b"DILOCO01";
 const STATE_MAGIC: &[u8; 8] = b"DILOST01";
-const STATE_VERSION: u32 = 1;
+/// Version 2 appends the async scheduling layer's in-flight delayed
+/// contribution queue; version-1 states (written before the queue
+/// existed) load with an empty queue.
+const STATE_VERSION: u32 = 2;
 /// Sanity caps for untrusted length fields that the manifest cannot
 /// bound (fragment counts, Adam step vectors, kind strings).
 const MAX_FRAGMENTS: usize = 1 << 20;
@@ -277,6 +282,43 @@ pub struct WorkerState {
     pub rng: [u64; 4],
 }
 
+/// One due fragment of an in-flight delayed contribution batch
+/// ([`PendingSync`]): the already-averaged payload plus the worker sets
+/// that adopt and get billed when the batch lands.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PendingFragment {
+    /// Fragment id inside the run's [`crate::comm::fragment::FragmentPlan`].
+    pub fragment: usize,
+    /// Weighted-average payload, flattened in the fragment's slice order.
+    pub avg: Vec<f32>,
+    /// Worker ids whose upload of this fragment landed — they adopt the
+    /// freshly stepped global at apply time (upload-round roster order).
+    pub landed: Vec<usize>,
+    /// Worker ids billed the full-precision download at apply time: the
+    /// landed workers under star, the landed group *leaders* under the
+    /// hierarchical topology.
+    pub down_to: Vec<usize>,
+}
+
+/// One outer contribution batch awaiting delayed application
+/// (`sync.delay_rounds > 0`; DESIGN.md §11): computed and billed in its
+/// upload round, folded into the global model `D` rounds later. The
+/// queue is part of [`TrainState`] so a checkpoint taken with batches in
+/// flight resumes bitwise.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PendingSync {
+    /// The round whose inner phase produced this batch.
+    pub round: usize,
+    /// Per due fragment: averaged payload + adopt/billing sets. Empty
+    /// when every upload of the round dropped (the batch applies as a
+    /// no-op).
+    pub frags: Vec<PendingFragment>,
+    /// Upload-round statistics (cosines, norms, codec error, roster,
+    /// idle); `staleness` is stamped at apply time. `None` exactly when
+    /// `frags` is empty.
+    pub stats: Option<RoundStats>,
+}
+
 /// The full mid-run record of a DiLoCo training job at a round boundary
 /// (see the module docs for the on-disk format and DESIGN.md §10 for the
 /// layout rationale and determinism contract).
@@ -324,6 +366,9 @@ pub struct TrainState {
     /// Cumulative squared codec error (kept so the resumed run's
     /// end-of-run `codec_err_l2` covers the whole training history).
     pub codec_err_sq_total: f64,
+    /// In-flight delayed contribution batches, oldest first (empty on
+    /// the synchronous path and in version-1 checkpoints).
+    pub pending_sync: Vec<PendingSync>,
 }
 
 fn w_outer(buf: &mut Vec<u8>, snap: &OuterOptSnapshot) {
@@ -358,6 +403,124 @@ fn r_outer(r: &mut Reader<'_>, manifest: &Manifest) -> anyhow::Result<OuterOptSn
         tensors.push(r.tensors(manifest, &format!("outer[{kind}].state{i}"))?);
     }
     Ok(OuterOptSnapshot { kind, t, tensors })
+}
+
+fn w_stats(buf: &mut Vec<u8>, rs: &RoundStats) {
+    w_u64(buf, rs.round as u64);
+    w_f64(buf, rs.cos_mean);
+    w_f64(buf, rs.cos_std);
+    w_f64(buf, rs.avg_delta_norm);
+    w_f64(buf, rs.per_worker_norm_mean);
+    w_u64(buf, rs.fragments_synced as u64);
+    w_f64(buf, rs.codec_err_l2);
+    w_f64(buf, rs.consensus_dist);
+    w_u64(buf, rs.active_workers as u64);
+    w_u64(buf, rs.staleness as u64);
+    w_f64(buf, rs.idle_s);
+}
+
+fn r_stats(r: &mut Reader<'_>) -> anyhow::Result<RoundStats> {
+    Ok(RoundStats {
+        round: r.u64()? as usize,
+        cos_mean: r.f64()?,
+        cos_std: r.f64()?,
+        avg_delta_norm: r.f64()?,
+        per_worker_norm_mean: r.f64()?,
+        fragments_synced: r.u64()? as usize,
+        codec_err_l2: r.f64()?,
+        consensus_dist: r.f64()?,
+        active_workers: r.u64()? as usize,
+        staleness: r.u64()? as usize,
+        idle_s: r.f64()?,
+    })
+}
+
+fn w_pending(buf: &mut Vec<u8>, p: &PendingSync) {
+    w_u64(buf, p.round as u64);
+    w_u32(buf, p.frags.len() as u32);
+    for f in &p.frags {
+        w_u64(buf, f.fragment as u64);
+        w_u64(buf, f.avg.len() as u64);
+        for &x in &f.avg {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w_u64(buf, f.landed.len() as u64);
+        for &w in &f.landed {
+            w_u64(buf, w as u64);
+        }
+        w_u64(buf, f.down_to.len() as u64);
+        for &w in &f.down_to {
+            w_u64(buf, w as u64);
+        }
+    }
+    buf.push(p.stats.is_some() as u8);
+    if let Some(rs) = &p.stats {
+        w_stats(buf, rs);
+    }
+}
+
+/// One in-flight batch, every length bounds-checked: fragment ids
+/// against the state's fragment count, worker-id lists against the
+/// pool, payload lengths against the manifest's total element count.
+/// The writer emits fragments in due order and worker ids in roster
+/// order — both strictly increasing — so the reader rejects any other
+/// ordering: a valid-checksum corruption repeating a fragment (which
+/// would silently double-step the outer optimizer on resume) or a
+/// worker id errors instead of loading.
+fn r_pending(
+    r: &mut Reader<'_>,
+    manifest: &Manifest,
+    pool: usize,
+    n_frag: usize,
+) -> anyhow::Result<PendingSync> {
+    let round = r.u64()? as usize;
+    let n_frags = r.u32()? as usize;
+    anyhow::ensure!(
+        n_frags <= n_frag,
+        "pending batch stores {n_frags} fragments, the state has {n_frag}"
+    );
+    let total_elems: usize = manifest.params.iter().map(|s| s.elements()).sum();
+    let mut frags: Vec<PendingFragment> = Vec::with_capacity(n_frags);
+    for _ in 0..n_frags {
+        let fragment = r.u64()? as usize;
+        anyhow::ensure!(
+            fragment < n_frag,
+            "pending batch names fragment {fragment} of {n_frag}"
+        );
+        anyhow::ensure!(
+            frags.last().is_none_or(|p| p.fragment < fragment),
+            "pending batch fragments out of order (fragment {fragment})"
+        );
+        let avg_len = r.len_capped(total_elems, "pending payload")?;
+        let raw = r.take(avg_len * 4)?;
+        let avg = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let mut ids = |what: &str| -> anyhow::Result<Vec<usize>> {
+            let n = r.len_capped(pool, what)?;
+            let mut v: Vec<usize> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let id = r.u64()? as usize;
+                anyhow::ensure!(id < pool, "pending {what} id {id} outside pool {pool}");
+                anyhow::ensure!(
+                    v.last().is_none_or(|&p| p < id),
+                    "pending {what} ids out of roster order (id {id})"
+                );
+                v.push(id);
+            }
+            Ok(v)
+        };
+        let landed = ids("landed worker")?;
+        let down_to = ids("download worker")?;
+        frags.push(PendingFragment { fragment, avg, landed, down_to });
+    }
+    let stats = match r.u8()? {
+        0 => None,
+        1 => Some(r_stats(r)?),
+        other => anyhow::bail!("bad pending stats flag byte {other}"),
+    };
+    Ok(PendingSync { round, frags, stats })
 }
 
 /// Save a full [`TrainState`] (format `DILOST01`, FNV-checksummed).
@@ -413,6 +576,10 @@ pub fn save_state(path: &str, manifest: &Manifest, st: &TrainState) -> anyhow::R
     for &d in &st.drops_per_worker {
         w_u64(&mut buf, d as u64);
     }
+    w_u64(&mut buf, st.pending_sync.len() as u64);
+    for p in &st.pending_sync {
+        w_pending(&mut buf, p);
+    }
     write_checked(path, buf)
 }
 
@@ -425,8 +592,8 @@ pub fn load_state(path: &str, manifest: &Manifest) -> anyhow::Result<TrainState>
 
     let version = r.u32()?;
     anyhow::ensure!(
-        version == STATE_VERSION,
-        "unsupported TrainState version {version} (this build reads {STATE_VERSION})"
+        (1..=STATE_VERSION).contains(&version),
+        "unsupported TrainState version {version} (this build reads 1..={STATE_VERSION})"
     );
     let decentralized = match r.u8()? {
         0 => false,
@@ -506,6 +673,17 @@ pub fn load_state(path: &str, manifest: &Manifest) -> anyhow::Result<TrainState>
     for _ in 0..pool {
         drops_per_worker.push(r.u64()? as usize);
     }
+    // Version 2: the async layer's in-flight delayed contribution queue
+    // (a version-1 state predates the queue and resumes with it empty).
+    let mut pending_sync = Vec::new();
+    if version >= 2 {
+        // Every batch costs at least round(8) + frag count(4) + stats
+        // flag(1) bytes, bounding the count tightly by the body.
+        let n_pending = r.len_capped(r.remaining() / 13, "pending sync")?;
+        for _ in 0..n_pending {
+            pending_sync.push(r_pending(&mut r, manifest, pool, n_frag)?);
+        }
+    }
     r.finish()?;
     Ok(TrainState {
         round,
@@ -520,6 +698,7 @@ pub fn load_state(path: &str, manifest: &Manifest) -> anyhow::Result<TrainState>
         drops_per_worker,
         carry_comm_s,
         codec_err_sq_total,
+        pending_sync,
     })
 }
 
@@ -721,6 +900,40 @@ mod tests {
             drops_per_worker: vec![1, 0],
             carry_comm_s: 0.5,
             codec_err_sq_total: 0.25,
+            pending_sync: Vec::new(),
+        }
+    }
+
+    fn tiny_pending() -> PendingSync {
+        PendingSync {
+            round: 2,
+            frags: vec![
+                PendingFragment {
+                    fragment: 0,
+                    avg: vec![0.5, -1.5, 2.0],
+                    landed: vec![0, 1],
+                    down_to: vec![0],
+                },
+                PendingFragment {
+                    fragment: 1,
+                    avg: vec![3.25],
+                    landed: vec![1],
+                    down_to: vec![1],
+                },
+            ],
+            stats: Some(RoundStats {
+                round: 2,
+                cos_mean: 0.5,
+                cos_std: 0.1,
+                avg_delta_norm: 1.25,
+                per_worker_norm_mean: 2.5,
+                fragments_synced: 2,
+                codec_err_l2: 0.0,
+                consensus_dist: 0.0,
+                active_workers: 2,
+                staleness: 0,
+                idle_s: 0.75,
+            }),
         }
     }
 
@@ -735,6 +948,126 @@ mod tests {
             assert_eq!(loaded, st);
             std::fs::remove_file(&path).ok();
         }
+    }
+
+    #[test]
+    fn train_state_roundtrips_pending_sync_queue() {
+        // A checkpoint taken with delayed contributions in flight must
+        // restore the queue exactly — payloads, adopt/billing sets, and
+        // the upload-round statistics (DESIGN.md §11 resume contract).
+        let man = tiny_manifest();
+        let mut st = tiny_state(false);
+        st.pending_sync = vec![
+            tiny_pending(),
+            PendingSync { round: 3, frags: Vec::new(), stats: None },
+        ];
+        let path = tmp("state_pending");
+        save_state(&path, &man, &st).unwrap();
+        let loaded = load_state(&path, &man).unwrap();
+        assert_eq!(loaded, st);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pending_sync_rejects_corrupt_lengths() {
+        // Crafted valid-checksum corruptions of the queue section must
+        // error, never allocate absurdly or index out of bounds. The
+        // section sits at the very end of the body, so offsets are
+        // computed from the tail.
+        let man = tiny_manifest();
+        let mut st = tiny_state(false);
+        st.pending_sync = vec![tiny_pending()];
+        let base = tmp("state_pending_neg");
+        save_state(&base, &man, &st).unwrap();
+        // The queue's count field starts where an empty-queue save ends
+        // (minus its own 8 bytes): everything before it is identical.
+        let mut empty = st.clone();
+        empty.pending_sync.clear();
+        let empty_path = tmp("state_pending_empty");
+        save_state(&empty_path, &man, &empty).unwrap();
+        let empty_body_len = std::fs::read(&empty_path).unwrap().len() - 8;
+        std::fs::remove_file(&empty_path).ok();
+        let count_off = empty_body_len - 8;
+
+        // An absurd batch count must be rejected before allocation.
+        rewrite_body(&base, |body| {
+            body[count_off..count_off + 8]
+                .copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+        });
+        let err = load_state(&base, &man).unwrap_err();
+        assert!(format!("{err:#}").contains("pending"), "{err:#}");
+
+        // An oversized payload length must be rejected against the
+        // manifest's element total (frag 0's avg_len sits after
+        // count + round + n_frags + fragment id).
+        save_state(&base, &man, &st).unwrap();
+        let avg_len_off = count_off + 8 + 8 + 4 + 8;
+        rewrite_body(&base, |body| {
+            body[avg_len_off..avg_len_off + 8]
+                .copy_from_slice(&(u64::MAX / 8).to_le_bytes());
+        });
+        let err = load_state(&base, &man).unwrap_err();
+        assert!(format!("{err:#}").contains("payload"), "{err:#}");
+
+        // A landed id outside the pool is rejected.
+        save_state(&base, &man, &st).unwrap();
+        let landed_id_off = avg_len_off + 8 + 4 * 3 + 8; // avg data + landed count
+        rewrite_body(&base, |body| {
+            body[landed_id_off..landed_id_off + 8]
+                .copy_from_slice(&99u64.to_le_bytes());
+        });
+        let err = load_state(&base, &man).unwrap_err();
+        assert!(format!("{err:#}").contains("pool"), "{err:#}");
+
+        // A duplicated (out-of-order) fragment id is rejected — it
+        // would silently double-step the outer optimizer on resume.
+        // Frag 1's id sits after frag 0's full record: avg_len(8) +
+        // avg(3×4) + landed count(8) + 2 ids(16) + down count(8) + 1
+        // id(8).
+        save_state(&base, &man, &st).unwrap();
+        let frag1_id_off = avg_len_off + 8 + 4 * 3 + 8 + 16 + 8 + 8;
+        rewrite_body(&base, |body| {
+            body[frag1_id_off..frag1_id_off + 8].copy_from_slice(&0u64.to_le_bytes());
+        });
+        let err = load_state(&base, &man).unwrap_err();
+        assert!(format!("{err:#}").contains("out of order"), "{err:#}");
+
+        // A duplicated landed worker id is rejected the same way.
+        save_state(&base, &man, &st).unwrap();
+        let landed_id1_off = landed_id_off + 8;
+        rewrite_body(&base, |body| {
+            body[landed_id1_off..landed_id1_off + 8]
+                .copy_from_slice(&0u64.to_le_bytes());
+        });
+        let err = load_state(&base, &man).unwrap_err();
+        assert!(format!("{err:#}").contains("roster order"), "{err:#}");
+        std::fs::remove_file(&base).ok();
+    }
+
+    #[test]
+    fn version_one_states_load_with_empty_queue() {
+        // A pre-async (version 1) TrainState has no queue section; it
+        // must load as a state with no batches in flight. Crafted by
+        // rewriting a v2 save: version field back to 1, the trailing
+        // empty-queue count stripped.
+        let man = tiny_manifest();
+        let st = tiny_state(false);
+        let path = tmp("state_v1");
+        save_state(&path, &man, &st).unwrap();
+        rewrite_body(&path, |body| {
+            body[8..12].copy_from_slice(&1u32.to_le_bytes());
+            let n = body.len();
+            body.truncate(n - 8);
+        });
+        let loaded = load_state(&path, &man).unwrap();
+        assert_eq!(loaded, st);
+        // An unknown future version is still rejected.
+        save_state(&path, &man, &st).unwrap();
+        rewrite_body(&path, |body| {
+            body[8..12].copy_from_slice(&99u32.to_le_bytes());
+        });
+        assert!(load_state(&path, &man).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -10,13 +10,14 @@
 //! workers take the max, as islands run in parallel.
 //!
 //! **Determinism contract:** a drop decision is a *pure function* of
-//! `(fabric seed, round, worker_id, fragment, hop)` — never of how many
-//! messages were sent before it. Uploads may therefore land in any order
-//! (sequential loop, parallel islands, future async variants) and the
-//! communication outcome is identical. This replaced a shared
-//! sequentially-consumed RNG and intentionally changed seeded drop
-//! patterns once. Hop 0 of fragment 0 keys exactly as the pre-streaming
-//! fabric did, so default star runs reproduce historical traces bitwise.
+//! `(fabric seed, round, worker_id, fragment, hop, delay generation)` —
+//! never of how many messages were sent before it. Uploads may therefore
+//! land in any order (sequential loop, parallel islands, the delayed
+//! async loop) and the communication outcome is identical. This replaced
+//! a shared sequentially-consumed RNG and intentionally changed seeded
+//! drop patterns once. Generation 0 of hop 0 of fragment 0 keys exactly
+//! as the pre-streaming fabric did, so default star runs reproduce
+//! historical traces bitwise.
 //!
 //! The streaming and topology extensions live alongside: [`fragment`]
 //! partitions the parameter space for partial synchronization, [`codec`]
@@ -202,6 +203,38 @@ impl SimNet {
             .coin(self.drop_prob)
     }
 
+    /// Delay-generation-keyed drop decision — pure in
+    /// `(fabric seed, round, worker, fragment, hop, gen)`, where `gen`
+    /// is the delay generation of the message (the async scheduling
+    /// layer's `sync.delay_rounds`). Generation 0 is the synchronous
+    /// fabric and uses the legacy [`Self::drops_hop`] key exactly, so
+    /// `delay_rounds = 0` runs reproduce every historical drop pattern
+    /// bitwise; higher generations derive one further child stream (a
+    /// delayed upload is a different message on the wire, not a replay
+    /// of the synchronous one).
+    pub fn drops_gen(
+        &self,
+        round: usize,
+        worker: usize,
+        fragment: usize,
+        hop: usize,
+        gen: usize,
+    ) -> bool {
+        if gen == 0 {
+            return self.drops_hop(round, worker, fragment, hop);
+        }
+        if self.drop_prob <= 0.0 {
+            return false;
+        }
+        self.drop_rng
+            .child(round as u64)
+            .child(worker as u64)
+            .child(fragment as u64)
+            .child(hop as u64)
+            .child(gen as u64)
+            .coin(self.drop_prob)
+    }
+
     /// Attempt an upload of `bytes` from `worker` in `round`; returns
     /// `false` if the message is dropped (worker reboot / packet loss —
     /// Fig 8 semantics: the coordinator simply does not receive this
@@ -246,9 +279,28 @@ impl SimNet {
         fragment: usize,
         hop: usize,
     ) -> bool {
+        self.try_send_gen(bytes, dir, round, worker, fragment, hop, 0)
+    }
+
+    /// As [`Self::try_send_hop`], for one message of a delayed sync
+    /// generation ([`Self::drops_gen`]): generation 0 is exactly the
+    /// synchronous hop fabric, higher generations key their own drop
+    /// stream. Billing is identical — the payload rides `worker`'s lane
+    /// in `dir` like any other message on that link.
+    #[allow(clippy::too_many_arguments)]
+    pub fn try_send_gen(
+        &mut self,
+        bytes: u64,
+        dir: Direction,
+        round: usize,
+        worker: usize,
+        fragment: usize,
+        hop: usize,
+        gen: usize,
+    ) -> bool {
         self.stats.messages += 1;
         self.cur_round.messages += 1;
-        if self.drops_hop(round, worker, fragment, hop) {
+        if self.drops_gen(round, worker, fragment, hop, gen) {
             self.stats.dropped += 1;
             self.cur_round.dropped += 1;
             return false;
@@ -615,6 +667,39 @@ mod tests {
             for w in 0..4 {
                 let sent = m.try_send_hop(10, Direction::Up, r, w, 0, 1);
                 assert_eq!(sent, !n.drops_hop(r, w, 0, 1));
+            }
+        }
+    }
+
+    #[test]
+    fn gen_zero_keys_like_hop_sends() {
+        // Generation 0 is the synchronous fabric: its drop decisions must
+        // reproduce the hop-keyed (and transitively fragment- and
+        // legacy-keyed) pattern bitwise, so `delay_rounds = 0` stays on
+        // the golden trace. Higher generations are distinct streams.
+        let n = net(0.5);
+        for r in 0..16 {
+            for w in 0..6 {
+                for f in 0..2 {
+                    for h in 0..2 {
+                        assert_eq!(n.drops_gen(r, w, f, h, 0), n.drops_hop(r, w, f, h));
+                    }
+                }
+            }
+        }
+        let differs = (0..16).any(|r| {
+            (0..6).any(|w| {
+                n.drops_gen(r, w, 0, 0, 1) != n.drops_gen(r, w, 0, 0, 0)
+                    || n.drops_gen(r, w, 0, 0, 2) != n.drops_gen(r, w, 0, 0, 1)
+            })
+        });
+        assert!(differs, "delay generation is not part of the drop key");
+        // The pure predicate agrees with what try_send_gen bills.
+        let mut m = net(0.5);
+        for r in 0..8 {
+            for w in 0..4 {
+                let sent = m.try_send_gen(10, Direction::Up, r, w, 0, 0, 2);
+                assert_eq!(sent, !n.drops_gen(r, w, 0, 0, 2));
             }
         }
     }

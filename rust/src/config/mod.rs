@@ -356,6 +356,223 @@ impl StreamConfig {
     }
 }
 
+/// Child-stream tag of the seeded speed-jitter draws (distinct from the
+/// fabric's `child(7)`, the workers' `child(100 + i)`, and the data
+/// pipeline's streams).
+const SPEED_JITTER_STREAM: u64 = 424_242;
+
+/// One worker's base compute-speed profile across the run. Factors are
+/// *time multipliers* on the worker's simulated per-round compute: 1.0
+/// is nominal, 2.0 runs half as fast (twice the time), 0.5 twice as
+/// fast.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SpeedProfile {
+    /// The same factor every round.
+    Constant(f64),
+    /// Linear ramp from the first factor to the second across the run
+    /// (a machine degrading — or recovering — over time).
+    Ramp(f64, f64),
+}
+
+/// Per-worker compute-speed model (`[speed]` in TOML, `--speed` on the
+/// CLI) — the heterogeneity axis of the async scheduling layer
+/// (DESIGN.md §11). Real federated clusters are speed-heterogeneous;
+/// under the synchronous loop every round costs the straggler's time
+/// while fast islands idle at the barrier. The speed model makes that
+/// measurable (per-round critical path + idle seconds) and, combined
+/// with `sync.delay_rounds`, recoverable.
+///
+/// DSL: comma-separated items, each one of
+///
+/// * `wW=F`     — worker `W` runs at constant factor `F`,
+/// * `wW=A..B`  — worker `W`'s factor ramps linearly from `A` to `B`,
+/// * `jitter:S` — every `(worker, round)` multiplies its base factor by
+///   a seeded draw from `U[1-S, 1+S]` (at most one `jitter:` item).
+///
+/// Unlisted workers run at the nominal factor 1.0; per worker the last
+/// listed profile wins. The empty model (no items) is *uniform* and
+/// keeps runs bitwise on the legacy trace.
+///
+/// ```
+/// use diloco::config::SpeedConfig;
+///
+/// let s = SpeedConfig::parse("w3=2.0,w1=1.0..3.0,jitter:0.2").unwrap();
+/// assert!(!s.is_uniform());
+/// assert_eq!(SpeedConfig::default(), SpeedConfig::parse("").unwrap());
+/// assert!(SpeedConfig::parse("w3=0").is_err());
+/// // Jitter draws are a pure function of (seed, worker, round).
+/// let a = s.factor(3, 5, 10, 42);
+/// assert_eq!(a, s.factor(3, 5, 10, 42));
+/// assert!(a > 0.0);
+/// ```
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct SpeedConfig {
+    /// `(worker id, profile)` pairs; per worker the last entry wins.
+    pub profiles: Vec<(usize, SpeedProfile)>,
+    /// Seeded multiplicative jitter amplitude in `[0, 1)`; 0.0 = none.
+    pub jitter: f64,
+}
+
+impl SpeedConfig {
+    /// Parse the `--speed` DSL (see the type-level docs for the
+    /// grammar). The empty string parses to the uniform model.
+    pub fn parse(s: &str) -> anyhow::Result<SpeedConfig> {
+        let mut cfg = SpeedConfig::default();
+        let mut saw_jitter = false;
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(amp) = part.strip_prefix("jitter:") {
+                anyhow::ensure!(!saw_jitter, "speed allows one jitter: item");
+                saw_jitter = true;
+                cfg.jitter = amp
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad speed jitter {amp:?}: {e}"))?;
+                continue;
+            }
+            let (w, spec) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("bad --speed item {part:?} (want wW=F|wW=A..B|jitter:S)")
+            })?;
+            let worker: usize = w
+                .trim()
+                .strip_prefix('w')
+                .ok_or_else(|| anyhow::anyhow!("bad speed worker {w:?} (want wN)"))?
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad speed worker {w:?}: {e}"))?;
+            let profile = match spec.split_once("..") {
+                Some((a, b)) => SpeedProfile::Ramp(
+                    a.trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad speed ramp start {a:?}: {e}"))?,
+                    b.trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad speed ramp end {b:?}: {e}"))?,
+                ),
+                None => SpeedProfile::Constant(
+                    spec.trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad speed factor {spec:?}: {e}"))?,
+                ),
+            };
+            cfg.profiles.push((worker, profile));
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The uniform model: every worker at factor 1.0 every round — the
+    /// legacy timing path, guaranteed bitwise.
+    pub fn is_uniform(&self) -> bool {
+        self.profiles.is_empty() && self.jitter == 0.0
+    }
+
+    /// Largest worker id any profile names, plus one (0 when none).
+    pub fn max_profiled_worker(&self) -> usize {
+        self.profiles.iter().map(|&(w, _)| w + 1).max().unwrap_or(0)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for &(w, p) in &self.profiles {
+            let ok = match p {
+                SpeedProfile::Constant(f) => f > 0.0 && f.is_finite(),
+                SpeedProfile::Ramp(a, b) => {
+                    a > 0.0 && b > 0.0 && a.is_finite() && b.is_finite()
+                }
+            };
+            anyhow::ensure!(
+                ok,
+                "speed factors must be positive and finite (worker {w}: {p:?})"
+            );
+        }
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.jitter),
+            "speed jitter must be in [0, 1) (got {})",
+            self.jitter
+        );
+        Ok(())
+    }
+
+    /// Compute-time factor of `worker` in round `round` of a
+    /// `total`-round run — a pure function of `(self, seed, worker,
+    /// round)`, so the same profile replays identically under any
+    /// engine, execution order, or resume point.
+    pub fn factor(&self, worker: usize, round: usize, total: usize, seed: u64) -> f64 {
+        let mut f = 1.0;
+        for &(w, p) in &self.profiles {
+            if w == worker {
+                f = match p {
+                    SpeedProfile::Constant(c) => c,
+                    SpeedProfile::Ramp(a, b) => {
+                        if total <= 1 {
+                            b
+                        } else {
+                            a + (round as f64 / (total - 1) as f64) * (b - a)
+                        }
+                    }
+                };
+            }
+        }
+        if self.jitter > 0.0 {
+            let u = Rng::new(seed)
+                .child(SPEED_JITTER_STREAM)
+                .child(worker as u64)
+                .child(round as u64)
+                .f64();
+            f *= 1.0 - self.jitter + 2.0 * self.jitter * u;
+        }
+        f
+    }
+}
+
+/// Asynchronous outer-loop schedule (`[sync]` in TOML; `--delay` /
+/// `--discount` on the CLI) — DiLoCoX-style delayed application of
+/// outer contributions (arXiv:2506.21263), generalized from one round
+/// to `D` (DESIGN.md §11).
+///
+/// With `delay_rounds = D > 0`, the contribution a worker uploads after
+/// round `t`'s inner phase is folded into the global model at the end
+/// of round `t + D`: workers train round `t + 1` against the global
+/// model of round `t − D`, and the upload's transfer time hides behind
+/// the next `D` inner phases instead of blocking at a barrier. `D = 0`
+/// is the synchronous legacy loop, bitwise.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SyncConfig {
+    /// Rounds between a contribution's compute and its application
+    /// (0 = synchronous).
+    pub delay_rounds: usize,
+    /// Per-round staleness discount γ ∈ (0, 1]: a contribution applied
+    /// `s` rounds late is scaled by `γ^s` before the outer step. 1.0
+    /// (the default) applies stale contributions at full weight; the
+    /// scaling is skipped entirely when `γ^s == 1.0`, so the legacy
+    /// path performs the identical arithmetic.
+    pub discount: f64,
+}
+
+impl Default for SyncConfig {
+    fn default() -> Self {
+        SyncConfig { delay_rounds: 0, discount: 1.0 }
+    }
+}
+
+impl SyncConfig {
+    /// True for the synchronous default (the legacy round loop).
+    pub fn is_synchronous(&self) -> bool {
+        self.delay_rounds == 0
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.discount > 0.0 && self.discount <= 1.0,
+            "sync.discount must be in (0, 1] (got {})",
+            self.discount
+        );
+        Ok(())
+    }
+}
+
 /// One elastic-membership event: a specific worker leaving or joining
 /// the active roster at a specific round boundary.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -721,6 +938,10 @@ pub struct ExperimentConfig {
     pub comm: CommConfig,
     /// Streaming partial-sync fabric: fragments × schedule × codec.
     pub stream: StreamConfig,
+    /// Per-worker compute-speed heterogeneity model.
+    pub speed: SpeedConfig,
+    /// Asynchronous outer loop: delayed application + staleness discount.
+    pub sync: SyncConfig,
     /// Synchronization topology: star | ring | gossip | hierarchical.
     pub topology: TopologyConfig,
     /// Elastic island membership: per-round active-worker roster driven
@@ -755,6 +976,8 @@ impl ExperimentConfig {
             data: DataConfig::default(),
             comm: CommConfig::default(),
             stream: StreamConfig::default(),
+            speed: SpeedConfig::default(),
+            sync: SyncConfig::default(),
             topology: TopologyConfig::Star,
             churn: None,
             ckpt: CkptConfig::default(),
@@ -800,6 +1023,20 @@ impl ExperimentConfig {
         }
     }
 
+    /// Compute-time factors for a round's roster, in roster order — the
+    /// per-island multipliers the engine's critical-path reduction
+    /// consumes. All exactly 1.0 under the uniform model (the legacy
+    /// timing path, bitwise).
+    pub fn speed_factors(&self, roster: &[usize], t: usize) -> Vec<f64> {
+        if self.speed.is_uniform() {
+            return vec![1.0; roster.len()];
+        }
+        roster
+            .iter()
+            .map(|&id| self.speed.factor(id, t, self.rounds, self.seed))
+            .collect()
+    }
+
     /// Cross-field invariants. Every config entry point (TOML, CLI
     /// overrides) funnels through this, so malformed settings surface as
     /// proper `anyhow` errors instead of panics deep in the run.
@@ -821,7 +1058,29 @@ impl ExperimentConfig {
             "comm.bandwidth_bps must be positive"
         );
         self.stream.validate()?;
+        self.speed.validate()?;
+        self.sync.validate()?;
         self.topology.validate()?;
+        anyhow::ensure!(
+            !(self.sync.delay_rounds > 0 && self.topology.is_decentralized()),
+            "delayed outer application (sync.delay_rounds > 0) composes with the \
+             centralized topologies (star, hierarchical); the decentralized \
+             mixing-matrix loops ({}) have no central queue to delay",
+            self.topology.name()
+        );
+        anyhow::ensure!(
+            self.sync.delay_rounds <= self.rounds,
+            "sync.delay_rounds = {} exceeds the run's {} rounds (every \
+             contribution would only land in the end-of-run flush)",
+            self.sync.delay_rounds,
+            self.rounds
+        );
+        anyhow::ensure!(
+            self.speed.max_profiled_worker() <= self.pool_size(),
+            "speed profile names worker {} but the pool has {} workers",
+            self.speed.max_profiled_worker() - 1,
+            self.pool_size()
+        );
         anyhow::ensure!(
             !(self.prune_frac > 0.0 && self.stream.codec != Codec::F32),
             "sign-pruning (diloco.prune_frac > 0) composes with the f32 codec only; \
@@ -983,6 +1242,14 @@ impl ExperimentConfig {
         cfg.stream.schedule = SyncSchedule::parse(&schedule)?;
         let codec = doc.str_or("stream.codec", cfg.stream.codec.name())?;
         cfg.stream.codec = Codec::parse(&codec)?;
+
+        let speed = doc.str_or("speed.profile", "")?;
+        if !speed.is_empty() {
+            cfg.speed = SpeedConfig::parse(&speed)?;
+        }
+        cfg.sync.delay_rounds =
+            doc.usize_or("sync.delay_rounds", cfg.sync.delay_rounds)?;
+        cfg.sync.discount = doc.f64_or("sync.discount", cfg.sync.discount)?;
 
         let churn = doc.str_or("churn.schedule", "")?;
         if !churn.is_empty() {
@@ -1413,6 +1680,123 @@ mod tests {
         assert!(ExperimentConfig::from_toml(&doc).is_err());
         let doc = TomlDoc::parse("[ckpt]\nsave_every = 2")?;
         assert!(ExperimentConfig::from_toml(&doc).is_err());
+        Ok(())
+    }
+
+    #[test]
+    fn speed_dsl_parse_and_factors() {
+        let s = SpeedConfig::parse("w0=2.0,w2=1.0..3.0,jitter:0.25").unwrap();
+        assert!(!s.is_uniform());
+        assert_eq!(s.jitter, 0.25);
+        assert_eq!(s.max_profiled_worker(), 3);
+        // Constant factor holds every round; ramp hits its endpoints.
+        // Jitter stays within ±25% of the base.
+        for t in 0..8 {
+            let f0 = s.factor(0, t, 8, 0);
+            assert!(f0 > 2.0 * 0.75 - 1e-12 && f0 < 2.0 * 1.25 + 1e-12, "{f0}");
+        }
+        let no_jit = SpeedConfig::parse("w2=1.0..3.0").unwrap();
+        assert_eq!(no_jit.factor(2, 0, 8, 0), 1.0);
+        assert_eq!(no_jit.factor(2, 7, 8, 0), 3.0);
+        assert_eq!(no_jit.factor(1, 5, 8, 0), 1.0, "unlisted worker is nominal");
+        // Latest profile wins per worker.
+        let dup = SpeedConfig::parse("w1=2.0,w1=4.0").unwrap();
+        assert_eq!(dup.factor(1, 0, 8, 0), 4.0);
+        // Jitter draws: deterministic in (seed, worker, round), varying
+        // across rounds and seeds.
+        let j = SpeedConfig::parse("jitter:0.3").unwrap();
+        assert_eq!(j.factor(0, 3, 8, 7), j.factor(0, 3, 8, 7));
+        assert_ne!(j.factor(0, 3, 8, 7), j.factor(0, 4, 8, 7));
+        assert_ne!(j.factor(0, 3, 8, 7), j.factor(0, 3, 8, 8));
+        // The empty model is uniform.
+        assert!(SpeedConfig::parse("").unwrap().is_uniform());
+        assert_eq!(SpeedConfig::default().factor(5, 3, 8, 0), 1.0);
+    }
+
+    #[test]
+    fn speed_dsl_rejects_malformed_items() {
+        for bad in [
+            "w3",                  // no factor
+            "3=2.0",               // missing w prefix
+            "wx=2.0",              // non-numeric worker
+            "w3=0",                // zero factor
+            "w3=-1.5",             // negative factor
+            "w3=0..2",             // zero ramp start
+            "w3=nan",              // non-finite
+            "jitter:1.0",          // amplitude must stay below 1
+            "jitter:-0.1",         // negative amplitude
+            "jitter:0.2,jitter:0.3", // two jitters
+            "turbo:w1",            // unknown item
+        ] {
+            assert!(SpeedConfig::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn sync_config_validation_and_composition() {
+        let mut cfg = ExperimentConfig::paper_default("a", "nano");
+        assert!(cfg.sync.is_synchronous());
+        cfg.sync.delay_rounds = 2;
+        cfg.validate().unwrap();
+        // Discount outside (0, 1] is rejected.
+        cfg.sync.discount = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.sync.discount = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.sync.discount = 0.9;
+        cfg.validate().unwrap();
+        // Delay composes with centralized topologies only.
+        cfg.topology = TopologyConfig::Ring;
+        assert!(cfg.validate().is_err());
+        cfg.topology = TopologyConfig::Gossip;
+        assert!(cfg.validate().is_err());
+        cfg.topology = TopologyConfig::Hierarchical { groups: 2 };
+        cfg.validate().unwrap();
+        cfg.topology = TopologyConfig::Star;
+        // A delay past the run's rounds is a typo, not a schedule.
+        cfg.sync.delay_rounds = cfg.rounds + 1;
+        assert!(cfg.validate().is_err());
+        // Speed profiles must name workers inside the pool.
+        cfg.sync.delay_rounds = 0;
+        cfg.speed = SpeedConfig::parse("w99=2.0").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.speed = SpeedConfig::parse("w7=2.0").unwrap();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn speed_factors_roster_mapping() {
+        let mut cfg = ExperimentConfig::paper_default("a", "nano");
+        cfg.workers = 4;
+        cfg.schedule = ComputeSchedule::Constant(4);
+        // Uniform model: all factors exactly 1.0 (the bitwise guarantee).
+        assert_eq!(cfg.speed_factors(&[0, 1, 2, 3], 0), vec![1.0; 4]);
+        cfg.speed = SpeedConfig::parse("w2=3.0").unwrap();
+        assert_eq!(cfg.speed_factors(&[0, 2], 1), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn from_toml_speed_and_sync_sections() -> anyhow::Result<()> {
+        let doc = TomlDoc::parse(
+            "[speed]\nprofile = \"w3=2.0,jitter:0.2\"\n\
+             [sync]\ndelay_rounds = 1\ndiscount = 0.8",
+        )?;
+        let cfg = ExperimentConfig::from_toml(&doc)?;
+        assert_eq!(cfg.speed, SpeedConfig::parse("w3=2.0,jitter:0.2")?);
+        assert_eq!(cfg.sync, SyncConfig { delay_rounds: 1, discount: 0.8 });
+        // Absent sections keep the synchronous uniform defaults.
+        let cfg = ExperimentConfig::from_toml(&TomlDoc::parse("seed = 1")?)?;
+        assert!(cfg.speed.is_uniform());
+        assert_eq!(cfg.sync, SyncConfig::default());
+        // Malformed combinations are proper errors.
+        for bad in [
+            "[speed]\nprofile = \"w3=0\"",
+            "[sync]\ndiscount = 0.0",
+            "[sync]\ndelay_rounds = 1\n[topology]\nkind = \"ring\"",
+        ] {
+            let Ok(doc) = TomlDoc::parse(bad) else { continue };
+            assert!(ExperimentConfig::from_toml(&doc).is_err(), "{bad:?}");
+        }
         Ok(())
     }
 

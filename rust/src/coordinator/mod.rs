@@ -28,6 +28,16 @@
 //! model + outer-optimizer state per worker and run a mixing-matrix
 //! round loop instead, reporting per-replica and consensus perplexity
 //! plus a consensus-distance metric.
+//!
+//! The *timing* of the reduction is pluggable too (the async scheduling
+//! layer, DESIGN.md §11): a `[speed]` model makes islands
+//! speed-heterogeneous — the simulated cost of a round becomes the
+//! straggler's critical path, and the fast islands' barrier wait is
+//! reported as idle time — while `sync.delay_rounds = D` applies each
+//! round's outer contribution `D` rounds late (DiLoCoX-style delayed
+//! merging), letting its transfer hide behind the next inner phase and
+//! discounting stale contributions by `γ^staleness`. `D = 0` with
+//! homogeneous speeds is the synchronous loop, bitwise.
 
 pub mod average;
 pub mod baselines;
@@ -35,7 +45,7 @@ pub mod opt;
 pub mod prune;
 pub mod stats;
 
-use crate::checkpoint::{self, TrainState, WorkerState};
+use crate::checkpoint::{self, PendingFragment, PendingSync, TrainState, WorkerState};
 use crate::comm::codec::Codec;
 use crate::comm::fragment::FragmentPlan;
 use crate::comm::{topology, Direction, RoundComm, SimNet};
@@ -268,6 +278,17 @@ impl Coordinator {
             "checkpoint stores {} outer optimizers for a pool of {pool}",
             st.outer.len()
         );
+        anyhow::ensure!(
+            !st.decentralized || st.pending_sync.is_empty(),
+            "a decentralized checkpoint cannot carry {} delayed contribution \
+             batches (delay composes with centralized topologies only)",
+            st.pending_sync.len()
+        );
+        anyhow::ensure!(
+            st.pending_sync.iter().all(|b| b.round < st.round),
+            "checkpoint at round {} holds a pending batch from a later round",
+            st.round
+        );
         let metrics = RunMetrics::new(&format!(
             "diloco_k{}_h{}_{}",
             cfg.workers,
@@ -383,6 +404,7 @@ impl Coordinator {
         drops_per_worker: &[usize],
         carry_comm_s: f64,
         codec_err_sq_total: f64,
+        pending_sync: &[PendingSync],
     ) -> anyhow::Result<()> {
         let path = self
             .cfg
@@ -403,6 +425,7 @@ impl Coordinator {
             drops_per_worker: drops_per_worker.to_vec(),
             carry_comm_s,
             codec_err_sq_total,
+            pending_sync: pending_sync.to_vec(),
         };
         checkpoint::save_state(path, &self.rt.manifest, &st)
     }
@@ -480,10 +503,17 @@ impl Coordinator {
         let mut pending_adopt: Vec<Vec<bool>> = vec![vec![true; n_frag]; max_k];
         let mut drops_per_worker = vec![0usize; max_k];
         // Transfer time deferred into the next inner phase (overlapped
-        // schedule); 0.0 under barrier schedules.
+        // schedule, and every non-final round of a delayed run); 0.0
+        // under synchronous barrier schedules.
         let mut carry_comm_s = 0.0f64;
         let mut codec_err_sq_total = 0.0f64;
         let mut outer = opt::OuterOpt::new(&cfg.outer_opt, &zeros);
+        // Delayed contribution queue (DESIGN.md §11), oldest batch
+        // first: round t's batch is folded into the global model at the
+        // end of round t + D. With D = 0 a batch is applied in the round
+        // that produced it — the synchronous legacy loop, bitwise.
+        let delay = cfg.sync.delay_rounds;
+        let mut pending: Vec<PendingSync> = Vec::new();
         let mut start_round = 0usize;
 
         // Resume: overwrite every piece of mutable loop state with the
@@ -497,6 +527,20 @@ impl Coordinator {
                 "checkpoint has {} fragments, config wants {n_frag}",
                 st.pending_adopt.first().map_or(0, |p| p.len())
             );
+            for b in &st.pending_sync {
+                for fr in &b.frags {
+                    anyhow::ensure!(
+                        fr.fragment < n_frag
+                            && fr.avg.len() == plan.elements(fr.fragment),
+                        "pending batch from round {} carries fragment {} with {} \
+                         elements; the run's plan wants {} of {n_frag} fragments",
+                        b.round,
+                        fr.fragment,
+                        fr.avg.len(),
+                        plan.elements(fr.fragment.min(n_frag - 1)),
+                    );
+                }
+            }
             start_round = st.round;
             Self::restore_pool(&mut workers, &st.workers);
             refs = st.refs;
@@ -504,6 +548,7 @@ impl Coordinator {
             drops_per_worker = st.drops_per_worker;
             carry_comm_s = st.carry_comm_s;
             codec_err_sq_total = st.codec_err_sq_total;
+            pending = st.pending_sync;
             let snap = st
                 .outer
                 .into_iter()
@@ -529,6 +574,14 @@ impl Coordinator {
             // else the schedule's prefix 0..k_t (pre-churn loop, bitwise).
             let roster = cfg.active_ids(t);
             let k_t = roster.len();
+            // Per-island compute-speed factors (all exactly 1.0 under
+            // the uniform model) and the round's active-id mask for
+            // apply-time download billing.
+            let factors = cfg.speed_factors(&roster, t);
+            let mut active = vec![false; max_k];
+            for &id in &roster {
+                active[id] = true;
+            }
             let due = cfg.stream.schedule.fragments_due(t, n_frag);
             let hier_groups: Option<Vec<Vec<usize>>> =
                 hier_cfg.map(|g| topology::hier_groups(k_t, g));
@@ -572,7 +625,9 @@ impl Coordinator {
             // Losses are averaged across workers per roster index,
             // folding in roster order regardless of which island finished
             // first. A deferred transfer from the previous round overlaps
-            // this phase.
+            // this phase. The round's simulated cost is its *critical
+            // path*: the slowest island's speed-scaled compute (bitwise
+            // the raw max under the uniform speed model).
             let phase = engine::run_inner_phase_subset(
                 self.exec.as_ref(),
                 &self.rt,
@@ -580,8 +635,11 @@ impl Coordinator {
                 &roster,
                 cfg.inner_steps,
             )?;
-            metrics.sim_compute_seconds += phase.overlapped_compute_s(carry_comm_s);
+            let crit = phase.critical_path_s(&factors);
+            metrics.sim_compute_seconds += crit.max(carry_comm_s);
             carry_comm_s = 0.0;
+            let idle = phase.idle_s(&factors);
+            metrics.sim_idle_seconds += idle;
             metrics.phases.inner_compute_s += phase.total_wall_s();
             for s in 0..cfg.inner_steps {
                 let avg = phase.per_worker_losses.iter().map(|l| l[s]).sum::<f32>() / k_t as f32;
@@ -618,13 +676,14 @@ impl Coordinator {
                             } else {
                                 let bytes = codec
                                     .encoded_bytes(plan.elements(f), plan.slices(f).len());
-                                net.try_send_hop(
+                                net.try_send_gen(
                                     bytes,
                                     Direction::Up,
                                     t,
                                     roster[g[0]],
                                     f,
                                     topology::HOP_LEADER_UP,
+                                    delay,
                                 )
                             };
                             for &m in g {
@@ -688,7 +747,7 @@ impl Coordinator {
                             if k_t == 1 {
                                 true
                             } else {
-                                net.try_send_fragment(bytes, Direction::Up, t, wid, f)
+                                net.try_send_gen(bytes, Direction::Up, t, wid, f, 0, delay)
                             }
                         }
                     };
@@ -703,12 +762,18 @@ impl Coordinator {
                         sent[i][di] = true;
                     } else {
                         dropped_any = true;
-                        // The worker keeps training this fragment from
-                        // its own parameters; rebase its reference so the
-                        // next upload covers only post-drop progress —
-                        // the monolithic Fig-8 semantics, per fragment.
-                        plan.copy_fragment(&w.params, &mut refs[wid], f);
                     }
+                    // Landed or dropped, the worker keeps training this
+                    // fragment from its own parameters until its next
+                    // re-adopt, so rebase its reference: a dropped
+                    // fragment's next upload covers only post-drop
+                    // progress (the monolithic Fig-8 semantics), and a
+                    // landed fragment's uploads during a delay window
+                    // each cover exactly one round (no double counting).
+                    // With D = 0 the landed rebase is unobservable — the
+                    // re-adopt at the next active round overwrites the
+                    // reference before it is ever read.
+                    plan.copy_fragment(&w.params, &mut refs[wid], f);
                 }
                 if dropped_any {
                     drops_per_worker[wid] += 1;
@@ -734,77 +799,111 @@ impl Coordinator {
                 }
             }
 
-            // Outer step, one fragment at a time: each synced fragment is
-            // averaged over its own contributors and applied through its
-            // own slice of the outer-optimizer state.
-            let mut fragments_synced = 0usize;
+            // Average each landed fragment over its contributors — the
+            // identical arithmetic (and fragment order) the synchronous
+            // loop performed inline — and queue the round's batch. With
+            // D = 0 the batch is applied immediately below, bitwise the
+            // legacy sequence; with D > 0 it waits out its delay while
+            // its transfer hides behind the next inner phase.
+            let mut frags: Vec<PendingFragment> = Vec::new();
             let mut avg_assembled: Option<Tensors> = None;
             for (di, &f) in due.iter().enumerate() {
                 if frag_rx[di].is_empty() {
                     continue;
                 }
                 let avg = average::weighted_average_flat(&frag_rx[di], &frag_wts[di]);
-                outer.step_fragment(&mut global, &avg, plan.slices(f), f);
                 plan.scatter(&avg, f, avg_assembled.get_or_insert_with(|| zeros.clone()));
-                fragments_synced += 1;
+                let landed: Vec<usize> = roster
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| sent[i][di])
+                    .map(|(_, &wid)| wid)
+                    .collect();
+                // Download billing targets at apply time: the landed
+                // workers under star; the landed group *leaders* under
+                // hierarchical (members ride free intra-group links);
+                // nobody when the round synced locally (k = 1).
+                let down_to: Vec<usize> = if k_t <= 1 {
+                    Vec::new()
+                } else if let (Some(gs), Some(hl)) = (&hier_groups, &hier_landed) {
+                    gs.iter()
+                        .filter(|g| hl[di][g[0]])
+                        .map(|g| roster[g[0]])
+                        .collect()
+                } else {
+                    landed.clone()
+                };
+                frags.push(PendingFragment { fragment: f, avg, landed, down_to });
             }
-            if let Some(avg) = &avg_assembled {
+            let stats_rec = avg_assembled.as_ref().map(|avg| {
                 let mut rs = stats::round_stats(t, &received_assembled, avg);
-                rs.fragments_synced = fragments_synced;
+                rs.fragments_synced = frags.len();
                 rs.codec_err_l2 = codec_err_sq.sqrt();
                 rs.active_workers = k_t;
-                round_stats.push(rs);
+                rs.idle_s = idle;
+                rs
+            });
+            if stats_rec.is_some() {
                 codec_err_sq_total += codec_err_sq;
-                anyhow::ensure!(
-                    global.all_finite(),
-                    "outer step produced non-finite parameters at round {t}"
-                );
+            }
+            if !frags.is_empty() {
+                pending.push(PendingSync { round: t, frags, stats: stats_rec });
             }
 
-            // Download: every fragment a worker landed comes back as
-            // fresh global values (adopted at its next active round);
-            // fragments it lost stay desynced until their next
-            // successful sync. Broadcasts are full-precision. Departed
-            // workers are not in the roster, so nothing is billed to
-            // them in either direction.
-            for (i, &wid) in roster.iter().enumerate() {
-                for (di, &f) in due.iter().enumerate() {
-                    if sent[i][di] {
-                        if k_t > 1 && hier_groups.is_none() {
-                            net.send_reliable_to(
-                                4 * plan.elements(f) as u64,
-                                Direction::Down,
-                                wid,
-                            );
-                        }
-                        pending_adopt[wid][f] = true;
-                    }
-                }
+            // Apply every batch whose delay has elapsed (see
+            // `apply_pending_batch`). With D = 0 the batch just queued
+            // is applied right here — the synchronous legacy sequence,
+            // bitwise.
+            while pending.first().is_some_and(|b| b.round + delay <= t) {
+                let batch = pending.remove(0);
+                apply_pending_batch(
+                    batch,
+                    t,
+                    cfg.sync.discount,
+                    &plan,
+                    &active,
+                    &mut global,
+                    &mut outer,
+                    &mut pending_adopt,
+                    &mut net,
+                    &mut round_stats,
+                )?;
             }
-            // Hierarchical return path: one full-precision payload from
-            // the root to each landed group's leader; the leader→member
-            // fan-out rides the free intra-group links.
-            if let (Some(gs), Some(landed), true) = (&hier_groups, &hier_landed, k_t > 1)
+
+            // Overlapped rounds — the streaming `overlapped` schedule
+            // and every non-final round of a delayed run — defer their
+            // transfer into the next inner phase; the final round has no
+            // next phase, so it closes as a normal barrier and its
+            // billing row says so.
+            if (cfg.stream.schedule.defers_barrier() || delay > 0) && t + 1 < cfg.rounds
             {
-                for (di, &f) in due.iter().enumerate() {
-                    for g in gs {
-                        if landed[di][g[0]] {
-                            net.send_reliable_to(
-                                4 * plan.elements(f) as u64,
-                                Direction::Down,
-                                roster[g[0]],
-                            );
-                        }
-                    }
-                }
-            }
-            // Overlapped rounds defer their transfer into the next inner
-            // phase; the final round has no next phase, so it closes as
-            // a normal barrier and its billing row says so.
-            if cfg.stream.schedule.defers_barrier() && t + 1 < cfg.rounds {
                 carry_comm_s = net.end_round_deferred();
             } else {
                 net.end_round();
+            }
+
+            // End-of-run drain: batches still in flight after the final
+            // round each close their own barrier (one billing row per
+            // batch), so no contribution is ever lost and every drain
+            // row's cost stays bounded by a synchronous round's — the
+            // overlap-billing invariant benches/async_delay.rs asserts.
+            if t + 1 == cfg.rounds {
+                while !pending.is_empty() {
+                    let batch = pending.remove(0);
+                    apply_pending_batch(
+                        batch,
+                        t,
+                        cfg.sync.discount,
+                        &plan,
+                        &active,
+                        &mut global,
+                        &mut outer,
+                        &mut pending_adopt,
+                        &mut net,
+                        &mut round_stats,
+                    )?;
+                    net.end_round();
+                }
             }
             drop(_outer_timer);
 
@@ -819,8 +918,9 @@ impl Coordinator {
             }
 
             // Periodic TrainState save — the record captures every bit
-            // of mutable loop state at this round boundary, so a resumed
-            // run continues bitwise (DESIGN.md §10).
+            // of mutable loop state at this round boundary, delayed
+            // batches still in flight included, so a resumed run
+            // continues bitwise (DESIGN.md §10, §11).
             if self.save_due(t) {
                 self.save_state_now(
                     t,
@@ -834,6 +934,7 @@ impl Coordinator {
                     &drops_per_worker,
                     carry_comm_s,
                     codec_err_sq_total,
+                    &pending,
                 )?;
             }
         }
@@ -958,6 +1059,7 @@ impl Coordinator {
             let roster = cfg.active_ids(t);
             let k_t = roster.len();
             last_roster = roster.clone();
+            let factors = cfg.speed_factors(&roster, t);
             let due = cfg.stream.schedule.fragments_due(t, n_frag);
 
             // Fresh joiners warm-start from the current *consensus*
@@ -993,6 +1095,10 @@ impl Coordinator {
                 }
             }
 
+            // Speed-scaled critical path + idle, exactly as on the
+            // centralized loop (uniform factors reproduce the raw max
+            // bitwise). Decentralized topologies reject `delay_rounds`,
+            // so the only async-layer effect here is heterogeneity.
             let phase = engine::run_inner_phase_subset(
                 self.exec.as_ref(),
                 &self.rt,
@@ -1000,8 +1106,11 @@ impl Coordinator {
                 &roster,
                 cfg.inner_steps,
             )?;
-            metrics.sim_compute_seconds += phase.overlapped_compute_s(carry_comm_s);
+            let crit = phase.critical_path_s(&factors);
+            metrics.sim_compute_seconds += crit.max(carry_comm_s);
             carry_comm_s = 0.0;
+            let idle = phase.idle_s(&factors);
+            metrics.sim_idle_seconds += idle;
             metrics.phases.inner_compute_s += phase.total_wall_s();
             for s in 0..cfg.inner_steps {
                 let avg = phase.per_worker_losses.iter().map(|l| l[s]).sum::<f32>() / k_t as f32;
@@ -1102,7 +1211,10 @@ impl Coordinator {
                             None => worker_bytes[tr.sender][di],
                         };
                         if tr.droppable {
-                            debug_assert_eq!(lane, tr.sender, "droppable hops bill the sender's lane");
+                            debug_assert_eq!(
+                                lane, tr.sender,
+                                "droppable hops bill the sender's lane"
+                            );
                             if !net.try_send_hop(
                                 bytes,
                                 tr.dir,
@@ -1176,6 +1288,7 @@ impl Coordinator {
                 rs.fragments_synced = fragments_synced;
                 rs.codec_err_l2 = codec_err_sq.sqrt();
                 rs.active_workers = k_t;
+                rs.idle_s = idle;
                 let active_replicas: Vec<&Tensors> =
                     roster.iter().map(|&id| &replicas[id]).collect();
                 consensus = average::uniform_average_refs(&active_replicas);
@@ -1210,6 +1323,8 @@ impl Coordinator {
 
             // Periodic TrainState save (DESIGN.md §10): the whole pool —
             // replicas, per-replica outer state, parked workers included.
+            // Decentralized loops never hold delayed batches (validate()
+            // rejects the composition), so the queue is always empty.
             if self.save_due(t) {
                 self.save_state_now(
                     t,
@@ -1223,6 +1338,7 @@ impl Coordinator {
                     &drops_per_worker,
                     carry_comm_s,
                     codec_err_sq_total,
+                    &[],
                 )?;
             }
         }
@@ -1273,6 +1389,66 @@ impl Coordinator {
             replica_evals,
         })
     }
+}
+
+/// Fold one delayed contribution batch into the global model at round
+/// `t` — the shared apply path of the unified round loop (DESIGN.md
+/// §11). Each synced fragment steps through its own slice of the
+/// outer-optimizer state, discounted by `discount^staleness` (the
+/// scaling is skipped when the factor is exactly 1.0, so the
+/// synchronous path performs the identical arithmetic); landed workers
+/// re-adopt at their next active round; the full-precision download
+/// bills to the batch's targets still in the apply round's roster — a
+/// worker that departed mid-flight adopts for free on rejoin, like any
+/// joiner. The batch's upload-round statistics are stamped with the
+/// realized staleness and appended to the run's `round_stats`.
+#[allow(clippy::too_many_arguments)]
+fn apply_pending_batch(
+    batch: PendingSync,
+    t: usize,
+    discount: f64,
+    plan: &FragmentPlan,
+    active: &[bool],
+    global: &mut Tensors,
+    outer: &mut opt::OuterOpt,
+    pending_adopt: &mut [Vec<bool>],
+    net: &mut SimNet,
+    round_stats: &mut Vec<RoundStats>,
+) -> anyhow::Result<()> {
+    let staleness = t - batch.round;
+    let scale = if discount < 1.0 && staleness > 0 {
+        discount.powi(staleness as i32) as f32
+    } else {
+        1.0
+    };
+    for frag in &batch.frags {
+        let f = frag.fragment;
+        if scale != 1.0 {
+            let scaled: Vec<f32> = frag.avg.iter().map(|&v| v * scale).collect();
+            outer.step_fragment(global, &scaled, plan.slices(f), f);
+        } else {
+            outer.step_fragment(global, &frag.avg, plan.slices(f), f);
+        }
+        for &wid in &frag.landed {
+            pending_adopt[wid][f] = true;
+        }
+        for &wid in &frag.down_to {
+            if active[wid] {
+                net.send_reliable_to(4 * plan.elements(f) as u64, Direction::Down, wid);
+            }
+        }
+    }
+    anyhow::ensure!(
+        global.all_finite(),
+        "outer step produced non-finite parameters at round {t} \
+         (batch from round {})",
+        batch.round
+    );
+    if let Some(mut rs) = batch.stats {
+        rs.staleness = staleness;
+        round_stats.push(rs);
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -8,7 +8,7 @@ use crate::util::math;
 /// norm of the averaged delta — one record per round. Under the
 /// streaming fabric the deltas cover only the round's synced fragments
 /// (zero elsewhere), and the codec fields account for lossy encoding.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RoundStats {
     pub round: usize,
     pub cos_mean: f64,
@@ -33,6 +33,16 @@ pub struct RoundStats {
     /// workers neither compute nor bill, so this can change round to
     /// round under a `[churn]` schedule).
     pub active_workers: usize,
+    /// Rounds between this contribution's compute and its application
+    /// (the async scheduling layer's delay; DESIGN.md §11). 0 on the
+    /// synchronous path, `sync.delay_rounds` in the steady state of a
+    /// delayed run, and less for the tail batches flushed at run end.
+    pub staleness: usize,
+    /// Simulated seconds the round's islands spent waiting for its
+    /// straggler (Σ over active workers of critical-path − own scaled
+    /// compute). 0.0 only when every island finishes simultaneously;
+    /// grows with `[speed]` heterogeneity.
+    pub idle_s: f64,
 }
 
 /// Mean L2 distance of `replicas` from `consensus` (their uniform mean).
@@ -94,6 +104,8 @@ pub fn round_stats(round: usize, deltas: &[Tensors], avg: &Tensors) -> RoundStat
         codec_err_l2: 0.0,
         consensus_dist: 0.0,
         active_workers: deltas.len(),
+        staleness: 0,
+        idle_s: 0.0,
     }
 }
 

@@ -178,6 +178,40 @@ impl InnerPhaseReport {
         self.per_worker_compute_s.iter().fold(0.0, |a, &x| a.max(x))
     }
 
+    /// Per-island PJRT compute seconds, in island order. The async
+    /// scheduling layer scales these by per-worker speed factors before
+    /// reducing, so the simulated wall-clock of a heterogeneous round is
+    /// the true critical path (the straggler), not the raw max.
+    pub fn per_worker_compute_s(&self) -> &[f64] {
+        &self.per_worker_compute_s
+    }
+
+    /// Critical path of the phase under per-island speed factors:
+    /// `max_i(compute_i · factor_i)`. With every factor exactly `1.0`
+    /// this is bitwise [`Self::max_compute_s`] (`x * 1.0 == x` for every
+    /// f64), which is what keeps homogeneous runs on the legacy trace.
+    pub fn critical_path_s(&self, factors: &[f64]) -> f64 {
+        debug_assert_eq!(factors.len(), self.per_worker_compute_s.len());
+        self.per_worker_compute_s
+            .iter()
+            .zip(factors)
+            .fold(0.0, |a, (&c, &f)| a.max(c * f))
+    }
+
+    /// Simulated seconds the phase's islands spent waiting at the round
+    /// barrier for the straggler: `Σ_i (critical_path − compute_i ·
+    /// factor_i)`. Zero for a single island; grows with speed
+    /// heterogeneity — the quantity the async delayed loop exists to
+    /// reclaim.
+    pub fn idle_s(&self, factors: &[f64]) -> f64 {
+        let crit = self.critical_path_s(factors);
+        self.per_worker_compute_s
+            .iter()
+            .zip(factors)
+            .map(|(&c, &f)| crit - c * f)
+            .sum()
+    }
+
     /// Total CPU-seconds across islands — the phase's entry in
     /// `phases.inner_compute_s` (a work counter, not wall time: under
     /// the parallel engine it exceeds elapsed time by design).
@@ -398,6 +432,15 @@ mod tests {
         assert_eq!(report.overlapped_compute_s(0.0), 5.0);
         assert_eq!(report.overlapped_compute_s(3.0), 5.0);
         assert_eq!(report.overlapped_compute_s(9.0), 9.0);
+        // Per-worker times are exposed in island order for speed scaling.
+        assert_eq!(report.per_worker_compute_s(), &[2.0, 5.0]);
+        // Uniform factors reproduce the raw max bitwise; a straggler
+        // factor moves the critical path and creates idle time.
+        assert_eq!(report.critical_path_s(&[1.0, 1.0]), 5.0);
+        assert_eq!(report.idle_s(&[1.0, 1.0]), 3.0); // island 0 waits 3s
+        assert_eq!(report.critical_path_s(&[4.0, 1.0]), 8.0);
+        assert_eq!(report.idle_s(&[4.0, 1.0]), 3.0); // island 1 waits now
+        assert_eq!(report.critical_path_s(&[1.0, 2.0]), 10.0);
     }
 
     #[test]

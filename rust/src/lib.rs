@@ -28,7 +28,10 @@
 //! Every experiment is one [`ExperimentConfig`] — built programmatically,
 //! or parsed from the TOML subset ([`config::toml`]) by the CLI. The
 //! communication axes compose: `[stream]` picks fragments × schedule ×
-//! codec, `[topology]` picks who exchanges outer gradients with whom.
+//! codec, `[topology]` picks who exchanges outer gradients with whom,
+//! `[speed]` + `[sync]` pick the async scheduling layer (per-worker
+//! compute-speed heterogeneity and DiLoCoX-style delayed application of
+//! outer contributions — [`config::SpeedConfig`], [`config::SyncConfig`]).
 //!
 //! ```
 //! use diloco::config::{ExperimentConfig, TopologyConfig};

@@ -13,7 +13,8 @@
 
 use diloco::config::toml::TomlDoc;
 use diloco::config::{
-    ChurnConfig, EngineConfig, ExperimentConfig, StreamConfig, TopologyConfig,
+    ChurnConfig, EngineConfig, ExperimentConfig, SpeedConfig, StreamConfig,
+    TopologyConfig,
 };
 use diloco::coordinator::Coordinator;
 use diloco::data::Dataset;
@@ -88,6 +89,9 @@ fn print_help() {
          \x20       (schedules: every-round|staggered|overlapped; codecs: f32|f16|q8)\n\
          \x20       [--topology star|ring|gossip|hierarchical[:G]]\n\
          \x20       [--churn leave:w3@r10,join:w8@r20,ramp:4..8]\n\
+         \x20       [--speed w3=2.0,w7=1.5..3.0,jitter:0.2] [--delay D] [--discount G]\n\
+         \x20       (speed: per-worker compute-time factors; delay: apply outer\n\
+         \x20        contributions D rounds late; discount: stale weight gamma^s)\n\
          \x20       [--save-every N --save-path state.ckpt] [--resume state.ckpt]\n\
          eval    --ckpt <file> [--artifacts artifacts] [--model nano]\n\
          data    [--topics 8] [--docs 400] [--workers 8] [--non-iid] [--seed 0]\n\
@@ -128,6 +132,19 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(churn) = args.get("churn") {
         cfg.churn = Some(ChurnConfig::parse(churn)?);
+    }
+    if let Some(speed) = args.get("speed") {
+        cfg.speed = SpeedConfig::parse(speed)?;
+    }
+    if let Some(delay) = args.get("delay") {
+        cfg.sync.delay_rounds = delay
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --delay {delay:?}: {e}"))?;
+    }
+    if let Some(discount) = args.get("discount") {
+        cfg.sync.discount = discount
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --discount {discount:?}: {e}"))?;
     }
     if let Some(every) = args.get("save-every") {
         cfg.ckpt.save_every = every
@@ -173,6 +190,19 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             cfg.pool_size()
         );
     }
+    if !cfg.speed.is_uniform() {
+        println!(
+            "speed: {} worker profiles, jitter {:.0}%",
+            cfg.speed.profiles.len(),
+            100.0 * cfg.speed.jitter
+        );
+    }
+    if !cfg.sync.is_synchronous() {
+        println!(
+            "async: outer contributions applied {} rounds late, discount {:.2}^s",
+            cfg.sync.delay_rounds, cfg.sync.discount
+        );
+    }
     if cfg.ckpt.save_every > 0 {
         println!(
             "ckpt: saving TrainState every {} rounds to {}",
@@ -202,13 +232,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     println!(
         "comm: {} msgs, {:.2} MB total, {} dropped; sim wall {:.1}s \
-         (compute {:.1}s + comm {:.1}s); coordinator overhead {:.1}%",
+         (compute {:.1}s + comm {:.1}s, {:.1}s idle at barriers); \
+         coordinator overhead {:.1}%",
         m.comm_messages,
         m.comm_bytes as f64 / 1e6,
         m.comm_dropped,
         m.sim_wall_seconds(),
         m.sim_compute_seconds,
         m.sim_comm_seconds,
+        m.sim_idle_seconds,
         100.0 * m.phases.overhead_fraction()
     );
     if !coord.cfg.stream.is_monolithic() {

@@ -71,8 +71,15 @@ pub struct RunMetrics {
     pub sim_comm_seconds: f64,
     /// Simulated compute seconds (steps × per-step cost on the islands).
     /// Under the streaming `overlapped` schedule this also absorbs
-    /// transfer time that hid behind compute.
+    /// transfer time that hid behind compute. With a `[speed]` model the
+    /// per-round contribution is the *critical path* — the slowest
+    /// island's scaled compute time.
     pub sim_compute_seconds: f64,
+    /// Simulated seconds islands spent idle at round barriers waiting
+    /// for stragglers (Σ per round of critical-path − each island's
+    /// scaled compute) — the cost of speed heterogeneity the async
+    /// delayed loop exists to expose (DESIGN.md §11).
+    pub sim_idle_seconds: f64,
     /// Upload bytes a monolithic full-precision every-round sync would
     /// have billed for the same run — the denominator of the streaming /
     /// codec savings factor.
@@ -152,6 +159,7 @@ impl RunMetrics {
         m.insert("comm_dropped".into(), Json::Num(self.comm_dropped as f64));
         m.insert("codec_err_l2".into(), Json::Num(self.codec_err_l2));
         m.insert("sim_wall_s".into(), Json::Num(self.sim_wall_seconds()));
+        m.insert("sim_idle_s".into(), Json::Num(self.sim_idle_seconds));
         m.insert(
             "overhead_frac".into(),
             Json::Num(self.phases.overhead_fraction()),

@@ -19,12 +19,21 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+// Hand-rolled (the crate universe is fixed: `thiserror` is not a
+// dependency, and a derive on two fields is not worth one).
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {
@@ -381,9 +390,8 @@ mod tests {
     #[test]
     fn parses_real_manifest() {
         // The actual AOT output, if present (built by `make artifacts`).
-        if let Ok(text) =
-            std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/nano.manifest.json"))
-        {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/nano.manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
             let v = Json::parse(&text).unwrap();
             assert!(v.get("artifacts").is_some());
             assert!(v.get("params").unwrap().as_arr().unwrap().len() > 10);

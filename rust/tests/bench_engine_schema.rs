@@ -1,0 +1,106 @@
+//! Schema validation for the repo-root `BENCH_engine.json` perf ledger.
+//!
+//! The ledger's `schema` object documents the exact columns each bench
+//! section carries; every run entry must conform. Historically nothing
+//! checked this, so a malformed hand-pasted row (or a bench whose
+//! printed JSON drifted from the schema) went unnoticed until a human
+//! read the file. This suite needs no artifacts and runs everywhere —
+//! the CI `bench-smoke` job invokes it by name.
+
+use diloco::util::json::Json;
+use std::collections::BTreeSet;
+
+fn ledger() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("cannot read {path}: {e}"));
+    Json::parse(&text).unwrap_or_else(|e| panic!("BENCH_engine.json is not JSON: {e:?}"))
+}
+
+/// Sections whose run rows are arrays of per-variant objects.
+const ARRAY_SECTIONS: &[&str] =
+    &["stream_sync", "topology", "churn", "async_delay"];
+/// Sections whose run entry is a single object of columns.
+const OBJECT_SECTIONS: &[&str] = &["microbench_hotpath", "fig2_table2_main"];
+
+fn schema_keys(schema: &Json, section: &str) -> BTreeSet<String> {
+    schema
+        .expect(section)
+        .unwrap_or_else(|e| panic!("schema lacks {section}: {e}"))
+        .as_obj()
+        .unwrap_or_else(|e| panic!("schema.{section} is not an object: {e}"))
+        .keys()
+        .cloned()
+        .collect()
+}
+
+#[test]
+fn every_run_row_matches_its_schema_section() {
+    let ledger = ledger();
+    let schema = ledger.expect("schema").unwrap();
+    let runs = ledger.expect("runs").unwrap().as_arr().unwrap();
+    assert!(!runs.is_empty(), "the ledger must carry at least one PR entry");
+    for (i, run) in runs.iter().enumerate() {
+        let obj = run
+            .as_obj()
+            .unwrap_or_else(|e| panic!("runs[{i}] is not an object: {e}"));
+        run.expect("pr")
+            .and_then(|p| p.as_str().map(str::to_string))
+            .unwrap_or_else(|e| panic!("runs[{i}] lacks a pr label: {e}"));
+        run.expect("host")
+            .and_then(|h| h.as_str().map(str::to_string))
+            .unwrap_or_else(|e| panic!("runs[{i}] lacks a host note: {e}"));
+        for (key, value) in obj {
+            if key == "pr" || key == "host" || key.ends_with("_note") {
+                continue;
+            }
+            let want = schema_keys(schema, key);
+            let rows: Vec<&Json> = if ARRAY_SECTIONS.contains(&key.as_str()) {
+                value
+                    .as_arr()
+                    .unwrap_or_else(|e| panic!("runs[{i}].{key} is not an array: {e}"))
+                    .iter()
+                    .collect()
+            } else if OBJECT_SECTIONS.contains(&key.as_str()) {
+                vec![value]
+            } else {
+                panic!("runs[{i}] carries unknown section {key:?} — add it to this test");
+            };
+            assert!(!rows.is_empty(), "runs[{i}].{key} is empty");
+            for (j, row) in rows.iter().enumerate() {
+                let got: BTreeSet<String> = row
+                    .as_obj()
+                    .unwrap_or_else(|e| {
+                        panic!("runs[{i}].{key}[{j}] is not an object: {e}")
+                    })
+                    .keys()
+                    .cloned()
+                    .collect();
+                assert_eq!(
+                    got, want,
+                    "runs[{i}].{key}[{j}] columns diverge from schema.{key}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn schema_covers_every_known_section() {
+    let ledger = ledger();
+    let schema = ledger.expect("schema").unwrap().as_obj().unwrap();
+    for section in ARRAY_SECTIONS.iter().chain(OBJECT_SECTIONS) {
+        assert!(
+            schema.contains_key(*section),
+            "schema lacks the {section} section"
+        );
+    }
+    // The description must tell a human how to regenerate each section.
+    let desc = ledger.expect("description").unwrap().as_str().unwrap().to_string();
+    for bench in ["microbench_hotpath", "stream_sync", "topology", "async_delay"] {
+        assert!(
+            desc.contains(bench),
+            "description does not say how to fill the {bench} section"
+        );
+    }
+}

@@ -5,7 +5,7 @@ use diloco::checkpoint;
 use diloco::comm::codec::Codec;
 use diloco::config::{
     ChurnConfig, ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig,
-    StreamConfig, SyncSchedule, TopologyConfig,
+    SpeedConfig, StreamConfig, SyncConfig, SyncSchedule, TopologyConfig,
 };
 use diloco::coordinator::Coordinator;
 use diloco::data::batch::BatchIter;
@@ -954,6 +954,195 @@ fn churn_leaver_rejoins_with_parked_state_and_run_resumes() {
     resume_cfg.ckpt.resume = Some(path.clone());
     let resumed = Coordinator::new(resume_cfg, rt).unwrap().run().unwrap();
     assert_bitwise_tail(&straight, &resumed, 1, "churn+resume");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn async_delay0_and_uniform_speed_match_default_loop_bitwise() {
+    // The async acceptance criterion (DESIGN.md §11): explicitly
+    // configuring the synchronous homogeneous point of the async layer
+    // — delay_rounds = 0, discount set, an empty speed model — must
+    // reproduce the default (PR-4) loop bitwise, on the star loop with
+    // drops + fragments and on the decentralized ring loop.
+    let Some(rt) = runtime() else { return };
+    let mut star_cfg = small_cfg();
+    star_cfg.comm.drop_prob = 0.3;
+    star_cfg.stream.fragments = 2;
+    star_cfg.seed = 5;
+    let mut ring_cfg = small_cfg();
+    ring_cfg.topology = TopologyConfig::Ring;
+
+    for (what, cfg) in [("star", star_cfg), ("ring", ring_cfg)] {
+        let default_run = Coordinator::new(cfg.clone(), rt.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let mut explicit = cfg.clone();
+        explicit.speed = SpeedConfig::parse("").unwrap();
+        explicit.sync = SyncConfig { delay_rounds: 0, discount: 0.5 };
+        let async_run = Coordinator::new(explicit, rt.clone()).unwrap().run().unwrap();
+        assert_eq!(
+            async_run.final_params, default_run.final_params,
+            "{what}: final params diverged"
+        );
+        assert_eq!(async_run.metrics.loss_curve, default_run.metrics.loss_curve);
+        for (a, b) in async_run
+            .metrics
+            .eval_curve
+            .iter()
+            .zip(&default_run.metrics.eval_curve)
+        {
+            assert_eq!(a.mean_nll, b.mean_nll, "{what}: eval diverged");
+        }
+        assert_eq!(async_run.comm_per_round, default_run.comm_per_round);
+        assert_eq!(async_run.drops_per_worker, default_run.drops_per_worker);
+        assert_eq!(async_run.metrics.comm_messages, default_run.metrics.comm_messages);
+        assert!(async_run.round_stats.iter().all(|rs| rs.staleness == 0));
+    }
+}
+
+#[test]
+fn async_delay_overlaps_transfers_and_drains_everything() {
+    // Delayed application: every non-final compute round defers its
+    // whole transfer behind the next inner phase (zero barrier rows),
+    // the end-of-run drain closes one extra row per in-flight batch,
+    // the same total bytes move as in the synchronous run, and recorded
+    // staleness is min(D, T−1−r). The schedule genuinely changes
+    // training (workers see a stale global), so params must differ from
+    // the synchronous run while staying finite and deterministic.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.pretrain_steps = 0;
+    let init = rt.init_params().unwrap();
+    let sync_run = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    cfg.sync.delay_rounds = 2;
+    let r1 = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    let r2 = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init))
+        .unwrap();
+    assert_eq!(r1.final_params, r2.final_params, "delayed runs must be seeded");
+    assert_eq!(r1.metrics.loss_curve, r2.metrics.loss_curve);
+    assert_ne!(
+        r1.final_params, sync_run.final_params,
+        "a 2-round delay must change the trajectory"
+    );
+    assert!(r1.final_params.all_finite());
+    assert!(r1.metrics.final_ppl().is_finite());
+    // Billing shape: T compute rows + D drain rows; only the final
+    // compute round and the drain close barriers.
+    let rows = &r1.comm_per_round;
+    assert_eq!(rows.len(), cfg.rounds + 2);
+    assert!(rows[..cfg.rounds - 1].iter().all(|r| r.barrier_s == 0.0));
+    assert!(rows[cfg.rounds - 1].barrier_s > 0.0);
+    assert!(rows[cfg.rounds..].iter().all(|r| r.barrier_s > 0.0));
+    assert!(r1.metrics.sim_comm_seconds < sync_run.metrics.sim_comm_seconds);
+    assert_eq!(r1.metrics.comm_bytes, sync_run.metrics.comm_bytes);
+    assert_eq!(r1.metrics.comm_messages, sync_run.metrics.comm_messages);
+    // Staleness: steady-state D, tapering across the drained tail.
+    assert_eq!(r1.round_stats.len(), cfg.rounds);
+    for rs in &r1.round_stats {
+        assert_eq!(rs.staleness, 2usize.min(cfg.rounds - 1 - rs.round));
+    }
+}
+
+#[test]
+fn async_jitter_speed_profile_replays_across_engines() {
+    // Seeded-jitter speed heterogeneity + one-round delay: the jitter
+    // draws are a pure function of (seed, worker, round), so the whole
+    // training trace — params, losses, billing rows, staleness — must
+    // replay bitwise under the sequential and parallel engines (only
+    // real wall-clock timing may differ).
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.speed = SpeedConfig::parse("w0=2.0,jitter:0.3").unwrap();
+    cfg.sync.delay_rounds = 1;
+    cfg.comm.drop_prob = 0.3;
+    cfg.seed = 13;
+    let init = rt.init_params().unwrap();
+    let run = |engine: EngineConfig| {
+        let mut cfg = cfg.clone();
+        cfg.engine = engine;
+        Coordinator::new(cfg, rt.clone())
+            .unwrap()
+            .run_from(Some(init.clone()))
+            .unwrap()
+    };
+    let seq = run(EngineConfig::Sequential);
+    let par = run(EngineConfig::Parallel { threads: 0 });
+    assert_eq!(par.final_params, seq.final_params);
+    assert_eq!(par.metrics.loss_curve, seq.metrics.loss_curve);
+    assert_eq!(par.comm_per_round, seq.comm_per_round);
+    assert_eq!(par.drops_per_worker, seq.drops_per_worker);
+    assert_eq!(
+        par.round_stats
+            .iter()
+            .map(|rs| (rs.round, rs.staleness))
+            .collect::<Vec<_>>(),
+        seq.round_stats
+            .iter()
+            .map(|rs| (rs.round, rs.staleness))
+            .collect::<Vec<_>>()
+    );
+    // The straggler really shows up in the idle accounting.
+    assert!(seq.metrics.sim_idle_seconds > 0.0);
+}
+
+#[test]
+fn async_churn_resume_composition_is_bitwise() {
+    // The full composition: one-round delayed application + elastic
+    // membership, checkpointed at a boundary where a delayed
+    // contribution is still in flight (with D = 1 and no drops, every
+    // non-final boundary is), then resumed. The queue crosses the
+    // save/load boundary and the continuation must be bitwise
+    // (DESIGN.md §11 determinism contract). Drops × delay is covered by
+    // the jitter replay test above.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 4;
+    cfg.sync.delay_rounds = 1;
+    cfg.seed = 17;
+    cfg.churn = Some(ChurnConfig::parse("leave:w1@r1,join:w1@r3").unwrap());
+
+    let straight = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run()
+        .unwrap();
+
+    // A full-length run that saves once at boundary 3 — a *non-final*
+    // boundary, so the D = 1 queue still holds round 2's batch (a save
+    // at the run's own final boundary would sit after the drain).
+    let path = tmp_state_path("async_churn");
+    let mut saver_cfg = cfg.clone();
+    saver_cfg.ckpt.save_every = 3;
+    saver_cfg.ckpt.path = Some(path.clone());
+    let saver = Coordinator::new(saver_cfg, rt.clone()).unwrap().run().unwrap();
+    assert_eq!(
+        saver.final_params, straight.final_params,
+        "saving must not perturb the run"
+    );
+    let st = checkpoint::load_state(&path, &rt.manifest).unwrap();
+    assert_eq!(st.round, 3);
+    assert_eq!(st.pending_sync.len(), 1, "D=1 leaves one batch in flight");
+    assert_eq!(st.pending_sync[0].round, 2);
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.ckpt.resume = Some(path.clone());
+    let resumed = Coordinator::new(resume_cfg, rt.clone()).unwrap().run().unwrap();
+    assert_bitwise_tail(&straight, &resumed, 1, "async+churn+resume");
+    // The resumed run re-ran round 3 plus the drain: its billing rows
+    // must equal the straight run's tail rows exactly.
+    assert_eq!(
+        resumed.comm_per_round[..],
+        straight.comm_per_round[3..],
+        "resumed billing rows diverged"
+    );
     std::fs::remove_file(&path).ok();
 }
 

@@ -23,8 +23,9 @@ fn runtime(model: &str) -> Option<Arc<Runtime>> {
 fn batch(rt: &Runtime, steps: usize, shift: i32) -> (Vec<i32>, Vec<i32>) {
     let c = &rt.manifest.config;
     let n = steps * c.batch_size * c.seq_len;
-    let tokens: Vec<i32> = (0..n).map(|i| ((i as i32 + shift) % c.vocab_size as i32)).collect();
-    let targets: Vec<i32> = (0..n).map(|i| ((i as i32 + shift + 1) % c.vocab_size as i32)).collect();
+    let vocab = c.vocab_size as i32;
+    let tokens: Vec<i32> = (0..n).map(|i| (i as i32 + shift) % vocab).collect();
+    let targets: Vec<i32> = (0..n).map(|i| (i as i32 + shift + 1) % vocab).collect();
     (tokens, targets)
 }
 
