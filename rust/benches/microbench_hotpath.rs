@@ -1,27 +1,48 @@
 //! Hot-path microbenchmarks — the §Perf instrument (not a paper figure).
 //!
-//! Times each primitive on the training path in isolation:
+//! Two suites:
+//!
+//! **Artifact-free kernel suite** (runs first, on any machine — no AOT
+//! artifacts needed, so the CI bench-smoke job always measures it):
+//! before/after ns-per-element for the round loop's pure-rust hot paths —
+//! fragment averaging (legacy scalar multi-pass vs the fused chunked
+//! kernel fanned across the work-stealing pool), the outer optimizer
+//! step (legacy indexed scalar loop vs pooled `step_fragments`), codec
+//! round-trips (two-pass extract+transcode vs the fused single pass),
+//! extract/scatter with and without allocation, and a k=256 pool smoke
+//! whose outputs must be bitwise-identical to sequential. The average
+//! and outer-step fast paths are HARD-ASSERTED ≥ 2× over scalar at k=64
+//! whenever the host has ≥ 2 cores (skipped with a message otherwise),
+//! and the fast paths are bitwise cross-checked against scalar inline.
+//!
+//! **Artifact suite** (needs `make artifacts`): per-primitive timings of
 //!   · train_step (1 fused inner AdamW step, PJRT execute + readback)
 //!   · train_chunk_5 / train_chunk_25 (amortized per-step cost)
-//!   · eval_step, grad_step, apply_update
-//!   · outer optimizer step, averaging, pruning, delta (pure rust)
+//!   · eval_step, outer step, averaging, pruning, delta (pure rust)
 //!   · batch sampling + corpus/tokenizer build (data substrate)
 //! The per-step amortization of the chunk path vs the single-step path is
 //! the headline number recorded in EXPERIMENTS.md §Perf.
 
 use diloco::bench::scenarios::load_runtime;
-use diloco::bench::{time_median, BenchCtx, Table};
+use diloco::bench::{smoke, time_median, BenchCtx, Table};
+use diloco::comm::codec::{extract_transcode, Codec};
+use diloco::comm::fragment::{FragmentPlan, LeafSlice};
 use diloco::config::{DataConfig, OuterOptConfig};
-use diloco::coordinator::{average, opt::OuterOpt, prune};
+use diloco::coordinator::{average, opt::OuterOpt, prune, scratch::RoundScratch};
 use diloco::data::batch::BatchIter;
 use diloco::data::Dataset;
 use diloco::engine::{self, InnerPhaseExecutor, ParallelIslands, Sequential};
 use diloco::runtime::{Tensors, Value};
+use diloco::util::math;
 use diloco::util::rng::Rng;
 use diloco::worker::Worker;
+use std::hint::black_box;
 
 fn main() -> anyhow::Result<()> {
     let ctx = BenchCtx::new("microbench_hotpath");
+    // The kernel suite needs no artifacts — run it before load_runtime,
+    // which exits the process when the AOT artifacts are missing.
+    hotpath_suite(&ctx);
     let rt = load_runtime("nano");
     let mcfg = rt.manifest.config.clone();
     let params = rt.init_params()?;
@@ -243,4 +264,390 @@ fn main() -> anyhow::Result<()> {
     );
     ctx.finish();
     Ok(())
+}
+
+// ---- artifact-free kernel suite ---------------------------------------
+
+/// Legacy PR-5 fragment average, element at a time: normalize, clone the
+/// first payload, scale, then one full axpy pass per remaining payload.
+/// Kept as the scalar baseline the fused kernel must beat (and match
+/// bitwise — same per-element op order, different traversal).
+#[inline(never)]
+fn average_scalar_multipass(payloads: &[Vec<f32>], weights: &[f64]) -> Vec<f32> {
+    let total: f64 = weights.iter().sum();
+    let mut out = payloads[0].clone();
+    math::scale_scalar(&mut out, (weights[0] / total) as f32);
+    for (p, &w) in payloads[1..].iter().zip(&weights[1..]) {
+        math::axpy_scalar(&mut out, (w / total) as f32, p);
+    }
+    out
+}
+
+/// Legacy indexed Nesterov fragment step (the historical `for_slices2`
+/// body, redundant `1.0 *` included): bounds-checked element-at-a-time
+/// indexing, one fragment at a time on one thread.
+#[inline(never)]
+#[allow(clippy::identity_op)]
+fn nesterov_scalar(
+    params: &mut Tensors,
+    mom: &mut Tensors,
+    avg: &[f32],
+    slices: &[LeafSlice],
+    mu: f32,
+    c1: f32,
+    c2: f32,
+) {
+    let mut off = 0usize;
+    for s in slices {
+        let p = &mut params.leaves_mut()[s.leaf];
+        let m = &mut mom.leaves_mut()[s.leaf];
+        for i in s.start..s.end {
+            let d = avg[off + i - s.start];
+            m[i] *= mu;
+            m[i] += 1.0 * d;
+            p[i] += c1 * d;
+            p[i] += c2 * m[i];
+        }
+        off += s.len();
+    }
+}
+
+fn zeros_like(t: &Tensors) -> Tensors {
+    let mut z = t.clone();
+    z.scale(0.0);
+    z
+}
+
+/// Before/after ns-per-element for the round loop's pure-rust hot paths.
+/// See the module docs for what is asserted vs merely reported.
+fn hotpath_suite(ctx: &BenchCtx) {
+    let smoke = smoke();
+    let n_frag = 8usize;
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let threads = cores.min(n_frag);
+    let reps = if smoke { 5 } else { 15 };
+    let mut rng = Rng::new(0xD11_0C0);
+    let mut table = Table::new(
+        "hot-path kernels (pure rust, artifact-free)",
+        &["op", "k", "ns_per_elem", "vs_scalar", "notes"],
+    );
+    let mut csv = String::from("op,k,ns_per_elem,speedup\n");
+    let ns = |t: f64, elems: usize| t * 1e9 / elems as f64;
+
+    // Fragment average: scalar multi-pass vs fused kernel on the pool.
+    for &k in &[8usize, 64, 256] {
+        // Constant total work across k so every row times a comparable
+        // volume: P fragments × k payloads × n elements.
+        let n = (if smoke { 1 << 15 } else { 1 << 19 }) / k;
+        let payloads: Vec<Vec<Vec<f32>>> = (0..n_frag)
+            .map(|_| {
+                (0..k)
+                    .map(|_| (0..n).map(|_| rng.f32() - 0.5).collect())
+                    .collect()
+            })
+            .collect();
+        let weights: Vec<f64> = (0..k).map(|_| 1.0 + rng.f64()).collect();
+        let elems = n_frag * k * n;
+
+        // Bitwise cross-check before timing: fused == scalar per element.
+        {
+            let mut scratch = RoundScratch::new();
+            let (mut norm, mut out) = (scratch.lease(), scratch.lease());
+            average::weighted_average_into(&payloads[0], &weights, &mut norm, &mut out);
+            let want = average_scalar_multipass(&payloads[0], &weights);
+            assert_eq!(out.len(), want.len());
+            for (a, b) in out.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "fused average diverged: {a} != {b}");
+            }
+        }
+
+        let t_scalar = time_median(reps, || {
+            for pl in &payloads {
+                black_box(average_scalar_multipass(pl, &weights));
+            }
+        });
+        let mut scratch = RoundScratch::new();
+        let t_fused = time_median(reps, || {
+            let mut tasks: Vec<Box<dyn FnOnce() -> (Vec<f32>, Vec<f32>) + Send + '_>> =
+                Vec::with_capacity(n_frag);
+            for pl in &payloads {
+                let (mut norm, mut out) = (scratch.lease(), scratch.lease());
+                let wt = &weights;
+                tasks.push(Box::new(move || {
+                    average::weighted_average_into(pl, wt, &mut norm, &mut out);
+                    (norm, out)
+                }));
+            }
+            for (norm, out) in engine::run_tasks(threads, tasks) {
+                scratch.recycle(norm);
+                scratch.recycle(out);
+            }
+        });
+        let speedup = t_scalar / t_fused;
+        table.row(vec![
+            "average_scalar".into(),
+            format!("{k}"),
+            format!("{:.3}", ns(t_scalar, elems)),
+            "1.00".into(),
+            format!("{n_frag} frags × {n} elems, 1 thread"),
+        ]);
+        table.row(vec![
+            "average_fused_pool".into(),
+            format!("{k}"),
+            format!("{:.3}", ns(t_fused, elems)),
+            format!("{speedup:.2}x"),
+            format!("fused kernel on {threads} pooled threads"),
+        ]);
+        csv.push_str(&format!(
+            "average_scalar,{k},{:.4},1.00\naverage_fused_pool,{k},{:.4},{speedup:.3}\n",
+            ns(t_scalar, elems),
+            ns(t_fused, elems),
+        ));
+        if k == 64 {
+            if cores >= 2 {
+                assert!(
+                    speedup >= 2.0,
+                    "fragment average fast path must be ≥2x over scalar at k=64 \
+                     on a {cores}-core host, measured {speedup:.2}x"
+                );
+            } else {
+                println!(
+                    "[hotpath] single-core host: k=64 average ≥2x assert skipped \
+                     (measured {speedup:.2}x)"
+                );
+            }
+        }
+    }
+
+    // Outer optimizer step (Nesterov): legacy indexed scalar loop, one
+    // fragment at a time, vs the pooled batch step over P=8 fragments.
+    {
+        let n_total = if smoke { 1 << 15 } else { 1 << 20 };
+        let init: Vec<f32> = (0..n_total).map(|_| rng.f32() - 0.5).collect();
+        let dvals: Vec<f32> = (0..n_total).map(|_| 0.01 * (rng.f32() - 0.5)).collect();
+        let make = |v: &[f32]| {
+            Tensors::from_raw(vec![v[..v.len() / 2].to_vec(), v[v.len() / 2..].to_vec()])
+        };
+        let template = make(&init);
+        let plan = FragmentPlan::for_tensors(&template, n_frag);
+        let delta = make(&dvals);
+        let payloads: Vec<Vec<f32>> =
+            (0..n_frag).map(|f| plan.extract(&delta, f)).collect();
+        let (lr, mu) = (0.7f32, 0.9f32);
+
+        let mut p_scalar = make(&init);
+        let mut m_scalar = zeros_like(&p_scalar);
+        let t_scalar = time_median(reps, || {
+            for (f, payload) in payloads.iter().enumerate() {
+                nesterov_scalar(
+                    &mut p_scalar,
+                    &mut m_scalar,
+                    payload,
+                    plan.slices(f),
+                    mu,
+                    -lr,
+                    -lr * mu,
+                );
+            }
+        });
+
+        let mut outer =
+            OuterOpt::new(&OuterOptConfig::Nesterov { lr, mu }, &zeros_like(&template));
+        let mut p_pool = make(&init);
+        let batch: Vec<(usize, &[f32])> = payloads
+            .iter()
+            .enumerate()
+            .map(|(f, p)| (f, p.as_slice()))
+            .collect();
+        let t_pool = time_median(reps, || {
+            outer.step_fragments(&mut p_pool, &batch, &plan, threads);
+        });
+        // Both sides applied exactly `reps` identical rounds from the
+        // same start — the trajectories must agree bit for bit.
+        for (a, b) in p_scalar.iter_flat().zip(p_pool.iter_flat()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "pooled outer step diverged: {a} != {b}");
+        }
+        let speedup = t_scalar / t_pool;
+        table.row(vec![
+            "outer_nesterov_scalar".into(),
+            "-".into(),
+            format!("{:.3}", ns(t_scalar, n_total)),
+            "1.00".into(),
+            format!("{n_frag} frags × {} elems, 1 thread", n_total / n_frag),
+        ]);
+        table.row(vec![
+            "outer_nesterov_pool".into(),
+            "-".into(),
+            format!("{:.3}", ns(t_pool, n_total)),
+            format!("{speedup:.2}x"),
+            format!("step_fragments on {threads} pooled threads, bitwise == scalar"),
+        ]);
+        csv.push_str(&format!(
+            "outer_nesterov_scalar,-,{:.4},1.00\nouter_nesterov_pool,-,{:.4},{speedup:.3}\n",
+            ns(t_scalar, n_total),
+            ns(t_pool, n_total),
+        ));
+        if cores >= 2 {
+            assert!(
+                speedup >= 2.0,
+                "outer-step fast path must be ≥2x over scalar on a {cores}-core \
+                 host, measured {speedup:.2}x"
+            );
+        } else {
+            println!(
+                "[hotpath] single-core host: outer-step ≥2x assert skipped \
+                 (measured {speedup:.2}x)"
+            );
+        }
+    }
+
+    // Codec round-trip: two-pass extract-then-transcode (allocating) vs
+    // the fused single pass into leased scratch. Report-only.
+    {
+        let n_total = if smoke { 1 << 14 } else { 1 << 18 };
+        let vals: Vec<f32> = (0..n_total).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let t = Tensors::from_raw(vec![
+            vals[..n_total / 2].to_vec(),
+            vals[n_total / 2..].to_vec(),
+        ]);
+        let plan = FragmentPlan::for_tensors(&t, n_frag);
+        let mut scratch = RoundScratch::new();
+        for codec in [Codec::F16, Codec::Q8] {
+            let t_twopass = time_median(reps, || {
+                for f in 0..n_frag {
+                    let mut v = plan.extract(&t, f);
+                    black_box(codec.transcode(&mut v, plan.slices(f)));
+                }
+            });
+            let t_fused = time_median(reps, || {
+                for f in 0..n_frag {
+                    let mut v = scratch.lease();
+                    black_box(extract_transcode(codec, &plan, &t, f, &mut v));
+                    scratch.recycle(v);
+                }
+            });
+            let name = format!("{codec:?}").to_lowercase();
+            table.row(vec![
+                format!("codec_{name}_twopass"),
+                "-".into(),
+                format!("{:.3}", ns(t_twopass, n_total)),
+                "1.00".into(),
+                "extract alloc + transcode pass".into(),
+            ]);
+            table.row(vec![
+                format!("codec_{name}_fused"),
+                "-".into(),
+                format!("{:.3}", ns(t_fused, n_total)),
+                format!("{:.2}x", t_twopass / t_fused),
+                "fused extract+transcode, leased scratch".into(),
+            ]);
+            csv.push_str(&format!(
+                "codec_{name}_twopass,-,{:.4},1.00\ncodec_{name}_fused,-,{:.4},{:.3}\n",
+                ns(t_twopass, n_total),
+                ns(t_fused, n_total),
+                t_twopass / t_fused,
+            ));
+        }
+
+        // Extract + scatter with and without allocation. Report-only.
+        let t_extract_alloc = time_median(reps, || {
+            for f in 0..n_frag {
+                black_box(plan.extract(&t, f));
+            }
+        });
+        let t_extract_into = time_median(reps, || {
+            for f in 0..n_frag {
+                let mut v = scratch.lease();
+                plan.extract_into(&t, f, &mut v);
+                black_box(&v);
+                scratch.recycle(v);
+            }
+        });
+        let frags: Vec<Vec<f32>> = (0..n_frag).map(|f| plan.extract(&t, f)).collect();
+        let mut dst = zeros_like(&t);
+        let t_scatter = time_median(reps, || {
+            for (f, v) in frags.iter().enumerate() {
+                plan.scatter(v, f, &mut dst);
+            }
+        });
+        table.row(vec![
+            "extract_alloc".into(),
+            "-".into(),
+            format!("{:.3}", ns(t_extract_alloc, n_total)),
+            "1.00".into(),
+            "fresh Vec per fragment".into(),
+        ]);
+        table.row(vec![
+            "extract_into_leased".into(),
+            "-".into(),
+            format!("{:.3}", ns(t_extract_into, n_total)),
+            format!("{:.2}x", t_extract_alloc / t_extract_into),
+            "reused scratch buffer".into(),
+        ]);
+        table.row(vec![
+            "scatter".into(),
+            "-".into(),
+            format!("{:.3}", ns(t_scatter, n_total)),
+            "-".into(),
+            "fragment → tensor write-back".into(),
+        ]);
+        csv.push_str(&format!(
+            "extract_alloc,-,{:.4},1.00\nextract_into_leased,-,{:.4},{:.3}\nscatter,-,{:.4},\n",
+            ns(t_extract_alloc, n_total),
+            ns(t_extract_into, n_total),
+            t_extract_alloc / t_extract_into,
+            ns(t_scatter, n_total),
+        ));
+    }
+
+    // k=256 pool smoke: 256 reduction tasks scheduled onto ~cores
+    // workers; outputs must be bitwise-identical to the sequential run
+    // and arrive in task order (the pool determinism contract).
+    {
+        let k = 256usize;
+        let m = if smoke { 1 << 10 } else { 1 << 14 };
+        let data: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..m).map(|_| rng.f32()).collect())
+            .collect();
+        let run = |threads: usize| -> Vec<f32> {
+            let tasks: Vec<Box<dyn FnOnce() -> f32 + Send + '_>> = data
+                .iter()
+                .map(|d| {
+                    Box::new(move || {
+                        d.iter().fold(0.0f32, |acc, &x| acc.mul_add(1.000_001, x))
+                    }) as Box<dyn FnOnce() -> f32 + Send + '_>
+                })
+                .collect();
+            engine::run_tasks(threads, tasks)
+        };
+        let seq = run(1);
+        let mut par = Vec::new();
+        let t_pool = time_median(reps, || {
+            par = run(threads);
+        });
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "pool output diverged from sequential: {a} != {b}"
+            );
+        }
+        table.row(vec![
+            "pool_k256_round".into(),
+            format!("{k}"),
+            format!("{:.3}", ns(t_pool, k * m)),
+            "-".into(),
+            format!("256 tasks on {threads} threads, bitwise == sequential"),
+        ]);
+        csv.push_str(&format!("pool_k256_round,{k},{:.4},\n", ns(t_pool, k * m)));
+    }
+
+    print!("{}", table.render());
+    ctx.emit_csv("hotpath", &csv);
+    println!(
+        "[hotpath] kernel suite done on {cores} cores ({threads} pool threads), \
+         asserts {}",
+        if cores >= 2 { "live" } else { "skipped (1 core)" }
+    );
 }

@@ -101,6 +101,51 @@ impl Codec {
     }
 }
 
+/// Fused extract + encode/decode: flatten fragment `f` of `t` into the
+/// reused buffer `out` (cleared first) with the codec round-trip applied,
+/// returning the squared L2 dequantization error. Bitwise identical to
+/// `plan.extract_into(...)` followed by `codec.transcode(...)`:
+///
+/// * `f32` is a plain copy (no transcode pass at all);
+/// * `f16` converts each element as it is copied — same per-element
+///   function in the same element order as the two-pass form, one memory
+///   pass instead of two;
+/// * `q8` needs each slice's min/max before it can quantize, so it keeps
+///   the copy-then-transcode structure (the wire format does not permit a
+///   single pass).
+pub fn extract_transcode(
+    codec: Codec,
+    plan: &crate::comm::fragment::FragmentPlan,
+    t: &crate::runtime::Tensors,
+    f: usize,
+    out: &mut Vec<f32>,
+) -> f64 {
+    match codec {
+        Codec::F32 => {
+            plan.extract_into(t, f, out);
+            0.0
+        }
+        Codec::F16 => {
+            out.clear();
+            out.reserve(plan.elements(f));
+            let mut err_sq = 0.0f64;
+            for s in plan.slices(f) {
+                for &orig in &t.leaves()[s.leaf][s.start..s.end] {
+                    let x = f16_bits_to_f32(f32_to_f16_bits(orig));
+                    let e = (orig - x) as f64;
+                    err_sq += e * e;
+                    out.push(x);
+                }
+            }
+            err_sq
+        }
+        Codec::Q8 => {
+            plan.extract_into(t, f, out);
+            codec.transcode(out, plan.slices(f))
+        }
+    }
+}
+
 /// Uniform 8-bit round trip over one contiguous slice; returns the
 /// squared error. `scale = (max - min) / 255`; a constant slice encodes
 /// exactly (scale 0 ⇒ every value decodes to `min`).
@@ -331,6 +376,33 @@ mod tests {
                     .map(|(a, b)| ((a - b) as f64).powi(2))
                     .sum();
                 assert_eq!(err, recomputed, "{:?}", codec);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_extract_transcode_fusion_is_bitwise() {
+        use crate::comm::fragment::FragmentPlan;
+        use crate::runtime::Tensors;
+        check("fused extract+transcode == two-pass bitwise", 50, |g| {
+            let a = g.f32_vec(1..40, 3.0);
+            let b = g.f32_vec(1..40, 3.0);
+            let t = Tensors::from_raw(vec![a, b]);
+            let p = g.usize_in(1..6);
+            let plan = FragmentPlan::for_tensors(&t, p);
+            for codec in [Codec::F32, Codec::F16, Codec::Q8] {
+                for f in 0..plan.n_fragments() {
+                    let mut two_pass = plan.extract(&t, f);
+                    let want_err = codec.transcode(&mut two_pass, plan.slices(f));
+                    let mut fused = vec![f32::NAN; 5]; // dirty reused buffer
+                    let got_err =
+                        extract_transcode(codec, &plan, &t, f, &mut fused);
+                    assert_eq!(got_err, want_err, "{codec:?} err");
+                    assert_eq!(fused.len(), two_pass.len());
+                    for (x, y) in fused.iter().zip(&two_pass) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{codec:?}");
+                    }
+                }
             }
         });
     }

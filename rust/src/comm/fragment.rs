@@ -110,11 +110,21 @@ impl FragmentPlan {
 
     /// Flatten fragment `f` of `t` into one contiguous payload.
     pub fn extract(&self, t: &Tensors, f: usize) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.elements[f]);
+        let mut out = Vec::new();
+        self.extract_into(t, f, &mut out);
+        out
+    }
+
+    /// As [`Self::extract`], into a reused buffer (cleared first) — the
+    /// allocation-free form for scratch-arena callers. Bitwise identical
+    /// output: both are straight `extend_from_slice` copies in slice
+    /// order.
+    pub fn extract_into(&self, t: &Tensors, f: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.elements[f]);
         for s in &self.fragments[f] {
             out.extend_from_slice(&t.leaves()[s.leaf][s.start..s.end]);
         }
-        out
     }
 
     /// Write a flat payload back into fragment `f` of `into`.
@@ -225,6 +235,28 @@ mod tests {
                 plan.scatter(&vals, f, &mut rebuilt);
             }
             assert_eq!(rebuilt, t);
+        });
+    }
+
+    #[test]
+    fn extract_into_reused_dirty_buffer_matches_extract() {
+        check("extract_into(reused buf) == extract bitwise", 40, |g| {
+            let a = g.f32_vec(1..30, 5.0);
+            let b = g.f32_vec(1..30, 5.0);
+            let t = toy(&[&a, &b]);
+            let p = g.usize_in(1..6);
+            let plan = FragmentPlan::for_tensors(&t, p);
+            // Seed the buffer with garbage longer than any fragment so a
+            // missing clear() would leak stale values.
+            let mut buf = vec![f32::NAN; a.len() + b.len() + 7];
+            for f in 0..plan.n_fragments() {
+                plan.extract_into(&t, f, &mut buf);
+                let fresh = plan.extract(&t, f);
+                assert_eq!(buf.len(), fresh.len());
+                for (x, y) in buf.iter().zip(&fresh) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
         });
     }
 

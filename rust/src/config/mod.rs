@@ -951,6 +951,11 @@ pub struct ExperimentConfig {
     pub ckpt: CkptConfig,
     /// Inner-phase executor (sequential reference vs parallel islands).
     pub engine: EngineConfig,
+    /// Opt-in float-op-reordering fast paths (`[engine] fast_math`):
+    /// the per-fragment reduction switches to a pairwise payload tree
+    /// (tolerance-tested, NOT bitwise with the golden trace). `false`
+    /// (default) keeps every path on the bitwise reference arithmetic.
+    pub fast_math: bool,
     /// Evaluate every this many rounds (0 = only at end).
     pub eval_every_rounds: usize,
     /// Validation batches per evaluation.
@@ -982,6 +987,7 @@ impl ExperimentConfig {
             churn: None,
             ckpt: CkptConfig::default(),
             engine: EngineConfig::Auto,
+            fast_math: false,
             eval_every_rounds: 1,
             eval_batches: 4,
         }
@@ -1209,6 +1215,7 @@ impl ExperimentConfig {
                 _ => EngineConfig::Parallel { threads },
             };
         }
+        cfg.fast_math = doc.bool_or("engine.fast_math", cfg.fast_math)?;
 
         let topo_kind = doc.str_or("topology.kind", "")?;
         let topo_groups = doc.usize_or("topology.groups", 0)?;
@@ -1866,6 +1873,18 @@ mod tests {
         let doc = TomlDoc::parse("[engine]\nkind = \"parallel:2\"\nthreads = 2").unwrap();
         let cfg = ExperimentConfig::from_toml(&doc).unwrap();
         assert_eq!(cfg.engine, EngineConfig::Parallel { threads: 2 });
+    }
+
+    #[test]
+    fn from_toml_fast_math_knob() {
+        // Off by default — the bitwise golden-trace contract requires
+        // every run to opt in to reordered float paths explicitly.
+        let doc = TomlDoc::parse("").unwrap();
+        assert!(!ExperimentConfig::from_toml(&doc).unwrap().fast_math);
+        let doc = TomlDoc::parse("[engine]\nfast_math = true").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).unwrap().fast_math);
+        let doc = TomlDoc::parse("[engine]\nfast_math = false").unwrap();
+        assert!(!ExperimentConfig::from_toml(&doc).unwrap().fast_math);
     }
 
     #[test]

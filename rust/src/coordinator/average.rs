@@ -50,8 +50,115 @@ pub fn uniform_average_refs(ts: &[&Tensors]) -> Tensors {
 /// parameter space reproduces the monolithic average bitwise — the
 /// property tests below pin that equivalence.
 pub fn weighted_average_flat(payloads: &[Vec<f32>], weights: &[f64]) -> Vec<f32> {
-    let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
-    weighted_average_refs(&refs, weights)
+    let mut norm = Vec::new();
+    let mut out = Vec::new();
+    weighted_average_into(payloads, weights, &mut norm, &mut out);
+    out
+}
+
+/// Element block width for the fused reduction: payloads are walked one
+/// block at a time so the accumulator block stays cache-hot across all k
+/// payload passes, instead of streaming the full accumulator k times.
+const BLOCK: usize = 512;
+
+/// Allocation-free fused weighted average — the hot-path form every
+/// other signature delegates to. `norm` and `out` are caller-provided
+/// scratch (leased from [`super::scratch::RoundScratch`] on the round
+/// loop); both are cleared before use, so reuse across rounds cannot
+/// leak stale values.
+///
+/// **Bitwise contract:** for each element `i` the scalar operations are
+/// `out[i] = payload₀[i] * w₀`, then `out[i] += wⱼ * payloadⱼ[i]` for
+/// j = 1..k in payload order — exactly the per-element sequence of the
+/// legacy scale-then-axpy passes (elements are independent, so blocking
+/// the element loop cannot reorder any individual element's arithmetic).
+/// The block structure only changes *memory traversal*, k passes over a
+/// cache-resident block instead of k passes over the whole fragment; the
+/// property tests pin equality with the multi-pass reference bit for
+/// bit. Float-op *reordering* lives only in the opt-in
+/// [`weighted_average_pairwise_into`].
+pub fn weighted_average_into<P: AsRef<[f32]>>(
+    payloads: &[P],
+    weights: &[f64],
+    norm: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) {
+    assert!(!payloads.is_empty(), "no fragment payloads to average");
+    assert_eq!(payloads.len(), weights.len());
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "all-zero averaging weights");
+    norm.clear();
+    norm.extend(weights.iter().map(|&w| (w / total) as f32));
+    let first = payloads[0].as_ref();
+    let n = first.len();
+    out.clear();
+    out.resize(n, 0.0);
+    for p in payloads {
+        assert_eq!(p.as_ref().len(), n, "payload arity");
+    }
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + BLOCK).min(n);
+        let acc = &mut out[start..end];
+        // out[i] = p₀[i] * w₀ — same scalar product as scaling a copy.
+        for (o, &x) in acc.iter_mut().zip(&first[start..end]) {
+            *o = x * norm[0];
+        }
+        for (p, &w) in payloads[1..].iter().zip(&norm[1..]) {
+            math::axpy(acc, w, &p.as_ref()[start..end]);
+        }
+        start = end;
+    }
+}
+
+/// Opt-in (`[engine] fast_math = true`) pairwise-tree reduction across
+/// the k payloads: halves are averaged recursively and combined, so the
+/// addition order differs from the sequential fold — **not** bitwise
+/// with the default path, but tighter error growth (O(log k) vs O(k))
+/// and a shorter dependence chain. Tolerance-tested against the scalar
+/// reference; golden traces require `fast_math = false`. Allocates
+/// O(log k) temporaries per call (documented exception to the
+/// zero-allocation steady state — the payload buffers dwarf them).
+pub fn weighted_average_pairwise_into<P: AsRef<[f32]>>(
+    payloads: &[P],
+    weights: &[f64],
+    norm: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) {
+    assert!(!payloads.is_empty(), "no fragment payloads to average");
+    assert_eq!(payloads.len(), weights.len());
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "all-zero averaging weights");
+    norm.clear();
+    norm.extend(weights.iter().map(|&w| (w / total) as f32));
+    let n = payloads[0].as_ref().len();
+    for p in payloads {
+        assert_eq!(p.as_ref().len(), n, "payload arity");
+    }
+    let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_ref()).collect();
+    out.clear();
+    out.resize(n, 0.0);
+    pairwise_sum(&refs, norm, out);
+}
+
+/// out[i] = Σⱼ wⱼ·payloadⱼ[i] over `payloads`, combining halves
+/// pairwise. Leaf runs (≤ 2 payloads) fold directly.
+fn pairwise_sum(payloads: &[&[f32]], w: &[f32], out: &mut [f32]) {
+    debug_assert!(!payloads.is_empty());
+    if payloads.len() <= 2 {
+        for (o, &x) in out.iter_mut().zip(payloads[0]) {
+            *o = x * w[0];
+        }
+        if let Some(p) = payloads.get(1) {
+            math::axpy(out, w[1], p);
+        }
+        return;
+    }
+    let mid = payloads.len() / 2;
+    let mut right = vec![0.0f32; out.len()];
+    pairwise_sum(&payloads[..mid], &w[..mid], out);
+    pairwise_sum(&payloads[mid..], &w[mid..], &mut right);
+    math::add_assign(out, &right);
 }
 
 /// As [`weighted_average_flat`], over borrowed payload slices — the
@@ -71,16 +178,10 @@ pub fn weighted_average_flat(payloads: &[Vec<f32>], weights: &[f64]) -> Vec<f32>
 /// assert_eq!(avg, vec![2.0, 4.0]);
 /// ```
 pub fn weighted_average_refs(payloads: &[&[f32]], weights: &[f64]) -> Vec<f32> {
-    assert!(!payloads.is_empty(), "no fragment payloads to average");
-    assert_eq!(payloads.len(), weights.len());
-    let total: f64 = weights.iter().sum();
-    assert!(total > 0.0, "all-zero averaging weights");
-    let mut acc = payloads[0].to_vec();
-    math::scale(&mut acc, (weights[0] / total) as f32);
-    for (p, &w) in payloads[1..].iter().zip(&weights[1..]) {
-        math::axpy(&mut acc, (w / total) as f32, p);
-    }
-    acc
+    let mut norm = Vec::new();
+    let mut out = Vec::new();
+    weighted_average_into(payloads, weights, &mut norm, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -222,6 +323,127 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
             }
         });
+    }
+
+    /// The PR-5 multi-pass reference: copy payload 0, scale it, then one
+    /// full axpy pass per remaining payload — the arithmetic the fused
+    /// block-walking kernel must reproduce bit for bit.
+    fn multipass_reference(payloads: &[&[f32]], weights: &[f64]) -> Vec<f32> {
+        let total: f64 = weights.iter().sum();
+        let mut acc = payloads[0].to_vec();
+        math::scale_scalar(&mut acc, (weights[0] / total) as f32);
+        for (p, &w) in payloads[1..].iter().zip(&weights[1..]) {
+            math::axpy_scalar(&mut acc, (w / total) as f32, p);
+        }
+        acc
+    }
+
+    use crate::util::math;
+
+    #[test]
+    fn prop_fused_average_matches_multipass_bitwise() {
+        // Block-walking the element space with dirty reused scratch must
+        // equal the scalar multi-pass fold bitwise at every length —
+        // including lengths straddling the BLOCK boundary and odd tails.
+        check("fused weighted_average_into == multipass bitwise", 60, |g| {
+            let k = g.usize_in(1..7);
+            let n = g.usize_in(1..40) * g.usize_in(1..40);
+            let payloads: Vec<Vec<f32>> = (0..k)
+                .map(|_| {
+                    let mut v = g.f32_vec(n..n + 1, 3.0);
+                    v.resize(n, 0.0);
+                    v
+                })
+                .collect();
+            let weights: Vec<f64> = (0..k).map(|_| g.f64_in(0.1..5.0)).collect();
+            let refs: Vec<&[f32]> =
+                payloads.iter().map(|p| p.as_slice()).collect();
+            let want = multipass_reference(&refs, &weights);
+            let mut norm = vec![f32::NAN; 2]; // dirty scratch
+            let mut out = vec![f32::NAN; n + 3];
+            super::weighted_average_into(&payloads, &weights, &mut norm, &mut out);
+            assert_eq!(out.len(), want.len());
+            for (a, b) in out.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn fused_average_covers_block_boundaries() {
+        // Exactly BLOCK, BLOCK±1, and a multi-block length.
+        for n in [super::BLOCK - 1, super::BLOCK, super::BLOCK + 1, 3 * super::BLOCK + 5] {
+            let payloads: Vec<Vec<f32>> = (0..3)
+                .map(|j| (0..n).map(|i| (i + j) as f32 * 0.125 - 7.0).collect())
+                .collect();
+            let weights = [1.0, 2.5, 0.25];
+            let refs: Vec<&[f32]> =
+                payloads.iter().map(|p| p.as_slice()).collect();
+            let want = multipass_reference(&refs, &weights);
+            let got = weighted_average_flat(&payloads, &weights);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn prop_pairwise_average_within_tolerance_of_sequential() {
+        // The fast_math tree reduction reorders additions — not bitwise,
+        // but it must stay within float-rounding distance of the
+        // sequential fold (both are exact in infinite precision).
+        check("pairwise average ≈ sequential average", 50, |g| {
+            let k = g.usize_in(1..12);
+            let n = g.usize_in(1..200);
+            let payloads: Vec<Vec<f32>> = (0..k)
+                .map(|_| {
+                    let mut v = g.f32_vec(n..n + 1, 3.0);
+                    v.resize(n, 0.0);
+                    v
+                })
+                .collect();
+            let weights: Vec<f64> = (0..k).map(|_| g.f64_in(0.1..5.0)).collect();
+            let seq = weighted_average_flat(&payloads, &weights);
+            let mut norm = Vec::new();
+            let mut out = Vec::new();
+            super::weighted_average_pairwise_into(
+                &payloads, &weights, &mut norm, &mut out,
+            );
+            assert_eq!(out.len(), seq.len());
+            let mag: f64 = payloads
+                .iter()
+                .flat_map(|p| p.iter())
+                .map(|&x| x.abs() as f64)
+                .fold(0.0, f64::max);
+            let tol = 1e-5 * (1.0 + mag) * k as f64;
+            for (a, b) in out.iter().zip(&seq) {
+                assert!(
+                    ((a - b) as f64).abs() <= tol,
+                    "pairwise {a} vs sequential {b} (tol {tol})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn pairwise_average_of_one_or_two_is_bitwise() {
+        // Leaf runs fold exactly like the sequential path, so k ≤ 2
+        // pairwise results are bitwise even under fast_math.
+        for k in [1usize, 2] {
+            let payloads: Vec<Vec<f32>> = (0..k)
+                .map(|j| (0..37).map(|i| (i * (j + 1)) as f32 * 0.3 - 4.0).collect())
+                .collect();
+            let weights: Vec<f64> = (0..k).map(|j| 1.0 + j as f64).collect();
+            let seq = weighted_average_flat(&payloads, &weights);
+            let mut norm = Vec::new();
+            let mut out = Vec::new();
+            super::weighted_average_pairwise_into(
+                &payloads, &weights, &mut norm, &mut out,
+            );
+            for (a, b) in out.iter().zip(&seq) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

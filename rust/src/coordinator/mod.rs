@@ -43,6 +43,7 @@ pub mod average;
 pub mod baselines;
 pub mod opt;
 pub mod prune;
+pub mod scratch;
 pub mod stats;
 
 use crate::checkpoint::{self, PendingFragment, PendingSync, TrainState, WorkerState};
@@ -508,6 +509,11 @@ impl Coordinator {
         let mut carry_comm_s = 0.0f64;
         let mut codec_err_sq_total = 0.0f64;
         let mut outer = opt::OuterOpt::new(&cfg.outer_opt, &zeros);
+        // Reusable round-local buffers (extracted payloads, fragment
+        // averages, weight tables, discount-scaled copies): after the
+        // first round every lease is a recycled buffer, so the steady
+        // state of the round loop performs no heap allocation for them.
+        let mut scratch = scratch::RoundScratch::new();
         // Delayed contribution queue (DESIGN.md §11), oldest batch
         // first: round t's batch is folded into the global model at the
         // end of round t + D. With D = 0 a batch is applied in the round
@@ -721,14 +727,19 @@ impl Coordinator {
                 let mut assembled: Option<Tensors> = None;
                 let mut dropped_any = false;
                 for (di, &f) in due.iter().enumerate() {
-                    let mut vals = plan.extract(&delta, f);
+                    let mut vals = scratch.lease();
                     // k=1 "accelerating a single worker" (Fig 9): the
                     // outer step is local, nothing crosses the fabric —
-                    // no codec, no billing, no drops.
+                    // no codec, no billing, no drops. Otherwise extract
+                    // and transcode fuse into one pass where the wire
+                    // format permits (bitwise-identical values).
                     let err_sq = if k_t == 1 {
+                        plan.extract_into(&delta, f, &mut vals);
                         0.0
                     } else {
-                        codec.transcode(&mut vals, plan.slices(f))
+                        crate::comm::codec::extract_transcode(
+                            codec, &plan, &delta, f, &mut vals,
+                        )
                     };
                     let bytes = match pruned_payload {
                         Some(total) => {
@@ -762,6 +773,7 @@ impl Coordinator {
                         sent[i][di] = true;
                     } else {
                         dropped_any = true;
+                        scratch.recycle(vals);
                     }
                     // Landed or dropped, the worker keeps training this
                     // fragment from its own parameters until its next
@@ -800,18 +812,74 @@ impl Coordinator {
             }
 
             // Average each landed fragment over its contributors — the
-            // identical arithmetic (and fragment order) the synchronous
-            // loop performed inline — and queue the round's batch. With
-            // D = 0 the batch is applied immediately below, bitwise the
-            // legacy sequence; with D > 0 it waits out its delay while
-            // its transfer hides behind the next inner phase.
+            // identical per-element arithmetic (and fragment order) the
+            // synchronous loop performed inline. Fragments are disjoint,
+            // so under a parallel engine the per-fragment reductions fan
+            // out across the work-stealing pool; outputs are collected
+            // in due order either way, keeping the trace bitwise. The
+            // fused kernel reproduces the legacy scale-then-axpy op
+            // order exactly; `[engine] fast_math` opts into the
+            // tolerance-gated pairwise tree (DESIGN.md §12).
+            let fast_math = cfg.fast_math;
+            let nonempty: Vec<usize> =
+                (0..due.len()).filter(|&di| !frag_rx[di].is_empty()).collect();
+            let reduce_threads = self.exec.reduce_threads(nonempty.len());
+            let mut frag_avgs: Vec<Option<Vec<f32>>> = vec![None; due.len()];
+            if reduce_threads > 1 && nonempty.len() > 1 {
+                let mut tasks: Vec<
+                    Box<dyn FnOnce() -> (usize, Vec<f32>, Vec<f32>) + Send + '_>,
+                > = Vec::with_capacity(nonempty.len());
+                for &di in &nonempty {
+                    let (mut norm, mut out) = (scratch.lease(), scratch.lease());
+                    let (rx, wts) = (&frag_rx[di], &frag_wts[di]);
+                    tasks.push(Box::new(move || {
+                        if fast_math {
+                            average::weighted_average_pairwise_into(
+                                rx, wts, &mut norm, &mut out,
+                            );
+                        } else {
+                            average::weighted_average_into(
+                                rx, wts, &mut norm, &mut out,
+                            );
+                        }
+                        (di, norm, out)
+                    }));
+                }
+                for (di, norm, out) in engine::run_tasks(reduce_threads, tasks) {
+                    scratch.recycle(norm);
+                    frag_avgs[di] = Some(out);
+                }
+            } else {
+                for &di in &nonempty {
+                    let (mut norm, mut out) = (scratch.lease(), scratch.lease());
+                    if fast_math {
+                        average::weighted_average_pairwise_into(
+                            &frag_rx[di], &frag_wts[di], &mut norm, &mut out,
+                        );
+                    } else {
+                        average::weighted_average_into(
+                            &frag_rx[di], &frag_wts[di], &mut norm, &mut out,
+                        );
+                    }
+                    scratch.recycle(norm);
+                    frag_avgs[di] = Some(out);
+                }
+            }
+            // Contributor payloads are done — park them for next round.
+            for rx in &mut frag_rx {
+                for b in rx.drain(..) {
+                    scratch.recycle(b);
+                }
+            }
+
+            // Queue the round's batch. With D = 0 the batch is applied
+            // immediately below, bitwise the legacy sequence; with D > 0
+            // it waits out its delay while its transfer hides behind the
+            // next inner phase.
             let mut frags: Vec<PendingFragment> = Vec::new();
             let mut avg_assembled: Option<Tensors> = None;
             for (di, &f) in due.iter().enumerate() {
-                if frag_rx[di].is_empty() {
-                    continue;
-                }
-                let avg = average::weighted_average_flat(&frag_rx[di], &frag_wts[di]);
+                let Some(avg) = frag_avgs[di].take() else { continue };
                 plan.scatter(&avg, f, avg_assembled.get_or_insert_with(|| zeros.clone()));
                 let landed: Vec<usize> = roster
                     .iter()
@@ -856,6 +924,7 @@ impl Coordinator {
             // bitwise.
             while pending.first().is_some_and(|b| b.round + delay <= t) {
                 let batch = pending.remove(0);
+                let threads = self.exec.reduce_threads(batch.frags.len());
                 apply_pending_batch(
                     batch,
                     t,
@@ -867,6 +936,8 @@ impl Coordinator {
                     &mut pending_adopt,
                     &mut net,
                     &mut round_stats,
+                    &mut scratch,
+                    threads,
                 )?;
             }
 
@@ -890,6 +961,7 @@ impl Coordinator {
             if t + 1 == cfg.rounds {
                 while !pending.is_empty() {
                     let batch = pending.remove(0);
+                    let threads = self.exec.reduce_threads(batch.frags.len());
                     apply_pending_batch(
                         batch,
                         t,
@@ -901,6 +973,8 @@ impl Coordinator {
                         &mut pending_adopt,
                         &mut net,
                         &mut round_stats,
+                        &mut scratch,
+                        threads,
                     )?;
                     net.end_round();
                 }
@@ -1005,6 +1079,10 @@ impl Coordinator {
         // starting from the shared (pretrained) initialization.
         let mut replicas: Vec<Tensors> = (0..max_k).map(|_| global.clone()).collect();
         let mut outers = opt::OuterOpt::replicated(&cfg.outer_opt, &zeros, max_k);
+        // Reusable round-local buffers — same allocation-free steady
+        // state as the centralized loop (see `RoundScratch`).
+        let mut scratch = scratch::RoundScratch::new();
+        let fast_math = cfg.fast_math;
         let mut refs: Vec<Tensors> = (0..max_k).map(|_| global.clone()).collect();
         let mut pending_adopt: Vec<Vec<bool>> = vec![vec![true; n_frag]; max_k];
         let mut drops_per_worker = vec![0usize; max_k];
@@ -1159,10 +1237,16 @@ impl Coordinator {
                 let mut bytes_per_frag = Vec::with_capacity(due.len());
                 let mut assembled: Option<Tensors> = None;
                 for (di, &f) in due.iter().enumerate() {
-                    let mut vals = plan.extract(&delta, f);
-                    // k = 1: the outer step is local — no codec, no fabric.
+                    let mut vals = scratch.lease();
+                    // k = 1: the outer step is local — no codec, no
+                    // fabric. Otherwise extract + transcode fuse into
+                    // one pass where the wire format permits.
                     if k_t > 1 {
-                        codec_err_sq += codec.transcode(&mut vals, plan.slices(f));
+                        codec_err_sq += crate::comm::codec::extract_transcode(
+                            codec, &plan, &delta, f, &mut vals,
+                        );
+                    } else {
+                        plan.extract_into(&delta, f, &mut vals);
                     }
                     bytes_per_frag.push(match pruned_payload {
                         Some(total) => {
@@ -1237,7 +1321,13 @@ impl Coordinator {
                 // the star average, so the all-landed uniform case is
                 // bitwise-equal to the star path per replica.
                 let rows = topo.mixing_raw(t, k_t, &weights, &landed);
-                let mix = |row: &[f64]| -> Option<Vec<f32>> {
+                // Mixed averages land in leased scratch (the arena is
+                // threaded through as an argument so the closure holds
+                // no long-lived &mut). `fast_math` swaps the reduction
+                // for the tolerance-gated pairwise tree (DESIGN.md §12).
+                let mix = |row: &[f64],
+                           scratch: &mut scratch::RoundScratch|
+                 -> Option<Vec<f32>> {
                     let mut pl: Vec<&[f32]> = Vec::with_capacity(k_t);
                     let mut wt: Vec<f64> = Vec::with_capacity(k_t);
                     for (j, &wgt) in row.iter().enumerate() {
@@ -1246,36 +1336,70 @@ impl Coordinator {
                             wt.push(wgt);
                         }
                     }
-                    (!pl.is_empty())
-                        .then(|| average::weighted_average_refs(&pl, &wt))
+                    if pl.is_empty() {
+                        return None;
+                    }
+                    let mut norm = scratch.lease();
+                    let mut out = scratch.lease();
+                    if fast_math {
+                        average::weighted_average_pairwise_into(
+                            &pl, &wt, &mut norm, &mut out,
+                        );
+                    } else {
+                        average::weighted_average_into(&pl, &wt, &mut norm, &mut out);
+                    }
+                    scratch.recycle(norm);
+                    Some(out)
                 };
                 // All-equal rows (the ring) share one mixed average
                 // instead of recomputing k bit-identical ones.
                 let shared = (rows.len() > 1
                     && rows.windows(2).all(|w| w[0] == w[1]))
-                .then(|| mix(&rows[0]))
+                .then(|| mix(&rows[0], &mut scratch))
                 .flatten();
                 for (r, row) in rows.iter().enumerate() {
-                    let owned;
+                    let mut owned: Option<Vec<f32>> = None;
                     let mixed: &[f32] = if let Some(m) = &shared {
                         m
-                    } else if let Some(m) = mix(row) {
-                        owned = m;
-                        &owned
                     } else {
-                        continue;
+                        match mix(row, &mut scratch) {
+                            Some(m) => {
+                                owned = Some(m);
+                                owned.as_deref().unwrap()
+                            }
+                            None => continue,
+                        }
                     };
                     let rid = roster[r];
                     outers[rid].step_fragment(&mut replicas[rid], mixed, plan.slices(f), f);
                     pending_adopt[rid][f] = true;
+                    if let Some(m) = owned {
+                        scratch.recycle(m);
+                    }
+                }
+                if let Some(m) = shared {
+                    scratch.recycle(m);
                 }
                 fragments_synced += 1;
                 // Field average over every active worker — the analogue
                 // of the star's received average, for the round stats.
-                let all_refs: Vec<&[f32]> =
-                    payloads[di].iter().map(|p| p.as_slice()).collect();
-                let avg = average::weighted_average_refs(&all_refs, &weights);
+                // The generic kernel reduces the owned payloads directly
+                // (no per-round Vec-of-refs); stats stay on the default
+                // bitwise reduction regardless of `fast_math`.
+                let mut norm = scratch.lease();
+                let mut avg = scratch.lease();
+                average::weighted_average_into(
+                    &payloads[di], &weights, &mut norm, &mut avg,
+                );
                 plan.scatter(&avg, f, avg_assembled.get_or_insert_with(|| zeros.clone()));
+                scratch.recycle(norm);
+                scratch.recycle(avg);
+            }
+            // Contributor payloads are done — park them for next round.
+            for pl in &mut payloads {
+                for b in pl.drain(..) {
+                    scratch.recycle(b);
+                }
             }
 
             for (pos, dropped) in dropped_any.iter().enumerate() {
@@ -1414,6 +1538,8 @@ fn apply_pending_batch(
     pending_adopt: &mut [Vec<bool>],
     net: &mut SimNet,
     round_stats: &mut Vec<RoundStats>,
+    scratch: &mut scratch::RoundScratch,
+    threads: usize,
 ) -> anyhow::Result<()> {
     let staleness = t - batch.round;
     let scale = if discount < 1.0 && staleness > 0 {
@@ -1421,30 +1547,57 @@ fn apply_pending_batch(
     } else {
         1.0
     };
-    for frag in &batch.frags {
-        let f = frag.fragment;
-        if scale != 1.0 {
-            let scaled: Vec<f32> = frag.avg.iter().map(|&v| v * scale).collect();
-            outer.step_fragment(global, &scaled, plan.slices(f), f);
-        } else {
-            outer.step_fragment(global, &frag.avg, plan.slices(f), f);
+    let PendingSync { round, frags, stats } = batch;
+    // Discount-scaled copies live in leased scratch; with the factor
+    // exactly 1.0 the averages are stepped in place — the identical
+    // arithmetic of the synchronous path, no copy at all.
+    let scaled: Vec<Option<Vec<f32>>> = frags
+        .iter()
+        .map(|fr| {
+            (scale != 1.0).then(|| {
+                let mut s = scratch.lease();
+                s.extend(fr.avg.iter().map(|&v| v * scale));
+                s
+            })
+        })
+        .collect();
+    {
+        // The batch's fragments are disjoint parameter ranges, so the
+        // whole batch steps through the outer optimizer in one (possibly
+        // parallel) call. `step_fragments` wants ascending fragment ids;
+        // reordering is bitwise-neutral across disjoint fragments.
+        let mut batch_refs: Vec<(usize, &[f32])> = frags
+            .iter()
+            .zip(&scaled)
+            .map(|(fr, s)| (fr.fragment, s.as_deref().unwrap_or(&fr.avg[..])))
+            .collect();
+        batch_refs.sort_unstable_by_key(|&(f, _)| f);
+        outer.step_fragments(global, &batch_refs, plan, threads);
+    }
+    for (fr, s) in frags.into_iter().zip(scaled) {
+        for &wid in &fr.landed {
+            pending_adopt[wid][fr.fragment] = true;
         }
-        for &wid in &frag.landed {
-            pending_adopt[wid][f] = true;
-        }
-        for &wid in &frag.down_to {
+        for &wid in &fr.down_to {
             if active[wid] {
-                net.send_reliable_to(4 * plan.elements(f) as u64, Direction::Down, wid);
+                net.send_reliable_to(
+                    4 * plan.elements(fr.fragment) as u64,
+                    Direction::Down,
+                    wid,
+                );
             }
+        }
+        scratch.recycle(fr.avg);
+        if let Some(s) = s {
+            scratch.recycle(s);
         }
     }
     anyhow::ensure!(
         global.all_finite(),
         "outer step produced non-finite parameters at round {t} \
-         (batch from round {})",
-        batch.round
+         (batch from round {round})"
     );
-    if let Some(mut rs) = batch.stats {
+    if let Some(mut rs) = stats {
         rs.staleness = staleness;
         round_stats.push(rs);
     }

@@ -20,7 +20,7 @@
 //! [`OuterOpt::step`] is fragment 0 covering everything, and performs
 //! bit-identical arithmetic to the pre-streaming implementation.
 
-use crate::comm::fragment::LeafSlice;
+use crate::comm::fragment::{FragmentPlan, LeafSlice};
 use crate::config::OuterOptConfig;
 use crate::runtime::Tensors;
 
@@ -129,27 +129,38 @@ impl OuterOpt {
         match self {
             OuterOpt::Sgd { lr } => {
                 let c = -*lr;
-                for_slices(params, slices, avg, |p, d| *p += c * d);
+                let mut off = 0usize;
+                for s in slices {
+                    let n = s.len();
+                    let p = &mut params.leaves_mut()[s.leaf][s.start..s.end];
+                    k_sgd(p, &avg[off..off + n], c);
+                    off += n;
+                }
             }
             OuterOpt::SgdM { lr, mu, mom } => {
                 // Heavy ball: mom ← μ·mom + Δ; θ ← θ - lr·mom
                 let (mu, c) = (*mu, -*lr);
-                for_slices2(params, mom, slices, avg, |p, m, d| {
-                    *m *= mu;
-                    *m += 1.0 * d;
-                    *p += c * *m;
-                });
+                let mut off = 0usize;
+                for s in slices {
+                    let n = s.len();
+                    let p = &mut params.leaves_mut()[s.leaf][s.start..s.end];
+                    let m = &mut mom.leaves_mut()[s.leaf][s.start..s.end];
+                    k_sgdm(p, m, &avg[off..off + n], mu, c);
+                    off += n;
+                }
             }
             OuterOpt::Nesterov { lr, mu, mom } => {
                 // PyTorch convention (matches kernels/ref.py):
                 // mom ← μ·mom + Δ; θ ← θ - lr·(Δ + μ·mom)
                 let (mu, c1, c2) = (*mu, -*lr, -*lr * *mu);
-                for_slices2(params, mom, slices, avg, |p, m, d| {
-                    *m *= mu;
-                    *m += 1.0 * d;
-                    *p += c1 * d;
-                    *p += c2 * *m;
-                });
+                let mut off = 0usize;
+                for s in slices {
+                    let n = s.len();
+                    let p = &mut params.leaves_mut()[s.leaf][s.start..s.end];
+                    let m = &mut mom.leaves_mut()[s.leaf][s.start..s.end];
+                    k_nesterov(p, m, &avg[off..off + n], mu, c1, c2);
+                    off += n;
+                }
             }
             OuterOpt::Adam { lr, b1, b2, eps, t, m, v } => {
                 if t.len() <= fragment {
@@ -162,20 +173,162 @@ impl OuterOpt {
                 let (lr, b1, b2, eps) = (*lr, *b1, *b2, *eps);
                 let mut off = 0usize;
                 for s in slices {
-                    let p_leaf = &mut params.leaves_mut()[s.leaf];
-                    let m_leaf = &mut m.leaves_mut()[s.leaf];
-                    let v_leaf = &mut v.leaves_mut()[s.leaf];
-                    for (j, i) in (s.start..s.end).enumerate() {
-                        let g = avg[off + j];
-                        m_leaf[i] = b1 * m_leaf[i] + (1.0 - b1) * g;
-                        v_leaf[i] = b2 * v_leaf[i] + (1.0 - b2) * g * g;
-                        let m_hat = m_leaf[i] as f64 / bc1;
-                        let v_hat = v_leaf[i] as f64 / bc2;
-                        p_leaf[i] -=
-                            (lr as f64 * m_hat / (v_hat.sqrt() + eps as f64)) as f32;
-                    }
-                    off += s.len();
+                    let n = s.len();
+                    let p = &mut params.leaves_mut()[s.leaf][s.start..s.end];
+                    let mm = &mut m.leaves_mut()[s.leaf][s.start..s.end];
+                    let vv = &mut v.leaves_mut()[s.leaf][s.start..s.end];
+                    k_adam(p, mm, vv, &avg[off..off + n], lr, b1, b2, eps, bc1, bc2);
+                    off += n;
                 }
+            }
+        }
+    }
+
+    /// Apply a whole upload round's worth of fragment updates, fanning
+    /// the per-fragment steps across `threads` pooled workers
+    /// ([`crate::engine::run_tasks`]). `batch` pairs each fragment id
+    /// with its averaged payload, **in ascending fragment order**.
+    ///
+    /// Fragments are disjoint slices of the parameter space (and of the
+    /// momentum / Adam state), so the concurrent steps touch
+    /// non-overlapping memory — [`partition_mut`] hands each task its own
+    /// `&mut` pieces via `split_at_mut`, and Adam's per-fragment step
+    /// counters / bias corrections are advanced sequentially up front.
+    /// No float op crosses a fragment boundary, so the result is bitwise
+    /// identical to looping [`OuterOpt::step_fragment`] in batch order at
+    /// any thread count (property-tested below).
+    pub fn step_fragments(
+        &mut self,
+        params: &mut Tensors,
+        batch: &[(usize, &[f32])],
+        plan: &FragmentPlan,
+        threads: usize,
+    ) {
+        if batch.is_empty() {
+            return;
+        }
+        if threads <= 1 || batch.len() == 1 {
+            for &(f, avg) in batch {
+                self.step_fragment(params, avg, plan.slices(f), f);
+            }
+            return;
+        }
+        assert!(
+            batch.windows(2).all(|w| w[0].0 < w[1].0),
+            "step_fragments batch must ascend by fragment id"
+        );
+        for &(f, avg) in batch {
+            debug_assert_eq!(
+                avg.len(),
+                plan.elements(f),
+                "payload does not tile fragment {f}"
+            );
+        }
+        type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
+        match self {
+            OuterOpt::Sgd { lr } => {
+                let c = -*lr;
+                let p_parts = partition_mut(params, batch, plan);
+                let tasks: Vec<Task<'_>> = p_parts
+                    .into_iter()
+                    .zip(batch)
+                    .map(|(pp, &(_f, avg))| {
+                        Box::new(move || {
+                            let mut off = 0usize;
+                            for p in pp {
+                                let n = p.len();
+                                k_sgd(p, &avg[off..off + n], c);
+                                off += n;
+                            }
+                        }) as Task<'_>
+                    })
+                    .collect();
+                crate::engine::run_tasks(threads, tasks);
+            }
+            OuterOpt::SgdM { lr, mu, mom } => {
+                let (mu, c) = (*mu, -*lr);
+                let p_parts = partition_mut(params, batch, plan);
+                let m_parts = partition_mut(mom, batch, plan);
+                let tasks: Vec<Task<'_>> = p_parts
+                    .into_iter()
+                    .zip(m_parts)
+                    .zip(batch)
+                    .map(|((pp, mp), &(_f, avg))| {
+                        Box::new(move || {
+                            let mut off = 0usize;
+                            for (p, m) in pp.into_iter().zip(mp) {
+                                let n = p.len();
+                                k_sgdm(p, m, &avg[off..off + n], mu, c);
+                                off += n;
+                            }
+                        }) as Task<'_>
+                    })
+                    .collect();
+                crate::engine::run_tasks(threads, tasks);
+            }
+            OuterOpt::Nesterov { lr, mu, mom } => {
+                let (mu, c1, c2) = (*mu, -*lr, -*lr * *mu);
+                let p_parts = partition_mut(params, batch, plan);
+                let m_parts = partition_mut(mom, batch, plan);
+                let tasks: Vec<Task<'_>> = p_parts
+                    .into_iter()
+                    .zip(m_parts)
+                    .zip(batch)
+                    .map(|((pp, mp), &(_f, avg))| {
+                        Box::new(move || {
+                            let mut off = 0usize;
+                            for (p, m) in pp.into_iter().zip(mp) {
+                                let n = p.len();
+                                k_nesterov(p, m, &avg[off..off + n], mu, c1, c2);
+                                off += n;
+                            }
+                        }) as Task<'_>
+                    })
+                    .collect();
+                crate::engine::run_tasks(threads, tasks);
+            }
+            OuterOpt::Adam { lr, b1, b2, eps, t, m, v } => {
+                let (lr, b1, b2, eps) = (*lr, *b1, *b2, *eps);
+                // Step counters and bias corrections advance sequentially
+                // in batch order, exactly as the sequential loop would.
+                let mut bcs = Vec::with_capacity(batch.len());
+                for &(f, _) in batch {
+                    if t.len() <= f {
+                        t.resize(f + 1, 0);
+                    }
+                    t[f] += 1;
+                    let steps = t[f];
+                    bcs.push((
+                        1.0 - (b1 as f64).powi(steps as i32),
+                        1.0 - (b2 as f64).powi(steps as i32),
+                    ));
+                }
+                let p_parts = partition_mut(params, batch, plan);
+                let m_parts = partition_mut(m, batch, plan);
+                let v_parts = partition_mut(v, batch, plan);
+                let tasks: Vec<Task<'_>> = p_parts
+                    .into_iter()
+                    .zip(m_parts)
+                    .zip(v_parts)
+                    .zip(batch)
+                    .zip(bcs)
+                    .map(|((((pp, mp), vp), &(_f, avg)), (bc1, bc2))| {
+                        Box::new(move || {
+                            let mut off = 0usize;
+                            for ((p, mm), vv) in
+                                pp.into_iter().zip(mp).zip(vp)
+                            {
+                                let n = p.len();
+                                k_adam(
+                                    p, mm, vv, &avg[off..off + n],
+                                    lr, b1, b2, eps, bc1, bc2,
+                                );
+                                off += n;
+                            }
+                        }) as Task<'_>
+                    })
+                    .collect();
+                crate::engine::run_tasks(threads, tasks);
             }
         }
     }
@@ -292,41 +445,106 @@ pub struct OuterOptSnapshot {
     pub tensors: Vec<Tensors>,
 }
 
-/// Visit `f(param, avg)` over every fragment element, in slice order.
-fn for_slices(
-    params: &mut Tensors,
-    slices: &[LeafSlice],
-    avg: &[f32],
-    mut f: impl FnMut(&mut f32, f32),
-) {
-    let mut off = 0usize;
-    for s in slices {
-        let p = &mut params.leaves_mut()[s.leaf][s.start..s.end];
-        for (pi, &d) in p.iter_mut().zip(&avg[off..off + s.len()]) {
-            f(pi, d);
-        }
-        off += s.len();
+// ---- per-element kernels ----------------------------------------------
+//
+// Shared by the sequential `step_fragment` arms and the parallel
+// `step_fragments` tasks, so "parallel == sequential bitwise" holds by
+// construction: both paths run the *same* function over the same
+// contiguous subslices in the same per-element order. Zipped contiguous
+// slices carry no bounds checks, so the autovectorizer can lift these.
+
+/// θ ← θ - lr·Δ
+#[inline]
+fn k_sgd(p: &mut [f32], avg: &[f32], c: f32) {
+    for (pi, &d) in p.iter_mut().zip(avg) {
+        *pi += c * d;
     }
 }
 
-/// As [`for_slices`], with a second tensor tree (optimizer state).
-fn for_slices2(
-    params: &mut Tensors,
-    state: &mut Tensors,
-    slices: &[LeafSlice],
-    avg: &[f32],
-    mut f: impl FnMut(&mut f32, &mut f32, f32),
-) {
-    let mut off = 0usize;
-    for s in slices {
-        let n = s.len();
-        let p_leaf = &mut params.leaves_mut()[s.leaf];
-        let s_leaf = &mut state.leaves_mut()[s.leaf];
-        for (j, i) in (s.start..s.end).enumerate() {
-            f(&mut p_leaf[i], &mut s_leaf[i], avg[off + j]);
-        }
-        off += n;
+/// mom ← μ·mom + Δ; θ ← θ - lr·mom. (`*m += d` is the simplified form
+/// of the historical `*m += 1.0 * d` — `1.0 * x == x` bitwise for every
+/// f32, pinned by `simplified_sgdm_matches_legacy_expression_bitwise`.)
+#[inline]
+fn k_sgdm(p: &mut [f32], m: &mut [f32], avg: &[f32], mu: f32, c: f32) {
+    for ((pi, mi), &d) in p.iter_mut().zip(m.iter_mut()).zip(avg) {
+        *mi *= mu;
+        *mi += d;
+        *pi += c * *mi;
     }
+}
+
+/// mom ← μ·mom + Δ; θ ← θ - lr·(Δ + μ·mom)
+#[inline]
+fn k_nesterov(p: &mut [f32], m: &mut [f32], avg: &[f32], mu: f32, c1: f32, c2: f32) {
+    for ((pi, mi), &d) in p.iter_mut().zip(m.iter_mut()).zip(avg) {
+        *mi *= mu;
+        *mi += d;
+        *pi += c1 * d;
+        *pi += c2 * *mi;
+    }
+}
+
+/// Adam with the bias corrections precomputed per fragment.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn k_adam(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    avg: &[f32],
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    bc1: f64,
+    bc2: f64,
+) {
+    for (((pi, mi), vi), &g) in
+        p.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).zip(avg)
+    {
+        *mi = b1 * *mi + (1.0 - b1) * g;
+        *vi = b2 * *vi + (1.0 - b2) * g * g;
+        let m_hat = *mi as f64 / bc1;
+        let v_hat = *vi as f64 / bc2;
+        *pi -= (lr as f64 * m_hat / (v_hat.sqrt() + eps as f64)) as f32;
+    }
+}
+
+/// Split a tensor tree into per-batch-entry bundles of disjoint `&mut`
+/// slice pieces, one bundle per `(fragment, payload)` pair, in slice
+/// order within each bundle. Fragments are consecutive flat ranges and
+/// the batch ascends by fragment id, so each leaf's cut points ascend
+/// and progressive `split_at_mut` distributes the pieces without any
+/// unsafe aliasing.
+fn partition_mut<'a>(
+    t: &'a mut Tensors,
+    batch: &[(usize, &[f32])],
+    plan: &FragmentPlan,
+) -> Vec<Vec<&'a mut [f32]>> {
+    let n_leaves = t.n_leaves();
+    let mut cuts: Vec<Vec<(usize, usize, usize)>> = vec![Vec::new(); n_leaves];
+    for (bi, &(f, _)) in batch.iter().enumerate() {
+        for s in plan.slices(f) {
+            cuts[s.leaf].push((bi, s.start, s.end));
+        }
+    }
+    for leaf_cuts in &mut cuts {
+        leaf_cuts.sort_by_key(|&(_, start, _)| start);
+    }
+    let mut buckets: Vec<Vec<&'a mut [f32]>> =
+        (0..batch.len()).map(|_| Vec::new()).collect();
+    for (leaf, leaf_cuts) in t.leaves_mut().iter_mut().zip(&cuts) {
+        let mut rest: &'a mut [f32] = leaf.as_mut_slice();
+        let mut consumed = 0usize;
+        for &(bi, start, end) in leaf_cuts {
+            let (_gap, tail) = rest.split_at_mut(start - consumed);
+            let (piece, tail) = tail.split_at_mut(end - start);
+            buckets[bi].push(piece);
+            rest = tail;
+            consumed = end;
+        }
+    }
+    buckets
 }
 
 #[cfg(test)]
@@ -506,6 +724,152 @@ mod tests {
         assert!((got[3] + 0.3).abs() < 1e-4, "{}", got[3]);
         // Fragment 0 advanced 5 steps and moved further.
         assert!(got[0] < got[2], "{} vs {}", got[0], got[2]);
+    }
+
+    #[test]
+    fn simplified_sgdm_matches_legacy_expression_bitwise() {
+        // Regression pin for dropping the redundant multiply: the SgdM /
+        // Nesterov arms historically computed `*m += 1.0 * d`; the
+        // kernels now use `*m += d`. IEEE 754 guarantees `1.0 * x == x`
+        // bitwise for every f32 (including ±0, subnormals, ±inf), so the
+        // trajectories must agree bit for bit. The reference below
+        // retains the legacy expression verbatim.
+        fn legacy_sgdm(p: &mut [f32], m: &mut [f32], d: &[f32], mu: f32, c: f32) {
+            for ((pi, mi), &dv) in p.iter_mut().zip(m.iter_mut()).zip(d) {
+                *mi *= mu;
+                #[allow(clippy::identity_op)]
+                {
+                    *mi += 1.0 * dv;
+                }
+                *pi += c * *mi;
+            }
+        }
+        fn legacy_nesterov(
+            p: &mut [f32], m: &mut [f32], d: &[f32], mu: f32, c1: f32, c2: f32,
+        ) {
+            for ((pi, mi), &dv) in p.iter_mut().zip(m.iter_mut()).zip(d) {
+                *mi *= mu;
+                #[allow(clippy::identity_op)]
+                {
+                    *mi += 1.0 * dv;
+                }
+                *pi += c1 * dv;
+                *pi += c2 * *mi;
+            }
+        }
+        check("kernels without 1.0* == legacy with 1.0* bitwise", 40, |g| {
+            let n = g.usize_in(1..50);
+            let mut d = g.f32_vec(n..n + 1, 3.0);
+            d.resize(n, 0.0);
+            // Include the edge values the identity must hold for.
+            if n >= 4 {
+                d[0] = -0.0;
+                d[1] = f32::MIN_POSITIVE / 4.0; // subnormal after /4
+                d[2] = 0.0;
+            }
+            let p0 = g.f32_vec(n..n + 1, 2.0);
+            let mut p0 = p0;
+            p0.resize(n, 0.0);
+            let (mu, c) = (0.9f32, -0.7f32);
+
+            let (mut p_new, mut m_new) = (p0.clone(), vec![0.0f32; n]);
+            let (mut p_old, mut m_old) = (p0.clone(), vec![0.0f32; n]);
+            for _ in 0..3 {
+                super::k_sgdm(&mut p_new, &mut m_new, &d, mu, c);
+                legacy_sgdm(&mut p_old, &mut m_old, &d, mu, c);
+            }
+            for (a, b) in p_new.iter().zip(&p_old).chain(m_new.iter().zip(&m_old)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "sgdm {a} != {b}");
+            }
+
+            let (mut p_new, mut m_new) = (p0.clone(), vec![0.0f32; n]);
+            let (mut p_old, mut m_old) = (p0.clone(), vec![0.0f32; n]);
+            for _ in 0..3 {
+                super::k_nesterov(&mut p_new, &mut m_new, &d, mu, c, c * mu);
+                legacy_nesterov(&mut p_old, &mut m_old, &d, mu, c, c * mu);
+            }
+            for (a, b) in p_new.iter().zip(&p_old).chain(m_new.iter().zip(&m_old)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "nesterov {a} != {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_parallel_step_fragments_matches_sequential_bitwise() {
+        // Fanning an upload round's fragment steps across the pool must
+        // be indistinguishable from looping step_fragment in batch order
+        // — for every optimizer kind, at several thread counts, across
+        // rounds (momentum/Adam state carries between rounds).
+        use crate::comm::fragment::FragmentPlan;
+        check("step_fragments(pool) == step_fragment loop", 20, |g| {
+            let len = g.usize_in(4..60);
+            let n = if len % 2 == 1 { len + 1 } else { len };
+            let mut init = g.f32_vec(n..n + 1, 2.0);
+            init.resize(n, 0.0);
+            let p = g.usize_in(2..8);
+            let threads = [2usize, 3, 16][g.usize_in(0..3)];
+            for cfg in [
+                OuterOptConfig::Sgd { lr: 0.5 },
+                OuterOptConfig::SgdM { lr: 0.5, mu: 0.8 },
+                OuterOptConfig::Nesterov { lr: 0.7, mu: 0.9 },
+                OuterOptConfig::Adam { lr: 0.3, b1: 0.9, b2: 0.95, eps: 0.1 },
+            ] {
+                let mut seq = tensors_from(&init);
+                let mut par = seq.clone();
+                let mut z = seq.clone();
+                z.scale(0.0);
+                let mut opt_seq = OuterOpt::new(&cfg, &z);
+                let mut opt_par = OuterOpt::new(&cfg, &z);
+                let plan = FragmentPlan::for_tensors(&seq, p);
+                for _round in 0..2 {
+                    let mut d = g.f32_vec(n..n + 1, 1.0);
+                    d.resize(n, 0.0);
+                    let delta = tensors_from(&d);
+                    let payloads: Vec<Vec<f32>> = (0..plan.n_fragments())
+                        .map(|f| plan.extract(&delta, f))
+                        .collect();
+                    // Sometimes step only a subset of fragments (a
+                    // partial upload round), still ascending.
+                    let due: Vec<usize> = (0..plan.n_fragments())
+                        .filter(|&f| f == 0 || g.bool())
+                        .collect();
+                    for &f in &due {
+                        opt_seq.step_fragment(
+                            &mut seq, &payloads[f], plan.slices(f), f,
+                        );
+                    }
+                    let batch: Vec<(usize, &[f32])> = due
+                        .iter()
+                        .map(|&f| (f, payloads[f].as_slice()))
+                        .collect();
+                    opt_par.step_fragments(&mut par, &batch, &plan, threads);
+                }
+                for (a, b) in seq.iter_flat().zip(par.iter_flat()) {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{}: {a} != {b}",
+                        opt_seq.name()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn step_fragments_sequential_fallback_and_empty_batch() {
+        let mut p = tensors_from(&[1.0, 2.0, 3.0, 4.0]);
+        let mut z = p.clone();
+        z.scale(0.0);
+        let plan = FragmentPlan::for_tensors(&p, 2);
+        let mut opt = OuterOpt::new(&OuterOptConfig::Sgd { lr: 1.0 }, &z);
+        opt.step_fragments(&mut p, &[], &plan, 8); // no-op
+        assert_eq!(p.iter_flat().collect::<Vec<f32>>(), vec![1.0, 2.0, 3.0, 4.0]);
+        let payload = [0.5f32, 0.5];
+        // threads=1 and single-entry batches both take the inline loop.
+        opt.step_fragments(&mut p, &[(0, &payload)], &plan, 1);
+        opt.step_fragments(&mut p, &[(1, &payload)], &plan, 8);
+        assert_eq!(p.iter_flat().collect::<Vec<f32>>(), vec![0.5, 1.5, 2.5, 3.5]);
     }
 
     #[test]

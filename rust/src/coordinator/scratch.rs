@@ -1,0 +1,141 @@
+//! `RoundScratch` — a per-coordinator free-list of reusable `Vec<f32>`
+//! buffers, so steady-state rounds allocate nothing on the hot path.
+//!
+//! Every per-round temporary (extracted fragment payloads, averaged
+//! fragments, normalized-weight tables, discount-scaled copies) is
+//! leased from the arena and recycled when its round-local lifetime
+//! ends. A leased buffer is an **owned** `Vec<f32>`: the leasing site
+//! has exclusive access for as long as it holds the value, so there is
+//! no aliasing to reason about — the arena is just capacity recycling.
+//!
+//! **Staleness rule:** [`RoundScratch::lease`] always returns a buffer
+//! of length 0 (capacity retained from previous rounds). Writers must
+//! grow it themselves (`extend_from_slice`, `resize`, `push`), so a
+//! fresh lease can never expose a previous round's values — the
+//! scratch-reuse property tests pin bitwise equality against
+//! fresh-allocation runs (DESIGN.md §12).
+
+/// Free-list arena of `Vec<f32>` buffers (see module docs).
+#[derive(Default)]
+pub struct RoundScratch {
+    free: Vec<Vec<f32>>,
+}
+
+impl RoundScratch {
+    pub fn new() -> RoundScratch {
+        RoundScratch { free: Vec::new() }
+    }
+
+    /// Take a buffer from the free list (or create one on first use).
+    /// Always empty; capacity carries over from whatever it held last.
+    pub fn lease(&mut self) -> Vec<f32> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    /// Return a buffer to the free list. Contents are cleared now so a
+    /// future lease starts from length 0 no matter who recycled it.
+    pub fn recycle(&mut self, mut v: Vec<f32>) {
+        v.clear();
+        self.free.push(v);
+    }
+
+    /// Buffers currently parked in the free list (test/bench hook: a
+    /// steady-state round leases and recycles the same buffers, so this
+    /// stabilizes after the first round).
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_is_always_empty_and_retains_capacity() {
+        let mut s = RoundScratch::new();
+        let mut a = s.lease();
+        assert!(a.is_empty());
+        a.extend_from_slice(&[1.0, 2.0, 3.0]);
+        let cap = a.capacity();
+        s.recycle(a);
+        assert_eq!(s.pooled(), 1);
+        let b = s.lease();
+        assert!(b.is_empty(), "recycled buffer leaked stale length");
+        assert!(b.capacity() >= cap, "capacity was not retained");
+        assert_eq!(s.pooled(), 0);
+    }
+
+    #[test]
+    fn steady_state_reuses_instead_of_growing_the_pool() {
+        let mut s = RoundScratch::new();
+        for round in 0..5 {
+            let mut bufs: Vec<Vec<f32>> = (0..3).map(|_| s.lease()).collect();
+            for (i, b) in bufs.iter_mut().enumerate() {
+                b.resize(16 * (i + 1) + round, i as f32);
+            }
+            for b in bufs {
+                s.recycle(b);
+            }
+            assert_eq!(s.pooled(), 3, "pool grew past the working set");
+        }
+    }
+
+    #[test]
+    fn prop_scratch_reuse_never_leaks_stale_values() {
+        use crate::comm::fragment::FragmentPlan;
+        use crate::coordinator::average;
+        use crate::runtime::Tensors;
+        use crate::util::prop::check;
+        // Two simulated rounds of *different* payload sizes through the
+        // extract → average pipeline with a reused arena must match a
+        // fresh-allocation pipeline bitwise — the round-2 buffers start
+        // dirty with round-1 data of a different length.
+        check("scratch-reused rounds == fresh-alloc rounds bitwise", 40, |g| {
+            let mut scratch = RoundScratch::new();
+            for _round in 0..2 {
+                let len = g.usize_in(2..40);
+                let k = g.usize_in(1..5);
+                let p = g.usize_in(1..6);
+                let deltas: Vec<Tensors> = (0..k)
+                    .map(|_| {
+                        let mut v = g.f32_vec(len..len + 1, 2.0);
+                        v.resize(len, 0.0);
+                        Tensors::from_raw(vec![v])
+                    })
+                    .collect();
+                let weights: Vec<f64> =
+                    (0..k).map(|_| g.f64_in(0.1..5.0)).collect();
+                let plan = FragmentPlan::for_tensors(&deltas[0], p);
+                for f in 0..plan.n_fragments() {
+                    // Reused path: leased payload buffers + leased out/norm.
+                    let mut payloads: Vec<Vec<f32>> = Vec::new();
+                    for d in &deltas {
+                        let mut buf = scratch.lease();
+                        plan.extract_into(d, f, &mut buf);
+                        payloads.push(buf);
+                    }
+                    let mut norm = scratch.lease();
+                    let mut out = scratch.lease();
+                    average::weighted_average_into(
+                        &payloads, &weights, &mut norm, &mut out,
+                    );
+                    // Fresh path: plain allocations, same arithmetic.
+                    let fresh_payloads: Vec<Vec<f32>> =
+                        deltas.iter().map(|d| plan.extract(d, f)).collect();
+                    let fresh =
+                        average::weighted_average_flat(&fresh_payloads, &weights);
+                    assert_eq!(out.len(), fresh.len());
+                    for (x, y) in out.iter().zip(&fresh) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{x} != {y}");
+                    }
+                    scratch.recycle(norm);
+                    scratch.recycle(out);
+                    for b in payloads {
+                        scratch.recycle(b);
+                    }
+                }
+            }
+        });
+    }
+}

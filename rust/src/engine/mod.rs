@@ -28,7 +28,68 @@
 
 use crate::runtime::Runtime;
 use crate::worker::Worker;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
+
+/// Run `tasks` on a shared-queue work-stealing pool of (at most)
+/// `threads` scoped worker threads, returning outputs in **task order**
+/// (never completion order). This is the engine's generic fan-out
+/// primitive: island phases, per-fragment reductions, and parallel outer
+/// steps all dispatch through it.
+///
+/// Scheduling: workers claim the next unclaimed task index from a shared
+/// atomic counter — a single global queue every idle worker steals from,
+/// so a k=256 phase schedules 256 tasks onto ~N cores instead of
+/// spawning 256 threads, and imbalanced task durations self-balance.
+/// Which *worker* runs a task is nondeterministic; which *slot* its
+/// output lands in is not, so downstream folds are order-deterministic
+/// regardless of thread count (DESIGN.md §12).
+///
+/// `threads <= 1` (or a single task) degenerates to an inline sequential
+/// loop on the calling thread — no threads, no locks.
+pub fn run_tasks<'env, T: Send>(
+    threads: usize,
+    tasks: Vec<Box<dyn FnOnce() -> T + Send + 'env>>,
+) -> Vec<T> {
+    let n = tasks.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads <= 1 || n == 1 {
+        return tasks.into_iter().map(|t| t()).collect();
+    }
+    let pending: Vec<Mutex<Option<Box<dyn FnOnce() -> T + Send + 'env>>>> =
+        tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = threads.min(n);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let task = pending[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("task index claimed exactly once");
+                let out = task();
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("worker filled the slot for its claimed task")
+        })
+        .collect()
+}
 
 /// What one island task reports back.
 pub struct IslandOutput {
@@ -58,6 +119,15 @@ pub trait InnerPhaseExecutor: Send + Sync {
         &self,
         tasks: Vec<IslandTask<'env>>,
     ) -> anyhow::Result<Vec<IslandOutput>>;
+
+    /// Threads the coordinator should fan a phase of `n_tasks`
+    /// order-independent reductions (per-fragment averages, partitioned
+    /// outer steps) across. The sequential engine reduces inline (1);
+    /// the parallel engine exposes its resolved thread cap so reductions
+    /// ride the same pool sizing as island execution.
+    fn reduce_threads(&self, _n_tasks: usize) -> usize {
+        1
+    }
 }
 
 /// Reference executor: islands run back-to-back on the calling thread.
@@ -128,38 +198,23 @@ impl InnerPhaseExecutor for ParallelIslands {
 
     fn run_islands<'env>(
         &self,
-        mut tasks: Vec<IslandTask<'env>>,
+        tasks: Vec<IslandTask<'env>>,
     ) -> anyhow::Result<Vec<IslandOutput>> {
         let n = tasks.len();
         let threads = self.resolved_threads(n);
         if n <= 1 || threads == 1 {
             return Sequential.run_islands(tasks);
         }
+        // Work-stealing dispatch (see `run_tasks`): n tasks onto
+        // `threads` pooled workers instead of the old one-thread-per-
+        // chunk spawn, so k ≫ cores rounds schedule instead of thrash.
+        // Collecting the task-ordered Results keeps the first error in
+        // island order — the determinism contract.
+        run_tasks(threads, tasks).into_iter().collect()
+    }
 
-        // Contiguous chunks of islands per thread; each thread writes into
-        // its own disjoint slice of result slots, so no locks and no
-        // completion-order dependence anywhere.
-        let chunk = n.div_ceil(threads);
-        let mut slots: Vec<Option<anyhow::Result<IslandOutput>>> =
-            (0..n).map(|_| None).collect();
-        let mut task_groups: Vec<Vec<IslandTask<'env>>> = Vec::new();
-        while !tasks.is_empty() {
-            let rest = tasks.split_off(tasks.len().min(chunk));
-            task_groups.push(std::mem::replace(&mut tasks, rest));
-        }
-        std::thread::scope(|s| {
-            for (group, out) in task_groups.into_iter().zip(slots.chunks_mut(chunk)) {
-                s.spawn(move || {
-                    for (task, slot) in group.into_iter().zip(out.iter_mut()) {
-                        *slot = Some(task());
-                    }
-                });
-            }
-        });
-        slots
-            .into_iter()
-            .map(|r| r.expect("island thread filled its slot"))
-            .collect()
+    fn reduce_threads(&self, n_tasks: usize) -> usize {
+        self.resolved_threads(n_tasks)
     }
 }
 
@@ -448,5 +503,52 @@ mod tests {
         assert_eq!(ParallelIslands::new(3).resolved_threads(8), 3);
         assert_eq!(ParallelIslands::new(16).resolved_threads(2), 2);
         assert!(ParallelIslands::new(0).resolved_threads(64) >= 1);
+    }
+
+    #[test]
+    fn reduce_threads_follows_engine_kind() {
+        assert_eq!(Sequential.reduce_threads(8), 1);
+        assert_eq!(ParallelIslands::new(3).reduce_threads(8), 3);
+        assert_eq!(ParallelIslands::new(3).reduce_threads(2), 2);
+    }
+
+    #[test]
+    fn run_tasks_returns_outputs_in_task_order() {
+        for threads in [0usize, 1, 2, 3, 7] {
+            let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..20)
+                .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+                .collect();
+            let outs = run_tasks(threads, tasks);
+            assert_eq!(outs, (0..20).map(|i| i * i).collect::<Vec<_>>());
+        }
+        let empty: Vec<Box<dyn FnOnce() -> usize + Send>> = Vec::new();
+        assert!(run_tasks(4, empty).is_empty());
+    }
+
+    #[test]
+    fn run_tasks_self_balances_imbalanced_durations() {
+        // One long task plus many short ones: the pool must finish them
+        // all and keep task order regardless of which worker ran what.
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..16)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    }
+                    i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        let outs = run_tasks(4, tasks);
+        assert_eq!(outs, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_handles_many_more_islands_than_threads() {
+        // k=256 islands on a 3-thread pool: the old thread-per-chunk
+        // engine spawned 3 threads here too, but the pool must also keep
+        // island order at this scale with tasks claimed one at a time.
+        let exec = ParallelIslands::new(3);
+        check_island_order(&exec, 256);
     }
 }

@@ -1,9 +1,19 @@
 //! Flat-vector math used by the coordinator hot path.
 //!
 //! All outer-loop algebra (averaging, deltas, cosine similarity, norms)
-//! operates on `&[f32]` slices over parameter leaves. These are simple
-//! loops the compiler auto-vectorizes; the profile in EXPERIMENTS.md §Perf
-//! confirms they are not the bottleneck at any tested scale.
+//! operates on `&[f32]` slices over parameter leaves. The mutating
+//! kernels (`scale`, `axpy`, `add_assign`, `sub_into`) are written as
+//! fixed-width chunks plus a scalar tail so the autovectorizer can lift
+//! the body into SIMD without bounds checks; element order and the
+//! per-element scalar operations are identical to the one-at-a-time
+//! reference loops (`*_scalar` below), so the chunked forms are bitwise
+//! drop-in replacements — the property tests pin this for every length,
+//! including the odd tails.
+
+/// Chunk width for the vectorizable kernels. Eight f32 lanes = one
+/// AVX2 register; the tail (len % LANES elements) runs the same scalar
+/// body, so results never depend on LANES.
+const LANES: usize = 8;
 
 /// dot(a, b) in f64 accumulation (f32 inputs, stable for large vectors).
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
@@ -28,7 +38,14 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
 /// out[i] += x[i]
 pub fn add_assign(out: &mut [f32], x: &[f32]) {
     assert_eq!(out.len(), x.len());
-    for (o, v) in out.iter_mut().zip(x) {
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (ob, xb) in oc.by_ref().zip(xc.by_ref()) {
+        for i in 0..LANES {
+            ob[i] += xb[i];
+        }
+    }
+    for (o, v) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
         *o += v;
     }
 }
@@ -36,13 +53,44 @@ pub fn add_assign(out: &mut [f32], x: &[f32]) {
 /// out[i] += c * x[i]
 pub fn axpy(out: &mut [f32], c: f32, x: &[f32]) {
     assert_eq!(out.len(), x.len());
-    for (o, v) in out.iter_mut().zip(x) {
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (ob, xb) in oc.by_ref().zip(xc.by_ref()) {
+        for i in 0..LANES {
+            ob[i] += c * xb[i];
+        }
+    }
+    for (o, v) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
         *o += c * v;
     }
 }
 
 /// out[i] *= c
 pub fn scale(out: &mut [f32], c: f32) {
+    let mut oc = out.chunks_exact_mut(LANES);
+    for ob in oc.by_ref() {
+        for o in ob.iter_mut() {
+            *o *= c;
+        }
+    }
+    for o in oc.into_remainder() {
+        *o *= c;
+    }
+}
+
+/// Element-at-a-time reference for [`axpy`]. The chunked kernel performs
+/// the same scalar op per element in the same order; this is the golden
+/// baseline the property tests and the hot-path microbench compare
+/// against.
+pub fn axpy_scalar(out: &mut [f32], c: f32, x: &[f32]) {
+    assert_eq!(out.len(), x.len());
+    for (o, v) in out.iter_mut().zip(x) {
+        *o += c * v;
+    }
+}
+
+/// Element-at-a-time reference for [`scale`] (see [`axpy_scalar`]).
+pub fn scale_scalar(out: &mut [f32], c: f32) {
     for o in out.iter_mut() {
         *o *= c;
     }
@@ -50,8 +98,27 @@ pub fn scale(out: &mut [f32], c: f32) {
 
 /// a - b elementwise into a fresh vec.
 pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    sub_into(a, b, &mut out);
+    out
+}
+
+/// a - b elementwise into a reused buffer (cleared first) — the
+/// allocation-free form for scratch-arena callers.
+pub fn sub_into(a: &[f32], b: &[f32], out: &mut Vec<f32>) {
     assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x - y).collect()
+    out.clear();
+    out.reserve(a.len());
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (ab, bb) in ac.by_ref().zip(bc.by_ref()) {
+        for i in 0..LANES {
+            out.push(ab[i] - bb[i]);
+        }
+    }
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        out.push(x - y);
+    }
 }
 
 pub fn mean(xs: &[f64]) -> f64 {
@@ -115,5 +182,64 @@ mod tests {
         assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
         assert!((stddev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
         assert!((ppl((16.0f64).ln()) - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_chunked_kernels_match_scalar_bitwise() {
+        use crate::util::prop::check;
+        // The chunked kernels must be indistinguishable from the scalar
+        // reference at every length — especially the tails around the
+        // LANES boundary (len % 8 ∈ {0..7}).
+        check("chunked axpy/scale/add/sub == scalar bitwise", 80, |g| {
+            let n = g.usize_in(0..40);
+            let mut a = g.f32_vec(n..n + 1, 4.0);
+            a.resize(n, 0.0);
+            let mut x = g.f32_vec(n..n + 1, 4.0);
+            x.resize(n, 0.0);
+            let c = g.f64_in(-3.0..3.0) as f32;
+
+            let mut chunked = a.clone();
+            let mut scalar = a.clone();
+            axpy(&mut chunked, c, &x);
+            axpy_scalar(&mut scalar, c, &x);
+            for (p, q) in chunked.iter().zip(&scalar) {
+                assert_eq!(p.to_bits(), q.to_bits(), "axpy {p} != {q}");
+            }
+
+            scale(&mut chunked, c);
+            scale_scalar(&mut scalar, c);
+            for (p, q) in chunked.iter().zip(&scalar) {
+                assert_eq!(p.to_bits(), q.to_bits(), "scale {p} != {q}");
+            }
+
+            let mut added = a.clone();
+            add_assign(&mut added, &x);
+            for ((o, &ai), &xi) in added.iter().zip(&a).zip(&x) {
+                assert_eq!(o.to_bits(), (ai + xi).to_bits(), "add_assign");
+            }
+
+            // sub_into over a dirty reused buffer == fresh collect.
+            let mut buf = vec![f32::NAN; 3];
+            sub_into(&a, &x, &mut buf);
+            let fresh: Vec<f32> =
+                a.iter().zip(&x).map(|(p, q)| p - q).collect();
+            assert_eq!(buf.len(), fresh.len());
+            for (p, q) in buf.iter().zip(&fresh) {
+                assert_eq!(p.to_bits(), q.to_bits(), "sub_into {p} != {q}");
+            }
+        });
+    }
+
+    #[test]
+    fn chunked_kernels_cover_exact_multiples_of_lanes() {
+        // len == LANES and len == 2·LANES exercise the no-tail path.
+        for n in [8usize, 16] {
+            let mut a: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+            let x: Vec<f32> = (0..n).map(|i| 1.0 - i as f32 * 0.5).collect();
+            let mut r = a.clone();
+            axpy(&mut a, 1.5, &x);
+            axpy_scalar(&mut r, 1.5, &x);
+            assert_eq!(a, r);
+        }
     }
 }

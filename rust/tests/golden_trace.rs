@@ -160,6 +160,19 @@ fn golden_trace_default_config() {
     );
 }
 
+/// The golden trace pins the DEFAULT reduction path. `[engine]
+/// fast_math` (the opt-in pairwise reduction) reorders float ops and is
+/// tolerance-gated, not bitwise — it must stay off in the golden preset,
+/// or the snapshot would silently pin the wrong path. The fused chunked
+/// kernels themselves are bitwise-equal to the legacy scale/axpy
+/// multi-pass (property-pinned in coordinator::average and util::math),
+/// so with fast_math off this trace reproduces the pre-optimization
+/// (PR 5) trace keys exactly.
+#[test]
+fn golden_preset_keeps_fast_math_off() {
+    assert!(!tiny_cfg().fast_math, "golden preset must pin the default path");
+}
+
 /// Runs without artifacts: if a snapshot is checked in, it must parse
 /// and have the golden shape (guards against hand-edited snapshots).
 #[test]
