@@ -4,9 +4,27 @@
 //! replica's outer gradient before averaging. Paper shape: up to 50% is
 //! almost free (+0.39% PPL), 75% costs +1.66% — communication drops
 //! proportionally (we bill non-zeros + bitmap).
+//!
+//! The second table sweeps the sparse wire format across
+//! codec × prune × topology — the compositions the config layer used to
+//! hard-reject — and hard-asserts every round's billed upload bytes
+//! against the closed forms at the exactly-solvable corners:
+//!
+//! * `prune = 1.0` zeroes every element, so each payload is exactly its
+//!   presence bitmap plus a zero-element codec body (`nnz = 0`), per
+//!   fragment / per ring chunk / per leader aggregate.
+//! * `prune = 0.0` is the dense format: `codec.encoded_bytes` per
+//!   payload, chunked on the ring.
+//! * `prune = 0.5` has data-dependent density, so its bill is bracketed
+//!   (bitmap floor ≤ billed ≤ bitmap + dense body) and pinned strictly
+//!   monotone in the prune fraction.
 
 use diloco::bench::scenarios::{base_config, fmt, load_runtime, rel_pct};
 use diloco::bench::{BenchCtx, Table};
+use diloco::comm::codec::Codec;
+use diloco::comm::fragment::FragmentPlan;
+use diloco::comm::{topology, wire};
+use diloco::config::TopologyConfig;
 use diloco::coordinator::Coordinator;
 use diloco::metrics::RunMetrics;
 
@@ -42,6 +60,133 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     ctx.emit(&table);
+
+    // ---- sparse wire format: codec × prune × topology ----
+    //
+    // The monolithic plan (P = 1) over the real parameter tree gives the
+    // fragment geometry the coordinator bills with: n elements spread
+    // over s contiguous leaf slices.
+    let plan = FragmentPlan::for_tensors(&pretrained, 1);
+    let n = plan.total_elements();
+    let s = plan.slices(0).len();
+    let k = base.workers as u64;
+    // One sparse payload of the whole delta at density `nnz`.
+    let payload = |codec: Codec, nnz: usize| wire::sparse_payload_bytes(codec, n, nnz, s);
+    // Per-round upload closed form at an exactly-known density
+    // (`None` = dense wire format).
+    let up_per_round = |topo: &TopologyConfig, codec: Codec, nnz: Option<usize>| -> u64 {
+        let one = match nnz {
+            Some(z) => payload(codec, z),
+            None => codec.encoded_bytes(n, s),
+        };
+        match topo {
+            // k sparse uploads to the hub / k pairwise exchanges.
+            TopologyConfig::Star | TopologyConfig::Gossip => k * one,
+            // G leader aggregates; at nnz = 0 the union support is
+            // empty, at dense it is the full fragment.
+            TopologyConfig::Hierarchical { groups } => *groups as u64 * one,
+            // 2(k−1) hop layers of k chunks, each billed at the chunk's
+            // own geometry (1 slice, chunk_elems elements).
+            TopologyConfig::Ring => {
+                let layer: u64 = (0..k as usize)
+                    .map(|c| {
+                        let cn = topology::chunk_elems(n, c, k as usize);
+                        match nnz {
+                            Some(0) => wire::sparse_payload_bytes(codec, cn, 0, 1),
+                            Some(_) => unreachable!("only nnz=0 is closed-form"),
+                            None => codec.encoded_bytes(cn, 1),
+                        }
+                    })
+                    .sum();
+                2 * (k - 1) * layer
+            }
+        }
+    };
+
+    let mut sweep = Table::new(
+        "Sparse wire format — codec × prune × topology (billed bytes hard-asserted)",
+        &["topology", "codec", "pruned", "up_MB_per_round", "final_ppl"],
+    );
+    let topologies = [
+        ("star", TopologyConfig::Star),
+        ("ring", TopologyConfig::Ring),
+        ("hier/2", TopologyConfig::Hierarchical { groups: 2 }),
+        ("gossip", TopologyConfig::Gossip),
+    ];
+    for (tname, topo) in &topologies {
+        for codec in [Codec::F32, Codec::Q8, Codec::Q4] {
+            let mut by_frac = Vec::new();
+            for frac in [0.0, 0.5, 1.0] {
+                let mut cfg = base.clone();
+                cfg.rounds = 2;
+                cfg.topology = topo.clone();
+                cfg.stream.codec = codec;
+                cfg.prune_frac = frac;
+                let report = Coordinator::new(cfg, rt.clone())?
+                    .run_from(Some(pretrained.clone()))?;
+                // Hard-assert every round's billed upload against the
+                // wire-format formulas.
+                for (r, row) in report.comm_per_round.iter().enumerate() {
+                    let tag = format!("{tname}/{codec:?}/prune={frac}/round {r}");
+                    if frac == 0.0 {
+                        assert_eq!(
+                            row.bytes_up,
+                            up_per_round(topo, codec, None),
+                            "dense bill diverged: {tag}"
+                        );
+                    } else if frac == 1.0 {
+                        assert_eq!(
+                            row.bytes_up,
+                            up_per_round(topo, codec, Some(0)),
+                            "all-pruned bill diverged: {tag}"
+                        );
+                    } else {
+                        // Bitmap floor ≤ billed ≤ bitmap + dense body.
+                        let lo = up_per_round(topo, codec, Some(0));
+                        let hi = match topo {
+                            TopologyConfig::Ring => {
+                                lo + up_per_round(topo, codec, None)
+                            }
+                            _ => up_per_round(topo, codec, Some(n)),
+                        };
+                        assert!(
+                            (lo..=hi).contains(&row.bytes_up),
+                            "bill outside sparse bracket: {tag}: \
+                             {lo} ≤ {} ≤ {hi}",
+                            row.bytes_up
+                        );
+                    }
+                }
+                let per_round = report.metrics.comm_bytes_up
+                    / report.comm_per_round.len() as u64;
+                by_frac.push(per_round);
+                sweep.row(vec![
+                    tname.to_string(),
+                    format!("{codec:?}").to_lowercase(),
+                    format!("{:.0}%", frac * 100.0),
+                    format!("{:.3}", per_round as f64 / 1e6),
+                    fmt(report.metrics.final_ppl()),
+                ]);
+            }
+            // The bitmap-only bill always undercuts any live density.
+            assert!(
+                by_frac[2] < by_frac[1],
+                "{tname}/{codec:?}: all-pruned not cheapest: {by_frac:?}"
+            );
+            // Per-worker payloads (star uploads, gossip exchanges) are
+            // guaranteed cheaper than dense at 50% pruning: nnz ≤ ⌈n/2⌉
+            // per payload. Aggregated hops (ring partial sums, leader
+            // unions) can legitimately re-densify past break-even, so
+            // for them the bracket assert above is the whole contract.
+            if matches!(topo, TopologyConfig::Star | TopologyConfig::Gossip) {
+                assert!(
+                    by_frac[1] < by_frac[0],
+                    "{tname}/{codec:?}: 50% prune not cheaper than dense: {by_frac:?}"
+                );
+            }
+        }
+    }
+    ctx.emit(&sweep);
     ctx.finish();
     Ok(())
 }

@@ -120,12 +120,12 @@ pub fn stream_grid() -> Vec<(&'static str, StreamConfig)> {
     let stag = SyncSchedule::Staggered;
     let over = SyncSchedule::Overlapped;
     vec![
-        ("baseline_f32", StreamConfig { fragments: 1, schedule: every, codec: Codec::F32 }),
-        ("every_f16", StreamConfig { fragments: 1, schedule: every, codec: Codec::F16 }),
-        ("every_q8", StreamConfig { fragments: 4, schedule: every, codec: Codec::Q8 }),
-        ("staggered4_f32", StreamConfig { fragments: 4, schedule: stag, codec: Codec::F32 }),
-        ("staggered4_q8", StreamConfig { fragments: 4, schedule: stag, codec: Codec::Q8 }),
-        ("overlapped4_f32", StreamConfig { fragments: 4, schedule: over, codec: Codec::F32 }),
+        ("baseline_f32", StreamConfig { fragments: 1, schedule: every, codec: Codec::F32, error_feedback: false }),
+        ("every_f16", StreamConfig { fragments: 1, schedule: every, codec: Codec::F16, error_feedback: false }),
+        ("every_q8", StreamConfig { fragments: 4, schedule: every, codec: Codec::Q8, error_feedback: false }),
+        ("staggered4_f32", StreamConfig { fragments: 4, schedule: stag, codec: Codec::F32, error_feedback: false }),
+        ("staggered4_q8", StreamConfig { fragments: 4, schedule: stag, codec: Codec::Q8, error_feedback: false }),
+        ("overlapped4_f32", StreamConfig { fragments: 4, schedule: over, codec: Codec::F32, error_feedback: false }),
     ]
 }
 

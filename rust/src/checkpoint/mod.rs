@@ -33,8 +33,11 @@ const MAGIC: &[u8; 8] = b"DILOCO01";
 const STATE_MAGIC: &[u8; 8] = b"DILOST01";
 /// Version 2 appends the async scheduling layer's in-flight delayed
 /// contribution queue; version-1 states (written before the queue
-/// existed) load with an empty queue.
-const STATE_VERSION: u32 = 2;
+/// existed) load with an empty queue. Version 3 appends the per-worker
+/// error-feedback residuals; version-2 states (written before error
+/// feedback existed) load with no residuals, which the coordinator
+/// re-initializes to zero when `stream.error_feedback` is on.
+const STATE_VERSION: u32 = 3;
 /// Sanity caps for untrusted length fields that the manifest cannot
 /// bound (fragment counts, Adam step vectors, kind strings).
 const MAX_FRAGMENTS: usize = 1 << 20;
@@ -369,6 +372,12 @@ pub struct TrainState {
     /// In-flight delayed contribution batches, oldest first (empty on
     /// the synchronous path and in version-1 checkpoints).
     pub pending_sync: Vec<PendingSync>,
+    /// Per-worker error-feedback residuals (`stream.error_feedback`),
+    /// indexed like `refs` over the full pool: what each worker's last
+    /// compressed upload failed to carry, replayed into its next outer
+    /// delta. Empty when error feedback is off and in pre-version-3
+    /// checkpoints (the coordinator then resumes with zero residuals).
+    pub residuals: Vec<Tensors>,
 }
 
 fn w_outer(buf: &mut Vec<u8>, snap: &OuterOptSnapshot) {
@@ -534,6 +543,11 @@ pub fn save_state(path: &str, manifest: &Manifest, st: &TrainState) -> anyhow::R
         st.pending_adopt.len(),
         st.drops_per_worker.len()
     );
+    anyhow::ensure!(
+        st.residuals.is_empty() || st.residuals.len() == pool,
+        "inconsistent TrainState: pool {pool}, residuals {}",
+        st.residuals.len()
+    );
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(STATE_MAGIC);
     w_u32(&mut buf, STATE_VERSION);
@@ -579,6 +593,10 @@ pub fn save_state(path: &str, manifest: &Manifest, st: &TrainState) -> anyhow::R
     w_u64(&mut buf, st.pending_sync.len() as u64);
     for p in &st.pending_sync {
         w_pending(&mut buf, p);
+    }
+    w_u64(&mut buf, st.residuals.len() as u64);
+    for res in &st.residuals {
+        w_tensors(&mut buf, res);
     }
     write_checked(path, buf)
 }
@@ -684,6 +702,20 @@ pub fn load_state(path: &str, manifest: &Manifest) -> anyhow::Result<TrainState>
             pending_sync.push(r_pending(&mut r, manifest, pool, n_frag)?);
         }
     }
+    // Version 3: per-worker error-feedback residuals. Absent or zero
+    // entries mean the run had error feedback off (or predates it) —
+    // the coordinator resumes with zero residuals in that case.
+    let mut residuals = Vec::new();
+    if version >= 3 {
+        let n_res = r.len_capped(pool, "residual")?;
+        anyhow::ensure!(
+            n_res == 0 || n_res == pool,
+            "TrainState stores {n_res} residuals for a pool of {pool}"
+        );
+        for i in 0..n_res {
+            residuals.push(r.tensors(manifest, &format!("residual[{i}]"))?);
+        }
+    }
     r.finish()?;
     Ok(TrainState {
         round,
@@ -699,6 +731,7 @@ pub fn load_state(path: &str, manifest: &Manifest) -> anyhow::Result<TrainState>
         carry_comm_s,
         codec_err_sq_total,
         pending_sync,
+        residuals,
     })
 }
 
@@ -901,6 +934,7 @@ mod tests {
             carry_comm_s: 0.5,
             codec_err_sq_total: 0.25,
             pending_sync: Vec::new(),
+            residuals: Vec::new(),
         }
     }
 
@@ -980,14 +1014,15 @@ mod tests {
         let base = tmp("state_pending_neg");
         save_state(&base, &man, &st).unwrap();
         // The queue's count field starts where an empty-queue save ends
-        // (minus its own 8 bytes): everything before it is identical.
+        // minus the trailing residual count (8) and its own 8 bytes:
+        // everything before it is identical.
         let mut empty = st.clone();
         empty.pending_sync.clear();
         let empty_path = tmp("state_pending_empty");
         save_state(&empty_path, &man, &empty).unwrap();
         let empty_body_len = std::fs::read(&empty_path).unwrap().len() - 8;
         std::fs::remove_file(&empty_path).ok();
-        let count_off = empty_body_len - 8;
+        let count_off = empty_body_len - 16;
 
         // An absurd batch count must be rejected before allocation.
         rewrite_body(&base, |body| {
@@ -1048,8 +1083,8 @@ mod tests {
     fn version_one_states_load_with_empty_queue() {
         // A pre-async (version 1) TrainState has no queue section; it
         // must load as a state with no batches in flight. Crafted by
-        // rewriting a v2 save: version field back to 1, the trailing
-        // empty-queue count stripped.
+        // rewriting a v3 save: version field back to 1, the trailing
+        // empty-residual and empty-queue counts stripped.
         let man = tiny_manifest();
         let st = tiny_state(false);
         let path = tmp("state_v1");
@@ -1057,7 +1092,7 @@ mod tests {
         rewrite_body(&path, |body| {
             body[8..12].copy_from_slice(&1u32.to_le_bytes());
             let n = body.len();
-            body.truncate(n - 8);
+            body.truncate(n - 16);
         });
         let loaded = load_state(&path, &man).unwrap();
         assert_eq!(loaded, st);
@@ -1067,6 +1102,59 @@ mod tests {
             body[8..12].copy_from_slice(&99u32.to_le_bytes());
         });
         assert!(load_state(&path, &man).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_two_states_load_with_empty_residuals() {
+        // A pre-error-feedback (version 2) TrainState has no residual
+        // section; it must load with no residuals (the coordinator then
+        // re-initializes them to zero if error feedback is on). Crafted
+        // by rewriting a v3 save: version field back to 2, the trailing
+        // empty-residual count stripped — the exact inverse of what the
+        // v3 writer appends.
+        let man = tiny_manifest();
+        let mut st = tiny_state(false);
+        st.pending_sync = vec![tiny_pending()];
+        let path = tmp("state_v2");
+        save_state(&path, &man, &st).unwrap();
+        rewrite_body(&path, |body| {
+            body[8..12].copy_from_slice(&2u32.to_le_bytes());
+            let n = body.len();
+            body.truncate(n - 8);
+        });
+        let loaded = load_state(&path, &man).unwrap();
+        assert_eq!(loaded, st); // pending queue intact, residuals empty
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn train_state_roundtrips_error_feedback_residuals() {
+        let man = tiny_manifest();
+        let mut st = tiny_state(false);
+        st.residuals = vec![tiny_tensors(), Tensors::zeros(&man)];
+        let path = tmp("state_residuals");
+        save_state(&path, &man, &st).unwrap();
+        let loaded = load_state(&path, &man).unwrap();
+        assert_eq!(loaded, st);
+        std::fs::remove_file(&path).ok();
+
+        // A residual count that matches neither 0 nor the pool is a
+        // structural error, not a partial load. The count field's offset
+        // is found from a save identical in everything but residuals:
+        // it occupies that save's last 8 body bytes.
+        let mut empty_res = tiny_state(false);
+        empty_res.pending_sync = vec![tiny_pending()];
+        let empty_path = tmp("state_residuals_empty");
+        save_state(&empty_path, &man, &empty_res).unwrap();
+        let count_off = std::fs::read(&empty_path).unwrap().len() - 8 - 8;
+        std::fs::remove_file(&empty_path).ok();
+        save_state(&path, &man, &st).unwrap();
+        rewrite_body(&path, |body| {
+            body[count_off..count_off + 8].copy_from_slice(&1u64.to_le_bytes());
+        });
+        let err = load_state(&path, &man).unwrap_err();
+        assert!(format!("{err:#}").contains("residual"), "{err:#}");
         std::fs::remove_file(&path).ok();
     }
 

@@ -39,6 +39,13 @@ pub enum Codec {
     /// 8-bit uniform quantization per leaf slice (min/scale sidecar),
     /// 1 byte/element + 8 bytes per slice.
     Q8,
+    /// 4-bit uniform quantization (16 levels), ½ byte/element + 8 bytes
+    /// per slice (MuLoCo, arXiv 2505.23725, pairs this with error
+    /// feedback).
+    Q4,
+    /// 2-bit uniform quantization (4 levels), ¼ byte/element + 8 bytes
+    /// per slice — the MuLoCo headline rate.
+    Q2,
 }
 
 impl Codec {
@@ -47,7 +54,9 @@ impl Codec {
             "f32" => Ok(Codec::F32),
             "f16" => Ok(Codec::F16),
             "q8" => Ok(Codec::Q8),
-            other => anyhow::bail!("unknown codec {other:?} (want f32|f16|q8)"),
+            "q4" => Ok(Codec::Q4),
+            "q2" => Ok(Codec::Q2),
+            other => anyhow::bail!("unknown codec {other:?} (want f32|f16|q8|q4|q2)"),
         }
     }
 
@@ -56,6 +65,19 @@ impl Codec {
             Codec::F32 => "f32",
             Codec::F16 => "f16",
             Codec::Q8 => "q8",
+            Codec::Q4 => "q4",
+            Codec::Q2 => "q2",
+        }
+    }
+
+    /// Quantization grid size minus one (the divisor of the uniform
+    /// step), `None` for the float codecs.
+    pub fn quant_levels(&self) -> Option<f32> {
+        match self {
+            Codec::F32 | Codec::F16 => None,
+            Codec::Q8 => Some(255.0),
+            Codec::Q4 => Some(15.0),
+            Codec::Q2 => Some(3.0),
         }
     }
 
@@ -65,8 +87,10 @@ impl Codec {
         match self {
             Codec::F32 => 4 * n_elements as u64,
             Codec::F16 => 2 * n_elements as u64,
-            // 1 byte/value + f32 (min, scale) sidecar per slice.
+            // 1/½/¼ byte per value + f32 (min, scale) sidecar per slice.
             Codec::Q8 => n_elements as u64 + 8 * n_slices as u64,
+            Codec::Q4 => (n_elements as u64).div_ceil(2) + 8 * n_slices as u64,
+            Codec::Q2 => (n_elements as u64).div_ceil(4) + 8 * n_slices as u64,
         }
     }
 
@@ -86,12 +110,43 @@ impl Codec {
                 }
                 err_sq
             }
-            Codec::Q8 => {
+            Codec::Q8 | Codec::Q4 | Codec::Q2 => {
+                let levels = self.quant_levels().expect("quantized codec");
                 let mut err_sq = 0.0f64;
                 let mut off = 0usize;
                 for s in slices {
                     let part = &mut values[off..off + s.len()];
-                    err_sq += q8_roundtrip(part);
+                    err_sq += quant_roundtrip(part, levels);
+                    off += s.len();
+                }
+                debug_assert_eq!(off, values.len(), "slice lens cover payload");
+                err_sq
+            }
+        }
+    }
+
+    /// Sparse-aware encode + decode: exact zeros (the positions a sparse
+    /// payload never ships — they live in the bitmap) stay exactly `0.0`,
+    /// and the quantized codecs fit their per-slice `(min, scale)` grid
+    /// over the **non-zeros only**, since those are the only values on
+    /// the wire. Returns the squared L2 error, accumulated in f64 in
+    /// slice order.
+    ///
+    /// For `f32` and `f16` this is exactly [`Codec::transcode`] (both map
+    /// `±0.0` to itself bitwise, so sparsity is preserved for free); the
+    /// separate entry point matters for `q8|q4|q2`, where a dense grid
+    /// over a pruned payload would decode the zeroed positions to
+    /// `min + q·scale ≠ 0` and silently densify the fragment.
+    pub fn transcode_sparse(&self, values: &mut [f32], slices: &[LeafSlice]) -> f64 {
+        match self {
+            Codec::F32 | Codec::F16 => self.transcode(values, slices),
+            Codec::Q8 | Codec::Q4 | Codec::Q2 => {
+                let levels = self.quant_levels().expect("quantized codec");
+                let mut err_sq = 0.0f64;
+                let mut off = 0usize;
+                for s in slices {
+                    let part = &mut values[off..off + s.len()];
+                    err_sq += quant_roundtrip_nonzero(part, levels);
                     off += s.len();
                 }
                 debug_assert_eq!(off, values.len(), "slice lens cover payload");
@@ -110,9 +165,9 @@ impl Codec {
 /// * `f16` converts each element as it is copied — same per-element
 ///   function in the same element order as the two-pass form, one memory
 ///   pass instead of two;
-/// * `q8` needs each slice's min/max before it can quantize, so it keeps
-///   the copy-then-transcode structure (the wire format does not permit a
-///   single pass).
+/// * `q8|q4|q2` need each slice's min/max before they can quantize, so
+///   they keep the copy-then-transcode structure (the wire format does
+///   not permit a single pass).
 pub fn extract_transcode(
     codec: Codec,
     plan: &crate::comm::fragment::FragmentPlan,
@@ -139,17 +194,39 @@ pub fn extract_transcode(
             }
             err_sq
         }
-        Codec::Q8 => {
+        Codec::Q8 | Codec::Q4 | Codec::Q2 => {
             plan.extract_into(t, f, out);
             codec.transcode(out, plan.slices(f))
         }
     }
 }
 
-/// Uniform 8-bit round trip over one contiguous slice; returns the
-/// squared error. `scale = (max - min) / 255`; a constant slice encodes
-/// exactly (scale 0 ⇒ every value decodes to `min`).
-fn q8_roundtrip(values: &mut [f32]) -> f64 {
+/// Sparse-aware sibling of [`extract_transcode`]: flatten fragment `f`
+/// of `t` into `out` with [`Codec::transcode_sparse`] applied. Used by
+/// the coordinator when the payload is sparse (`prune_frac > 0`) so
+/// pruned-to-zero positions survive the codec round trip exactly.
+pub fn extract_transcode_sparse(
+    codec: Codec,
+    plan: &crate::comm::fragment::FragmentPlan,
+    t: &crate::runtime::Tensors,
+    f: usize,
+    out: &mut Vec<f32>,
+) -> f64 {
+    match codec {
+        // The float codecs preserve ±0.0 bitwise — reuse the fused path.
+        Codec::F32 | Codec::F16 => extract_transcode(codec, plan, t, f, out),
+        Codec::Q8 | Codec::Q4 | Codec::Q2 => {
+            plan.extract_into(t, f, out);
+            codec.transcode_sparse(out, plan.slices(f))
+        }
+    }
+}
+
+/// Uniform `levels+1`-point round trip over one contiguous slice;
+/// returns the squared error. `scale = (max - min) / levels`; a constant
+/// slice encodes exactly (scale 0 ⇒ every value decodes to `min`).
+/// `levels = 255` reproduces the original q8 arithmetic bit for bit.
+fn quant_roundtrip(values: &mut [f32], levels: f32) -> f64 {
     if values.is_empty() {
         return 0.0;
     }
@@ -159,14 +236,50 @@ fn q8_roundtrip(values: &mut [f32]) -> f64 {
         lo = lo.min(x);
         hi = hi.max(x);
     }
-    let scale = (hi - lo) / 255.0;
+    let scale = (hi - lo) / levels;
     let mut err_sq = 0.0f64;
     for x in values.iter_mut() {
         let orig = *x;
         *x = if scale == 0.0 {
             lo
         } else {
-            let q = ((orig - lo) / scale).round().clamp(0.0, 255.0);
+            let q = ((orig - lo) / scale).round().clamp(0.0, levels);
+            lo + q * scale
+        };
+        let e = (orig - *x) as f64;
+        err_sq += e * e;
+    }
+    err_sq
+}
+
+/// [`quant_roundtrip`] restricted to the non-zero entries: the grid is
+/// fitted over non-zeros only and exact zeros pass through untouched
+/// (they are bitmap positions, not wire values, in a sparse payload).
+fn quant_roundtrip_nonzero(values: &mut [f32], levels: f32) -> f64 {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    let mut nnz = 0usize;
+    for &x in values.iter() {
+        if x != 0.0 {
+            lo = lo.min(x);
+            hi = hi.max(x);
+            nnz += 1;
+        }
+    }
+    if nnz == 0 {
+        return 0.0;
+    }
+    let scale = (hi - lo) / levels;
+    let mut err_sq = 0.0f64;
+    for x in values.iter_mut() {
+        if *x == 0.0 {
+            continue;
+        }
+        let orig = *x;
+        *x = if scale == 0.0 {
+            lo
+        } else {
+            let q = ((orig - lo) / scale).round().clamp(0.0, levels);
             lo + q * scale
         };
         let e = (orig - *x) as f64;
@@ -245,10 +358,11 @@ mod tests {
 
     #[test]
     fn parse_and_names() {
-        for c in [Codec::F32, Codec::F16, Codec::Q8] {
+        for c in [Codec::F32, Codec::F16, Codec::Q8, Codec::Q4, Codec::Q2] {
             assert_eq!(Codec::parse(c.name()).unwrap(), c);
         }
-        assert!(Codec::parse("q4").is_err());
+        assert!(Codec::parse("q3").is_err());
+        assert!(Codec::parse("int8").is_err());
     }
 
     #[test]
@@ -256,6 +370,11 @@ mod tests {
         assert_eq!(Codec::F32.encoded_bytes(100, 3), 400);
         assert_eq!(Codec::F16.encoded_bytes(100, 3), 200);
         assert_eq!(Codec::Q8.encoded_bytes(100, 3), 124);
+        // Sub-byte codecs round the packed nibble/crumb array up.
+        assert_eq!(Codec::Q4.encoded_bytes(100, 3), 74);
+        assert_eq!(Codec::Q4.encoded_bytes(101, 3), 75);
+        assert_eq!(Codec::Q2.encoded_bytes(100, 3), 49);
+        assert_eq!(Codec::Q2.encoded_bytes(101, 3), 50);
     }
 
     #[test]
@@ -328,11 +447,109 @@ mod tests {
     }
 
     #[test]
-    fn q8_constant_slice_is_exact() {
-        let mut v = vec![0.25f32; 9];
-        let err = Codec::Q8.transcode(&mut v, &one_slice(9));
-        assert!(v.iter().all(|&x| x == 0.25));
-        assert_eq!(err, 0.0);
+    fn quantized_constant_slice_is_exact() {
+        for codec in [Codec::Q8, Codec::Q4, Codec::Q2] {
+            let mut v = vec![0.25f32; 9];
+            let err = codec.transcode(&mut v, &one_slice(9));
+            assert!(v.iter().all(|&x| x == 0.25), "{codec:?}");
+            assert_eq!(err, 0.0, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn q4_q2_error_bounded_by_half_step() {
+        // Satellite: q4/q2 round-trip error bound — each element moves by
+        // at most half a grid step, step = (max-min)/levels.
+        check("q4/q2 error ≤ (max-min)/(2·levels) per element", 100, |g| {
+            let orig = g.f32_vec(2..80, 3.0);
+            let lo = orig.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = orig.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let n = orig.len();
+            for (codec, levels) in [(Codec::Q4, 15.0f64), (Codec::Q2, 3.0f64)] {
+                let mut v = orig.clone();
+                codec.transcode(&mut v, &one_slice(n));
+                let half_step = ((hi - lo) as f64 / levels) / 2.0 + 1e-6;
+                for (a, b) in orig.iter().zip(&v) {
+                    assert!(
+                        ((a - b) as f64).abs() <= half_step,
+                        "{codec:?} moved {a} to {b}, step/2 = {half_step}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sparse_transcode_keeps_zeros_and_bounds_nonzero_error() {
+        // The sparse round trip never touches exact zeros, and its grid is
+        // fitted over the non-zeros, so each surviving value moves by at
+        // most half a non-zero-range step.
+        check("sparse transcode preserves zeros", 100, |g| {
+            let mut orig = g.f32_vec(4..80, 3.0);
+            // Zero out a random prefix-strided subset to fake a pruned payload.
+            let stride = g.usize_in(2..5);
+            for (i, x) in orig.iter_mut().enumerate() {
+                if i % stride == 0 {
+                    *x = 0.0;
+                }
+            }
+            let nz: Vec<f32> = orig.iter().copied().filter(|&x| x != 0.0).collect();
+            let n = orig.len();
+            for codec in [Codec::F32, Codec::F16, Codec::Q8, Codec::Q4, Codec::Q2] {
+                let mut v = orig.clone();
+                let err = codec.transcode_sparse(&mut v, &one_slice(n));
+                for (a, b) in orig.iter().zip(&v) {
+                    if *a == 0.0 {
+                        assert_eq!(b.to_bits(), 0.0f32.to_bits(), "{codec:?}");
+                    }
+                }
+                if codec == Codec::F32 {
+                    assert_eq!(err, 0.0);
+                    assert_eq!(v, orig);
+                }
+                if let Some(levels) = codec.quant_levels() {
+                    if nz.len() >= 2 {
+                        let lo = nz.iter().cloned().fold(f32::INFINITY, f32::min);
+                        let hi =
+                            nz.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                        let half = ((hi - lo) as f64 / levels as f64) / 2.0 + 1e-6;
+                        for (a, b) in orig.iter().zip(&v) {
+                            if *a != 0.0 {
+                                assert!(
+                                    ((a - b) as f64).abs() <= half,
+                                    "{codec:?}: {a} -> {b}, half-step {half}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sparse_and_dense_transcode_agree_on_fully_dense_input() {
+        // With no zeros present the non-zero grid IS the dense grid, so
+        // the two entry points are bitwise identical.
+        check("sparse==dense transcode on dense input", 60, |g| {
+            let mut orig = g.f32_vec(1..60, 2.0);
+            for x in orig.iter_mut() {
+                if *x == 0.0 {
+                    *x = 1.0; // the generator essentially never emits 0.0, but be safe
+                }
+            }
+            let n = orig.len();
+            for codec in [Codec::F32, Codec::F16, Codec::Q8, Codec::Q4, Codec::Q2] {
+                let mut dense = orig.clone();
+                let mut sparse = orig.clone();
+                let e1 = codec.transcode(&mut dense, &one_slice(n));
+                let e2 = codec.transcode_sparse(&mut sparse, &one_slice(n));
+                assert_eq!(e1, e2, "{codec:?}");
+                for (a, b) in dense.iter().zip(&sparse) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{codec:?}");
+                }
+            }
+        });
     }
 
     #[test]
@@ -366,7 +583,7 @@ mod tests {
     fn transcode_error_matches_reported() {
         check("reported err² equals recomputed err²", 50, |g| {
             let orig = g.f32_vec(1..60, 2.0);
-            for codec in [Codec::F16, Codec::Q8] {
+            for codec in [Codec::F16, Codec::Q8, Codec::Q4, Codec::Q2] {
                 let mut v = orig.clone();
                 let n = v.len();
                 let err = codec.transcode(&mut v, &one_slice(n));
@@ -390,7 +607,7 @@ mod tests {
             let t = Tensors::from_raw(vec![a, b]);
             let p = g.usize_in(1..6);
             let plan = FragmentPlan::for_tensors(&t, p);
-            for codec in [Codec::F32, Codec::F16, Codec::Q8] {
+            for codec in [Codec::F32, Codec::F16, Codec::Q8, Codec::Q4, Codec::Q2] {
                 for f in 0..plan.n_fragments() {
                     let mut two_pass = plan.extract(&t, f);
                     let want_err = codec.transcode(&mut two_pass, plan.slices(f));
@@ -402,6 +619,54 @@ mod tests {
                     for (x, y) in fused.iter().zip(&two_pass) {
                         assert_eq!(x.to_bits(), y.to_bits(), "{codec:?}");
                     }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_error_feedback_residual_drains_instead_of_accumulating() {
+        // The invariant the `[stream] error_feedback` knob rests on:
+        // with residual carry-over, the *cumulative* values shipped over
+        // T rounds drift from the cumulative intended values by at most
+        // one round's quantization error (the telescoping sum leaves
+        // only the final residual), instead of T rounds' worth.
+        check("EF drift telescopes to one round's quant error", 30, |g| {
+            let n = g.usize_in(4..60);
+            let x: Vec<f32> =
+                (0..n).map(|_| g.f64_in(-1.0..1.0) as f32).collect();
+            for codec in [Codec::Q8, Codec::Q4, Codec::Q2] {
+                let levels = codec.quant_levels().unwrap() as f64;
+                let mut residual = vec![0.0f32; n];
+                let mut sent_sum = vec![0.0f64; n];
+                let rounds = 25usize;
+                for _ in 0..rounds {
+                    let intended: Vec<f32> =
+                        x.iter().zip(&residual).map(|(a, b)| a + b).collect();
+                    let mut sent = intended.clone();
+                    codec.transcode(&mut sent, &one_slice(n));
+                    // One round's quant cell bounds the fresh residual —
+                    // it never compounds across rounds.
+                    let lo = intended.iter().cloned().fold(f64::INFINITY, |m, v| m.min(v as f64));
+                    let hi = intended.iter().cloned().fold(f64::NEG_INFINITY, |m, v| m.max(v as f64));
+                    let cell = (hi - lo) / levels;
+                    for i in 0..n {
+                        residual[i] = intended[i] - sent[i];
+                        assert!(
+                            (residual[i] as f64).abs() <= cell + 1e-6,
+                            "{codec:?}: residual {} exceeds one quant cell {cell}",
+                            residual[i]
+                        );
+                        sent_sum[i] += sent[i] as f64;
+                    }
+                }
+                for i in 0..n {
+                    let drift = rounds as f64 * x[i] as f64 - sent_sum[i];
+                    assert!(
+                        (drift - residual[i] as f64).abs() < 1e-3,
+                        "{codec:?}: cumulative drift {drift} is not the final residual {}",
+                        residual[i]
+                    );
                 }
             }
         });

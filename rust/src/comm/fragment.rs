@@ -145,6 +145,21 @@ impl FragmentPlan {
             into.leaves_mut()[s.leaf][s.start..s.end].copy_from_slice(src);
         }
     }
+
+    /// Add fragment `f` of `from` elementwise into the same fragment of
+    /// `into` — the error-feedback replay: a residual fragment is folded
+    /// back into the next outer delta before prune/codec.
+    pub fn add_fragment(&self, from: &Tensors, into: &mut Tensors, f: usize) {
+        for s in &self.fragments[f] {
+            let src = &from.leaves()[s.leaf][s.start..s.end];
+            for (d, &x) in into.leaves_mut()[s.leaf][s.start..s.end]
+                .iter_mut()
+                .zip(src)
+            {
+                *d += x;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -268,5 +283,20 @@ mod tests {
         plan.copy_fragment(&src, &mut dst, 0);
         let got: Vec<f32> = dst.iter_flat().collect();
         assert_eq!(got, vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn add_fragment_adds_only_that_fragment() {
+        let src = toy(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let mut dst = toy(&[&[10.0, 10.0], &[10.0, 10.0]]);
+        let plan = FragmentPlan::for_tensors(&src, 2);
+        plan.add_fragment(&src, &mut dst, 1);
+        let got: Vec<f32> = dst.iter_flat().collect();
+        assert_eq!(got, vec![10.0, 10.0, 13.0, 14.0]);
+        // Adding an all-zero tree is the identity (the EF-off residual).
+        let zeros = toy(&[&[0.0, 0.0], &[0.0, 0.0]]);
+        plan.add_fragment(&zeros, &mut dst, 0);
+        plan.add_fragment(&zeros, &mut dst, 1);
+        assert_eq!(dst.iter_flat().collect::<Vec<f32>>(), got);
     }
 }

@@ -30,6 +30,7 @@
 pub mod codec;
 pub mod fragment;
 pub mod topology;
+pub mod wire;
 
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;

@@ -1,0 +1,243 @@
+//! Wire formats for outer-gradient fragments: dense vs sparse payloads.
+//!
+//! Historically every payload was billed dense — `codec.encoded_bytes(n)`
+//! for the fragment's full element count — which is why the config layer
+//! used to hard-reject any composition that produced sparsity the wire
+//! could not represent (sign-pruning with a non-f32 codec, pruning on the
+//! ring, pruning under the hierarchical topology). [`WireFormat`] is the
+//! missing representation: a payload is either
+//!
+//! * **Dense** — every element ships, `codec.encoded_bytes(n, s)` bytes; or
+//! * **Sparse** — a presence bitmap (1 bit per fragment element) plus the
+//!   `nnz` non-zero values codec-encoded: `⌈n/8⌉ + codec.encoded_bytes(nnz, s)`.
+//!
+//! **Reconciliation contract:** for the `f32` codec a sparse payload over
+//! the *whole* delta bills `4·nnz + ⌈n/8⌉` — exactly
+//! [`crate::coordinator::prune::pruned_payload_bytes`], the formula the
+//! pruning bench has asserted since it existed. The sparse format is the
+//! per-fragment generalization of that number, not a new cost model
+//! (property-pinned below).
+//!
+//! [`Support`] is the receiver-side view of the bitmap: which positions of
+//! a fragment are non-zero. The topology layer unions supports to bill
+//! aggregated hops as the density they actually ship — the ring's
+//! reduce-scatter chunks re-densify as partial sums accumulate, and the
+//! hierarchical leader hop ships the union of its group's supports.
+
+use super::codec::Codec;
+
+/// How one fragment payload is laid out on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFormat {
+    /// All `n_elements` values ship, codec-encoded.
+    Dense,
+    /// A presence bitmap over the fragment plus `nnz` codec-encoded
+    /// non-zero values.
+    Sparse {
+        /// Number of non-zero values on the wire (counted on the pruned
+        /// payload *before* quantization — quantization never changes
+        /// what positions ship, only their precision).
+        nnz: usize,
+    },
+}
+
+impl WireFormat {
+    /// Billed bytes for a payload of `n_elements` over `n_slices`
+    /// contiguous leaf slices.
+    pub fn bytes(&self, codec: Codec, n_elements: usize, n_slices: usize) -> u64 {
+        match *self {
+            WireFormat::Dense => codec.encoded_bytes(n_elements, n_slices),
+            WireFormat::Sparse { nnz } => {
+                debug_assert!(nnz <= n_elements, "support exceeds payload");
+                (n_elements as u64).div_ceil(8) + codec.encoded_bytes(nnz, n_slices)
+            }
+        }
+    }
+}
+
+/// Billed bytes for a sparse payload: presence bitmap + codec-encoded
+/// non-zeros. Shorthand for `WireFormat::Sparse { nnz }.bytes(..)`.
+pub fn sparse_payload_bytes(
+    codec: Codec,
+    n_elements: usize,
+    nnz: usize,
+    n_slices: usize,
+) -> u64 {
+    WireFormat::Sparse { nnz }.bytes(codec, n_elements, n_slices)
+}
+
+/// A fragment payload's non-zero positions as a packed bitmap — the
+/// receiver-side view of the sparse format's presence bits. Supports
+/// cheap unioning (for aggregated-hop billing) and ranged counting (for
+/// the ring's per-chunk bills).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Support {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Support {
+    /// Empty support over `len` positions.
+    pub fn empty(len: usize) -> Support {
+        Support { words: vec![0u64; len.div_ceil(64)], len }
+    }
+
+    /// Mark every non-zero position of `values`.
+    pub fn from_values(values: &[f32]) -> Support {
+        let mut s = Support::empty(values.len());
+        for (i, &x) in values.iter().enumerate() {
+            if x != 0.0 {
+                s.words[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        s
+    }
+
+    /// Number of positions covered (the fragment's element count).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of non-zero positions.
+    pub fn nnz(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Union `other` into `self` (both must cover the same positions).
+    pub fn union_with(&mut self, other: &Support) {
+        assert_eq!(self.len, other.len, "support length mismatch");
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// Non-zero count within positions `[start, end)` — the ring bills
+    /// each hop's chunk by the density of the partial sum it carries.
+    pub fn nnz_in_range(&self, start: usize, end: usize) -> usize {
+        assert!(start <= end && end <= self.len, "range out of bounds");
+        let mut count = 0usize;
+        let mut i = start;
+        while i < end {
+            let word = i / 64;
+            let lo_bit = i % 64;
+            let hi = ((word + 1) * 64).min(end);
+            let n_bits = hi - i;
+            let mask = if n_bits == 64 {
+                u64::MAX
+            } else {
+                ((1u64 << n_bits) - 1) << lo_bit
+            };
+            count += (self.words[word] & mask).count_ones() as usize;
+            i = hi;
+        }
+        count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::prune;
+    use crate::util::prop::check;
+
+    #[test]
+    fn dense_bytes_match_codec() {
+        for codec in [Codec::F32, Codec::F16, Codec::Q8, Codec::Q4, Codec::Q2] {
+            assert_eq!(
+                WireFormat::Dense.bytes(codec, 100, 3),
+                codec.encoded_bytes(100, 3)
+            );
+        }
+    }
+
+    #[test]
+    fn prop_sparse_f32_reconciles_with_pruned_payload_bytes() {
+        // Satellite: the sparse wire format at f32 IS the pruning bench's
+        // historical closed form — bitmap + 4 bytes per survivor.
+        check("sparse f32 == pruned_payload_bytes", 200, |g| {
+            let total = g.usize_in(1..5000);
+            let zeroed = g.usize_in(0..total + 1);
+            let nnz = total - zeroed;
+            assert_eq!(
+                sparse_payload_bytes(Codec::F32, total, nnz, 1),
+                prune::pruned_payload_bytes(total, zeroed)
+            );
+            // Slice count is irrelevant at f32 (no per-slice sidecar).
+            assert_eq!(
+                sparse_payload_bytes(Codec::F32, total, nnz, 7),
+                prune::pruned_payload_bytes(total, zeroed)
+            );
+        });
+    }
+
+    #[test]
+    fn sparse_bytes_closed_forms() {
+        // 100 elements, 40 survivors, 2 slices.
+        assert_eq!(sparse_payload_bytes(Codec::F32, 100, 40, 2), 13 + 160);
+        assert_eq!(sparse_payload_bytes(Codec::F16, 100, 40, 2), 13 + 80);
+        assert_eq!(sparse_payload_bytes(Codec::Q8, 100, 40, 2), 13 + 40 + 16);
+        assert_eq!(sparse_payload_bytes(Codec::Q4, 100, 40, 2), 13 + 20 + 16);
+        assert_eq!(sparse_payload_bytes(Codec::Q2, 100, 40, 2), 13 + 10 + 16);
+    }
+
+    #[test]
+    fn prop_support_counts_and_ranges() {
+        check("support nnz and ranged counts agree with the values", 100, |g| {
+            let mut v = g.f32_vec(1..300, 2.0);
+            let stride = g.usize_in(1..6);
+            for (i, x) in v.iter_mut().enumerate() {
+                if i % stride == 0 {
+                    *x = 0.0;
+                }
+            }
+            let s = Support::from_values(&v);
+            let want = v.iter().filter(|&&x| x != 0.0).count();
+            assert_eq!(s.nnz(), want);
+            assert_eq!(s.nnz_in_range(0, v.len()), want);
+            // A split partitions the count.
+            let mid = g.usize_in(0..v.len() + 1);
+            assert_eq!(
+                s.nnz_in_range(0, mid) + s.nnz_in_range(mid, v.len()),
+                want
+            );
+        });
+    }
+
+    #[test]
+    fn prop_union_is_bitwise_or() {
+        check("union support == elementwise either-nonzero", 100, |g| {
+            let n = g.usize_in(1..200);
+            let mk = |g: &mut crate::util::prop::Gen, stride: usize| -> Vec<f32> {
+                (0..n)
+                    .map(|i| if i % stride == 0 { 0.0 } else { g.f64_in(0.1..1.0) as f32 })
+                    .collect()
+            };
+            let sa = g.usize_in(2..5);
+            let sb = g.usize_in(2..5);
+            let a = mk(g, sa);
+            let b = mk(g, sb);
+            let mut u = Support::from_values(&a);
+            u.union_with(&Support::from_values(&b));
+            let want = (0..n).filter(|&i| a[i] != 0.0 || b[i] != 0.0).count();
+            assert_eq!(u.nnz(), want);
+        });
+    }
+
+    #[test]
+    fn ranged_count_crosses_word_boundaries() {
+        let mut v = vec![0.0f32; 130];
+        for i in [0usize, 63, 64, 65, 127, 128, 129] {
+            v[i] = 1.0;
+        }
+        let s = Support::from_values(&v);
+        assert_eq!(s.nnz(), 7);
+        assert_eq!(s.nnz_in_range(0, 64), 2);
+        assert_eq!(s.nnz_in_range(63, 66), 3);
+        assert_eq!(s.nnz_in_range(64, 130), 5);
+        assert_eq!(s.nnz_in_range(130, 130), 0);
+    }
+}

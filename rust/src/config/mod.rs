@@ -298,6 +298,13 @@ pub struct StreamConfig {
     pub schedule: SyncSchedule,
     /// Outer-gradient wire codec.
     pub codec: Codec,
+    /// Per-worker error feedback (MuLoCo, arXiv 2505.23725): each worker
+    /// keeps residual = intended − sent after compression and folds it
+    /// into its next outer delta. Lossy compression becomes unbiased
+    /// over rounds; under the f32 codec with no pruning the residual is
+    /// exactly zero, and fragments lost to drops stay lost (their
+    /// residual is cleared, preserving the drop semantics).
+    pub error_feedback: bool,
 }
 
 impl Default for StreamConfig {
@@ -306,14 +313,15 @@ impl Default for StreamConfig {
             fragments: 1,
             schedule: SyncSchedule::EveryRound,
             codec: Codec::F32,
+            error_feedback: false,
         }
     }
 }
 
 impl StreamConfig {
     /// Parse the CLI mini-language:
-    /// `fragments=4,schedule=staggered,codec=q8` (keys optional, any
-    /// order; omitted keys keep their defaults).
+    /// `fragments=4,schedule=staggered,codec=q8,error_feedback=true`
+    /// (keys optional, any order; omitted keys keep their defaults).
     pub fn parse(s: &str) -> anyhow::Result<StreamConfig> {
         let mut cfg = StreamConfig::default();
         for part in s.split(',') {
@@ -332,8 +340,14 @@ impl StreamConfig {
                 }
                 "schedule" => cfg.schedule = SyncSchedule::parse(value.trim())?,
                 "codec" => cfg.codec = Codec::parse(value.trim())?,
+                "error_feedback" => {
+                    cfg.error_feedback = value.trim().parse().map_err(|e| {
+                        anyhow::anyhow!("bad error_feedback flag {value:?}: {e}")
+                    })?
+                }
                 other => anyhow::bail!(
-                    "unknown --stream key {other:?} (want fragments|schedule|codec)"
+                    "unknown --stream key {other:?} \
+                     (want fragments|schedule|codec|error_feedback)"
                 ),
             }
         }
@@ -1087,22 +1101,18 @@ impl ExperimentConfig {
             self.speed.max_profiled_worker() - 1,
             self.pool_size()
         );
-        anyhow::ensure!(
-            !(self.prune_frac > 0.0 && self.stream.codec != Codec::F32),
-            "sign-pruning (diloco.prune_frac > 0) composes with the f32 codec only; \
-             got codec {:?}",
-            self.stream.codec.name()
-        );
+        // Sign-pruning now composes with every codec and every topology:
+        // the sparse wire format (comm::wire) bills pruned payloads as
+        // bitmap + codec-encoded non-zeros, quantizers fit their grid
+        // over the non-zeros only, the ring bills each chunk by the
+        // density of the partial sum it carries, and the hierarchical
+        // leader hop bills the union of its group's supports. The three
+        // dense-only rejections that used to live here are gone.
         anyhow::ensure!(
             !(self.topology == TopologyConfig::Ring && self.comm.drop_prob > 0.0),
             "the ring all-reduce is a reliable collective (a dropped chunk would \
              corrupt every replica); drop injection (comm.drop_prob > 0) composes \
              with star|gossip|hierarchical"
-        );
-        anyhow::ensure!(
-            !(self.topology == TopologyConfig::Ring && self.prune_frac > 0.0),
-            "sign-pruning produces sparse payloads the ring's dense chunk billing \
-             cannot represent; pruning composes with star|gossip"
         );
         if let Some(churn) = &self.churn {
             anyhow::ensure!(
@@ -1122,17 +1132,12 @@ impl ExperimentConfig {
             self.data.holdout
         );
         let max_k = self.pool_size();
-        // Mirror Dataset::build's holdout selection exactly (a strided
-        // pick capped at n_hold), so validation neither under- nor
-        // over-counts the training documents left for sharding.
-        let n = self.data.n_docs;
-        let n_hold = ((n as f64) * self.data.holdout).ceil() as usize;
-        let train_docs = if n == 0 {
-            0
-        } else {
-            let stride = n.div_ceil(n_hold.max(1));
-            n - n.div_ceil(stride).min(n_hold)
-        };
+        // Count the training documents through the same function
+        // Dataset::build splits with (data::shard::holdout_split) — this
+        // used to be a hand-maintained mirror of that arithmetic, which
+        // could drift.
+        let train_docs =
+            crate::data::shard::train_doc_count(self.data.n_docs, self.data.holdout);
         anyhow::ensure!(
             train_docs >= max_k,
             "data.docs = {} leaves {} training documents after the {:.0}% holdout \
@@ -1141,13 +1146,6 @@ impl ExperimentConfig {
             train_docs,
             100.0 * self.data.holdout,
             max_k
-        );
-        anyhow::ensure!(
-            !(self.prune_frac > 0.0
-                && matches!(self.topology, TopologyConfig::Hierarchical { .. })),
-            "the hierarchical leader hop ships a dense re-aggregated payload, so \
-             sign-pruned sparse uploads would be billed inconsistently; pruning \
-             composes with star|gossip"
         );
         Ok(())
     }
@@ -1249,6 +1247,8 @@ impl ExperimentConfig {
         cfg.stream.schedule = SyncSchedule::parse(&schedule)?;
         let codec = doc.str_or("stream.codec", cfg.stream.codec.name())?;
         cfg.stream.codec = Codec::parse(&codec)?;
+        cfg.stream.error_feedback =
+            doc.bool_or("stream.error_feedback", cfg.stream.error_feedback)?;
 
         let speed = doc.str_or("speed.profile", "")?;
         if !speed.is_empty() {
@@ -1404,7 +1404,8 @@ mod tests {
     #[test]
     fn from_toml_stream_section() -> anyhow::Result<()> {
         let doc = TomlDoc::parse(
-            "[stream]\nfragments = 4\nschedule = \"staggered\"\ncodec = \"q8\"",
+            "[stream]\nfragments = 4\nschedule = \"staggered\"\ncodec = \"q8\"\n\
+             error_feedback = true",
         )?;
         let cfg = ExperimentConfig::from_toml(&doc)?;
         assert_eq!(
@@ -1413,8 +1414,12 @@ mod tests {
                 fragments: 4,
                 schedule: SyncSchedule::Staggered,
                 codec: Codec::Q8,
+                error_feedback: true,
             }
         );
+        // The sub-byte codecs parse from TOML too.
+        let doc = TomlDoc::parse("[stream]\ncodec = \"q2\"")?;
+        assert_eq!(ExperimentConfig::from_toml(&doc)?.stream.codec, Codec::Q2);
         assert!(!cfg.stream.is_monolithic());
         assert!(ExperimentConfig::paper_default("a", "nano")
             .stream
@@ -1428,11 +1433,10 @@ mod tests {
         // never as panics.
         for bad in [
             "[stream]\nfragments = 0",
-            "[stream]\ncodec = \"q4\"",
+            "[stream]\ncodec = \"q3\"",
             "[stream]\nschedule = \"round-robin\"",
             "[stream]\nfragments = -3",
-            // Pruning composes with the f32 codec only.
-            "[diloco]\nprune_frac = 0.5\n[stream]\ncodec = \"q8\"",
+            "[stream]\nerror_feedback = \"maybe\"",
         ] {
             let Ok(doc) = TomlDoc::parse(bad) else { continue };
             let err = ExperimentConfig::from_toml(&doc)
@@ -1452,6 +1456,11 @@ mod tests {
         assert_eq!(s.fragments, 1);
         assert_eq!(s.schedule, SyncSchedule::EveryRound);
         assert_eq!(s.codec, Codec::F16);
+        assert!(!s.error_feedback);
+        let s = StreamConfig::parse("codec=q4,error_feedback=true").unwrap();
+        assert_eq!(s.codec, Codec::Q4);
+        assert!(s.error_feedback);
+        assert!(StreamConfig::parse("error_feedback=maybe").is_err());
         assert!(StreamConfig::parse("fragments=0").is_err());
         assert!(StreamConfig::parse("fragments=two").is_err());
         assert!(StreamConfig::parse("bogus=1").is_err());
@@ -1544,13 +1553,33 @@ mod tests {
             "[topology]\nkind = \"hierarchical\"\ngroups = 0",
             "[topology]\ngroups = 0",
             "[topology]\nkind = \"ring\"\n[comm]\ndrop_prob = 0.3",
-            "[topology]\nkind = \"ring\"\n[diloco]\nprune_frac = 0.5",
-            "[topology]\nkind = \"hierarchical\"\n[diloco]\nprune_frac = 0.5",
         ] {
             let Ok(doc) = TomlDoc::parse(bad) else { continue };
             ExperimentConfig::from_toml(&doc)
                 .expect_err(&format!("{bad:?} must be rejected"));
         }
+    }
+
+    #[test]
+    fn prune_now_composes_with_every_codec_and_topology() -> anyhow::Result<()> {
+        // The three dense-only wire-format rejections are lifted: pruning
+        // with a quantized codec, pruning on the ring, and pruning under
+        // the hierarchical topology all validate (the sparse wire format
+        // bills them exactly — see comm::wire and the coordinator tests).
+        for ok in [
+            "[diloco]\nprune_frac = 0.5\n[stream]\ncodec = \"q8\"",
+            "[diloco]\nprune_frac = 0.5\n[stream]\ncodec = \"q4\"\n\
+             error_feedback = true",
+            "[topology]\nkind = \"ring\"\n[diloco]\nprune_frac = 0.5",
+            "[topology]\nkind = \"hierarchical\"\n[diloco]\nprune_frac = 0.5",
+            "[topology]\nkind = \"gossip\"\n[diloco]\nprune_frac = 0.25\n\
+             [stream]\ncodec = \"q2\"",
+        ] {
+            let doc = TomlDoc::parse(ok)?;
+            ExperimentConfig::from_toml(&doc)
+                .map_err(|e| anyhow::anyhow!("{ok:?} must validate: {e:#}"))?;
+        }
+        Ok(())
     }
 
     #[test]

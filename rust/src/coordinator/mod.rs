@@ -49,7 +49,7 @@ pub mod stats;
 use crate::checkpoint::{self, PendingFragment, PendingSync, TrainState, WorkerState};
 use crate::comm::codec::Codec;
 use crate::comm::fragment::FragmentPlan;
-use crate::comm::{topology, Direction, RoundComm, SimNet};
+use crate::comm::{topology, wire, Direction, RoundComm, SimNet};
 use crate::config::{ExperimentConfig, TopologyConfig};
 use crate::data::batch::{BatchIter, EvalSet};
 use crate::data::Dataset;
@@ -406,6 +406,7 @@ impl Coordinator {
         carry_comm_s: f64,
         codec_err_sq_total: f64,
         pending_sync: &[PendingSync],
+        residuals: &[Tensors],
     ) -> anyhow::Result<()> {
         let path = self
             .cfg
@@ -427,6 +428,7 @@ impl Coordinator {
             carry_comm_s,
             codec_err_sq_total,
             pending_sync: pending_sync.to_vec(),
+            residuals: residuals.to_vec(),
         };
         checkpoint::save_state(path, &self.rt.manifest, &st)
     }
@@ -498,6 +500,13 @@ impl Coordinator {
         // refs[w] — the last global values worker w adopted, per
         // fragment: the baseline its outer gradient is measured against.
         let mut refs: Vec<Tensors> = (0..max_k).map(|_| global.clone()).collect();
+        // Per-worker error-feedback residuals (MuLoCo, arXiv:2505.23725):
+        // what the last compressed upload failed to carry, replayed into
+        // the next outer delta. Empty when the knob is off, so the
+        // default path allocates (and touches) nothing.
+        let ef = cfg.stream.error_feedback;
+        let mut residuals: Vec<Tensors> =
+            if ef { (0..max_k).map(|_| zeros.clone()).collect() } else { Vec::new() };
         // pending_adopt[w][f] — worker w re-adopts the current global
         // fragment f at its next active round (all true initially: every
         // worker starts synced, exactly as the monolithic loop did).
@@ -555,6 +564,11 @@ impl Coordinator {
             carry_comm_s = st.carry_comm_s;
             codec_err_sq_total = st.codec_err_sq_total;
             pending = st.pending_sync;
+            // Pre-v3 checkpoints (and runs saved with error feedback
+            // off) carry no residuals — resume with zeros.
+            if ef && !st.residuals.is_empty() {
+                residuals = st.residuals;
+            }
             let snap = st
                 .outer
                 .into_iter()
@@ -667,21 +681,164 @@ impl Coordinator {
             // for the round's cosine/norm statistics.
             let mut received_assembled: Vec<Tensors> = Vec::new();
             let mut codec_err_sq = 0.0f64;
-            // Hierarchical delivery: one droppable aggregate per (group,
-            // due fragment) on the leader's WAN lane, keyed
+            // Pass 1 — payload computation, roster order: outer
+            // gradient, (optional) error-feedback replay, sign-pruning,
+            // transcode to wire values, and the *exact* billed size of
+            // every due fragment. Aggregated hops (the hierarchical
+            // leader, billed in pass 2) need every member's support
+            // before any byte crosses the fabric, which is why billing
+            // is no longer interleaved with payload computation. The
+            // reorder is trace-invariant: drop decisions are a pure
+            // function of (fabric seed, round, worker, fragment, hop),
+            // and lane billing is additive within a round.
+            let pruned = cfg.prune_frac > 0.0;
+            let mut weights_v: Vec<f64> = Vec::with_capacity(k_t);
+            let mut deltas: Vec<Tensors> = Vec::with_capacity(k_t);
+            // Per (roster position, due fragment): wire values, codec
+            // error, billed bytes, sparse support, EF intended values.
+            let mut up_vals: Vec<Vec<Vec<f32>>> = Vec::with_capacity(k_t);
+            let mut up_errs: Vec<Vec<f64>> = Vec::with_capacity(k_t);
+            let mut up_bytes: Vec<Vec<u64>> = Vec::with_capacity(k_t);
+            let mut up_support: Vec<Vec<Option<wire::Support>>> =
+                Vec::with_capacity(k_t);
+            let mut up_intended: Vec<Vec<Vec<f32>>> = Vec::with_capacity(k_t);
+            for &wid in &roster {
+                let w = &workers[wid];
+                let mut delta = refs[wid].delta(&w.params);
+                if ef {
+                    // Error feedback (MuLoCo): replay what the last
+                    // compressed upload of each due fragment failed to
+                    // carry, so compression error accumulates into
+                    // later rounds instead of being silently dropped.
+                    for &f in &due {
+                        plan.add_fragment(&residuals[wid], &mut delta, f);
+                    }
+                }
+                // The values the worker *intends* to ship, recorded
+                // before prune + codec so the residual can be measured
+                // against them once the wire values are known.
+                let intended: Vec<Vec<f32>> = if ef {
+                    due.iter()
+                        .map(|&f| {
+                            let mut v = scratch.lease();
+                            plan.extract_into(&delta, f, &mut v);
+                            v
+                        })
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                // Sign-pruning (Table 6) applies to the whole outer
+                // gradient before fragmenting; each fragment then ships
+                // as a sparse (bitmap + non-zeros) payload billed at
+                // its own exact density — the proportional estimate
+                // (and the dense-only validate() rejections it forced)
+                // are gone.
+                if pruned {
+                    prune::prune_sign(&mut delta, cfg.prune_frac);
+                }
+                weights_v.push(if cfg.weighted_average && cfg.data.non_iid {
+                    self.dataset.shard_doc_counts
+                        [wid % self.dataset.shard_doc_counts.len()]
+                        as f64
+                } else {
+                    1.0
+                });
+                let mut vals_f = Vec::with_capacity(due.len());
+                let mut errs_f = Vec::with_capacity(due.len());
+                let mut bytes_f = Vec::with_capacity(due.len());
+                let mut sup_f = Vec::with_capacity(due.len());
+                for &f in &due {
+                    let mut vals = scratch.lease();
+                    // k=1 "accelerating a single worker" (Fig 9): the
+                    // outer step is local, nothing crosses the fabric —
+                    // no codec, no billing, no drops.
+                    if k_t == 1 {
+                        plan.extract_into(&delta, f, &mut vals);
+                        errs_f.push(0.0);
+                        bytes_f.push(0);
+                        sup_f.push(None);
+                    } else if pruned {
+                        // Sparse wire format: the support (which
+                        // positions ship) is fixed by pruning *before*
+                        // quantization; the codec then encodes only the
+                        // survivors. Billed bytes are the fragment's
+                        // bitmap + encoded non-zeros — exactly
+                        // `pruned_payload_bytes` at f32 (comm::wire
+                        // pins the reconciliation).
+                        plan.extract_into(&delta, f, &mut vals);
+                        let sup = wire::Support::from_values(&vals);
+                        errs_f
+                            .push(codec.transcode_sparse(&mut vals, plan.slices(f)));
+                        bytes_f.push(wire::sparse_payload_bytes(
+                            codec,
+                            plan.elements(f),
+                            sup.nnz(),
+                            plan.slices(f).len(),
+                        ));
+                        sup_f.push(Some(sup));
+                    } else {
+                        // Dense: extract and transcode fuse into one
+                        // pass where the wire format permits
+                        // (bitwise-identical values).
+                        errs_f.push(crate::comm::codec::extract_transcode(
+                            codec, &plan, &delta, f, &mut vals,
+                        ));
+                        bytes_f.push(
+                            codec.encoded_bytes(plan.elements(f), plan.slices(f).len()),
+                        );
+                        sup_f.push(None);
+                    }
+                    vals_f.push(vals);
+                }
+                deltas.push(delta);
+                up_vals.push(vals_f);
+                up_errs.push(errs_f);
+                up_bytes.push(bytes_f);
+                up_support.push(sup_f);
+                up_intended.push(intended);
+            }
+
+            // Pass 2 — hierarchical delivery: one droppable aggregate
+            // per (group, due fragment) on the leader's WAN lane, keyed
             // (round, leader, fragment, hop 1). Member payloads ride
             // free intra-group links, so a dropped leader hop excludes
-            // — and desyncs — the whole group for that fragment.
+            // — and desyncs — the whole group for that fragment. The
+            // leader re-aggregates its members' payloads, so the hop
+            // bills the density the aggregate actually ships: the union
+            // of the member supports when pruned, the dense fragment
+            // otherwise.
             let hier_landed: Option<Vec<Vec<bool>>> = hier_groups.as_ref().map(|gs| {
                 due.iter()
-                    .map(|&f| {
+                    .enumerate()
+                    .map(|(di, &f)| {
                         let mut landed = vec![false; k_t];
                         for g in gs {
                             let ok = if k_t == 1 {
                                 true
                             } else {
-                                let bytes = codec
-                                    .encoded_bytes(plan.elements(f), plan.slices(f).len());
+                                let bytes = if pruned {
+                                    let mut u =
+                                        wire::Support::empty(plan.elements(f));
+                                    for &m in g {
+                                        u.union_with(
+                                            up_support[m][di].as_ref().expect(
+                                                "pruned payloads carry supports",
+                                            ),
+                                        );
+                                    }
+                                    wire::sparse_payload_bytes(
+                                        codec,
+                                        plan.elements(f),
+                                        u.nnz(),
+                                        plan.slices(f).len(),
+                                    )
+                                } else {
+                                    codec.encoded_bytes(
+                                        plan.elements(f),
+                                        plan.slices(f).len(),
+                                    )
+                                };
                                 net.try_send_gen(
                                     bytes,
                                     Direction::Up,
@@ -700,25 +857,13 @@ impl Coordinator {
                     })
                     .collect()
             });
-            for (i, &wid) in roster.iter().enumerate() {
+            // Pass 3 — star uploads (per-fragment keyed drops), error
+            // feedback bookkeeping, and assembly, in the same roster ×
+            // due order the fused loop used, so the default trace is
+            // bitwise unchanged.
+            for (i, delta) in deltas.into_iter().enumerate() {
+                let wid = roster[i];
                 let w = &workers[wid];
-                let mut delta = refs[wid].delta(&w.params);
-                // Sign-pruning (Table 6) applies to the whole outer
-                // gradient before fragmenting; each fragment bills its
-                // proportional share of the pruned payload (exact at P=1).
-                let pruned_payload = if cfg.prune_frac > 0.0 {
-                    let zeroed = prune::prune_sign(&mut delta, cfg.prune_frac);
-                    Some(prune::pruned_payload_bytes(delta.total_elements(), zeroed))
-                } else {
-                    None
-                };
-                let weight = if cfg.weighted_average && cfg.data.non_iid {
-                    self.dataset.shard_doc_counts
-                        [wid % self.dataset.shard_doc_counts.len()]
-                        as f64
-                } else {
-                    1.0
-                };
                 // With the exact f32 codec the received values ARE the
                 // delta's, so the stats tensor can reuse `delta` instead
                 // of being re-assembled (the default hot path moves it,
@@ -727,49 +872,50 @@ impl Coordinator {
                 let mut assembled: Option<Tensors> = None;
                 let mut dropped_any = false;
                 for (di, &f) in due.iter().enumerate() {
-                    let mut vals = scratch.lease();
-                    // k=1 "accelerating a single worker" (Fig 9): the
-                    // outer step is local, nothing crosses the fabric —
-                    // no codec, no billing, no drops. Otherwise extract
-                    // and transcode fuse into one pass where the wire
-                    // format permits (bitwise-identical values).
-                    let err_sq = if k_t == 1 {
-                        plan.extract_into(&delta, f, &mut vals);
-                        0.0
-                    } else {
-                        crate::comm::codec::extract_transcode(
-                            codec, &plan, &delta, f, &mut vals,
-                        )
-                    };
-                    let bytes = match pruned_payload {
-                        Some(total) => {
-                            total * plan.elements(f) as u64
-                                / plan.total_elements() as u64
-                        }
-                        None => codec
-                            .encoded_bytes(plan.elements(f), plan.slices(f).len()),
-                    };
+                    let vals = std::mem::take(&mut up_vals[i][di]);
                     let ok = match &hier_landed {
                         // Hierarchical: the group leader's hop already
                         // decided this fragment's fate for every member
                         // (indexed by roster position).
                         Some(landed) => landed[di][i],
                         None => {
-                            if k_t == 1 {
-                                true
-                            } else {
-                                net.try_send_gen(bytes, Direction::Up, t, wid, f, 0, delay)
-                            }
+                            k_t == 1
+                                || net.try_send_gen(
+                                    up_bytes[i][di],
+                                    Direction::Up,
+                                    t,
+                                    wid,
+                                    f,
+                                    0,
+                                    delay,
+                                )
                         }
                     };
+                    if ef {
+                        // residual = intended − what actually shipped. A
+                        // dropped fragment clears its residual instead:
+                        // drops lose the round's contribution entirely
+                        // (the Fig-8 semantics) — error feedback repairs
+                        // *compression* loss only.
+                        let mut res = std::mem::take(&mut up_intended[i][di]);
+                        if ok {
+                            for (r, v) in res.iter_mut().zip(&vals) {
+                                *r -= *v;
+                            }
+                        } else {
+                            res.iter_mut().for_each(|r| *r = 0.0);
+                        }
+                        plan.scatter(&res, f, &mut residuals[wid]);
+                        scratch.recycle(res);
+                    }
                     if ok {
-                        codec_err_sq += err_sq;
+                        codec_err_sq += up_errs[i][di];
                         if !lossless {
                             let a = assembled.get_or_insert_with(|| zeros.clone());
                             plan.scatter(&vals, f, a);
                         }
                         frag_rx[di].push(vals);
-                        frag_wts[di].push(weight);
+                        frag_wts[di].push(weights_v[i]);
                         sent[i][di] = true;
                     } else {
                         dropped_any = true;
@@ -1009,6 +1155,7 @@ impl Coordinator {
                     carry_comm_s,
                     codec_err_sq_total,
                     &pending,
+                    &residuals,
                 )?;
             }
         }
@@ -1084,6 +1231,14 @@ impl Coordinator {
         let mut scratch = scratch::RoundScratch::new();
         let fast_math = cfg.fast_math;
         let mut refs: Vec<Tensors> = (0..max_k).map(|_| global.clone()).collect();
+        // Per-worker error-feedback residuals, exactly as on the
+        // centralized loop. Decentralized senders always mix their own
+        // wire values, so the residual here measures pure compression
+        // loss (a dropped gossip exchange deprives the *peer* and is
+        // handled by the mixing row, not by error feedback).
+        let ef = cfg.stream.error_feedback;
+        let mut residuals: Vec<Tensors> =
+            if ef { (0..max_k).map(|_| zeros.clone()).collect() } else { Vec::new() };
         let mut pending_adopt: Vec<Vec<bool>> = vec![vec![true; n_frag]; max_k];
         let mut drops_per_worker = vec![0usize; max_k];
         let mut carry_comm_s = 0.0f64;
@@ -1120,6 +1275,11 @@ impl Coordinator {
             drops_per_worker = st.drops_per_worker;
             carry_comm_s = st.carry_comm_s;
             codec_err_sq_total = st.codec_err_sq_total;
+            // Pre-v3 checkpoints (and runs saved with error feedback
+            // off) carry no residuals — resume with zeros.
+            if ef && !st.residuals.is_empty() {
+                residuals = st.residuals;
+            }
         }
         let mut ever_active = self.ever_active_before(start_round, max_k);
 
@@ -1218,15 +1378,36 @@ impl Coordinator {
             let lossless_full =
                 (codec == Codec::F32 || k_t == 1) && due.len() == n_frag;
             let mut codec_err_sq = 0.0f64;
+            let pruned = cfg.prune_frac > 0.0;
+            // Per (roster position, due fragment) sparse supports — what
+            // the ring needs to bill each chunk hop by the density of
+            // the partial sum it actually carries.
+            let mut supports: Vec<Vec<Option<wire::Support>>> =
+                Vec::with_capacity(k_t);
             for &wid in &roster {
                 let w = &workers[wid];
                 let mut delta = refs[wid].delta(&w.params);
-                let pruned_payload = if cfg.prune_frac > 0.0 {
-                    let zeroed = prune::prune_sign(&mut delta, cfg.prune_frac);
-                    Some(prune::pruned_payload_bytes(delta.total_elements(), zeroed))
+                if ef {
+                    // Error feedback: replay the last round's
+                    // compression residual into this outer delta.
+                    for &f in &due {
+                        plan.add_fragment(&residuals[wid], &mut delta, f);
+                    }
+                }
+                let mut intended: Vec<Vec<f32>> = if ef {
+                    due.iter()
+                        .map(|&f| {
+                            let mut v = scratch.lease();
+                            plan.extract_into(&delta, f, &mut v);
+                            v
+                        })
+                        .collect()
                 } else {
-                    None
+                    Vec::new()
                 };
+                if pruned {
+                    prune::prune_sign(&mut delta, cfg.prune_frac);
+                }
                 weights.push(if cfg.weighted_average && cfg.data.non_iid {
                     self.dataset.shard_doc_counts
                         [wid % self.dataset.shard_doc_counts.len()]
@@ -1235,27 +1416,52 @@ impl Coordinator {
                     1.0
                 });
                 let mut bytes_per_frag = Vec::with_capacity(due.len());
+                let mut sup_f: Vec<Option<wire::Support>> =
+                    Vec::with_capacity(due.len());
                 let mut assembled: Option<Tensors> = None;
                 for (di, &f) in due.iter().enumerate() {
                     let mut vals = scratch.lease();
                     // k = 1: the outer step is local — no codec, no
-                    // fabric. Otherwise extract + transcode fuse into
-                    // one pass where the wire format permits.
-                    if k_t > 1 {
+                    // fabric. Pruned payloads fix their support before
+                    // quantization and bill exact sparse bytes; dense
+                    // payloads keep the fused extract + transcode pass.
+                    if k_t == 1 {
+                        plan.extract_into(&delta, f, &mut vals);
+                        bytes_per_frag.push(0);
+                        sup_f.push(None);
+                    } else if pruned {
+                        plan.extract_into(&delta, f, &mut vals);
+                        let sup = wire::Support::from_values(&vals);
+                        codec_err_sq +=
+                            codec.transcode_sparse(&mut vals, plan.slices(f));
+                        bytes_per_frag.push(wire::sparse_payload_bytes(
+                            codec,
+                            plan.elements(f),
+                            sup.nnz(),
+                            plan.slices(f).len(),
+                        ));
+                        sup_f.push(Some(sup));
+                    } else {
                         codec_err_sq += crate::comm::codec::extract_transcode(
                             codec, &plan, &delta, f, &mut vals,
                         );
-                    } else {
-                        plan.extract_into(&delta, f, &mut vals);
+                        bytes_per_frag.push(
+                            codec.encoded_bytes(plan.elements(f), plan.slices(f).len()),
+                        );
+                        sup_f.push(None);
                     }
-                    bytes_per_frag.push(match pruned_payload {
-                        Some(total) => {
-                            total * plan.elements(f) as u64
-                                / plan.total_elements() as u64
+                    if ef {
+                        // residual = intended − wire values. The sender
+                        // always mixes its own wire values, so this is
+                        // pure compression loss; peer-side drops are the
+                        // mixing row's business.
+                        let mut res = std::mem::take(&mut intended[di]);
+                        for (r, v) in res.iter_mut().zip(&vals) {
+                            *r -= *v;
                         }
-                        None => codec
-                            .encoded_bytes(plan.elements(f), plan.slices(f).len()),
-                    });
+                        plan.scatter(&res, f, &mut residuals[wid]);
+                        scratch.recycle(res);
+                    }
                     if !lossless_full {
                         plan.scatter(
                             &vals,
@@ -1266,6 +1472,7 @@ impl Coordinator {
                     payloads[di].push(vals);
                 }
                 worker_bytes.push(bytes_per_frag);
+                supports.push(sup_f);
                 received_assembled.push(match assembled {
                     Some(a) => a,
                     None => delta,
@@ -1288,10 +1495,38 @@ impl Coordinator {
                     for tr in &transfers {
                         let Some(lane) = tr.lane else { continue };
                         let bytes = match tr.chunk {
-                            Some((c, of)) => codec.encoded_bytes(
-                                topology::chunk_elems(plan.elements(f), c, of),
-                                1,
-                            ),
+                            Some((c, of)) => {
+                                let n = plan.elements(f);
+                                let chunk_n = topology::chunk_elems(n, c, of);
+                                if pruned {
+                                    // A ring chunk at hop h carries the
+                                    // partial sum of h+1 consecutive
+                                    // positions' contributions (capped at
+                                    // k once the all-gather phase streams
+                                    // full sums), so bill the union of
+                                    // their supports restricted to the
+                                    // chunk's element range.
+                                    let start = c * n / of;
+                                    let m = (tr.hop + 1).min(k_t);
+                                    let mut u = wire::Support::empty(n);
+                                    for j in 0..m {
+                                        let pos = (tr.sender + k_t - j) % k_t;
+                                        u.union_with(
+                                            supports[pos][di]
+                                                .as_ref()
+                                                .expect("pruned payloads carry supports"),
+                                        );
+                                    }
+                                    wire::sparse_payload_bytes(
+                                        codec,
+                                        chunk_n,
+                                        u.nnz_in_range(start, start + chunk_n),
+                                        1,
+                                    )
+                                } else {
+                                    codec.encoded_bytes(chunk_n, 1)
+                                }
+                            }
                             None => worker_bytes[tr.sender][di],
                         };
                         if tr.droppable {
@@ -1463,6 +1698,7 @@ impl Coordinator {
                     carry_comm_s,
                     codec_err_sq_total,
                     &[],
+                    &residuals,
                 )?;
             }
         }

@@ -10,9 +10,18 @@
 
 use crate::runtime::Tensors;
 
-/// Prune `frac ∈ [0,1)` of each leaf's entries in place; returns the
+/// Prune `frac ∈ [0,1]` of each leaf's entries in place; returns the
 /// number of zeroed entries (for communication accounting: only non-zero
-/// values + a bitmap need to cross the wire).
+/// values + a bitmap need to cross the wire — see
+/// [`crate::comm::wire::sparse_payload_bytes`]).
+///
+/// Edge cases, all defined and tested: `frac == 0.0` is the identity;
+/// `frac == 1.0` zeroes **every** entry of every leaf (`k == n`, so the
+/// selection is skipped entirely and the payload ships as an empty
+/// sparse fragment — bitmap only); a `NaN` entry always counts as
+/// sign-disagreeing (`NaN.signum()` matches no elected sign) and ranks
+/// via `f32::total_cmp`, so it is pruned ahead of agreeing values and
+/// the selection stays a total order instead of silently arbitrary.
 pub fn prune_sign(delta: &mut Tensors, frac: f64) -> usize {
     assert!((0.0..=1.0).contains(&frac), "frac in [0,1]");
     if frac == 0.0 {
@@ -43,9 +52,11 @@ pub fn prune_sign(delta: &mut Tensors, frac: f64) -> usize {
             order.select_nth_unstable_by(k, |&a, &b| {
                 let (ca, ma) = key(leaf[a]);
                 let (cb, mb) = key(leaf[b]);
-                ca.cmp(&cb).then_with(|| {
-                    ma.partial_cmp(&mb).unwrap_or(std::cmp::Ordering::Equal)
-                })
+                // total_cmp, not partial_cmp: a NaN magnitude under
+                // partial_cmp yields Equal against everything, which is
+                // not a total order — select_nth's result would be
+                // arbitrary (same fix as bench::median's NaN regression).
+                ca.cmp(&cb).then_with(|| ma.total_cmp(&mb))
             });
         }
         for &i in order.iter().take(k) {
@@ -106,6 +117,43 @@ mod tests {
         let survivors: Vec<f32> =
             d.iter_flat().filter(|&x| x != 0.0).collect();
         assert_eq!(survivors, vec![0.9, 0.8]);
+    }
+
+    #[test]
+    fn frac_one_zeroes_everything() {
+        // frac == 1.0 takes the k == n path (the k < n selection guard is
+        // skipped): every entry is zeroed, and the return value counts
+        // only the previously-non-zero entries.
+        let mut d = t(&[1.0, -2.0, 0.0, 4.0, 0.0]);
+        assert_eq!(prune_sign(&mut d, 1.0), 3);
+        assert!(d.iter_flat().all(|x| x == 0.0));
+        // The resulting sparse payload is bitmap-only.
+        assert_eq!(pruned_payload_bytes(5, 5), 1);
+    }
+
+    #[test]
+    fn nan_entries_prune_first_and_deterministically() {
+        // Regression: the comparator used partial_cmp(..).unwrap_or(Equal),
+        // so a NaN magnitude compared Equal to everything — an inconsistent
+        // (non-total) order with arbitrary selection. Under total_cmp a NaN
+        // ranks as sign-disagreeing (NaN.signum() matches no elected sign)
+        // with the largest magnitude key, so selection is deterministic.
+        let mut d = t(&[1.0, f32::NAN, 3.0, 0.5]);
+        // vote = NaN → NaN >= 0 is false → elected sign is negative, so
+        // every finite positive AND the NaN count as disagreeing; within
+        // that class |0.5| < |1.0| < |3.0| < |NaN| under total_cmp.
+        prune_sign(&mut d, 0.5); // k = 2 → zero 0.5 and 1.0
+        let got: Vec<f32> = d.iter_flat().collect();
+        assert_eq!(got[0], 0.0);
+        assert!(got[1].is_nan());
+        assert_eq!(got[2], 3.0);
+        assert_eq!(got[3], 0.0);
+        // Determinism: a second identical payload prunes identically.
+        let mut d2 = t(&[1.0, f32::NAN, 3.0, 0.5]);
+        prune_sign(&mut d2, 0.5);
+        let got2: Vec<f32> = d2.iter_flat().collect();
+        assert_eq!(got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                   got2.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
     }
 
     #[test]

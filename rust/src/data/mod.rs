@@ -46,18 +46,11 @@ impl Dataset {
         let tokenizer = Tokenizer::train(&corpus, vocab_size, &mut rng.child(2));
 
         // Hold out a fraction of documents (round-robin over topics so the
-        // validation set covers every topic).
-        let n_hold = ((corpus.docs.len() as f64) * cfg.holdout).ceil() as usize;
-        let mut hold_idx: Vec<usize> = Vec::new();
-        let mut train_idx: Vec<usize> = Vec::new();
-        for (i, _) in corpus.docs.iter().enumerate() {
-            if i % corpus.docs.len().div_ceil(n_hold.max(1)) == 0 && hold_idx.len() < n_hold
-            {
-                hold_idx.push(i);
-            } else {
-                train_idx.push(i);
-            }
-        }
+        // validation set covers every topic). One shared function decides
+        // the split — config validation counts through the same code, so
+        // the two sites cannot drift.
+        let (hold_idx, train_idx) =
+            shard::holdout_split(corpus.docs.len(), cfg.holdout);
 
         let plan = shard_corpus(&corpus, &train_idx, k, cfg, &mut rng.child(3))?;
         let shards: Vec<Vec<i32>> = plan
@@ -108,6 +101,9 @@ mod tests {
         assert!(ds.holdout.len() > 50);
         let total: usize = ds.shard_doc_counts.iter().sum();
         assert_eq!(total, 40 - 4); // 10% of 40 held out
+        // The shared split function predicts exactly what was built —
+        // this is the count ExperimentConfig::validate checks against.
+        assert_eq!(total, shard::train_doc_count(40, 0.1));
     }
 
     #[test]

@@ -9,6 +9,36 @@ use crate::config::DataConfig;
 use crate::data::corpus::Corpus;
 use crate::util::rng::Rng;
 
+/// Strided holdout split over `n_docs` documents: returns
+/// `(hold_idx, train_idx)`. `⌈n_docs · holdout⌉` documents are held out,
+/// taken every `⌈n_docs / n_hold⌉`-th index so the validation set
+/// round-robins over the topic-ordered corpus.
+///
+/// This is the **single** definition of the split:
+/// [`crate::data::Dataset::build`] shards exactly `train_idx`, and
+/// [`crate::config::ExperimentConfig::validate`] counts
+/// [`train_doc_count`] through the same code path — the validator used to
+/// hand-mirror this arithmetic and the two sites could drift.
+pub fn holdout_split(n_docs: usize, holdout: f64) -> (Vec<usize>, Vec<usize>) {
+    let n_hold = ((n_docs as f64) * holdout).ceil() as usize;
+    let mut hold_idx: Vec<usize> = Vec::new();
+    let mut train_idx: Vec<usize> = Vec::new();
+    for i in 0..n_docs {
+        if i % n_docs.div_ceil(n_hold.max(1)) == 0 && hold_idx.len() < n_hold {
+            hold_idx.push(i);
+        } else {
+            train_idx.push(i);
+        }
+    }
+    (hold_idx, train_idx)
+}
+
+/// Number of training documents [`holdout_split`] leaves after holdout —
+/// what config validation checks against the shard count.
+pub fn train_doc_count(n_docs: usize, holdout: f64) -> usize {
+    holdout_split(n_docs, holdout).1.len()
+}
+
 #[derive(Clone, Debug)]
 pub struct ShardPlan {
     /// doc indices per shard.
@@ -139,6 +169,34 @@ mod tests {
             .map(|&d| corpus.docs[d].topic)
             .collect();
         assert!(topics.len() >= 4, "only topics {topics:?}");
+    }
+
+    #[test]
+    fn prop_holdout_split_partitions_and_matches_the_closed_form() {
+        use crate::util::prop::check;
+        check("holdout_split partitions 0..n and counts agree", 200, |g| {
+            let n = g.usize_in(0..500);
+            let holdout = g.f64_in(0.0..0.95);
+            let (hold, train) = holdout_split(n, holdout);
+            // Partition: disjoint, sorted, covering 0..n.
+            let mut all: Vec<usize> =
+                hold.iter().chain(train.iter()).copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>());
+            assert_eq!(hold.len(), ((n as f64) * holdout).ceil() as usize);
+            // The count the validator uses is the split actually built.
+            assert_eq!(train_doc_count(n, holdout), train.len());
+            // ... and equals the closed form validate() used to mirror by
+            // hand (kept here as the regression oracle).
+            let n_hold = ((n as f64) * holdout).ceil() as usize;
+            let mirror = if n == 0 {
+                0
+            } else {
+                let stride = n.div_ceil(n_hold.max(1));
+                n - n.div_ceil(stride).min(n_hold)
+            };
+            assert_eq!(train.len(), mirror);
+        });
     }
 
     #[test]

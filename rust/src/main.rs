@@ -85,8 +85,8 @@ fn print_help() {
          USAGE: diloco <train|eval|data|inspect> [--flags]\n\n\
          train   --config <exp.toml> [--out runs/] [--ckpt out.ckpt]\n\
          \x20       [--engine auto|sequential|parallel] [--threads N]\n\
-         \x20       [--stream fragments=4,schedule=staggered,codec=q8]\n\
-         \x20       (schedules: every-round|staggered|overlapped; codecs: f32|f16|q8)\n\
+         \x20       [--stream fragments=4,schedule=staggered,codec=q8,error_feedback=true]\n\
+         \x20       (schedules: every-round|staggered|overlapped; codecs: f32|f16|q8|q4|q2)\n\
          \x20       [--topology star|ring|gossip|hierarchical[:G]]\n\
          \x20       [--churn leave:w3@r10,join:w8@r20,ramp:4..8]\n\
          \x20       [--speed w3=2.0,w7=1.5..3.0,jitter:0.2] [--delay D] [--discount G]\n\

@@ -376,6 +376,7 @@ fn staggered_schedule_cuts_per_round_bytes() {
         fragments: 4,
         schedule: SyncSchedule::Staggered,
         codec: Codec::F32,
+        error_feedback: false,
     };
     let stag = Coordinator::new(cfg, rt)
         .unwrap()
@@ -692,6 +693,7 @@ fn gossip_composes_with_staggered_fragments() {
         fragments: 2,
         schedule: SyncSchedule::Staggered,
         codec: Codec::F32,
+        error_feedback: false,
     };
     cfg.rounds = 4;
     let init = rt.init_params().unwrap();
@@ -1164,4 +1166,247 @@ fn plain_train_matches_run_pretrain_phase() {
         .plain_train(rt.init_params().unwrap(), 0.0, 8, &mut m, 0)
         .unwrap();
     assert_eq!(&report.metrics.loss_curve[..8], &m.loss_curve[..]);
+}
+
+#[test]
+fn pruning_composes_with_quantized_codecs() {
+    // PR-7 lift #1: `prune_frac > 0` with a non-f32 codec used to be a
+    // validate() hard error ("pruned payloads are f32-only"). The sparse
+    // wire format ships bitmap + codec-encoded survivors, so the
+    // composition now runs — and its upload bill sits strictly between
+    // the bitmap floor and the dense q8 bill.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 2;
+    cfg.pretrain_steps = 0;
+    cfg.stream.codec = Codec::Q8;
+    let init = rt.init_params().unwrap();
+    let dense = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    cfg.prune_frac = 0.75;
+    let pruned = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    assert!(pruned.metrics.final_ppl().is_finite());
+    let n = (rt.manifest.param_bytes() / 4) as u64;
+    let (k, rounds) = (4u64, cfg.rounds as u64);
+    // Every upload carries at least its presence bitmap…
+    assert!(
+        pruned.metrics.comm_bytes_up >= rounds * k * n.div_ceil(8),
+        "upload bill lost the bitmap: {}",
+        pruned.metrics.comm_bytes_up
+    );
+    // …and 75% pruning must undercut the dense q8 bill.
+    assert!(
+        pruned.metrics.comm_bytes_up < dense.metrics.comm_bytes_up,
+        "pruned q8 {} !< dense q8 {}",
+        pruned.metrics.comm_bytes_up,
+        dense.metrics.comm_bytes_up
+    );
+    // Downloads are the dense parameter broadcast either way.
+    assert_eq!(
+        pruned.metrics.comm_bytes - pruned.metrics.comm_bytes_up,
+        dense.metrics.comm_bytes - dense.metrics.comm_bytes_up
+    );
+    // Determinism: the sparse path replays bitwise.
+    let again = Coordinator::new(cfg, rt)
+        .unwrap()
+        .run_from(Some(init))
+        .unwrap();
+    assert_eq!(again.final_params, pruned.final_params);
+    assert_eq!(again.metrics.comm_bytes, pruned.metrics.comm_bytes);
+}
+
+#[test]
+fn ring_composes_with_pruning_and_bills_partial_sums() {
+    // PR-7 lift #2: prune × ring used to be rejected because the
+    // reduce-scatter re-densifies partial sums. Now each chunk hop bills
+    // the union support of the contributions it actually carries: less
+    // than dense, at least the bitmap floor, and growing with hop depth.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 2;
+    cfg.pretrain_steps = 0;
+    cfg.topology = TopologyConfig::Ring;
+    cfg.prune_frac = 0.75;
+    let init = rt.init_params().unwrap();
+    let r1 = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    let r2 = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init))
+        .unwrap();
+    assert_eq!(r1.final_params, r2.final_params);
+    assert_eq!(r1.metrics.comm_bytes, r2.metrics.comm_bytes);
+    // No drops + shared mixing row ⇒ every replica stays identical.
+    assert_eq!(r1.replica_params.len(), 4);
+    for p in &r1.replica_params {
+        assert_eq!(p, &r1.replica_params[0]);
+        assert!(p.all_finite());
+    }
+    let n = (rt.manifest.param_bytes() / 4) as u64;
+    let payload = rt.manifest.param_bytes() as u64;
+    let (k, rounds) = (4u64, cfg.rounds as u64);
+    let dense_ring = rounds * 2 * (k - 1) * payload;
+    assert!(
+        r1.metrics.comm_bytes_up < dense_ring,
+        "pruned ring {} !< dense ring {dense_ring}",
+        r1.metrics.comm_bytes_up
+    );
+    // Each hop layer's k chunks tile the parameter space, so every one
+    // of the 2(k−1) layers bills at least a full presence bitmap.
+    assert!(
+        r1.metrics.comm_bytes_up >= rounds * 2 * (k - 1) * (n / 8),
+        "ring bill lost the chunk bitmaps: {}",
+        r1.metrics.comm_bytes_up
+    );
+    assert_eq!(r1.metrics.comm_messages, rounds * 2 * (k - 1) * k);
+}
+
+#[test]
+fn hierarchical_pruning_bills_union_density_and_keeps_star_math() {
+    // PR-7 lift #3: prune × hierarchical used to be rejected because the
+    // leader re-aggregates member payloads at a different density. The
+    // leader hop now bills the union of its group's supports — routing
+    // still changes billing only, so the trained model stays bitwise
+    // equal to the pruned star run, while the WAN bill shrinks below
+    // the star's (the bitmap is shared and overlapping supports merge).
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 2;
+    cfg.pretrain_steps = 0;
+    cfg.prune_frac = 0.5;
+    let init = rt.init_params().unwrap();
+    let run = |topology: TopologyConfig| {
+        let mut cfg = cfg.clone();
+        cfg.topology = topology;
+        Coordinator::new(cfg, rt.clone())
+            .unwrap()
+            .run_from(Some(init.clone()))
+            .unwrap()
+    };
+    let star = run(TopologyConfig::Star);
+    let hier = run(TopologyConfig::Hierarchical { groups: 2 });
+    assert_eq!(hier.final_params, star.final_params);
+    assert_eq!(hier.metrics.loss_curve, star.metrics.loss_curve);
+    assert!(
+        hier.metrics.comm_bytes_up < star.metrics.comm_bytes_up,
+        "union-billed leader hops {} !< per-worker sparse uploads {}",
+        hier.metrics.comm_bytes_up,
+        star.metrics.comm_bytes_up
+    );
+    let n = (rt.manifest.param_bytes() / 4) as u64;
+    let (g, rounds) = (2u64, cfg.rounds as u64);
+    assert!(hier.metrics.comm_bytes_up >= rounds * g * n.div_ceil(8));
+    assert!(hier.metrics.final_ppl().is_finite());
+}
+
+#[test]
+fn error_feedback_with_f32_is_a_no_op() {
+    // With the exact codec and no pruning nothing is ever lost on the
+    // wire, so the error-feedback residual is identically zero and the
+    // knob must not move the trajectory (or the bill) at all.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 3;
+    let init = rt.init_params().unwrap();
+    let off = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    cfg.stream.error_feedback = true;
+    let on = Coordinator::new(cfg, rt)
+        .unwrap()
+        .run_from(Some(init))
+        .unwrap();
+    assert_eq!(on.final_params, off.final_params);
+    assert_eq!(on.metrics.loss_curve, off.metrics.loss_curve);
+    assert_eq!(on.metrics.comm_bytes, off.metrics.comm_bytes);
+    assert_eq!(on.metrics.codec_err_l2, off.metrics.codec_err_l2);
+}
+
+#[test]
+fn resume_matches_straight_run_bitwise_ef_q4() {
+    // The EF residual is training state: q4 quantization leaves a real
+    // residual every round, and the v3 TrainState must carry it across
+    // the save/load boundary for the determinism contract to hold.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 4;
+    cfg.stream.codec = Codec::Q4;
+    cfg.stream.error_feedback = true;
+    cfg.seed = 21;
+
+    let straight = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(straight.metrics.final_ppl().is_finite());
+    // q4 really loses something each round — the residual is live.
+    assert!(straight.metrics.codec_err_l2 > 0.0);
+
+    let path = tmp_state_path("ef_q4");
+    let mut saver_cfg = cfg.clone();
+    saver_cfg.rounds = 2;
+    saver_cfg.ckpt.save_every = 2;
+    saver_cfg.ckpt.path = Some(path.clone());
+    let saver = Coordinator::new(saver_cfg, rt.clone()).unwrap().run().unwrap();
+    assert_eq!(
+        &saver.metrics.loss_curve[..],
+        &straight.metrics.loss_curve[..saver.metrics.loss_curve.len()]
+    );
+    let st = checkpoint::load_state(&path, &rt.manifest).unwrap();
+    assert_eq!(st.residuals.len(), 4, "EF residuals must be checkpointed");
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.ckpt.resume = Some(path.clone());
+    let resumed = Coordinator::new(resume_cfg, rt.clone()).unwrap().run().unwrap();
+    assert_bitwise_tail(&straight, &resumed, 2, "ef_q4");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn gossip_error_feedback_composes_with_prune_and_q4() {
+    // The full MuLoCo-flavored stack on the decentralized loop: gossip
+    // topology, 50% sign-pruning, q4 wire, error feedback on. Runs,
+    // replays bitwise, and bills sparse bytes per exchanged payload.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 4;
+    cfg.pretrain_steps = 0;
+    cfg.topology = TopologyConfig::Gossip;
+    cfg.prune_frac = 0.5;
+    cfg.stream.codec = Codec::Q4;
+    cfg.stream.error_feedback = true;
+    let init = rt.init_params().unwrap();
+    let r1 = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init.clone()))
+        .unwrap();
+    let r2 = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run_from(Some(init))
+        .unwrap();
+    assert_eq!(r1.final_params, r2.final_params);
+    assert_eq!(r1.metrics.comm_bytes, r2.metrics.comm_bytes);
+    assert!(r1.final_params.all_finite());
+    for p in &r1.replica_evals {
+        assert!(p.ppl.is_finite());
+    }
+    // One sparse q4 payload per worker per round: bitmap floor below,
+    // dense q4 above.
+    let n = (rt.manifest.param_bytes() / 4) as u64;
+    let (k, rounds) = (4u64, cfg.rounds as u64);
+    assert!(r1.metrics.comm_bytes_up >= rounds * k * n.div_ceil(8));
+    let dense_f32 = rounds * k * rt.manifest.param_bytes() as u64;
+    assert!(
+        r1.metrics.comm_bytes_up < dense_f32 / 2,
+        "sparse q4 gossip {} should be far under the dense f32 bill {dense_f32}",
+        r1.metrics.comm_bytes_up
+    );
 }
