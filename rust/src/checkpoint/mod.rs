@@ -43,7 +43,11 @@ const STATE_VERSION: u32 = 3;
 const MAX_FRAGMENTS: usize = 1 << 20;
 const MAX_KIND_LEN: usize = 64;
 
-fn fnv_update(hash: &mut u64, bytes: &[u8]) {
+/// FNV-1a 64 offset basis. Shared with `comm::frame`, which trailers
+/// every TCP frame with the same checksum the checkpoint container uses.
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+pub(crate) fn fnv_update(hash: &mut u64, bytes: &[u8]) {
     for &b in bytes {
         *hash ^= b as u64;
         *hash = hash.wrapping_mul(0x1000_0000_01b3);
@@ -63,7 +67,7 @@ fn checked_body(bytes: &[u8], magic: &[u8; 8]) -> anyhow::Result<&[u8]> {
     anyhow::ensure!(bytes.len() > magic.len() + 12, "checkpoint too short");
     let (body, tail) = bytes.split_at(bytes.len() - 8);
     let stored = u64::from_le_bytes(tail.try_into().unwrap());
-    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    let mut hash = FNV_OFFSET;
     fnv_update(&mut hash, body);
     anyhow::ensure!(hash == stored, "checkpoint checksum mismatch");
     anyhow::ensure!(&body[..8] == magic, "bad checkpoint magic");
@@ -71,7 +75,7 @@ fn checked_body(bytes: &[u8], magic: &[u8; 8]) -> anyhow::Result<&[u8]> {
 }
 
 fn write_checked(path: &str, mut buf: Vec<u8>) -> anyhow::Result<()> {
-    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    let mut hash = FNV_OFFSET;
     fnv_update(&mut hash, &buf);
     buf.extend_from_slice(&hash.to_le_bytes());
     let mut f = std::fs::File::create(path)
@@ -83,21 +87,23 @@ fn write_checked(path: &str, mut buf: Vec<u8>) -> anyhow::Result<()> {
 /// Bounds-checked cursor over a checkpoint body. Every read validates
 /// against the remaining length *before* touching the slice, so a
 /// truncated or length-corrupted file can never index out of bounds.
-struct Reader<'a> {
+/// `pub(crate)`: `comm::tcp` decodes its frame bodies with the same
+/// cursor so the TCP parser inherits the bounds discipline for free.
+pub(crate) struct Reader<'a> {
     body: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn new(body: &'a [u8], pos: usize) -> Reader<'a> {
+    pub(crate) fn new(body: &'a [u8], pos: usize) -> Reader<'a> {
         Reader { body, pos }
     }
 
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.body.len() - self.pos
     }
 
-    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
         anyhow::ensure!(
             n <= self.remaining(),
             "truncated checkpoint: need {n} bytes, {} left",
@@ -112,21 +118,21 @@ impl<'a> Reader<'a> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> anyhow::Result<u32> {
+    pub(crate) fn u32(&mut self) -> anyhow::Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> anyhow::Result<u64> {
+    pub(crate) fn u64(&mut self) -> anyhow::Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f64(&mut self) -> anyhow::Result<f64> {
+    pub(crate) fn f64(&mut self) -> anyhow::Result<f64> {
         Ok(f64::from_bits(self.u64()?))
     }
 
     /// A length field that must index something in the remaining body:
     /// rejects values over `cap` before any allocation happens.
-    fn len_capped(&mut self, cap: usize, what: &str) -> anyhow::Result<usize> {
+    pub(crate) fn len_capped(&mut self, cap: usize, what: &str) -> anyhow::Result<usize> {
         let n = self.u64()?;
         anyhow::ensure!(
             n <= cap as u64,
@@ -137,7 +143,7 @@ impl<'a> Reader<'a> {
 
     /// One f32 leaf of exactly `want` elements (validated before the
     /// data range is touched or the vector allocated).
-    fn f32_leaf(&mut self, want: usize, what: &str) -> anyhow::Result<Vec<f32>> {
+    pub(crate) fn f32_leaf(&mut self, want: usize, what: &str) -> anyhow::Result<Vec<f32>> {
         let count = self.u64()?;
         anyhow::ensure!(
             count == want as u64,
@@ -171,25 +177,25 @@ impl<'a> Reader<'a> {
         Tensors::from_leaves(manifest, leaves)
     }
 
-    fn finish(self) -> anyhow::Result<()> {
+    pub(crate) fn finish(self) -> anyhow::Result<()> {
         anyhow::ensure!(self.remaining() == 0, "trailing bytes in checkpoint");
         Ok(())
     }
 }
 
-fn w_u32(buf: &mut Vec<u8>, v: u32) {
+pub(crate) fn w_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn w_u64(buf: &mut Vec<u8>, v: u64) {
+pub(crate) fn w_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn w_f64(buf: &mut Vec<u8>, v: f64) {
+pub(crate) fn w_f64(buf: &mut Vec<u8>, v: f64) {
     w_u64(buf, v.to_bits());
 }
 
-fn w_tensors(buf: &mut Vec<u8>, t: &Tensors) {
+pub(crate) fn w_tensors(buf: &mut Vec<u8>, t: &Tensors) {
     w_u32(buf, t.n_leaves() as u32);
     for leaf in t.leaves() {
         w_u64(buf, leaf.len() as u64);

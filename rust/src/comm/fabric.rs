@@ -1,0 +1,273 @@
+//! The `Fabric` trait — the transport seam between the round loops and
+//! whatever actually carries (or accounts for) the bytes.
+//!
+//! Everything the coordinator ever asked of [`SimNet`] is captured here:
+//! keyed droppable sends (`try_send_gen` and its convenience wrappers),
+//! reliable lane-billed sends, round barriers (eager and deferred), and
+//! the per-round [`CommStats`] rows. Two lifecycle hooks extend that
+//! surface for backends with real machinery behind them:
+//!
+//! * [`Fabric::filter_roster`] — called once per round with the
+//!   schedule/churn roster *before* any compute. A backend may shrink it
+//!   (a vanished TCP peer maps onto the existing `[churn]` leave
+//!   semantics) or perform maintenance (heartbeats, reconnect drains,
+//!   respawns). SimNet is the identity.
+//! * [`Fabric::run_phase`] — offered the inner phase. A backend that
+//!   owns remote compute (TcpFabric) runs the phase on its peers and
+//!   returns `Some(PhaseOutcome)`; SimNet returns `None`, telling the
+//!   coordinator to run the phase in-process through its
+//!   `InnerPhaseExecutor` exactly as before.
+//!
+//! The split keeps the simulator the bitwise golden path: with the
+//! default `fabric = "sim"` every call delegates to the same `SimNet`
+//! inherent methods the loops called directly before the trait existed,
+//! so traces, drop keys, and byte bills are unchanged by construction.
+//! See DESIGN.md §14 for the TCP backend and the cross-backend
+//! differential contract.
+
+use super::{CommStats, Direction, SimNet};
+use crate::engine::InnerPhaseReport;
+use crate::worker::Worker;
+
+/// Result of a fabric-run inner phase ([`Fabric::run_phase`]).
+pub struct PhaseOutcome {
+    /// Per-roster-position loss/compute traces, same shape as the
+    /// in-process engine path produces.
+    pub report: InnerPhaseReport,
+    /// Per-roster-position "peer vanished mid-phase" flags. A vanished
+    /// worker contributed no losses this round: the coordinator averages
+    /// loss over live workers only and books the worker's sync as a
+    /// drop. All-false on healthy rounds — and the healthy-round fold is
+    /// bitwise identical to the pre-trait code.
+    pub vanished: Vec<bool>,
+}
+
+/// Transport abstraction for one training run. Object-safe: the
+/// coordinator holds a `Box<dyn Fabric>` chosen by `[fabric] kind`.
+pub trait Fabric {
+    /// Droppable send with the full (round, worker, fragment, hop, gen)
+    /// drop key. Returns `false` when the message was dropped; billing
+    /// happens either way.
+    #[allow(clippy::too_many_arguments)]
+    fn try_send_gen(
+        &mut self,
+        bytes: u64,
+        dir: Direction,
+        round: usize,
+        worker: usize,
+        fragment: usize,
+        hop: usize,
+        gen: usize,
+    ) -> bool;
+
+    /// Reliable send on a fresh anonymous lane (no overlap with any
+    /// other transfer).
+    fn send_reliable(&mut self, bytes: u64, dir: Direction);
+
+    /// Reliable send on worker `worker`'s per-direction lane.
+    fn send_reliable_to(&mut self, bytes: u64, dir: Direction, worker: usize);
+
+    /// Close the round: fold the lane barrier into the billed time.
+    fn end_round(&mut self);
+
+    /// Close the round but *return* the barrier instead of billing it,
+    /// so an overlapped schedule can hide it behind the next phase.
+    fn end_round_deferred(&mut self) -> f64;
+
+    /// Cumulative + per-round accounting.
+    fn stats(&self) -> &CommStats;
+
+    /// Modeled serialization time for `bytes` on this fabric's link.
+    fn transfer_time(&self, bytes: u64) -> f64;
+
+    /// Round-start roster hook: heartbeat peers, drain reconnects, and
+    /// return the subset of `roster` that is actually reachable this
+    /// round. The default (and SimNet) is the identity.
+    fn filter_roster(
+        &mut self,
+        round: usize,
+        roster: Vec<usize>,
+    ) -> anyhow::Result<Vec<usize>> {
+        let _ = round;
+        Ok(roster)
+    }
+
+    /// Offer the inner phase to the fabric. Return `Ok(None)` to let the
+    /// coordinator run it in-process (the simulator path); return
+    /// `Ok(Some(outcome))` after running `h` inner steps for each roster
+    /// member in `ids` on remote peers, with `workers[id]` state updated
+    /// in place for every non-vanished peer.
+    fn run_phase(
+        &mut self,
+        workers: &mut [Worker],
+        ids: &[usize],
+        h: usize,
+    ) -> anyhow::Result<Option<PhaseOutcome>> {
+        let _ = (workers, ids, h);
+        Ok(None)
+    }
+
+    /// Droppable send with the legacy (round, worker) key.
+    fn try_send(&mut self, bytes: u64, dir: Direction, round: usize, worker: usize) -> bool {
+        self.try_send_gen(bytes, dir, round, worker, 0, 0, 0)
+    }
+
+    /// Droppable send keyed by fragment (hop 0, generation 0).
+    fn try_send_fragment(
+        &mut self,
+        bytes: u64,
+        dir: Direction,
+        round: usize,
+        worker: usize,
+        fragment: usize,
+    ) -> bool {
+        self.try_send_gen(bytes, dir, round, worker, fragment, 0, 0)
+    }
+
+    /// Droppable send keyed by hop (generation 0).
+    fn try_send_hop(
+        &mut self,
+        bytes: u64,
+        dir: Direction,
+        round: usize,
+        worker: usize,
+        fragment: usize,
+        hop: usize,
+    ) -> bool {
+        self.try_send_gen(bytes, dir, round, worker, fragment, hop, 0)
+    }
+}
+
+/// SimNet is the first (and golden) implementor: pure delegation to the
+/// inherent methods, identity roster, in-process compute.
+impl Fabric for SimNet {
+    fn try_send_gen(
+        &mut self,
+        bytes: u64,
+        dir: Direction,
+        round: usize,
+        worker: usize,
+        fragment: usize,
+        hop: usize,
+        gen: usize,
+    ) -> bool {
+        SimNet::try_send_gen(self, bytes, dir, round, worker, fragment, hop, gen)
+    }
+
+    fn send_reliable(&mut self, bytes: u64, dir: Direction) {
+        SimNet::send_reliable(self, bytes, dir)
+    }
+
+    fn send_reliable_to(&mut self, bytes: u64, dir: Direction, worker: usize) {
+        SimNet::send_reliable_to(self, bytes, dir, worker)
+    }
+
+    fn end_round(&mut self) {
+        SimNet::end_round(self)
+    }
+
+    fn end_round_deferred(&mut self) -> f64 {
+        SimNet::end_round_deferred(self)
+    }
+
+    fn stats(&self) -> &CommStats {
+        SimNet::stats(self)
+    }
+
+    fn transfer_time(&self, bytes: u64) -> f64 {
+        SimNet::transfer_time(self, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sim() -> SimNet {
+        SimNet::new(1e6, 0.01, 0.0, Rng::new(7))
+    }
+
+    /// Calling SimNet through `dyn Fabric` must be indistinguishable
+    /// from calling it directly: same bills, same drop keys, same
+    /// barrier fold — the trait is a seam, not a behavior change.
+    #[test]
+    fn dyn_simnet_matches_direct_calls() {
+        let mut direct = sim();
+        let mut boxed: Box<dyn Fabric> = Box::new(sim());
+
+        for round in 0..3 {
+            for w in 0..4 {
+                let a = SimNet::try_send_gen(
+                    &mut direct,
+                    1000 + w as u64,
+                    Direction::Up,
+                    round,
+                    w,
+                    w % 2,
+                    w % 3,
+                    round % 2,
+                );
+                let b = boxed.try_send_gen(
+                    1000 + w as u64,
+                    Direction::Up,
+                    round,
+                    w,
+                    w % 2,
+                    w % 3,
+                    round % 2,
+                );
+                assert_eq!(a, b);
+                SimNet::send_reliable_to(&mut direct, 512, Direction::Down, w);
+                boxed.send_reliable_to(512, Direction::Down, w);
+            }
+            if round == 1 {
+                let a = SimNet::end_round_deferred(&mut direct);
+                let b = boxed.end_round_deferred();
+                assert_eq!(a.to_bits(), b.to_bits());
+            } else {
+                SimNet::end_round(&mut direct);
+                boxed.end_round();
+            }
+        }
+        assert_eq!(SimNet::stats(&direct), boxed.stats());
+    }
+
+    /// With drops enabled the decision stream must also agree: the drop
+    /// RNG is keyed, not sequential, so delegation cannot perturb it.
+    #[test]
+    fn dyn_simnet_matches_direct_drop_decisions() {
+        let mut direct = SimNet::new(1e6, 0.0, 0.5, Rng::new(3));
+        let mut boxed: Box<dyn Fabric> = Box::new(SimNet::new(1e6, 0.0, 0.5, Rng::new(3)));
+        for round in 0..8 {
+            for w in 0..5 {
+                for f in 0..2 {
+                    let a = SimNet::try_send_fragment(
+                        &mut direct,
+                        64,
+                        Direction::Up,
+                        round,
+                        w,
+                        f,
+                    );
+                    let b = boxed.try_send_fragment(64, Direction::Up, round, w, f);
+                    assert_eq!(a, b, "round {round} worker {w} fragment {f}");
+                }
+            }
+            SimNet::end_round(&mut direct);
+            boxed.end_round();
+        }
+        assert_eq!(SimNet::stats(&direct), boxed.stats());
+    }
+
+    /// Default hook contracts: identity roster, `None` phase (the
+    /// coordinator runs the engine path).
+    #[test]
+    fn simnet_hooks_are_passthrough() {
+        let mut net = sim();
+        let roster = Fabric::filter_roster(&mut net, 0, vec![0, 2, 3]).unwrap();
+        assert_eq!(roster, vec![0, 2, 3]);
+        let out = Fabric::run_phase(&mut net, &mut [], &[], 5).unwrap();
+        assert!(out.is_none());
+    }
+}

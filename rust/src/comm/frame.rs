@@ -1,0 +1,254 @@
+//! Length-prefixed, checksummed frame codec for the TCP fabric.
+//!
+//! Every message between the coordinator and a worker process is one
+//! frame:
+//!
+//! ```text
+//! +-------+---------+-------+--------------+--------+-------------+
+//! | magic | version | ftype | body_len u32 |  body  | fnv64(h+b)  |
+//! | DLFR  |   0x01  |  u8   |   LE         |        |   LE        |
+//! +-------+---------+-------+--------------+--------+-------------+
+//!    4        1        1          4          len         8
+//! ```
+//!
+//! The checksum is the same FNV-1a 64 the checkpoint container uses
+//! (`checkpoint::fnv_update`), computed over header + body. Frame bodies
+//! reuse the checkpoint writer/Reader primitives (`w_u32`/`w_u64`/
+//! `w_f64`/`w_tensors` and the bounds-checked `Reader`), so the decoder
+//! inherits the same discipline: every length is validated against a
+//! caller-supplied cap *before* any allocation, and malformed input is
+//! an `Err`, never a panic or an over-allocation.
+
+use crate::checkpoint::{fnv_update, FNV_OFFSET};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+/// Frame magic, first on the wire so a stray peer fails fast.
+pub const MAGIC: [u8; 4] = *b"DLFR";
+/// Protocol version; bumped on any layout change.
+pub const VERSION: u8 = 1;
+/// Fixed prefix: magic + version + ftype + body_len.
+pub const HEADER_LEN: usize = 10;
+/// Trailing FNV-1a 64 checksum.
+pub const TRAILER_LEN: usize = 8;
+/// Absolute backstop on body size, independent of the caller's cap.
+pub const MAX_FRAME_BODY: usize = 1 << 28;
+
+/// Worker → coordinator: rendezvous (body = run-ID string).
+pub const HELLO: u8 = 1;
+/// Coordinator → worker: slot assignment (body = slot u32).
+pub const HELLO_ACK: u8 = 2;
+/// Coordinator → worker: data-shard + batch-shape bootstrap.
+pub const INIT: u8 = 3;
+/// Coordinator → worker: full island state, run `h` inner steps.
+pub const RUN_PHASE: u8 = 4;
+/// Worker → coordinator: losses + updated island state.
+pub const PHASE_DONE: u8 = 5;
+/// Coordinator → worker: heartbeat probe.
+pub const PING: u8 = 6;
+/// Worker → coordinator: heartbeat reply.
+pub const PONG: u8 = 7;
+/// Coordinator → worker: clean exit.
+pub const SHUTDOWN: u8 = 8;
+
+fn checksum(header: &[u8], body: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    fnv_update(&mut h, header);
+    fnv_update(&mut h, body);
+    h
+}
+
+/// Encode one frame into a fresh buffer.
+pub fn encode(ftype: u8, body: &[u8]) -> Vec<u8> {
+    assert!(body.len() <= MAX_FRAME_BODY, "frame body over backstop");
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len() + TRAILER_LEN);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(ftype);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(body);
+    let c = checksum(&out[..HEADER_LEN], body);
+    out.extend_from_slice(&c.to_le_bytes());
+    out
+}
+
+/// Validate a header and return the body length. `cap` is the largest
+/// body the caller is prepared to hold (derived from the manifest /
+/// message kind), checked before the caller allocates anything.
+fn parse_header(header: &[u8; HEADER_LEN], cap: usize) -> Result<(u8, usize)> {
+    ensure!(header[..4] == MAGIC, "bad frame magic {:02x?}", &header[..4]);
+    ensure!(
+        header[4] == VERSION,
+        "unsupported frame version {} (want {VERSION})",
+        header[4]
+    );
+    let ftype = header[5];
+    let len = u32::from_le_bytes([header[6], header[7], header[8], header[9]]) as usize;
+    ensure!(
+        len <= cap && len <= MAX_FRAME_BODY,
+        "frame body length {len} exceeds cap {} for frame type {ftype}",
+        cap.min(MAX_FRAME_BODY)
+    );
+    Ok((ftype, len))
+}
+
+/// Decode one frame from a byte slice. Returns `(ftype, body, consumed)`.
+pub fn decode(buf: &[u8], cap: usize) -> Result<(u8, &[u8], usize)> {
+    ensure!(
+        buf.len() >= HEADER_LEN,
+        "truncated frame header: {} of {HEADER_LEN} bytes",
+        buf.len()
+    );
+    let mut header = [0u8; HEADER_LEN];
+    header.copy_from_slice(&buf[..HEADER_LEN]);
+    let (ftype, len) = parse_header(&header, cap)?;
+    let total = HEADER_LEN + len + TRAILER_LEN;
+    ensure!(
+        buf.len() >= total,
+        "truncated frame: have {} of {total} bytes",
+        buf.len()
+    );
+    let body = &buf[HEADER_LEN..HEADER_LEN + len];
+    let got = u64::from_le_bytes(
+        buf[HEADER_LEN + len..total].try_into().expect("8 trailer bytes"),
+    );
+    let want = checksum(&header, body);
+    ensure!(got == want, "frame checksum mismatch ({got:#x} != {want:#x})");
+    Ok((ftype, body, total))
+}
+
+/// Write one frame to a stream.
+pub fn write_frame(w: &mut impl Write, ftype: u8, body: &[u8]) -> Result<()> {
+    w.write_all(&encode(ftype, body)).context("frame write")?;
+    w.flush().context("frame flush")
+}
+
+/// Read one frame from a stream. A short read (peer died mid-frame) or
+/// a stream timeout surfaces as an `Err`; the body buffer is only
+/// allocated after its declared length passes the `cap` check.
+pub fn read_frame(r: &mut impl Read, cap: usize) -> Result<(u8, Vec<u8>)> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).context("frame header read")?;
+    let (ftype, len) = parse_header(&header, cap)?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("frame body read")?;
+    let mut trailer = [0u8; TRAILER_LEN];
+    r.read_exact(&mut trailer).context("frame trailer read")?;
+    let got = u64::from_le_bytes(trailer);
+    let want = checksum(&header, &body);
+    if got != want {
+        bail!("frame checksum mismatch ({got:#x} != {want:#x})");
+    }
+    Ok((ftype, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_slice_and_stream() {
+        for body in [&b""[..], b"x", &[7u8; 1000]] {
+            let wire = encode(RUN_PHASE, body);
+            assert_eq!(wire.len(), HEADER_LEN + body.len() + TRAILER_LEN);
+
+            let (t, got, used) = decode(&wire, body.len()).unwrap();
+            assert_eq!((t, got, used), (RUN_PHASE, body, wire.len()));
+
+            let (t, got) = read_frame(&mut Cursor::new(&wire), body.len()).unwrap();
+            assert_eq!((t, got.as_slice()), (RUN_PHASE, body));
+        }
+    }
+
+    #[test]
+    fn two_frames_back_to_back() {
+        let mut wire = encode(PING, b"");
+        wire.extend_from_slice(&encode(PONG, b"abc"));
+        let mut r = Cursor::new(&wire);
+        assert_eq!(read_frame(&mut r, 16).unwrap().0, PING);
+        let (t, body) = read_frame(&mut r, 16).unwrap();
+        assert_eq!((t, body.as_slice()), (PONG, &b"abc"[..]));
+    }
+
+    #[test]
+    fn truncated_length_prefix_errors() {
+        // Every strict prefix of the header must error, never panic.
+        let wire = encode(HELLO, b"run-id");
+        for n in 0..HEADER_LEN {
+            assert!(decode(&wire[..n], 64).is_err(), "prefix {n}");
+            assert!(read_frame(&mut Cursor::new(&wire[..n]), 64).is_err());
+        }
+    }
+
+    #[test]
+    fn mid_frame_disconnect_errors() {
+        // Peer dies after the header but before the full body+trailer:
+        // the stream reader must surface an error, not block or panic.
+        let wire = encode(PHASE_DONE, &[9u8; 256]);
+        for n in [HEADER_LEN, HEADER_LEN + 1, wire.len() - TRAILER_LEN, wire.len() - 1] {
+            assert!(read_frame(&mut Cursor::new(&wire[..n]), 256).is_err(), "cut {n}");
+            assert!(decode(&wire[..n], 256).is_err(), "cut {n}");
+        }
+    }
+
+    #[test]
+    fn checksum_mismatch_errors() {
+        let mut wire = encode(INIT, &[1, 2, 3, 4]);
+        // Flip one bit in the body, then one in the trailer.
+        let body_at = HEADER_LEN + 1;
+        wire[body_at] ^= 0x40;
+        assert!(decode(&wire, 16).unwrap_err().to_string().contains("checksum"));
+        wire[body_at] ^= 0x40;
+        let trailer_at = wire.len() - 2;
+        wire[trailer_at] ^= 0x01;
+        let err = read_frame(&mut Cursor::new(&wire), 16).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_header_errors() {
+        let good = encode(PING, b"");
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert!(decode(&bad_magic, 16).unwrap_err().to_string().contains("magic"));
+        let mut bad_version = good.clone();
+        bad_version[4] = 9;
+        assert!(decode(&bad_version, 16).unwrap_err().to_string().contains("version"));
+    }
+
+    /// A hostile length prefix (u32::MAX, or merely bigger than the
+    /// manifest-derived cap) is rejected from the 10-byte header alone —
+    /// before any body allocation could happen.
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut wire = encode(RUN_PHASE, &[0u8; 8]);
+        wire[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode(&wire, 1 << 20).unwrap_err();
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
+        let err = read_frame(&mut Cursor::new(&wire), 1 << 20).unwrap_err();
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
+
+        // A frame that is well-formed but larger than this message
+        // kind's cap (e.g. a state frame where a PONG belongs) is
+        // rejected the same way.
+        let big = encode(PONG, &[0u8; 4096]);
+        assert!(decode(&big, 16).unwrap_err().to_string().contains("exceeds cap"));
+
+        // The absolute backstop holds even with a huge caller cap.
+        let mut huge = encode(PING, b"");
+        huge[6..10].copy_from_slice(&((MAX_FRAME_BODY as u32) + 1).to_le_bytes());
+        assert!(decode(&huge, usize::MAX).is_err());
+    }
+
+    /// Pin the layout constants: golden bytes for an empty PING frame.
+    #[test]
+    fn wire_layout_is_pinned() {
+        let wire = encode(PING, b"");
+        assert_eq!(&wire[..4], b"DLFR");
+        assert_eq!(wire[4], 1);
+        assert_eq!(wire[5], PING);
+        assert_eq!(&wire[6..10], &[0, 0, 0, 0]);
+        assert_eq!(wire.len(), 18);
+    }
+}

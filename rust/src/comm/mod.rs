@@ -26,11 +26,22 @@
 //! hierarchical), and [`CommStats::per_round`] records one billing row
 //! per communication barrier (the golden-trace tests assert against
 //! these rows).
+//!
+//! Transports themselves are pluggable behind the [`fabric::Fabric`]
+//! trait: `SimNet` is the golden in-process backend, and [`tcp`] runs
+//! each island as a real OS process over TCP ([`frame`] is its wire
+//! framing), differential-tested bitwise against the simulator.
 
 pub mod codec;
+pub mod fabric;
 pub mod fragment;
+pub mod frame;
+pub mod tcp;
 pub mod topology;
 pub mod wire;
+
+pub use fabric::{Fabric, PhaseOutcome};
+pub use tcp::{serve_worker, TcpFabric, TcpFabricSetup, WorkerOpts};
 
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
@@ -58,7 +69,7 @@ pub struct RoundComm {
 }
 
 /// Billing record of everything that crossed the fabric.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommStats {
     pub messages: u64,
     pub bytes_up: u64,

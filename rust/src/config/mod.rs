@@ -922,6 +922,100 @@ impl Default for CommConfig {
     }
 }
 
+/// Which transport backend carries the run (DESIGN.md §14).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FabricKind {
+    /// In-process simulator — the bitwise golden path (default).
+    #[default]
+    Sim,
+    /// One OS process per island over loopback/LAN TCP; billing still
+    /// comes from the embedded simulator, so bills and drop keys match
+    /// the sim backend bitwise.
+    Tcp,
+}
+
+impl FabricKind {
+    pub fn parse(s: &str) -> anyhow::Result<FabricKind> {
+        match s {
+            "sim" => Ok(FabricKind::Sim),
+            "tcp" => Ok(FabricKind::Tcp),
+            other => anyhow::bail!("unknown fabric.kind {other:?} (sim | tcp)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FabricKind::Sim => "sim",
+            FabricKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Transport backend selection + TCP process/rendezvous knobs
+/// (`[fabric]`; DESIGN.md §14). All knobs besides `kind` only matter
+/// for `kind = "tcp"`.
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    pub kind: FabricKind,
+    /// Interface the coordinator listens on.
+    pub host: String,
+    /// Listen port; 0 picks an ephemeral port (the spawned workers are
+    /// told the resolved one).
+    pub port: u16,
+    /// Spawn (and respawn) one worker process per slot. Turn off to
+    /// rendezvous with externally launched `diloco worker` processes.
+    pub spawn: bool,
+    /// Worker binary to spawn; `main.rs` defaults this to the current
+    /// executable.
+    pub worker_bin: Option<String>,
+    /// Extra per-slot argv for spawned workers — the fault-injection
+    /// hook the `fabric_faults` suite uses (`--die-mid-phase`, …).
+    pub spawn_extra: Vec<Vec<String>>,
+    /// Rendezvous / reconnect budget, seconds.
+    pub connect_timeout_s: f64,
+    /// Bound on one inner-phase round-trip, seconds: a hung worker
+    /// becomes a booked drop after this long, never a hang.
+    pub phase_timeout_s: f64,
+    /// Bound on one heartbeat round-trip, seconds.
+    pub heartbeat_timeout_s: f64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            kind: FabricKind::Sim,
+            host: "127.0.0.1".to_string(),
+            port: 0,
+            spawn: true,
+            worker_bin: None,
+            spawn_extra: Vec::new(),
+            connect_timeout_s: 30.0,
+            phase_timeout_s: 600.0,
+            heartbeat_timeout_s: 5.0,
+        }
+    }
+}
+
+impl FabricConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, t) in [
+            ("connect_timeout_s", self.connect_timeout_s),
+            ("phase_timeout_s", self.phase_timeout_s),
+            ("heartbeat_timeout_s", self.heartbeat_timeout_s),
+        ] {
+            anyhow::ensure!(
+                t > 0.0 && t.is_finite(),
+                "fabric.{name} must be positive and finite (got {t})"
+            );
+        }
+        anyhow::ensure!(
+            !self.host.is_empty(),
+            "fabric.host must not be empty (use 127.0.0.1 for loopback)"
+        );
+        Ok(())
+    }
+}
+
 /// The full description of one run.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -950,6 +1044,9 @@ pub struct ExperimentConfig {
     pub sync_inner_opt: bool,
     pub data: DataConfig,
     pub comm: CommConfig,
+    /// Transport backend: in-process simulator (default, bitwise golden)
+    /// or real TCP worker processes.
+    pub fabric: FabricConfig,
     /// Streaming partial-sync fabric: fragments × schedule × codec.
     pub stream: StreamConfig,
     /// Per-worker compute-speed heterogeneity model.
@@ -994,6 +1091,7 @@ impl ExperimentConfig {
             sync_inner_opt: false,
             data: DataConfig::default(),
             comm: CommConfig::default(),
+            fabric: FabricConfig::default(),
             stream: StreamConfig::default(),
             speed: SpeedConfig::default(),
             sync: SyncConfig::default(),
@@ -1077,6 +1175,7 @@ impl ExperimentConfig {
             self.comm.bandwidth_bps > 0.0,
             "comm.bandwidth_bps must be positive"
         );
+        self.fabric.validate()?;
         self.stream.validate()?;
         self.speed.validate()?;
         self.sync.validate()?;
@@ -1196,6 +1295,27 @@ impl ExperimentConfig {
             doc.f64_or("comm.bandwidth_bps", cfg.comm.bandwidth_bps)?;
         cfg.comm.latency_s = doc.f64_or("comm.latency_s", cfg.comm.latency_s)?;
         cfg.comm.drop_prob = doc.f64_or("comm.drop_prob", cfg.comm.drop_prob)?;
+
+        let fabric_kind = doc.str_or("fabric.kind", cfg.fabric.kind.name())?;
+        cfg.fabric.kind = FabricKind::parse(&fabric_kind)?;
+        cfg.fabric.host = doc.str_or("fabric.host", &cfg.fabric.host)?;
+        let fabric_port = doc.usize_or("fabric.port", cfg.fabric.port as usize)?;
+        anyhow::ensure!(
+            fabric_port <= u16::MAX as usize,
+            "fabric.port = {fabric_port} does not fit a TCP port"
+        );
+        cfg.fabric.port = fabric_port as u16;
+        cfg.fabric.spawn = doc.bool_or("fabric.spawn", cfg.fabric.spawn)?;
+        let worker_bin = doc.str_or("fabric.worker_bin", "")?;
+        if !worker_bin.is_empty() {
+            cfg.fabric.worker_bin = Some(worker_bin);
+        }
+        cfg.fabric.connect_timeout_s =
+            doc.f64_or("fabric.connect_timeout_s", cfg.fabric.connect_timeout_s)?;
+        cfg.fabric.phase_timeout_s =
+            doc.f64_or("fabric.phase_timeout_s", cfg.fabric.phase_timeout_s)?;
+        cfg.fabric.heartbeat_timeout_s = doc
+            .f64_or("fabric.heartbeat_timeout_s", cfg.fabric.heartbeat_timeout_s)?;
 
         let engine = doc.str_or("engine.kind", "auto")?;
         cfg.engine = EngineConfig::parse(&engine)?;
@@ -1357,6 +1477,58 @@ mod tests {
             ComputeSchedule::Explicit(vec![1, 1, 2])
         );
         assert!(parse_schedule("bogus:1", 8).is_err());
+    }
+
+    #[test]
+    fn fabric_defaults_to_the_bitwise_sim_backend() {
+        let cfg = ExperimentConfig::paper_default("artifacts", "nano");
+        assert_eq!(cfg.fabric.kind, FabricKind::Sim);
+        assert!(cfg.fabric.validate().is_ok());
+        // And an empty TOML doc keeps it that way — the golden traces
+        // depend on `sim` staying the default.
+        let doc = TomlDoc::parse("").unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.fabric.kind, FabricKind::Sim);
+    }
+
+    #[test]
+    fn fabric_toml_keys_parse_and_validate() {
+        let doc = TomlDoc::parse(
+            r#"
+            [fabric]
+            kind = "tcp"
+            host = "0.0.0.0"
+            port = 9123
+            spawn = false
+            worker_bin = "/usr/local/bin/diloco"
+            connect_timeout_s = 3.5
+            phase_timeout_s = 45.0
+            heartbeat_timeout_s = 1.5
+            "#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.fabric.kind, FabricKind::Tcp);
+        assert_eq!(cfg.fabric.host, "0.0.0.0");
+        assert_eq!(cfg.fabric.port, 9123);
+        assert!(!cfg.fabric.spawn);
+        assert_eq!(cfg.fabric.worker_bin.as_deref(), Some("/usr/local/bin/diloco"));
+        assert_eq!(cfg.fabric.connect_timeout_s, 3.5);
+        assert_eq!(cfg.fabric.phase_timeout_s, 45.0);
+        assert_eq!(cfg.fabric.heartbeat_timeout_s, 1.5);
+
+        assert!(FabricKind::parse("bogus").is_err());
+        let bad_port = TomlDoc::parse("[fabric]\nport = 70000").unwrap();
+        assert!(ExperimentConfig::from_toml(&bad_port)
+            .unwrap_err()
+            .to_string()
+            .contains("fabric.port"));
+        let bad_timeout =
+            TomlDoc::parse("[fabric]\nphase_timeout_s = 0.0").unwrap();
+        assert!(ExperimentConfig::from_toml(&bad_timeout)
+            .unwrap_err()
+            .to_string()
+            .contains("phase_timeout_s"));
     }
 
     #[test]

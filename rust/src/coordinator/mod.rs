@@ -49,8 +49,10 @@ pub mod stats;
 use crate::checkpoint::{self, PendingFragment, PendingSync, TrainState, WorkerState};
 use crate::comm::codec::Codec;
 use crate::comm::fragment::FragmentPlan;
-use crate::comm::{topology, wire, Direction, RoundComm, SimNet};
-use crate::config::{ExperimentConfig, TopologyConfig};
+use crate::comm::{
+    topology, wire, Direction, Fabric, RoundComm, SimNet, TcpFabric, TcpFabricSetup,
+};
+use crate::config::{ExperimentConfig, FabricKind, TopologyConfig};
 use crate::data::batch::{BatchIter, EvalSet};
 use crate::data::Dataset;
 use crate::engine::{self, InnerPhaseExecutor};
@@ -433,6 +435,59 @@ impl Coordinator {
         checkpoint::save_state(path, &self.rt.manifest, &st)
     }
 
+    /// Build the round loop's communication fabric (DESIGN.md §14).
+    /// `sim` — the default — is the billing/drop oracle the golden
+    /// traces pin; `tcp` wraps the *same* seeded [`SimNet`] (so byte
+    /// bills and drop keys stay bitwise-identical) around real worker
+    /// OS processes that run the inner phases over sockets.
+    fn build_fabric(&self) -> anyhow::Result<Box<dyn Fabric>> {
+        let cfg = &self.cfg;
+        let sim = SimNet::new(
+            cfg.comm.bandwidth_bps,
+            cfg.comm.latency_s,
+            cfg.comm.drop_prob,
+            cfg.rng().child(7),
+        );
+        match cfg.fabric.kind {
+            FabricKind::Sim => Ok(Box::new(sim)),
+            FabricKind::Tcp => {
+                let max_k = cfg.pool_size();
+                let mcfg = &self.rt.manifest.config;
+                let shards: Vec<Vec<i32>> = (0..max_k)
+                    .map(|i| self.dataset.shards[i % self.dataset.shards.len()].clone())
+                    .collect();
+                let setup = TcpFabricSetup {
+                    sim,
+                    pool: max_k,
+                    host: cfg.fabric.host.clone(),
+                    port: cfg.fabric.port,
+                    // Rendezvous credential: both ends must agree on the
+                    // run before a socket gets a worker slot.
+                    run_id: format!("{}-s{}", cfg.model, cfg.seed),
+                    spawn: cfg.fabric.spawn,
+                    worker_bin: cfg.fabric.worker_bin.clone(),
+                    spawn_extra: cfg.fabric.spawn_extra.clone(),
+                    artifacts_dir: cfg.artifacts_dir.clone(),
+                    model: cfg.model.clone(),
+                    shards,
+                    batch_size: mcfg.batch_size,
+                    seq_len: mcfg.seq_len,
+                    leaf_sizes: self
+                        .rt
+                        .manifest
+                        .params
+                        .iter()
+                        .map(|s| s.elements())
+                        .collect(),
+                    connect_timeout_s: cfg.fabric.connect_timeout_s,
+                    phase_timeout_s: cfg.fabric.phase_timeout_s,
+                    heartbeat_timeout_s: cfg.fabric.heartbeat_timeout_s,
+                };
+                Ok(Box::new(TcpFabric::new(setup)?))
+            }
+        }
+    }
+
     /// Which pool workers were ever active before `round` — a pure
     /// function of the config, so a resumed run re-derives it instead of
     /// checkpointing roster history. Fresh joiners (never active) adopt
@@ -580,19 +635,17 @@ impl Coordinator {
         // warm-start; rejoining leavers restore parked state).
         let mut ever_active = self.ever_active_before(start_round, max_k);
 
-        let mut net = SimNet::new(
-            cfg.comm.bandwidth_bps,
-            cfg.comm.latency_s,
-            cfg.comm.drop_prob,
-            rng.child(7),
-        );
+        let mut net = self.build_fabric()?;
         let mut round_stats = Vec::with_capacity(cfg.rounds);
         let payload = self.rt.manifest.param_bytes() as u64;
 
         for t in start_round..cfg.rounds {
             // The round's active roster: churn events when configured,
-            // else the schedule's prefix 0..k_t (pre-churn loop, bitwise).
-            let roster = cfg.active_ids(t);
+            // else the schedule's prefix 0..k_t (pre-churn loop,
+            // bitwise). The fabric gets a veto: a TCP peer that stopped
+            // answering heartbeats leaves the roster as `[churn]` (the
+            // sim fabric passes the roster through untouched).
+            let roster = net.filter_roster(t, cfg.active_ids(t))?;
             let k_t = roster.len();
             // Per-island compute-speed factors (all exactly 1.0 under
             // the uniform model) and the round's active-id mask for
@@ -648,21 +701,43 @@ impl Coordinator {
             // this phase. The round's simulated cost is its *critical
             // path*: the slowest island's speed-scaled compute (bitwise
             // the raw max under the uniform speed model).
-            let phase = engine::run_inner_phase_subset(
-                self.exec.as_ref(),
-                &self.rt,
-                &mut workers,
-                &roster,
-                cfg.inner_steps,
-            )?;
+            let (phase, vanished) =
+                match net.run_phase(&mut workers, &roster, cfg.inner_steps)? {
+                    // Remote fabric: the phase ran on worker processes;
+                    // `vanished` flags peers that died mid-phase.
+                    Some(out) => (out.report, out.vanished),
+                    // Local fabric: the engine runs the islands here —
+                    // the golden path, nobody vanishes.
+                    None => (
+                        engine::run_inner_phase_subset(
+                            self.exec.as_ref(),
+                            &self.rt,
+                            &mut workers,
+                            &roster,
+                            cfg.inner_steps,
+                        )?,
+                        vec![false; k_t],
+                    ),
+                };
             let crit = phase.critical_path_s(&factors);
             metrics.sim_compute_seconds += crit.max(carry_comm_s);
             carry_comm_s = 0.0;
             let idle = phase.idle_s(&factors);
             metrics.sim_idle_seconds += idle;
             metrics.phases.inner_compute_s += phase.total_wall_s();
+            // Fold losses over the workers that finished the phase. With
+            // none vanished the filter keeps every row in roster order —
+            // the identical addition sequence, bitwise.
+            let live = vanished.iter().filter(|&&v| !v).count().max(1);
             for s in 0..cfg.inner_steps {
-                let avg = phase.per_worker_losses.iter().map(|l| l[s]).sum::<f32>() / k_t as f32;
+                let avg = phase
+                    .per_worker_losses
+                    .iter()
+                    .zip(&vanished)
+                    .filter(|&(_, &v)| !v)
+                    .map(|(l, _)| l[s])
+                    .sum::<f32>()
+                    / live as f32;
                 metrics.loss_curve.push(avg);
             }
 
@@ -873,24 +948,28 @@ impl Coordinator {
                 let mut dropped_any = false;
                 for (di, &f) in due.iter().enumerate() {
                     let vals = std::mem::take(&mut up_vals[i][di]);
-                    let ok = match &hier_landed {
-                        // Hierarchical: the group leader's hop already
-                        // decided this fragment's fate for every member
-                        // (indexed by roster position).
-                        Some(landed) => landed[di][i],
-                        None => {
-                            k_t == 1
-                                || net.try_send_gen(
-                                    up_bytes[i][di],
-                                    Direction::Up,
-                                    t,
-                                    wid,
-                                    f,
-                                    0,
-                                    delay,
-                                )
-                        }
-                    };
+                    // A worker that vanished mid-phase has nothing to
+                    // upload: its round is booked as a drop (never true
+                    // on the sim fabric, so the gate is trace-neutral).
+                    let ok = !vanished[i]
+                        && match &hier_landed {
+                            // Hierarchical: the group leader's hop already
+                            // decided this fragment's fate for every member
+                            // (indexed by roster position).
+                            Some(landed) => landed[di][i],
+                            None => {
+                                k_t == 1
+                                    || net.try_send_gen(
+                                        up_bytes[i][di],
+                                        Direction::Up,
+                                        t,
+                                        wid,
+                                        f,
+                                        0,
+                                        delay,
+                                    )
+                            }
+                        };
                     if ef {
                         // residual = intended − what actually shipped. A
                         // dropped fragment clears its residual instead:
@@ -1080,7 +1159,7 @@ impl Coordinator {
                     &mut global,
                     &mut outer,
                     &mut pending_adopt,
-                    &mut net,
+                    net.as_mut(),
                     &mut round_stats,
                     &mut scratch,
                     threads,
@@ -1117,7 +1196,7 @@ impl Coordinator {
                         &mut global,
                         &mut outer,
                         &mut pending_adopt,
-                        &mut net,
+                        net.as_mut(),
                         &mut round_stats,
                         &mut scratch,
                         threads,
@@ -1283,18 +1362,15 @@ impl Coordinator {
         }
         let mut ever_active = self.ever_active_before(start_round, max_k);
 
-        let mut net = SimNet::new(
-            cfg.comm.bandwidth_bps,
-            cfg.comm.latency_s,
-            cfg.comm.drop_prob,
-            rng.child(7),
-        );
+        let mut net = self.build_fabric()?;
         let mut round_stats = Vec::with_capacity(cfg.rounds);
         let payload = self.rt.manifest.param_bytes() as u64;
         let mut last_roster: Vec<usize> = Vec::new();
 
         for t in start_round..cfg.rounds {
-            let roster = cfg.active_ids(t);
+            // Fabric roster veto, as on the centralized loop: a dead TCP
+            // peer leaves as `[churn]`; the sim fabric is a passthrough.
+            let roster = net.filter_roster(t, cfg.active_ids(t))?;
             let k_t = roster.len();
             last_roster = roster.clone();
             let factors = cfg.speed_factors(&roster, t);
@@ -1337,21 +1413,38 @@ impl Coordinator {
             // centralized loop (uniform factors reproduce the raw max
             // bitwise). Decentralized topologies reject `delay_rounds`,
             // so the only async-layer effect here is heterogeneity.
-            let phase = engine::run_inner_phase_subset(
-                self.exec.as_ref(),
-                &self.rt,
-                &mut workers,
-                &roster,
-                cfg.inner_steps,
-            )?;
+            let (phase, vanished) =
+                match net.run_phase(&mut workers, &roster, cfg.inner_steps)? {
+                    Some(out) => (out.report, out.vanished),
+                    None => (
+                        engine::run_inner_phase_subset(
+                            self.exec.as_ref(),
+                            &self.rt,
+                            &mut workers,
+                            &roster,
+                            cfg.inner_steps,
+                        )?,
+                        vec![false; k_t],
+                    ),
+                };
             let crit = phase.critical_path_s(&factors);
             metrics.sim_compute_seconds += crit.max(carry_comm_s);
             carry_comm_s = 0.0;
             let idle = phase.idle_s(&factors);
             metrics.sim_idle_seconds += idle;
             metrics.phases.inner_compute_s += phase.total_wall_s();
+            // Live-only loss fold — identical addition order (and hence
+            // bitwise) when nobody vanished, as on the centralized loop.
+            let live = vanished.iter().filter(|&&v| !v).count().max(1);
             for s in 0..cfg.inner_steps {
-                let avg = phase.per_worker_losses.iter().map(|l| l[s]).sum::<f32>() / k_t as f32;
+                let avg = phase
+                    .per_worker_losses
+                    .iter()
+                    .zip(&vanished)
+                    .filter(|&(_, &v)| !v)
+                    .map(|(l, _)| l[s])
+                    .sum::<f32>()
+                    / live as f32;
                 metrics.loss_curve.push(avg);
             }
 
@@ -1491,9 +1584,21 @@ impl Coordinator {
                 // prefix). landed[s] = position s's outgoing
                 // contribution was delivered to its receiver(s).
                 let mut landed = vec![true; k_t];
+                // A vanished peer contributes nothing to its neighbours
+                // this round — the mixing rows treat it exactly like a
+                // dropped hop (never flagged on the sim fabric).
+                for (pos, &v) in vanished.iter().enumerate() {
+                    if v {
+                        landed[pos] = false;
+                        dropped_any[pos] = true;
+                    }
+                }
                 if k_t > 1 {
                     for tr in &transfers {
                         let Some(lane) = tr.lane else { continue };
+                        if vanished[tr.sender] {
+                            continue;
+                        }
                         let bytes = match tr.chunk {
                             Some((c, of)) => {
                                 let n = plan.elements(f);
@@ -1772,7 +1877,7 @@ fn apply_pending_batch(
     global: &mut Tensors,
     outer: &mut opt::OuterOpt,
     pending_adopt: &mut [Vec<bool>],
-    net: &mut SimNet,
+    net: &mut dyn Fabric,
     round_stats: &mut Vec<RoundStats>,
     scratch: &mut scratch::RoundScratch,
     threads: usize,

@@ -227,6 +227,20 @@ pub struct InnerPhaseReport {
 }
 
 impl InnerPhaseReport {
+    /// Assemble a report from traces produced off-engine. The TCP
+    /// fabric runs inner phases in remote worker processes and ships
+    /// the traces back; it uses this to hand the coordinator a report
+    /// shaped exactly like the in-process engine path's.
+    pub fn from_parts(
+        per_worker_losses: Vec<Vec<f32>>,
+        per_worker_compute_s: Vec<f64>,
+        per_worker_wall_s: Vec<f64>,
+    ) -> InnerPhaseReport {
+        assert_eq!(per_worker_losses.len(), per_worker_compute_s.len());
+        assert_eq!(per_worker_losses.len(), per_worker_wall_s.len());
+        InnerPhaseReport { per_worker_losses, per_worker_compute_s, per_worker_wall_s }
+    }
+
     /// Slowest island's PJRT compute — the simulated wall-clock cost of
     /// the phase (islands overlap).
     pub fn max_compute_s(&self) -> f64 {

@@ -9,11 +9,14 @@
 //!   round orchestration ([`coordinator`]), the island execution engine
 //!   ([`engine`] — sequential reference path or truly parallel OS
 //!   threads, bitwise-identical), outer optimizers ([`coordinator::opt`]),
-//!   the simulated wide-area fabric ([`comm`]) with its streaming
-//!   fragment/codec layers ([`comm::fragment`], [`comm::codec`]) and
-//!   pluggable sync topologies ([`comm::topology`] — star, ring
-//!   all-reduce, NoLoCo-style gossip, DiLoCoX-style hierarchical), data
-//!   sharding ([`data`]), metrics, checkpoints, config and CLI.
+//!   the pluggable communication fabric ([`comm::Fabric`] — the
+//!   simulated wide-area network [`comm::SimNet`] by default, or real
+//!   worker OS processes over TCP via [`comm::TcpFabric`]) with its
+//!   streaming fragment/codec layers ([`comm::fragment`],
+//!   [`comm::codec`]) and pluggable sync topologies
+//!   ([`comm::topology`] — star, ring all-reduce, NoLoCo-style gossip,
+//!   DiLoCoX-style hierarchical), data sharding ([`data`]), metrics,
+//!   checkpoints, config and CLI.
 //! * **Layer 2/1 (build-time python, never on the training path)** — the
 //!   transformer fwd/bwd + fused AdamW and the Pallas kernels, lowered
 //!   once by `python/compile/aot.py` into `artifacts/*.hlo.txt` which

@@ -5,9 +5,12 @@
 //!   eval     Evaluate a checkpoint on the validation split.
 //!   data     Synthesize the corpus and print shard statistics.
 //!   inspect  Dump the AOT artifact manifest for a model preset.
+//!   worker   Serve one island as a TCP fabric worker process
+//!            (normally spawned by `train --fabric tcp`, not by hand).
 //!
 //! Examples:
 //!   diloco train --config experiments/diloco_nano.toml --out runs/
+//!   diloco train --config exp.toml --fabric tcp
 //!   diloco inspect --artifacts artifacts --model nano
 //!   diloco data --topics 8 --docs 400 --workers 8 --non-iid
 
@@ -68,6 +71,7 @@ fn main() {
         "eval" => cmd_eval(&args),
         "data" => cmd_data(&args),
         "inspect" => cmd_inspect(&args),
+        "worker" => cmd_worker(&args),
         _ => {
             print_help();
             Ok(())
@@ -93,9 +97,13 @@ fn print_help() {
          \x20       (speed: per-worker compute-time factors; delay: apply outer\n\
          \x20        contributions D rounds late; discount: stale weight gamma^s)\n\
          \x20       [--save-every N --save-path state.ckpt] [--resume state.ckpt]\n\
+         \x20       [--fabric sim|tcp] (tcp: islands run as real worker processes;\n\
+         \x20        sim — the default — is the bitwise golden path)\n\
          eval    --ckpt <file> [--artifacts artifacts] [--model nano]\n\
          data    [--topics 8] [--docs 400] [--workers 8] [--non-iid] [--seed 0]\n\
-         inspect [--artifacts artifacts] [--model nano]"
+         inspect [--artifacts artifacts] [--model nano]\n\
+         worker  --host H --port P --run-id ID [--artifacts artifacts] [--model nano]\n\
+         \x20       (serve one island for a `train --fabric tcp` coordinator)"
     );
 }
 
@@ -157,6 +165,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if let Some(resume) = args.get("resume") {
         cfg.ckpt.resume = Some(resume.to_string());
     }
+    if let Some(fabric) = args.get("fabric") {
+        cfg.fabric.kind = diloco::config::FabricKind::parse(fabric)?;
+    }
+    // Self-spawned TCP workers default to this very binary.
+    if cfg.fabric.kind == diloco::config::FabricKind::Tcp
+        && cfg.fabric.spawn
+        && cfg.fabric.worker_bin.is_none()
+    {
+        cfg.fabric.worker_bin =
+            Some(std::env::current_exe()?.to_string_lossy().into_owned());
+    }
     cfg.validate()?;
     println!(
         "DiLoCo: model={} k={} H={} T={} pretrain={} outer={} non_iid={} engine={:?} \
@@ -212,6 +231,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(resume) = &cfg.ckpt.resume {
         println!("ckpt: resuming from {resume}");
+    }
+    if cfg.fabric.kind == diloco::config::FabricKind::Tcp {
+        println!(
+            "fabric: tcp on {}:{} ({}), billing via the embedded simulator",
+            cfg.fabric.host,
+            cfg.fabric.port,
+            if cfg.fabric.spawn { "spawning workers" } else { "awaiting workers" }
+        );
     }
     let rt = Arc::new(Runtime::load(&cfg.artifacts_dir, &cfg.model)?);
     println!(
@@ -279,6 +306,44 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         println!("checkpoint written to {ckpt}");
     }
     Ok(())
+}
+
+/// Serve one island as a TCP fabric worker: connect to the
+/// coordinator's rendezvous endpoint, then run inner phases on demand
+/// until a SHUTDOWN frame (or the coordinator vanishing) ends the
+/// process. The `--die-*`/`--hang-*` flags are fault-injection hooks
+/// for the test suite — they make the worker fail on cue so the
+/// coordinator's reconnect-as-churn path can be exercised.
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let port: u16 = args
+        .get("port")
+        .ok_or_else(|| anyhow::anyhow!("--port required"))?
+        .parse()
+        .map_err(|e| anyhow::anyhow!("bad --port: {e}"))?;
+    let run_id = args
+        .get("run-id")
+        .ok_or_else(|| anyhow::anyhow!("--run-id required"))?
+        .to_string();
+    let parse_phase = |key: &str| -> anyhow::Result<Option<u64>> {
+        args.get(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|e| anyhow::anyhow!("bad --{key} {v:?}: {e}"))
+            })
+            .transpose()
+    };
+    let opts = diloco::comm::tcp::WorkerOpts {
+        host: args.get_or("host", "127.0.0.1"),
+        port,
+        run_id,
+        artifacts_dir: args.get_or("artifacts", "artifacts"),
+        model: args.get_or("model", "nano"),
+        connect_timeout_s: args.get_or("connect-timeout-s", "30").parse()?,
+        die_after_phases: parse_phase("die-after-phases")?,
+        die_mid_phase: parse_phase("die-mid-phase")?,
+        hang_mid_phase: parse_phase("hang-mid-phase")?,
+    };
+    diloco::comm::tcp::serve_worker(opts)
 }
 
 fn cmd_eval(args: &Args) -> anyhow::Result<()> {

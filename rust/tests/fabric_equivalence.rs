@@ -1,0 +1,184 @@
+//! Cross-backend differential suite — the headline correctness artifact
+//! of the fabric abstraction (DESIGN.md §14).
+//!
+//! For drop-free configs the TCP fabric must be *bitwise* equivalent to
+//! the simulator: billing and drop decisions come from the same embedded
+//! [`SimNet`] oracle, and the inner phases are exact f32/f64 LE state
+//! round-trips through deterministic PJRT CPU compute — so per-round
+//! losses, eval NLLs, byte bills, and the final parameters of a loopback
+//! TCP run must equal the sim run bit for bit. Any divergence means a
+//! fabric backend leaked into the algorithm.
+//!
+//! Needs the AOT artifacts (`make artifacts`), hence `#[ignore]`; CI
+//! runs it via `cargo test --release --test fabric_equivalence -- --ignored`
+//! (the fabric-equivalence job). The suite spawns real worker processes
+//! (`env!("CARGO_BIN_EXE_diloco") worker ...`) on loopback.
+
+use diloco::config::{ComputeSchedule, ExperimentConfig, FabricKind, TopologyConfig};
+use diloco::coordinator::{Coordinator, DilocoReport};
+use diloco::runtime::Runtime;
+use std::sync::Arc;
+
+fn artifacts_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = artifacts_dir();
+    std::path::Path::new(&dir)
+        .join("nano.manifest.json")
+        .exists()
+        .then(|| Arc::new(Runtime::load(&dir, "nano").unwrap()))
+}
+
+/// The tiny differential preset — the golden-trace preset's shape
+/// (2 workers × 3 rounds × 5 inner steps on nano), drop-free.
+fn tiny_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default(&artifacts_dir(), "nano");
+    cfg.seed = 0;
+    cfg.workers = 2;
+    cfg.schedule = ComputeSchedule::Constant(2);
+    cfg.inner_steps = 5;
+    cfg.rounds = 3;
+    cfg.pretrain_steps = 0;
+    cfg.eval_every_rounds = 1;
+    cfg.eval_batches = 1;
+    cfg.data.n_docs = 60;
+    cfg.data.doc_len = 120;
+    cfg
+}
+
+/// Switch a config onto the loopback TCP fabric: ephemeral port, workers
+/// spawned from this build's own `diloco` binary.
+fn tcp(mut cfg: ExperimentConfig) -> ExperimentConfig {
+    cfg.fabric.kind = FabricKind::Tcp;
+    cfg.fabric.host = "127.0.0.1".to_string();
+    cfg.fabric.port = 0;
+    cfg.fabric.spawn = true;
+    cfg.fabric.worker_bin = Some(env!("CARGO_BIN_EXE_diloco").to_string());
+    cfg
+}
+
+fn run(cfg: ExperimentConfig, rt: Arc<Runtime>) -> DilocoReport {
+    Coordinator::new(cfg, rt).unwrap().run().unwrap()
+}
+
+/// Assert every deterministic field of two reports is bitwise equal.
+/// Wall-clock-derived metrics (`sim_compute_seconds`, phase timers) are
+/// real elapsed time on both backends and are deliberately excluded —
+/// exactly as the golden trace excludes them.
+fn assert_bitwise_equal(sim: &DilocoReport, tcp: &DilocoReport, what: &str) {
+    let (a, b) = (&sim.metrics, &tcp.metrics);
+    for (s, (x, y)) in a.loss_curve.iter().zip(&b.loss_curve).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: loss step {s}: {x} vs {y}");
+    }
+    assert_eq!(a.loss_curve.len(), b.loss_curve.len(), "{what}: loss points");
+    assert_eq!(a.eval_curve.len(), b.eval_curve.len(), "{what}: eval points");
+    for (p, q) in a.eval_curve.iter().zip(&b.eval_curve) {
+        assert_eq!(p.step, q.step, "{what}: eval step");
+        assert_eq!(
+            p.mean_nll.to_bits(),
+            q.mean_nll.to_bits(),
+            "{what}: eval nll {} vs {}",
+            p.mean_nll,
+            q.mean_nll
+        );
+    }
+    assert_eq!(a.comm_bytes, b.comm_bytes, "{what}: total bytes");
+    assert_eq!(a.comm_bytes_up, b.comm_bytes_up, "{what}: up bytes");
+    assert_eq!(a.comm_messages, b.comm_messages, "{what}: messages");
+    assert_eq!(a.comm_dropped, b.comm_dropped, "{what}: drops");
+    assert_eq!(sim.comm_per_round, tcp.comm_per_round, "{what}: billing rows");
+    assert_eq!(sim.drops_per_worker, tcp.drops_per_worker, "{what}: drop book");
+    assert_eq!(sim.final_params, tcp.final_params, "{what}: final params");
+    assert_eq!(
+        sim.replica_params, tcp.replica_params,
+        "{what}: replica params"
+    );
+}
+
+/// Star (classic DiLoCo): the default config under both backends.
+#[test]
+#[ignore]
+fn star_loopback_tcp_reproduces_sim_trace_bitwise() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping fabric equivalence: run `make artifacts` first");
+        return;
+    };
+    let sim = run(tiny_cfg(), rt.clone());
+    let tcp = run(tcp(tiny_cfg()), rt);
+    assert_bitwise_equal(&sim, &tcp, "star");
+}
+
+/// Ring (decentralized replicas): the structurally different round loop
+/// must dispatch through the same fabric seam.
+#[test]
+#[ignore]
+fn ring_loopback_tcp_reproduces_sim_trace_bitwise() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping fabric equivalence: run `make artifacts` first");
+        return;
+    };
+    let mut cfg = tiny_cfg();
+    cfg.workers = 3;
+    cfg.schedule = ComputeSchedule::Constant(3);
+    cfg.topology = TopologyConfig::parse("ring").unwrap();
+    let sim = run(cfg.clone(), rt.clone());
+    let tcp = run(tcp(cfg), rt);
+    assert_bitwise_equal(&sim, &tcp, "ring");
+}
+
+/// Streaming + quantization ride the same seam: fragments × staggered
+/// schedule × q8 codec, still drop-free, still bitwise.
+#[test]
+#[ignore]
+fn streaming_codec_config_is_backend_independent() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping fabric equivalence: run `make artifacts` first");
+        return;
+    };
+    let mut cfg = tiny_cfg();
+    cfg.stream = diloco::config::StreamConfig::parse(
+        "fragments=2,schedule=staggered,codec=q8",
+    )
+    .unwrap();
+    let sim = run(cfg.clone(), rt.clone());
+    let tcp = run(tcp(cfg), rt);
+    assert_bitwise_equal(&sim, &tcp, "streaming");
+}
+
+/// Checkpoint resume dispatches through the fabric seam too: a TCP run
+/// saved at round 1 and resumed (still on TCP) must finish bitwise
+/// identical to the straight sim run.
+#[test]
+#[ignore]
+fn tcp_resume_matches_straight_sim_run() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping fabric equivalence: run `make artifacts` first");
+        return;
+    };
+    let dir = std::env::temp_dir().join(format!(
+        "diloco-fabric-eq-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("state.ckpt").to_string_lossy().into_owned();
+
+    let sim = run(tiny_cfg(), rt.clone());
+
+    let mut save_cfg = tcp(tiny_cfg());
+    save_cfg.ckpt.save_every = 1;
+    save_cfg.ckpt.path = Some(ckpt.clone());
+    save_cfg.rounds = 1;
+    run(save_cfg, rt.clone());
+
+    let mut resume_cfg = tcp(tiny_cfg());
+    resume_cfg.ckpt.resume = Some(ckpt);
+    let resumed = run(resume_cfg, rt);
+    assert_eq!(
+        sim.final_params, resumed.final_params,
+        "resumed TCP run diverged from the straight sim run"
+    );
+    assert_eq!(sim.drops_per_worker, resumed.drops_per_worker);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,145 @@
+//! Fault-injection suite for the TCP fabric (DESIGN.md §14): kill or
+//! hang real worker processes mid-run and assert the coordinator
+//! degrades into the existing `[churn]`/drop machinery — bounded by the
+//! configured timeouts — instead of crashing or hanging the round.
+//!
+//! The faults are injected through `fabric.spawn_extra`: per-slot argv
+//! appended to the spawned `diloco worker` processes (`--die-after-phases`,
+//! `--die-mid-phase`, `--hang-mid-phase`). A respawned replacement
+//! inherits its slot's flags, so a die-after worker also exercises the
+//! leave → respawn → rejoin cycle.
+//!
+//! Needs the AOT artifacts (`make artifacts`), hence `#[ignore]`; CI
+//! runs it via `cargo test --release --test fabric_faults -- --ignored`
+//! (the fabric-equivalence job).
+
+use diloco::config::{ComputeSchedule, ExperimentConfig, FabricKind};
+use diloco::coordinator::{Coordinator, DilocoReport};
+use diloco::runtime::Runtime;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn artifacts_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = artifacts_dir();
+    std::path::Path::new(&dir)
+        .join("nano.manifest.json")
+        .exists()
+        .then(|| Arc::new(Runtime::load(&dir, "nano").unwrap()))
+}
+
+/// Tiny loopback-TCP preset: 2 workers × 3 rounds × 5 inner steps,
+/// drop-free, workers spawned from this build's own binary.
+fn tcp_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_default(&artifacts_dir(), "nano");
+    cfg.seed = 0;
+    cfg.workers = 2;
+    cfg.schedule = ComputeSchedule::Constant(2);
+    cfg.inner_steps = 5;
+    cfg.rounds = 3;
+    cfg.pretrain_steps = 0;
+    cfg.eval_every_rounds = 1;
+    cfg.eval_batches = 1;
+    cfg.data.n_docs = 60;
+    cfg.data.doc_len = 120;
+    cfg.fabric.kind = FabricKind::Tcp;
+    cfg.fabric.host = "127.0.0.1".to_string();
+    cfg.fabric.port = 0;
+    cfg.fabric.spawn = true;
+    cfg.fabric.worker_bin = Some(env!("CARGO_BIN_EXE_diloco").to_string());
+    cfg
+}
+
+/// Inject per-slot worker argv (slot 1 gets `flag value`).
+fn fault_on_slot_1(mut cfg: ExperimentConfig, flag: &str, value: &str) -> ExperimentConfig {
+    cfg.fabric.spawn_extra = vec![
+        Vec::new(),
+        vec![flag.to_string(), value.to_string()],
+    ];
+    cfg
+}
+
+fn run(cfg: ExperimentConfig, rt: Arc<Runtime>) -> DilocoReport {
+    Coordinator::new(cfg, rt).unwrap().run().unwrap()
+}
+
+fn active_per_round(report: &DilocoReport) -> Vec<usize> {
+    report.round_stats.iter().map(|rs| rs.active_workers).collect()
+}
+
+/// Worker 1 exits cleanly after replying to its first phase. The
+/// coordinator's next-round heartbeat books it as a `[churn]` leave,
+/// respawns the slot, and the replacement rejoins one round later — the
+/// full leave/rejoin cycle, with every round still producing an outer
+/// step.
+#[test]
+#[ignore]
+fn clean_worker_death_books_churn_leave_and_rejoin() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping fabric faults: run `make artifacts` first");
+        return;
+    };
+    let cfg = fault_on_slot_1(tcp_cfg(), "--die-after-phases", "1");
+    let report = run(cfg, rt);
+    // Round 0: both run (then worker 1 exits). Round 1: heartbeat books
+    // the leave → solo round. Round 2: the respawn has rejoined. (The
+    // replacement inherits the flag, so it exits again after round 2 —
+    // past the end of the run.)
+    assert_eq!(active_per_round(&report), vec![2, 1, 2]);
+    // The death was clean (after the reply): no sync was ever dropped.
+    assert_eq!(report.drops_per_worker, vec![0, 0]);
+    assert_eq!(report.metrics.loss_curve.len(), 3 * 5);
+    assert!(report.final_params.all_finite());
+}
+
+/// Worker 1 exits *without replying* on its second phase (round 1): the
+/// phase books it as vanished — its sync is a drop, its loss rows are
+/// excluded — and the round completes on the survivor. The next round's
+/// heartbeat turns the dead socket into a churn leave + respawn.
+#[test]
+#[ignore]
+fn mid_phase_death_is_a_drop_not_a_crash() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping fabric faults: run `make artifacts` first");
+        return;
+    };
+    let cfg = fault_on_slot_1(tcp_cfg(), "--die-mid-phase", "1");
+    let report = run(cfg, rt);
+    // Round 1 starts with both alive (the death happens inside the
+    // phase), round 2 books the leave; the respawned replacement dies on
+    // *its* second phase, which never comes in a 3-round run.
+    assert_eq!(active_per_round(&report), vec![2, 2, 1]);
+    assert_eq!(report.drops_per_worker, vec![0, 1], "the vanish books as a drop");
+    assert_eq!(report.metrics.loss_curve.len(), 3 * 5);
+    assert!(report.final_params.all_finite());
+}
+
+/// Worker 1 hangs forever inside its second phase: the configured
+/// `phase_timeout_s` bounds the stall, the hang books exactly like a
+/// mid-phase death (vanish → drop → churn leave → respawn), and the
+/// whole run finishes in bounded time instead of deadlocking.
+#[test]
+#[ignore]
+fn hung_worker_is_bounded_by_phase_timeout() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping fabric faults: run `make artifacts` first");
+        return;
+    };
+    let mut cfg = fault_on_slot_1(tcp_cfg(), "--hang-mid-phase", "1");
+    // Generous enough for a real nano phase on a slow runner, small
+    // enough that the test proves the bound.
+    cfg.fabric.phase_timeout_s = 20.0;
+    let t0 = Instant::now();
+    let report = run(cfg, rt);
+    assert!(
+        t0.elapsed() < Duration::from_secs(240),
+        "run took {:?} — the phase timeout did not bound the hung worker",
+        t0.elapsed()
+    );
+    assert_eq!(active_per_round(&report), vec![2, 2, 1]);
+    assert_eq!(report.drops_per_worker, vec![0, 1]);
+    assert!(report.final_params.all_finite());
+}
