@@ -66,6 +66,7 @@
 //! ```
 
 use super::Direction;
+use crate::util::math;
 use crate::util::rng::Rng;
 
 /// Hop index of a worker's first-hop upload — the legacy drop key.
@@ -177,7 +178,9 @@ pub trait Topology: Send + Sync {
 pub fn row_stochastic(rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
     rows.iter()
         .map(|row| {
-            let s: f64 = row.iter().sum();
+            // Row totals feed replica mixing weights — audited
+            // order-pinned sum (D4), bitwise-identical fold.
+            let s = math::sum_f64(row);
             row.iter()
                 .map(|&x| if s > 0.0 { x / s } else { 0.0 })
                 .collect()

@@ -89,11 +89,13 @@ pub fn run_big_batch(
                 Box::new(move || -> anyhow::Result<IslandOutput> {
                     // wall_s includes batch prep (same convention as the
                     // DiLoCo inner phase); compute_s is PJRT-only.
+                    // detlint: allow(wall_clock, DESIGN.md §4 rule 3: local timing feeding reporting columns only, reduced in replica order)
                     let t0 = std::time::Instant::now();
                     let batch = it.next_batch();
                     let mut inputs = params_ref.to_views();
                     inputs.push(ValueView::I32(&batch.tokens));
                     inputs.push(ValueView::I32(&batch.targets));
+                    // detlint: allow(wall_clock, PJRT-only compute timing — a reporting column, never model state)
                     let t_exec = std::time::Instant::now();
                     let mut out = rt_ref.execute_views("grad_step", &inputs)?;
                     let dt = t_exec.elapsed().as_secs_f64();

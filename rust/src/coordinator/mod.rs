@@ -730,6 +730,7 @@ impl Coordinator {
             // the identical addition sequence, bitwise.
             let live = vanished.iter().filter(|&&v| !v).count().max(1);
             for s in 0..cfg.inner_steps {
+                // detlint: allow(float_fold, roster-order f32 fold pinned bitwise by the golden trace; rewriting through math:: would widen to f64 and break it)
                 let avg = phase
                     .per_worker_losses
                     .iter()
@@ -1437,6 +1438,7 @@ impl Coordinator {
             // bitwise) when nobody vanished, as on the centralized loop.
             let live = vanished.iter().filter(|&&v| !v).count().max(1);
             for s in 0..cfg.inner_steps {
+                // detlint: allow(float_fold, roster-order f32 fold pinned bitwise by the golden trace; rewriting through math:: would widen to f64 and break it)
                 let avg = phase
                     .per_worker_losses
                     .iter()

@@ -9,6 +9,7 @@
 //! cutting the already-infrequent communication.
 
 use crate::runtime::Tensors;
+use crate::util::math;
 
 /// Prune `frac ∈ [0,1]` of each leaf's entries in place; returns the
 /// number of zeroed entries (for communication accounting: only non-zero
@@ -34,8 +35,10 @@ pub fn prune_sign(delta: &mut Tensors, frac: f64) -> usize {
         if k == 0 {
             continue;
         }
-        // (1) elect sign by magnitude-weighted vote.
-        let vote: f64 = leaf.iter().map(|&x| x as f64).sum();
+        // (1) elect sign by magnitude-weighted vote. The vote decides
+        // which entries survive, so the sum goes through the audited
+        // order-pinned kernel (D4) — same left-to-right fold, bitwise.
+        let vote = math::sum_as_f64(leaf);
         let elected = if vote >= 0.0 { 1.0f32 } else { -1.0f32 };
         // (2) priority: disagreeing entries first, then by |value| asc.
         // O(n) selection instead of a full sort (§Perf: 18.0 → 1.9 ms on

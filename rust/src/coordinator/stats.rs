@@ -69,6 +69,7 @@ pub fn consensus_distance_refs(replicas: &[&Tensors], consensus: &Tensors) -> f6
     if replicas.is_empty() {
         return 0.0;
     }
+    // detlint: allow(float_fold, slice-order fold over `replicas` — the caller fixes the order (roster ids), and per-norm values come from the audited dot kernel)
     let sum: f64 = replicas
         .iter()
         .map(|r| r.delta(consensus).l2_norm())

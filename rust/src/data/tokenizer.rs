@@ -47,6 +47,7 @@ impl Tokenizer {
             let next = vocab.len() as i32 + Self::SPECIALS as i32;
             vocab.entry(piece).or_insert(next);
         };
+        // detlint: allow(map_iter, order-safe: collected then sort()+dedup() below imposes a total order)
         let mut base: Vec<String> = word_freq
             .keys()
             .flat_map(|w| w.iter().cloned())
@@ -61,6 +62,7 @@ impl Tokenizer {
         let mut merges = Vec::new();
         while vocab.len() + Self::SPECIALS < vocab_size {
             let mut pair_counts: HashMap<(String, String), usize> = HashMap::new();
+            // detlint: allow(map_iter, commutative += into pair_counts; visit order is erased by the total-order (count then lexicographic) max_by tie-break below)
             for (word, freq) in &word_freq {
                 for pair in word.windows(2) {
                     *pair_counts
@@ -83,6 +85,7 @@ impl Tokenizer {
             merges.push((l.clone(), r.clone()));
             // Apply the merge to the training view.
             let mut next: HashMap<Vec<String>, usize> = HashMap::new();
+            // detlint: allow(map_iter, per-word rewrite is independent of visit order; freqs merge by commutative += and the next round re-ties via the max_by total order)
             for (word, freq) in word_freq {
                 let mut out = Vec::with_capacity(word.len());
                 let mut i = 0;
@@ -136,6 +139,7 @@ impl Tokenizer {
 
     /// Decode ids back to text (lossy across UNK).
     pub fn decode(&self, ids: &[i32]) -> String {
+        // detlint: allow(map_iter, vocab ids are unique so the reverse map is visit-order independent)
         let rev: HashMap<i32, &String> =
             self.vocab.iter().map(|(k, v)| (*v, k)).collect();
         let mut s = String::new();

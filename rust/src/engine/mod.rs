@@ -26,9 +26,11 @@
 //! deterministically by the caller: `max` over islands models simulated
 //! wall-clock (islands overlap), `sum` models total CPU-seconds burned.
 
+pub mod pool;
+
 use crate::runtime::Runtime;
 use crate::worker::Worker;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use pool::{ClaimQueue, OutputSlots};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -48,6 +50,15 @@ use std::time::Instant;
 ///
 /// `threads <= 1` (or a single task) degenerates to an inline sequential
 /// loop on the calling thread — no threads, no locks.
+///
+/// **Panic behavior** (defined, not UB-by-accident — see the pool
+/// edge-case tests): a panicking task unwinds its worker thread;
+/// surviving workers keep draining the queue, then
+/// [`std::thread::scope`] re-raises the panic once all workers have
+/// joined. The output slots are never read on that path, so a partial
+/// phase can never masquerade as a complete one. On the inline path the
+/// panic propagates immediately. The claim/slot protocol itself lives
+/// in [`pool`] and is loom-model-checked under `--cfg loom`.
 pub fn run_tasks<'env, T: Send>(
     threads: usize,
     tasks: Vec<Box<dyn FnOnce() -> T + Send + 'env>>,
@@ -61,34 +72,24 @@ pub fn run_tasks<'env, T: Send>(
     }
     let pending: Vec<Mutex<Option<Box<dyn FnOnce() -> T + Send + 'env>>>> =
         tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
-    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    let next = AtomicUsize::new(0);
+    let queue = ClaimQueue::new(n);
+    let slots: OutputSlots<T> = OutputSlots::new(n);
     let workers = threads.min(n);
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                while let Some(i) = queue.claim() {
+                    let task = pending[i]
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .expect("task index claimed exactly once");
+                    slots.fill(i, task());
                 }
-                let task = pending[i]
-                    .lock()
-                    .unwrap()
-                    .take()
-                    .expect("task index claimed exactly once");
-                let out = task();
-                *slots[i].lock().unwrap() = Some(out);
             });
         }
     });
-    slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .unwrap()
-                .expect("worker filled the slot for its claimed task")
-        })
-        .collect()
+    slots.take_task_order()
 }
 
 /// What one island task reports back.
@@ -274,6 +275,7 @@ impl InnerPhaseReport {
     /// reclaim.
     pub fn idle_s(&self, factors: &[f64]) -> f64 {
         let crit = self.critical_path_s(factors);
+        // detlint: allow(float_fold, timing column only (DESIGN.md §4 rule 3): reduced in fixed island order, never feeds model state)
         self.per_worker_compute_s
             .iter()
             .zip(factors)
@@ -285,6 +287,7 @@ impl InnerPhaseReport {
     /// `phases.inner_compute_s` (a work counter, not wall time: under
     /// the parallel engine it exceeds elapsed time by design).
     pub fn total_wall_s(&self) -> f64 {
+        // detlint: allow(float_fold, timing column only (DESIGN.md §4 rule 3): fixed island order, never feeds model state)
         self.per_worker_wall_s.iter().sum()
     }
 
@@ -349,6 +352,7 @@ fn run_inner_phase_refs(
         .map(|w| {
             Box::new(move || -> anyhow::Result<IslandOutput> {
                 let before = w.compute_seconds;
+                // detlint: allow(wall_clock, DESIGN.md §4 rule 3: islands time locally and the caller reduces deterministically; wall_s is a reporting column)
                 let t0 = Instant::now();
                 let mut losses = Vec::with_capacity(h);
                 w.run_inner_steps(rt, h, &mut losses)?;
@@ -564,5 +568,83 @@ mod tests {
         // island order at this scale with tasks claimed one at a time.
         let exec = ParallelIslands::new(3);
         check_island_order(&exec, 256);
+    }
+
+    #[test]
+    fn run_tasks_with_fewer_tasks_than_threads() {
+        // threads.min(n) caps the spawn count: 3 tasks on a "64-thread"
+        // pool must run each task exactly once and keep task order.
+        let ran = AtomicUsize::new(0);
+        let ran_ref = &ran;
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..3)
+            .map(|i| {
+                Box::new(move || {
+                    ran_ref.fetch_add(1, Ordering::SeqCst);
+                    i + 100
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        assert_eq!(run_tasks(64, tasks), vec![100, 101, 102]);
+        assert_eq!(ran.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn run_tasks_zero_and_one_thread_run_inline() {
+        // threads == 0 and threads == 1 both take the inline sequential
+        // path: tasks run on the calling thread, in task order.
+        for threads in [0usize, 1] {
+            let caller = std::thread::current().id();
+            let tasks: Vec<Box<dyn FnOnce() -> std::thread::ThreadId + Send>> = (0..4)
+                .map(|_| {
+                    Box::new(std::thread::current)
+                        as Box<dyn FnOnce() -> std::thread::ThreadId + Send>
+                })
+                .collect();
+            let ids = run_tasks(threads, tasks);
+            assert!(ids.iter().all(|id| *id == caller), "threads={threads} left the caller");
+        }
+    }
+
+    #[test]
+    fn run_tasks_panicking_task_propagates_and_pool_survives() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        // Defined poisoned-slot behavior: the panic unwinds out of
+        // run_tasks (via thread::scope's join on the pooled path,
+        // directly on the inline path); output slots are never read, so
+        // a partial result can never be observed.
+        for threads in [1usize, 4] {
+            let survivors = AtomicUsize::new(0);
+            let survivors_ref = &survivors;
+            let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..6)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 3 {
+                            panic!("task 3 exploded");
+                        }
+                        survivors_ref.fetch_add(1, Ordering::SeqCst);
+                        i
+                    }) as Box<dyn FnOnce() -> usize + Send>
+                })
+                .collect();
+            let result = catch_unwind(AssertUnwindSafe(|| run_tasks(threads, tasks)));
+            assert!(result.is_err(), "threads={threads}: panic must propagate");
+            // The pool is usable again afterwards — no global poisoning.
+            let again: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..4)
+                .map(|i| Box::new(move || i * 2) as Box<dyn FnOnce() -> usize + Send>)
+                .collect();
+            assert_eq!(run_tasks(threads, again), vec![0, 2, 4, 6]);
+        }
+    }
+
+    #[test]
+    fn run_tasks_inline_panic_carries_payload() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        // On the inline path the original panic payload is preserved
+        // verbatim (no thread-join indirection).
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            vec![Box::new(|| panic!("inline boom"))];
+        let err = catch_unwind(AssertUnwindSafe(|| run_tasks(1, tasks))).unwrap_err();
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("inline boom"), "payload was {msg:?}");
     }
 }

@@ -22,7 +22,7 @@ pub mod tensors;
 pub use manifest::{ArtifactSpec, Dtype, IoSpec, Manifest, Role};
 pub use tensors::Tensors;
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
@@ -81,23 +81,38 @@ impl Value {
     }
 }
 
-/// PJRT client handle asserted thread-safe.
-///
-/// SAFETY: the PJRT C API specifies that client operations (`Compile`,
-/// buffer transfers) may be issued from any thread; the `xla` wrapper
-/// only lacks the marker traits because it holds a raw pointer. All
-/// mutation of *our* state is separately guarded by mutexes.
+/// PJRT client handle asserted thread-safe (see the per-impl SAFETY
+/// arguments below — rule D5 requires one on every `unsafe impl`).
 struct SharedClient(xla::PjRtClient);
+// SAFETY: moving the owner across threads is sound because the wrapped
+// `PJRT_Client` is an opaque heap object whose address is stable — the
+// `xla` wrapper is `!Send` only because it holds that raw pointer, not
+// because the C object is thread-affine. The PJRT C API attaches no
+// thread-local state to the client (creation thread included), and this
+// crate owns the client uniquely inside `Runtime`, whose own mutable
+// state (compile `cache`, `exec_counts`) is entirely behind `Mutex`es.
 unsafe impl Send for SharedClient {}
+// SAFETY: `&SharedClient` is only ever used to issue PJRT client calls
+// (compilation, host↔device buffer transfers), which the PJRT C API
+// documents as callable concurrently from any thread — the library does
+// its own internal locking. No `&self` path mutates the wrapper itself,
+// so shared references never race on Rust-side state either.
 unsafe impl Sync for SharedClient {}
 
-/// Loaded-executable handle asserted thread-safe.
-///
-/// SAFETY: `PJRT_LoadedExecutable_Execute` is documented thread-safe —
-/// concurrent executions of one executable are the normal multi-replica
-/// serving path; the wrapper type is `!Send` only via its raw pointer.
+/// Loaded-executable handle asserted thread-safe (per-impl SAFETY
+/// arguments below).
 struct SharedExe(xla::PjRtLoadedExecutable);
+// SAFETY: as with `SharedClient`, the wrapper is `!Send` purely through
+// its raw pointer; the underlying `PJRT_LoadedExecutable` is an opaque
+// heap object with no thread-local ties, so handing the unique owner
+// (inside `Arc<Artifact>`) to another thread cannot violate any PJRT
+// invariant.
 unsafe impl Send for SharedExe {}
+// SAFETY: `PJRT_LoadedExecutable_Execute` is specified thread-safe —
+// concurrent executions of one loaded executable are the normal
+// multi-replica serving path, serialized internally by PJRT where
+// needed. Shared `&SharedExe` use in this crate only calls `execute`
+// and never mutates the wrapper, so `Sync` adds no Rust-side races.
 unsafe impl Sync for SharedExe {}
 
 /// A compiled artifact + its manifest spec.
@@ -280,8 +295,13 @@ impl Runtime {
     }
 
     /// Per-artifact execution counters (for perf accounting / tests).
-    pub fn exec_counts(&self) -> HashMap<String, u64> {
-        self.exec_counts.lock().unwrap().clone()
+    ///
+    /// Returned as a `BTreeMap` so probe/metrics reporting that iterates
+    /// the counters is iteration-order deterministic; the raw `HashMap`
+    /// never escapes the API.
+    pub fn exec_counts(&self) -> BTreeMap<String, u64> {
+        let counts = self.exec_counts.lock().unwrap();
+        counts.iter().map(|(k, &v)| (k.clone(), v)).collect()
     }
 
     // ---- high-level steps the coordinator uses --------------------------

@@ -15,6 +15,23 @@
 /// body, so results never depend on LANES.
 const LANES: usize = 8;
 
+/// Σ xs — the audited sequential f64 reduction (DESIGN.md §15, D4).
+///
+/// A plain left-to-right fold: summation order is part of the
+/// determinism contract, so every deterministic-zone f64 total (mixing
+/// row normalization, weighted RNG choice, consensus distances) routes
+/// through this one kernel instead of ad-hoc `Iterator::sum` calls
+/// that a refactor could silently reorder or parallelize.
+pub fn sum_f64(xs: &[f64]) -> f64 {
+    xs.iter().sum()
+}
+
+/// Σ (xs[i] as f64) — audited widening sum over f32 slices, same
+/// left-to-right order discipline as [`sum_f64`].
+pub fn sum_as_f64(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| x as f64).sum()
+}
+
 /// dot(a, b) in f64 accumulation (f32 inputs, stable for large vectors).
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
@@ -144,6 +161,26 @@ pub fn ppl(mean_nll: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn audited_sums_are_left_to_right() {
+        // Bitwise-equal to the sequential fold they replace.
+        let xs = [1.0e16, 1.0, -1.0e16, 7.5];
+        let mut acc = 0.0f64;
+        for x in xs {
+            acc += x;
+        }
+        assert_eq!(sum_f64(&xs), acc);
+
+        let fs = [0.1f32, 0.2, 0.3, -0.15];
+        let mut wide = 0.0f64;
+        for f in fs {
+            wide += f as f64;
+        }
+        assert_eq!(sum_as_f64(&fs), wide);
+        assert_eq!(sum_f64(&[]), 0.0);
+        assert_eq!(sum_as_f64(&[]), 0.0);
+    }
 
     #[test]
     fn cosine_of_self_is_one() {

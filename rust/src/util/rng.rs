@@ -100,7 +100,9 @@ impl Rng {
 
     /// Sample an index from unnormalized non-negative weights.
     pub fn weighted(&mut self, weights: &[f64]) -> usize {
-        let total: f64 = weights.iter().sum();
+        // The total scales the draw, so it must be the audited
+        // order-pinned sum (D4) — bitwise-identical fold.
+        let total = crate::util::math::sum_f64(weights);
         assert!(total > 0.0, "weighted(): all-zero weights");
         let mut x = self.f64() * total;
         for (i, w) in weights.iter().enumerate() {

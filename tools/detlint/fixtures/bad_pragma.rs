@@ -1,0 +1,14 @@
+// detlint-fixture-path: coordinator/fixture_bad_pragma.rs
+//! P0 fixture: pragma-looking comments that don't parse are themselves
+//! violations — an allow without a why is not an allow. Expected
+//! findings: exactly 2 × P0.
+
+pub fn no_reason() -> u64 {
+    // detlint: allow(map_iter)
+    7
+}
+
+pub fn unknown_rule() -> u64 {
+    // detlint: allow(D9, because I said so)
+    9
+}

@@ -1,0 +1,16 @@
+// detlint-fixture-path: coordinator/fixture_clean.rs
+//! Clean fixture: deterministic-zone code with nothing to flag —
+//! ordered containers, integer reductions, exact casts.
+
+use std::collections::BTreeMap;
+
+pub fn ordered_total(m: &BTreeMap<String, u64>) -> u64 {
+    m.values().sum()
+}
+
+pub fn int_mean(xs: &[u64]) -> u64 {
+    if xs.is_empty() {
+        return 0;
+    }
+    xs.iter().sum::<u64>() / xs.len() as u64
+}

@@ -1,0 +1,30 @@
+// detlint-fixture-path: coordinator/fixture_d1.rs
+//! D1 fixture: unordered HashMap/HashSet iteration in a deterministic
+//! zone. Expected findings: exactly 2 × D1 (the first two functions).
+
+use std::collections::HashMap;
+
+pub fn leaks_arbitrary_order(m: &HashMap<String, u64>) -> Vec<String> {
+    m.keys().cloned().collect()
+}
+
+pub fn for_loop_over_map(m: HashMap<String, u64>) -> Vec<u64> {
+    let mut out = Vec::new();
+    for (_k, v) in m {
+        out.push(v);
+    }
+    out
+}
+
+pub fn exempt_total_order_sink(m: &HashMap<String, u64>) -> Option<&String> {
+    m.keys().max_by(|a, b| a.cmp(b))
+}
+
+pub fn pragma_documented(m: &HashMap<String, u64>) -> u64 {
+    let mut acc = 0u64;
+    // detlint: allow(map_iter, commutative integer accumulation; order unobservable)
+    for v in m.values() {
+        acc += v;
+    }
+    acc
+}

@@ -1,0 +1,20 @@
+// detlint-fixture-path: coordinator/fixture_d2.rs
+//! D2 fixture: ambient time / process identity reads in a
+//! deterministic zone. Expected findings: exactly 2 × D2.
+
+use std::time::Instant;
+
+pub fn timestamped_decision() -> bool {
+    let t0 = Instant::now();
+    t0.elapsed().as_nanos() % 2 == 0
+}
+
+pub fn process_keyed_seed() -> u64 {
+    u64::from(std::process::id())
+}
+
+pub fn pragma_timing_column(acc: &mut f64) {
+    // detlint: allow(wall_clock, feeds a reporting-only timing column; never model state)
+    let t0 = Instant::now();
+    *acc += t0.elapsed().as_secs_f64();
+}

@@ -1,0 +1,15 @@
+// detlint-fixture-path: worker/fixture_d3.rs
+//! D3 fixture: ambient entropy is banned in *every* zone — this file
+//! sits in the wall-clock `worker` zone on purpose. Expected findings:
+//! exactly 4 × D3 (two imports, two expressions).
+
+use rand::Rng as _;
+use std::collections::hash_map::RandomState;
+
+pub fn ambient_entropy() -> u64 {
+    rand::random::<u64>()
+}
+
+pub fn hasher_entropy() -> RandomState {
+    RandomState::new()
+}

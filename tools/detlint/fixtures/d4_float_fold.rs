@@ -1,0 +1,30 @@
+// detlint-fixture-path: engine/fixture_d4.rs
+//! D4 fixture: float reductions outside the audited kernels
+//! (util/math.rs, coordinator/average.rs). Expected findings: exactly
+//! 3 × D4 (field-typed sum, turbofish sum, non-minmax fold).
+
+pub struct Report {
+    pub per_worker_s: Vec<f64>,
+}
+
+impl Report {
+    pub fn total(&self) -> f64 {
+        self.per_worker_s.iter().sum()
+    }
+}
+
+pub fn unaudited_float_total(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>()
+}
+
+pub fn running_product(xs: &[f64]) -> f64 {
+    xs.iter().fold(1.0, |acc, &x| acc * x)
+}
+
+pub fn exempt_max_fold(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0, |acc, &x| acc.max(x))
+}
+
+pub fn exempt_integer_total(ns: &[u64]) -> u64 {
+    ns.iter().sum()
+}

@@ -1,0 +1,22 @@
+// detlint-fixture-path: util/fixture_d5.rs
+//! D5 fixture: `unsafe` without a SAFETY justification — a global rule,
+//! checked in every zone (this file is zone-neutral). Expected
+//! findings: exactly 2 × D5.
+
+pub struct RawHandle(pub *mut u8);
+
+unsafe impl Send for RawHandle {}
+
+pub fn peek(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+// SAFETY: shared reads only — the pointee is never mutated through a
+// shared RawHandle, so concurrent &RawHandle use cannot race.
+unsafe impl Sync for RawHandle {}
+
+pub fn peek_documented(p: *const u8) -> u8 {
+    // SAFETY: fixture contract — the caller guarantees `p` is valid
+    // for reads and properly aligned.
+    unsafe { *p }
+}

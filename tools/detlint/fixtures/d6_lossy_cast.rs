@@ -1,0 +1,24 @@
+// detlint-fixture-path: comm/fixture_d6.rs
+//! D6 fixture: lossy float casts in wire/billing code outside
+//! comm/codec.rs. Expected findings: exactly 2 × D6.
+
+pub fn billed_bytes(elems: usize, density: f64) -> u64 {
+    (elems as f64 * density) as u64
+}
+
+pub fn narrowed(x: f64) -> f32 {
+    x as f32
+}
+
+pub fn exempt_integer_widen(n: u32) -> u64 {
+    u64::from(n)
+}
+
+pub fn exempt_index(n: usize) -> u64 {
+    n as u64
+}
+
+pub fn pragma_byte_ceiling(bits: usize) -> u64 {
+    // detlint: allow(lossy_cast, exact below 2^53 bits; ceil of n/8 is integral)
+    ((bits as f64) / 8.0).ceil() as u64
+}

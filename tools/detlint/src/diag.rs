@@ -1,0 +1,116 @@
+//! Diagnostic records and their human / JSON renderings.
+
+/// One finding. Sorts by (file, line, column, rule) so output order is
+/// deterministic — the linter holds itself to its own contract.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    /// Path relative to the scanned root (fixture-path override applied).
+    pub file: String,
+    /// 1-based line of the offending expression/item.
+    pub line: usize,
+    /// 0-based UTF-8 column.
+    pub column: usize,
+    /// Rule id: "D1".."D6", or "P0" for a malformed pragma.
+    pub rule: &'static str,
+    /// Stable rule name usable in `detlint: allow(<name>, ...)`.
+    pub name: &'static str,
+    /// Zone label of the file ("deterministic" / "wall-clock" / "neutral").
+    pub zone: &'static str,
+    /// What went wrong and what the fix is.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// `file:line:col [D1 map_iter] (deterministic) message` — one line,
+    /// grep- and editor-jump-friendly.
+    pub fn render_human(&self) -> String {
+        format!(
+            "{}:{}:{} [{} {}] ({}) {}",
+            self.file,
+            self.line,
+            self.column + 1,
+            self.rule,
+            self.name,
+            self.zone,
+            self.message
+        )
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a findings report as a stable JSON document (sorted input
+/// assumed). Schema: `{ "root", "files_scanned", "violations": [...],
+/// "notes": [...] }`.
+pub fn render_json(
+    root: &str,
+    files_scanned: usize,
+    diagnostics: &[Diagnostic],
+    notes: &[String],
+) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"root\": \"{}\",\n", json_escape(root)));
+    out.push_str(&format!("  \"files_scanned\": {files_scanned},\n"));
+    out.push_str(&format!("  \"violation_count\": {},\n", diagnostics.len()));
+    out.push_str("  \"violations\": [\n");
+    for (i, d) in diagnostics.iter().enumerate() {
+        let comma = if i + 1 < diagnostics.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"file\": \"{}\", \"line\": {}, \"column\": {}, \"rule\": \"{}\", \"name\": \"{}\", \"zone\": \"{}\", \"message\": \"{}\"}}{comma}\n",
+            json_escape(&d.file),
+            d.line,
+            d.column + 1,
+            d.rule,
+            d.name,
+            d.zone,
+            json_escape(&d.message),
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"notes\": [\n");
+    for (i, n) in notes.iter().enumerate() {
+        let comma = if i + 1 < notes.len() { "," } else { "" };
+        out.push_str(&format!("    \"{}\"{comma}\n", json_escape(n)));
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes_and_renders() {
+        let d = Diagnostic {
+            file: "a/b.rs".into(),
+            line: 3,
+            column: 4,
+            rule: "D1",
+            name: "map_iter",
+            zone: "deterministic",
+            message: "say \"no\"".into(),
+        };
+        let j = render_json("rust/src", 1, &[d.clone()], &[]);
+        assert!(j.contains("\"rule\": \"D1\""));
+        assert!(j.contains("say \\\"no\\\""));
+        assert!(d.render_human().starts_with("a/b.rs:3:5 [D1 map_iter]"));
+    }
+}

@@ -1,0 +1,94 @@
+//! detlint — static enforcement of the DESIGN.md §15 determinism
+//! contract over `rust/src`.
+//!
+//! The contract (informally: "same config + seed ⇒ bitwise-identical
+//! trace") is only as strong as its weakest source line. detlint walks
+//! the crate with `syn` and flags the constructs that historically
+//! break bitwise reproducibility:
+//!
+//! - **D1** `map_iter` — HashMap/HashSet iteration in deterministic
+//!   zones (unordered order escapes into state).
+//! - **D2** `wall_clock` — `Instant::now` / `SystemTime` / process /
+//!   thread identity reads in deterministic zones.
+//! - **D3** `rng_entry` — any entropy source other than the seeded
+//!   `util::rng::Rng` streams (global rule, all zones).
+//! - **D4** `float_fold` — float `sum`/`fold` reductions outside the
+//!   audited kernels (summation order is part of the contract).
+//! - **D5** `safety_comment` — `unsafe` without `// SAFETY:` (global).
+//! - **D6** `lossy_cast` — lossy float casts in wire/billing code
+//!   outside `comm/codec.rs` (byte accounting must be exact).
+//!
+//! False positives are answered in-place:
+//! `// detlint: allow(<rule>, <reason>)` — the reason is mandatory.
+
+pub mod diag;
+pub mod pragma;
+pub mod rules;
+pub mod zones;
+
+pub use diag::{render_json, Diagnostic};
+pub use rules::{analyze_source, FileReport};
+pub use zones::{zone_of, Zone};
+
+use std::path::{Path, PathBuf};
+
+/// Whole-tree analysis result.
+#[derive(Debug, Default)]
+pub struct Analysis {
+    /// All violations across the tree, sorted by (file, line, rule).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Non-fatal notes (unused pragmas).
+    pub notes: Vec<String>,
+    /// Number of `.rs` files parsed.
+    pub files_scanned: usize,
+}
+
+impl Analysis {
+    /// Nonzero-exit condition.
+    pub fn has_violations(&self) -> bool {
+        !self.diagnostics.is_empty()
+    }
+}
+
+/// Collect `.rs` files under `root`, sorted, so runs are reproducible.
+fn collect_rs_files(root: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let rd = std::fs::read_dir(&dir)
+            .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        for entry in rd {
+            let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Analyze every `.rs` file under `root` (typically `rust/src`).
+pub fn analyze_root(root: &Path) -> Result<Analysis, String> {
+    let files = collect_rs_files(root)?;
+    let mut analysis = Analysis::default();
+    for path in files {
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let report = analyze_source(&rel, &src)?;
+        analysis.diagnostics.extend(report.diagnostics);
+        analysis.notes.extend(report.notes);
+        analysis.files_scanned += 1;
+    }
+    analysis.diagnostics.sort();
+    analysis.notes.sort();
+    Ok(analysis)
+}

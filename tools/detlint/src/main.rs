@@ -1,0 +1,98 @@
+//! CLI: `detlint [ROOT] [--json PATH]`
+//!
+//! ROOT defaults to the first of `rust/src`, `../../rust/src`, `src`
+//! that exists (repo root, tools/detlint, and rust/ working dirs all
+//! work). Exit codes: 0 clean, 1 violations, 2 usage/IO/parse error.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn default_root() -> Option<PathBuf> {
+    ["rust/src", "../../rust/src", "src"]
+        .iter()
+        .map(PathBuf::from)
+        .find(|p| p.is_dir())
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut json_out: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_out = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("detlint: --json requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: detlint [ROOT] [--json PATH]");
+                println!("  checks the DESIGN.md §15 determinism contract over ROOT");
+                return ExitCode::SUCCESS;
+            }
+            other if root.is_none() && !other.starts_with('-') => {
+                root = Some(PathBuf::from(other));
+            }
+            other => {
+                eprintln!("detlint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let Some(root) = root.or_else(default_root) else {
+        eprintln!("detlint: no ROOT given and no default (rust/src) found");
+        return ExitCode::from(2);
+    };
+
+    let analysis = match detlint::analyze_root(&root) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("detlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for d in &analysis.diagnostics {
+        println!("{}", d.render_human());
+    }
+    for n in &analysis.notes {
+        println!("note: {n}");
+    }
+    println!(
+        "detlint: {} file(s) scanned under {}, {} violation(s), {} note(s)",
+        analysis.files_scanned,
+        root.display(),
+        analysis.diagnostics.len(),
+        analysis.notes.len()
+    );
+
+    if let Some(path) = json_out {
+        let doc = detlint::render_json(
+            &root.display().to_string(),
+            analysis.files_scanned,
+            &analysis.diagnostics,
+            &analysis.notes,
+        );
+        if let Err(e) = write_json(&path, &doc) {
+            eprintln!("detlint: write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    if analysis.has_violations() {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn write_json(path: &Path, doc: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, doc)
+}

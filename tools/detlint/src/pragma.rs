@@ -1,0 +1,191 @@
+//! `// detlint: allow(<rule>, <reason>)` pragma parsing.
+//!
+//! A pragma suppresses diagnostics of one rule on the line it trails,
+//! or — when it sits on its own line — on the first code line below it
+//! (scanning across a contiguous run of comment/attribute lines, so a
+//! pragma can sit above a doc comment or `#[...]` block). The reason is
+//! mandatory: an allow without a why is itself a violation (P0).
+
+/// One well-formed pragma found in a file.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    pub line: usize,
+    /// Canonical rule id ("D1".."D6") the pragma suppresses.
+    pub rule: &'static str,
+    /// Free-text justification (non-empty by construction).
+    pub reason: String,
+    /// Set once a diagnostic was suppressed by this pragma.
+    pub used: bool,
+}
+
+/// A pragma-looking comment that doesn't parse: missing reason, unknown
+/// rule name, or no closing paren.
+#[derive(Clone, Debug)]
+pub struct Malformed {
+    pub line: usize,
+    pub why: String,
+}
+
+/// Map a rule spelling (id or stable name) to its canonical id.
+pub fn normalize_rule(s: &str) -> Option<&'static str> {
+    match s.trim() {
+        "D1" | "map_iter" => Some("D1"),
+        "D2" | "wall_clock" => Some("D2"),
+        "D3" | "rng_entry" => Some("D3"),
+        "D4" | "float_fold" => Some("D4"),
+        "D5" | "safety_comment" => Some("D5"),
+        "D6" | "lossy_cast" => Some("D6"),
+        _ => None,
+    }
+}
+
+/// Canonical rule id → stable name (for diagnostics).
+pub fn rule_name(rule: &'static str) -> &'static str {
+    match rule {
+        "D1" => "map_iter",
+        "D2" => "wall_clock",
+        "D3" => "rng_entry",
+        "D4" => "float_fold",
+        "D5" => "safety_comment",
+        "D6" => "lossy_cast",
+        _ => "pragma",
+    }
+}
+
+const MARKER: &str = "detlint: allow(";
+
+/// Scan raw source lines for pragmas. Returns (parsed, malformed).
+pub fn collect(lines: &[&str]) -> (Vec<Pragma>, Vec<Malformed>) {
+    let mut pragmas = Vec::new();
+    let mut bad = Vec::new();
+    for (idx, raw) in lines.iter().enumerate() {
+        let line_no = idx + 1;
+        let Some(pos) = raw.find(MARKER) else {
+            // Catch near-miss spellings so they don't silently no-op.
+            if raw.contains("detlint:") && raw.contains("allow") {
+                bad.push(Malformed {
+                    line: line_no,
+                    why: "pragma syntax is `// detlint: allow(<rule>, <reason>)`".into(),
+                });
+            }
+            continue;
+        };
+        let body = &raw[pos + MARKER.len()..];
+        let Some(close) = body.rfind(')') else {
+            bad.push(Malformed {
+                line: line_no,
+                why: "unterminated pragma: missing `)`".into(),
+            });
+            continue;
+        };
+        let inner = &body[..close];
+        let Some((rule_txt, reason)) = inner.split_once(',') else {
+            bad.push(Malformed {
+                line: line_no,
+                why: "pragma needs a reason: `allow(<rule>, <reason>)`".into(),
+            });
+            continue;
+        };
+        let Some(rule) = normalize_rule(rule_txt) else {
+            bad.push(Malformed {
+                line: line_no,
+                why: format!(
+                    "unknown rule `{}` (use D1-D6 or map_iter/wall_clock/rng_entry/float_fold/safety_comment/lossy_cast)",
+                    rule_txt.trim()
+                ),
+            });
+            continue;
+        };
+        let reason = reason.trim().to_string();
+        if reason.is_empty() {
+            bad.push(Malformed {
+                line: line_no,
+                why: "pragma reason must be non-empty".into(),
+            });
+            continue;
+        }
+        pragmas.push(Pragma {
+            line: line_no,
+            rule,
+            reason,
+            used: false,
+        });
+    }
+    (pragmas, bad)
+}
+
+/// True when `line` (1-based) is a comment or attribute line — the kind
+/// a pragma is allowed to "see through" when scanning downward/upward.
+pub fn is_comment_or_attr(lines: &[&str], line: usize) -> bool {
+    if line == 0 || line > lines.len() {
+        return false;
+    }
+    let t = lines[line - 1].trim_start();
+    t.starts_with("//") || t.starts_with("#[") || t.starts_with("#!") || t.is_empty()
+}
+
+/// Does a pragma at `pragma_line` cover a diagnostic at `diag_line`?
+///
+/// Coverage: same line (trailing pragma), or the pragma sits above with
+/// only comment/attribute/blank lines in between.
+pub fn covers(lines: &[&str], pragma_line: usize, diag_line: usize) -> bool {
+    if pragma_line == diag_line {
+        return true;
+    }
+    if pragma_line > diag_line {
+        return false;
+    }
+    ((pragma_line + 1)..diag_line).all(|l| is_comment_or_attr(lines, l))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_well_formed_pragma() {
+        let src = ["let x = 1;", "// detlint: allow(map_iter, commutative sum)"];
+        let (ps, bad) = collect(&src);
+        assert_eq!(ps.len(), 1);
+        assert!(bad.is_empty());
+        assert_eq!(ps[0].rule, "D1");
+        assert_eq!(ps[0].reason, "commutative sum");
+        assert_eq!(ps[0].line, 2);
+    }
+
+    #[test]
+    fn reason_is_mandatory_and_rule_must_exist() {
+        let src = [
+            "// detlint: allow(map_iter)",
+            "// detlint: allow(D9, because)",
+            "// detlint: allow(wall_clock,   )",
+        ];
+        let (ps, bad) = collect(&src);
+        assert!(ps.is_empty());
+        assert_eq!(bad.len(), 3);
+    }
+
+    #[test]
+    fn coverage_sees_through_comment_blocks() {
+        let src = [
+            "// detlint: allow(D4, pinned by golden trace)",
+            "// an unrelated comment",
+            "#[inline]",
+            "let s: f32 = xs.iter().sum();",
+        ];
+        assert!(covers(&src, 1, 4));
+        assert!(covers(&src, 1, 1));
+        assert!(!covers(&src, 4, 1));
+    }
+
+    #[test]
+    fn coverage_stops_at_code() {
+        let src = [
+            "// detlint: allow(D1, benign)",
+            "let a = 1;",
+            "let b: Vec<_> = m.keys().collect();",
+        ];
+        assert!(!covers(&src, 1, 3));
+    }
+}

@@ -1,0 +1,650 @@
+//! The D1–D6 rule visitors.
+//!
+//! Strategy: parse with `syn` (feature `span-locations` gives real
+//! line/column spans), walk the AST, and — because `syn` discards
+//! comments — cross-reference raw source lines for `// SAFETY:` blocks
+//! and `// detlint: allow(...)` pragmas. Heuristics are deliberately
+//! conservative-and-textual (receiver/statement source text) rather
+//! than type-resolved: detlint is a contract tripwire, not a compiler,
+//! and a false positive is answered with a pragma carrying a reason.
+
+use crate::diag::Diagnostic;
+use crate::pragma::{self, rule_name};
+use crate::zones::{zone_of, Zone};
+use proc_macro2::Span;
+use std::collections::BTreeSet;
+use syn::spanned::Spanned;
+use syn::visit::{self, Visit};
+
+/// Per-file analysis result.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    /// Violations (post pragma suppression), sorted.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Non-fatal notes (unused pragmas).
+    pub notes: Vec<String>,
+}
+
+/// Fixture files can pin their pseudo-location with a
+/// `// detlint-fixture-path: <rel path>` header so the corpus exercises
+/// zone/path scoping without living inside `rust/src`.
+const FIXTURE_PATH_MARKER: &str = "detlint-fixture-path:";
+
+/// Analyze one file's source text. `rel_path` is relative to the
+/// scanned root (used for zone + path-scoped rules unless the fixture
+/// header overrides it).
+pub fn analyze_source(rel_path: &str, src: &str) -> Result<FileReport, String> {
+    let file: syn::File = syn::parse_file(src)
+        .map_err(|e| format!("{rel_path}: parse error: {e}"))?;
+    let lines: Vec<&str> = src.lines().collect();
+
+    let effective = lines
+        .iter()
+        .take(10)
+        .find_map(|l| {
+            l.find(FIXTURE_PATH_MARKER)
+                .map(|p| l[p + FIXTURE_PATH_MARKER.len()..].trim().to_string())
+        })
+        .unwrap_or_else(|| rel_path.replace('\\', "/"));
+    let zone = zone_of(&effective);
+
+    // File-level declarations (struct fields, consts, statics) feed the
+    // ident→type heuristics everywhere in the file; fn-local decls are
+    // pushed/popped per function by the rule visitor.
+    let mut file_decls = DeclCollector::new(&lines);
+    file_decls.visit_file(&file);
+
+    let mut v = RuleVisitor {
+        lines: &lines,
+        effective_path: effective.clone(),
+        zone,
+        maps: file_decls.maps,
+        floats: file_decls.floats,
+        stmt_stack: Vec::new(),
+        raw: Vec::new(),
+    };
+    v.visit_file(&file);
+    let mut raw = v.raw;
+
+    // Pragmas: parse, suppress, flag malformed, note unused.
+    let (mut pragmas, malformed) = pragma::collect(&lines);
+    for m in malformed {
+        raw.push(RawDiag {
+            line: m.line,
+            column: 0,
+            rule: "P0",
+            message: m.why,
+        });
+    }
+    let mut report = FileReport::default();
+    'diag: for d in raw {
+        if d.rule != "P0" {
+            for p in pragmas.iter_mut() {
+                if p.rule == d.rule && pragma::covers(&lines, p.line, d.line) {
+                    p.used = true;
+                    continue 'diag;
+                }
+            }
+        }
+        report.diagnostics.push(Diagnostic {
+            file: effective.clone(),
+            line: d.line,
+            column: d.column,
+            rule: d.rule,
+            name: rule_name(d.rule),
+            zone: zone.label(),
+            message: d.message,
+        });
+    }
+    for p in pragmas.iter().filter(|p| !p.used) {
+        report.notes.push(format!(
+            "{}:{}: unused pragma allow({}, {}) — nothing to suppress here",
+            effective, p.line, p.rule, p.reason
+        ));
+    }
+    report.diagnostics.sort();
+    Ok(report)
+}
+
+struct RawDiag {
+    line: usize,
+    column: usize,
+    rule: &'static str,
+    message: String,
+}
+
+/// Slice the raw source text covered by a span (columns are char
+/// offsets per proc-macro2's span-locations contract).
+fn span_text(lines: &[&str], span: Span) -> String {
+    let (s, e) = (span.start(), span.end());
+    if s.line == 0 || s.line > lines.len() || e.line > lines.len() {
+        return String::new();
+    }
+    let char_slice = |l: &str, from: usize, to: Option<usize>| -> String {
+        let it = l.chars().skip(from);
+        match to {
+            Some(t) => it.take(t.saturating_sub(from)).collect(),
+            None => it.collect(),
+        }
+    };
+    if s.line == e.line {
+        return char_slice(lines[s.line - 1], s.column, Some(e.column));
+    }
+    let mut out = char_slice(lines[s.line - 1], s.column, None);
+    for l in &lines[s.line..e.line - 1] {
+        out.push('\n');
+        out.push_str(l);
+    }
+    out.push('\n');
+    out.push_str(&char_slice(lines[e.line - 1], 0, Some(e.column)));
+    out
+}
+
+/// Word-boundary search: does `text` mention `ident` as a whole word?
+fn mentions_ident(text: &str, ident: &str) -> bool {
+    let bytes = text.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = text[start..].find(ident) {
+        let at = start + pos;
+        let before_ok = at == 0 || {
+            let c = bytes[at - 1] as char;
+            !(c.is_ascii_alphanumeric() || c == '_')
+        };
+        let after = at + ident.len();
+        let after_ok = after >= bytes.len() || {
+            let c = bytes[after] as char;
+            !(c.is_ascii_alphanumeric() || c == '_')
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+/// Floating-point literal detector over a source snippet: a digit
+/// immediately followed by `.` followed by a digit (so `1.0` matches
+/// but `xs.iter` and `8` don't), or an f32/f64 suffix.
+fn has_float_literal(text: &str) -> bool {
+    let b = text.as_bytes();
+    for i in 1..b.len().saturating_sub(1) {
+        if b[i] == b'.' && b[i - 1].is_ascii_digit() && b[i + 1].is_ascii_digit() {
+            return true;
+        }
+    }
+    text.contains("f32") || text.contains("f64")
+}
+
+/// Attribute-based skip: test modules/functions and loom-only code are
+/// out of contract scope. Doc comments (which syn models as `#[doc]`
+/// attributes) never trigger the skip.
+fn skip_attrs(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        if a.path().is_ident("doc") {
+            return false;
+        }
+        let t = quote::ToTokens::to_token_stream(a).to_string();
+        t.contains("test") || t.contains("loom")
+    })
+}
+
+/// Collects in-scope idents whose declared type (or initializer) marks
+/// them as hash containers or float containers. Textual on purpose.
+struct DeclCollector<'s> {
+    lines: &'s [&'s str],
+    maps: BTreeSet<String>,
+    floats: BTreeSet<String>,
+}
+
+impl<'s> DeclCollector<'s> {
+    fn new(lines: &'s [&'s str]) -> Self {
+        DeclCollector {
+            lines,
+            maps: BTreeSet::new(),
+            floats: BTreeSet::new(),
+        }
+    }
+
+    fn record(&mut self, ident: &str, ty_text: &str) {
+        if ty_text.contains("HashMap") || ty_text.contains("HashSet") {
+            self.maps.insert(ident.to_string());
+        }
+        // Float *containers* only (slices/vecs/arrays) — a scalar f64
+        // local doesn't make `x.iter()` meaningful.
+        if (ty_text.contains("f32") || ty_text.contains("f64"))
+            && (ty_text.contains("Vec") || ty_text.contains('['))
+        {
+            self.floats.insert(ident.to_string());
+        }
+    }
+
+    fn pat_idents(pat: &syn::Pat, out: &mut Vec<String>) {
+        match pat {
+            syn::Pat::Ident(p) => out.push(p.ident.to_string()),
+            syn::Pat::Tuple(t) => {
+                for e in &t.elems {
+                    Self::pat_idents(e, out);
+                }
+            }
+            syn::Pat::Reference(r) => Self::pat_idents(&r.pat, out),
+            syn::Pat::Type(t) => Self::pat_idents(&t.pat, out),
+            _ => {}
+        }
+    }
+}
+
+impl<'ast, 's> Visit<'ast> for DeclCollector<'s> {
+    fn visit_local(&mut self, node: &'ast syn::Local) {
+        let mut idents = Vec::new();
+        Self::pat_idents(&node.pat, &mut idents);
+        // Type source: explicit annotation if present, else the
+        // initializer text (catches `let m = HashMap::new()`).
+        let ty_text = match &node.pat {
+            syn::Pat::Type(t) => span_text(self.lines, t.ty.span()),
+            _ => node
+                .init
+                .as_ref()
+                .map(|i| span_text(self.lines, i.expr.span()))
+                .unwrap_or_default(),
+        };
+        for id in idents {
+            self.record(&id, &ty_text);
+        }
+        visit::visit_local(self, node);
+    }
+
+    fn visit_pat_type(&mut self, node: &'ast syn::PatType) {
+        // Fn params and closure params with annotations.
+        let mut idents = Vec::new();
+        Self::pat_idents(&node.pat, &mut idents);
+        let ty_text = span_text(self.lines, node.ty.span());
+        for id in idents {
+            self.record(&id, &ty_text);
+        }
+        visit::visit_pat_type(self, node);
+    }
+
+    fn visit_field(&mut self, node: &'ast syn::Field) {
+        if let Some(id) = &node.ident {
+            let ty_text = span_text(self.lines, node.ty.span());
+            self.record(&id.to_string(), &ty_text);
+        }
+        visit::visit_field(self, node);
+    }
+}
+
+const MAP_ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "retain",
+];
+
+/// Statement-level sinks that impose a total order (or reduce to an
+/// order-free scalar) on a map iteration, exempting it from D1.
+const ORDER_SINKS: &[&str] = &["sort", "max_by", "min_by", "BTreeMap", "BTreeSet", ".count()"];
+
+const D2_PATTERNS: &[&str] = &[
+    "Instant::now",
+    "SystemTime",
+    "process::id",
+    "thread::current",
+    "ThreadId",
+];
+
+const INT_TYPES: &[&str] = &[
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+];
+
+struct RuleVisitor<'s> {
+    lines: &'s [&'s str],
+    effective_path: String,
+    zone: Zone,
+    maps: BTreeSet<String>,
+    floats: BTreeSet<String>,
+    stmt_stack: Vec<Span>,
+    raw: Vec<RawDiag>,
+}
+
+impl<'s> RuleVisitor<'s> {
+    fn emit(&mut self, span: Span, rule: &'static str, message: String) {
+        self.raw.push(RawDiag {
+            line: span.start().line,
+            column: span.start().column,
+            rule,
+            message,
+        });
+    }
+
+    /// Anchor span for expression-level rules: the innermost enclosing
+    /// statement's start, so a pragma placed above a (possibly
+    /// multi-line) statement covers every finding inside it.
+    fn anchor(&self, fallback: Span) -> Span {
+        self.stmt_stack.last().copied().unwrap_or(fallback)
+    }
+
+    /// Source text of the innermost enclosing statement.
+    fn stmt_text(&self) -> String {
+        self.stmt_stack
+            .last()
+            .map(|s| span_text(self.lines, *s))
+            .unwrap_or_default()
+    }
+
+    fn stmt_has_order_sink(&self) -> bool {
+        let t = self.stmt_text();
+        ORDER_SINKS.iter().any(|s| t.contains(s))
+    }
+
+    fn is_map_expr(&self, text: &str) -> bool {
+        text.contains("HashMap::")
+            || text.contains("HashSet::")
+            || self.maps.iter().any(|m| mentions_ident(text, m))
+    }
+
+    /// D4 audit list: the two files allowed to own float reductions.
+    fn is_audited_float_file(&self) -> bool {
+        self.effective_path == "util/math.rs" || self.effective_path == "coordinator/average.rs"
+    }
+
+    /// D3 exemption: the seeded RNG implementation itself.
+    fn is_rng_file(&self) -> bool {
+        self.effective_path == "util/rng.rs"
+    }
+
+    /// D6 scope: wire/billing code = `comm/**` except the audited codec.
+    fn in_wire_scope(&self) -> bool {
+        self.effective_path.starts_with("comm/") && !self.effective_path.ends_with("codec.rs")
+    }
+
+    /// A contiguous run of `//` comment lines (attributes allowed in
+    /// between) directly above `line` containing "SAFETY:", or the
+    /// declaration line itself carrying it.
+    fn has_safety_comment(&self, line: usize) -> bool {
+        if line == 0 || line > self.lines.len() {
+            return false;
+        }
+        if self.lines[line - 1].contains("SAFETY:") {
+            return true;
+        }
+        let mut l = line - 1; // 1-based line above the decl
+        while l >= 1 {
+            let t = self.lines[l - 1].trim_start();
+            if t.starts_with("//") {
+                if t.contains("SAFETY:") {
+                    return true;
+                }
+                l -= 1;
+            } else if t.starts_with("#[") || t.starts_with("#!") {
+                l -= 1; // see through attributes between comment and item
+            } else {
+                return false;
+            }
+        }
+        false
+    }
+
+}
+
+impl<'ast, 's> Visit<'ast> for RuleVisitor<'s> {
+    fn visit_stmt(&mut self, node: &'ast syn::Stmt) {
+        self.stmt_stack.push(node.span());
+        visit::visit_stmt(self, node);
+        self.stmt_stack.pop();
+    }
+
+    fn visit_item_mod(&mut self, node: &'ast syn::ItemMod) {
+        if skip_attrs(&node.attrs) {
+            return;
+        }
+        visit::visit_item_mod(self, node);
+    }
+
+    fn visit_item_fn(&mut self, node: &'ast syn::ItemFn) {
+        if skip_attrs(&node.attrs) {
+            return;
+        }
+        // Function-scoped decls (params, lets) extend the file-level
+        // ident sets for the duration of this body, then roll back.
+        let saved_maps = self.maps.clone();
+        let saved_floats = self.floats.clone();
+        let mut dc = DeclCollector::new(self.lines);
+        dc.visit_item_fn(node);
+        self.maps.extend(dc.maps);
+        self.floats.extend(dc.floats);
+        visit::visit_item_fn(self, node);
+        self.maps = saved_maps;
+        self.floats = saved_floats;
+    }
+
+    fn visit_impl_item_fn(&mut self, node: &'ast syn::ImplItemFn) {
+        if skip_attrs(&node.attrs) {
+            return;
+        }
+        let saved_maps = self.maps.clone();
+        let saved_floats = self.floats.clone();
+        let mut dc = DeclCollector::new(self.lines);
+        dc.visit_impl_item_fn(node);
+        self.maps.extend(dc.maps);
+        self.floats.extend(dc.floats);
+        visit::visit_impl_item_fn(self, node);
+        self.maps = saved_maps;
+        self.floats = saved_floats;
+    }
+
+    fn visit_item_impl(&mut self, node: &'ast syn::ItemImpl) {
+        if skip_attrs(&node.attrs) {
+            return;
+        }
+        // D5 half two: `unsafe impl` needs a SAFETY comment.
+        if let Some(tok) = &node.unsafety {
+            let line = tok.span.start().line;
+            if !self.has_safety_comment(line) {
+                self.emit(
+                    tok.span,
+                    "D5",
+                    "`unsafe impl` without an immediately-preceding `// SAFETY:` justification"
+                        .to_string(),
+                );
+            }
+        }
+        visit::visit_item_impl(self, node);
+    }
+
+    fn visit_expr_unsafe(&mut self, node: &'ast syn::ExprUnsafe) {
+        // D5 half one: every unsafe block carries its proof obligation.
+        let line = node.unsafe_token.span.start().line;
+        if !self.has_safety_comment(line) {
+            self.emit(
+                node.unsafe_token.span,
+                "D5",
+                "`unsafe` block without an immediately-preceding `// SAFETY:` comment".to_string(),
+            );
+        }
+        visit::visit_expr_unsafe(self, node);
+    }
+
+    fn visit_expr_method_call(&mut self, node: &'ast syn::ExprMethodCall) {
+        let method = node.method.to_string();
+        let recv = span_text(self.lines, node.receiver.span());
+
+        // D1: unordered hash iteration in a deterministic zone.
+        if self.zone.is_deterministic()
+            && MAP_ITER_METHODS.contains(&method.as_str())
+            && self.is_map_expr(&recv)
+            && !self.stmt_has_order_sink()
+        {
+            self.emit(
+                self.anchor(node.method.span()),
+                "D1",
+                format!(
+                    "HashMap/HashSet `.{method}()` in a deterministic zone: iteration order is \
+                     unordered; use BTreeMap/BTreeSet, impose a total order (sort/max_by), or \
+                     pragma with a commutativity argument"
+                ),
+            );
+        }
+
+        // D4: float reductions outside the audited kernels.
+        if self.zone.is_deterministic() && !self.is_audited_float_file() {
+            if method == "sum" || method == "product" {
+                let is_float = match &node.turbofish {
+                    Some(tf) => {
+                        let t = span_text(self.lines, tf.span());
+                        t.contains("f32") || t.contains("f64")
+                    }
+                    None => {
+                        let stmt = self.stmt_text();
+                        stmt.contains("f32")
+                            || stmt.contains("f64")
+                            || self.floats.iter().any(|f| mentions_ident(&recv, f))
+                    }
+                };
+                if is_float {
+                    self.emit(
+                        self.anchor(node.method.span()),
+                        "D4",
+                        format!(
+                            "float `.{method}()` reduction outside util/math.rs / \
+                             coordinator/average.rs: route through the audited kernels \
+                             (math::sum_f64 / sum_as_f64) so summation order stays pinned"
+                        ),
+                    );
+                }
+            } else if method == "fold" && node.args.len() == 2 {
+                let mut args = node.args.iter();
+                let init = span_text(self.lines, args.next().unwrap().span());
+                let body = span_text(self.lines, args.next().unwrap().span());
+                let float_init = has_float_literal(&init) || init.contains("INFINITY");
+                let min_max = body.contains(".max(")
+                    || body.contains(".min(")
+                    || body.contains("::max")
+                    || body.contains("::min");
+                if float_init && !min_max {
+                    self.emit(
+                        self.anchor(node.method.span()),
+                        "D4",
+                        "float `.fold()` reduction outside the audited kernels: only \
+                         order-insensitive min/max folds are exempt"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+
+        visit::visit_expr_method_call(self, node);
+    }
+
+    fn visit_expr_for_loop(&mut self, node: &'ast syn::ExprForLoop) {
+        // D1, for-loop form: `for (k, v) in map { ... }`.
+        if self.zone.is_deterministic() {
+            let it = span_text(self.lines, node.expr.span());
+            if self.is_map_expr(&it) && !self.stmt_has_order_sink() {
+                self.emit(
+                    self.anchor(node.for_token.span),
+                    "D1",
+                    "for-loop over a HashMap/HashSet in a deterministic zone: iteration order \
+                     is unordered; sort first or pragma with a commutativity argument"
+                        .to_string(),
+                );
+            }
+        }
+        visit::visit_expr_for_loop(self, node);
+    }
+
+    fn visit_expr_path(&mut self, node: &'ast syn::ExprPath) {
+        let p = span_text(self.lines, node.span());
+
+        // D2: ambient time / process / thread identity in det zones.
+        if self.zone.is_deterministic() {
+            if let Some(pat) = D2_PATTERNS.iter().find(|pat| p.contains(*pat)) {
+                self.emit(
+                    self.anchor(node.span()),
+                    "D2",
+                    format!(
+                        "`{pat}` read in a deterministic zone: wall-clock/ambient identity must \
+                         not influence deterministic state (move to a wall-clock zone or pragma \
+                         with proof it only feeds timing columns)"
+                    ),
+                );
+            }
+        }
+
+        // D3 (global): the only entropy source is util::rng::Rng.
+        if !self.is_rng_file()
+            && (p.starts_with("rand::") || p.contains("RandomState") || p.contains("DefaultHasher"))
+        {
+            self.emit(
+                self.anchor(node.span()),
+                "D3",
+                "ambient RNG/hasher entry point: all randomness must derive from the seeded \
+                 util::rng::Rng streams"
+                    .to_string(),
+            );
+        }
+
+        visit::visit_expr_path(self, node);
+    }
+
+    fn visit_item_use(&mut self, node: &'ast syn::ItemUse) {
+        if skip_attrs(&node.attrs) {
+            return;
+        }
+        // D3 on imports, so `use rand::Rng` is caught even before use.
+        let t = span_text(self.lines, node.span());
+        if !self.is_rng_file()
+            && (t.contains(" rand::")
+                || t.contains(" rand;")
+                || t.contains("RandomState")
+                || t.contains("DefaultHasher"))
+        {
+            self.emit(
+                node.span(),
+                "D3",
+                "import of an ambient RNG/hasher: all randomness must derive from the seeded \
+                 util::rng::Rng streams"
+                    .to_string(),
+            );
+        }
+        visit::visit_item_use(self, node);
+    }
+
+    fn visit_expr_cast(&mut self, node: &'ast syn::ExprCast) {
+        // D6: lossy float casts in wire/billing code outside codec.rs.
+        if self.in_wire_scope() {
+            let ty = span_text(self.lines, node.ty.span());
+            let ty = ty.trim();
+            if ty == "f32" {
+                self.emit(
+                    self.anchor(node.as_token.span),
+                    "D6",
+                    "`as f32` narrowing in wire/billing code outside comm/codec.rs: precision \
+                     loss must live in the audited codec"
+                        .to_string(),
+                );
+            } else if INT_TYPES.contains(&ty) {
+                let operand = span_text(self.lines, node.expr.span());
+                let floaty = operand.contains(".ceil()")
+                    || operand.contains(".floor()")
+                    || operand.contains(".round()")
+                    || has_float_literal(&operand);
+                if floaty {
+                    self.emit(
+                        self.anchor(node.as_token.span),
+                        "D6",
+                        format!(
+                            "float-to-`{ty}` cast in wire/billing code outside comm/codec.rs: \
+                             byte accounting must be integer-exact (or pragma with a range proof)"
+                        ),
+                    );
+                }
+            }
+        }
+        visit::visit_expr_cast(self, node);
+    }
+}

@@ -1,0 +1,113 @@
+//! Zone classification: which determinism regime a source file lives in.
+//!
+//! Mirrors the table in DESIGN.md §15. Paths are relative to `rust/src`
+//! with `/` separators (the walker normalizes `\` before calling in).
+
+/// Determinism regime of one source file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Zone {
+    /// Bitwise-reproducibility contract applies: rules D1, D2, D4 are
+    /// live (plus the global rules D3, D5, D6).
+    Deterministic,
+    /// Wall-clock and ambient-environment reads are permitted (timing
+    /// columns, benches, OS process plumbing). Only the global rules
+    /// D3, D5, D6 apply.
+    WallClock,
+    /// Not named by the contract (pure helpers, prop-test harness).
+    /// Treated like `WallClock` for rule scoping.
+    Neutral,
+}
+
+impl Zone {
+    /// Human label used in diagnostics and JSON output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Zone::Deterministic => "deterministic",
+            Zone::WallClock => "wall-clock",
+            Zone::Neutral => "neutral",
+        }
+    }
+
+    /// Whether the deterministic-zone-only rules (D1, D2, D4) apply.
+    pub fn is_deterministic(self) -> bool {
+        matches!(self, Zone::Deterministic)
+    }
+}
+
+/// Classify a file path (relative to `rust/src`) into its zone.
+///
+/// The longest/most-specific prefixes are checked first: `comm/tcp*`
+/// is wall-clock even though `comm/` is deterministic.
+pub fn zone_of(rel: &str) -> Zone {
+    let rel = rel.replace('\\', "/");
+    let r = rel.as_str();
+
+    // Wall-clock carve-outs inside otherwise-deterministic trees.
+    if r.starts_with("comm/tcp") {
+        return Zone::WallClock;
+    }
+
+    // Deterministic zones (DESIGN.md §15 table).
+    if r.starts_with("coordinator/")
+        || r.starts_with("comm/")
+        || r.starts_with("engine/")
+        || r.starts_with("checkpoint/")
+        || r.starts_with("config/")
+        || r.starts_with("data/")
+        || r == "coordinator.rs"
+        || r == "comm.rs"
+        || r == "engine.rs"
+        || r == "checkpoint.rs"
+        || r == "config.rs"
+        || r == "data.rs"
+        || r == "util/rng.rs"
+        || r == "util/math.rs"
+    {
+        return Zone::Deterministic;
+    }
+
+    // Wall-clock-permitted zones.
+    if r.starts_with("metrics/")
+        || r.starts_with("bench/")
+        || r.starts_with("worker/")
+        || r.starts_with("runtime/")
+        || r.starts_with("bin/")
+        || r == "metrics.rs"
+        || r == "bench.rs"
+        || r == "worker.rs"
+        || r == "runtime.rs"
+        || r == "main.rs"
+    {
+        return Zone::WallClock;
+    }
+
+    Zone::Neutral
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zone_table_matches_design_doc() {
+        assert_eq!(zone_of("coordinator/mod.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("comm/codec.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("comm/tcp.rs"), Zone::WallClock);
+        assert_eq!(zone_of("comm/tcp/rendezvous.rs"), Zone::WallClock);
+        assert_eq!(zone_of("engine/pool.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("checkpoint/mod.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("config/mod.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("data/tokenizer.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("util/rng.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("util/math.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("metrics/mod.rs"), Zone::WallClock);
+        assert_eq!(zone_of("bench/mod.rs"), Zone::WallClock);
+        assert_eq!(zone_of("worker/mod.rs"), Zone::WallClock);
+        assert_eq!(zone_of("runtime/mod.rs"), Zone::WallClock);
+        assert_eq!(zone_of("main.rs"), Zone::WallClock);
+        assert_eq!(zone_of("bin/probe.rs"), Zone::WallClock);
+        assert_eq!(zone_of("lib.rs"), Zone::Neutral);
+        assert_eq!(zone_of("util/json.rs"), Zone::Neutral);
+        assert_eq!(zone_of("util/prop.rs"), Zone::Neutral);
+    }
+}
