@@ -1,0 +1,176 @@
+//! Byzantine robustness sweep — robust outer aggregation vs scripted
+//! attacks (ROADMAP item 4; Blanchard et al., NeurIPS 2017 for Krum).
+//!
+//! Sweeps `bench::scenarios::byzantine_grid`: an honest plain-mean
+//! baseline, the `trimmed:0` honest run that must be *bitwise* equal to
+//! it, a PPL-vs-f curve (f = 1, 2, 3 sign-flipping attackers of 8 under
+//! `trimmed:2`), each robust estimator against the attack it is shaped
+//! for (median vs NaN-bomb, Krum vs scaled noise, trimmed vs stale
+//! replay), and adversarial rows composed with gossip mixing, a mid-run
+//! departure, and one round of delayed application.
+//!
+//! Hard asserts (all deterministic, live in CI smoke):
+//! - the byte bill is aggregator- and adversary-blind: every
+//!   synchronous row bills exactly `k_t · B` uploads per round, the
+//!   same as an honest mean run over the same roster — corruption
+//!   happens before the wire and robust estimation after it;
+//! - `trimmed:0` with zero attackers is bitwise identical to the plain
+//!   weighted mean (final PPL bits and every per-round stat record);
+//! - the rejection columns match the attack script: the median rejects
+//!   exactly the NaN-bombers each round, Krum keeps exactly one row.
+//!
+//! Paste the printed JSON fragment into `BENCH_engine.json`.
+
+use diloco::bench::scenarios::{base_config, byzantine_grid, fmt, load_runtime, rel_pct};
+use diloco::bench::{BenchCtx, Table};
+use diloco::coordinator::Coordinator;
+use diloco::metrics::RunMetrics;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new("byzantine");
+    let base = base_config(ctx.scale);
+    let rt = load_runtime(&base.model);
+
+    // Shared pretrained start so rows differ only in the adversary /
+    // aggregation / composition axes.
+    let coord0 = Coordinator::new(base.clone(), rt.clone())?;
+    let mut pre = RunMetrics::new("pretrain");
+    let pretrained =
+        coord0.plain_train(rt.init_params()?, 0.0, base.pretrain_steps, &mut pre, 0)?;
+
+    let payload = rt.manifest.param_bytes() as u64;
+
+    let mut table = Table::new(
+        "Byzantine grid — robust aggregation vs attacks (bills aggregator-blind)",
+        &[
+            "variant",
+            "agg",
+            "attack",
+            "f",
+            "up_MB/round",
+            "rej/round",
+            "trim_mass",
+            "final_ppl",
+            "vs_honest",
+        ],
+    );
+    let mut json_rows = String::new();
+    let mut honest_ppl = f64::NAN;
+    let mut honest_bits: Option<(u64, Vec<diloco::coordinator::stats::RoundStats>)> = None;
+    let mut honest_up = 0u64;
+    for r in byzantine_grid() {
+        let mut cfg = base.clone();
+        cfg.aggregate = r.aggregate;
+        cfg.adversary = r.adversary;
+        cfg.topology = r.topology;
+        cfg.churn = r.churn.clone();
+        cfg.sync = r.sync;
+        cfg.validate()?;
+        let coord = Coordinator::new(cfg, rt.clone())?;
+        let cfg = &coord.cfg;
+        let report = coord.run_from(Some(pretrained.clone()))?;
+        let m = &report.metrics;
+        let n_attackers = r.adversary.map(|a| a.n_attackers(cfg.pool_size())).unwrap_or(0);
+        let rounds = cfg.rounds as f64;
+
+        // Byte-bill invariance (the API-redesign acceptance criterion):
+        // on the synchronous path every round uploads exactly the active
+        // roster's payloads, no matter which estimator reduces them or
+        // how many contributions it rejects. (The one-round-delayed row
+        // reshuffles *when* flows bill, so it is asserted separately
+        // against the honest total below.)
+        if r.sync.delay_rounds == 0 {
+            for (t, row) in report.comm_per_round.iter().enumerate() {
+                let k_t = cfg.active_ids(t).len() as u64;
+                let want = if k_t > 1 { k_t * payload } else { 0 };
+                assert_eq!(
+                    row.bytes_up, want,
+                    "{}: round {t} billed {} up bytes for {k_t} active workers — \
+                     the bill must not depend on the aggregator or the adversary",
+                    r.label, row.bytes_up
+                );
+            }
+        }
+
+        let rejected: usize = report.round_stats.iter().map(|rs| rs.rejected).sum();
+        let trim_mass = report.round_stats.iter().map(|rs| rs.trimmed_mass).sum::<f64>()
+            / report.round_stats.len().max(1) as f64;
+        match r.label {
+            // The attack script is deterministic, so the rejection
+            // columns are too: the median drops exactly the NaN payloads,
+            // Krum keeps exactly one contribution per round.
+            "median_nan_f2" => {
+                for rs in &report.round_stats {
+                    assert_eq!(rs.rejected, n_attackers, "median rejects the bombers");
+                }
+            }
+            "krum2_noise_f2" => {
+                for rs in &report.round_stats {
+                    assert_eq!(rs.rejected, cfg.workers - 1, "krum keeps one row");
+                }
+            }
+            "mean_honest" | "mean_flip_f2" => {
+                assert_eq!(rejected, 0, "the plain mean filters nothing");
+                assert_eq!(trim_mass, 0.0);
+            }
+            _ => {}
+        }
+
+        if r.label == "mean_honest" {
+            honest_ppl = m.final_ppl();
+            honest_bits = Some((m.final_ppl().to_bits(), report.round_stats.clone()));
+            honest_up = m.comm_bytes_up;
+        }
+        if r.label == "trimmed0_honest" {
+            let (bits, stats) = honest_bits.as_ref().expect("honest row runs first");
+            assert_eq!(
+                m.final_ppl().to_bits(),
+                *bits,
+                "trimmed:0 with zero attackers must be bitwise the plain mean"
+            );
+            assert_eq!(
+                &report.round_stats, stats,
+                "trimmed:0 honest round stats must match the mean run exactly"
+            );
+        }
+        if r.label == "delay1_median_noise_f2" {
+            // Delay changes when flows bill, never how much: same total
+            // uploads as the honest synchronous star run.
+            assert_eq!(
+                m.comm_bytes_up, honest_up,
+                "delayed application must not change the total byte bill"
+            );
+        }
+
+        json_rows.push_str(&format!(
+            "      {{ \"variant\": \"{}\", \"aggregate\": \"{}\", \"attack\": \"{}\", \
+             \"n_attackers\": {n_attackers}, \"up_mb_per_round\": {:.4}, \
+             \"rejected_per_round\": {:.2}, \"trimmed_mass\": {:.4}, \
+             \"final_ppl\": {:.4} }},\n",
+            r.label,
+            r.aggregate.label(),
+            r.adversary.map(|a| a.label()).unwrap_or_else(|| "none".into()),
+            m.comm_bytes_up as f64 / rounds / 1e6,
+            rejected as f64 / rounds,
+            trim_mass,
+            m.final_ppl()
+        ));
+        table.row(vec![
+            r.label.to_string(),
+            r.aggregate.label(),
+            r.adversary.map(|a| a.attack.name().to_string()).unwrap_or_else(|| "-".into()),
+            n_attackers.to_string(),
+            format!("{:.3}", m.comm_bytes_up as f64 / rounds / 1e6),
+            format!("{:.2}", rejected as f64 / rounds),
+            format!("{trim_mass:.3}"),
+            fmt(m.final_ppl()),
+            rel_pct(m.final_ppl(), honest_ppl),
+        ]);
+    }
+    ctx.emit(&table);
+    println!(
+        "\nBENCH_engine.json byzantine rows (paste into the current PR entry):\n{json_rows}"
+    );
+    ctx.finish();
+    Ok(())
+}

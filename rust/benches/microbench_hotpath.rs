@@ -28,6 +28,7 @@ use diloco::bench::{smoke, time_median, BenchCtx, Table};
 use diloco::comm::codec::{extract_transcode, Codec};
 use diloco::comm::fragment::{FragmentPlan, LeafSlice};
 use diloco::config::{DataConfig, OuterOptConfig};
+use diloco::coordinator::aggregate::WeightedMean;
 use diloco::coordinator::{average, opt::OuterOpt, prune, scratch::RoundScratch};
 use diloco::data::batch::BatchIter;
 use diloco::data::Dataset;
@@ -353,7 +354,7 @@ fn hotpath_suite(ctx: &BenchCtx) {
         {
             let mut scratch = RoundScratch::new();
             let (mut norm, mut out) = (scratch.lease(), scratch.lease());
-            average::weighted_average_into(&payloads[0], &weights, &mut norm, &mut out);
+            WeightedMean.mean_into(&payloads[0], &weights, &mut norm, &mut out);
             let want = average_scalar_multipass(&payloads[0], &weights);
             assert_eq!(out.len(), want.len());
             for (a, b) in out.iter().zip(&want) {
@@ -374,7 +375,7 @@ fn hotpath_suite(ctx: &BenchCtx) {
                 let (mut norm, mut out) = (scratch.lease(), scratch.lease());
                 let wt = &weights;
                 tasks.push(Box::new(move || {
-                    average::weighted_average_into(pl, wt, &mut norm, &mut out);
+                    WeightedMean.mean_into(pl, wt, &mut norm, &mut out);
                     (norm, out)
                 }));
             }

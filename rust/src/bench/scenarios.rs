@@ -14,8 +14,9 @@
 use super::Scale;
 use crate::comm::codec::Codec;
 use crate::config::{
-    ChurnConfig, ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig,
-    SpeedConfig, StreamConfig, SyncConfig, SyncSchedule, TopologyConfig,
+    AdversaryConfig, AggregateConfig, ChurnConfig, ComputeSchedule, EngineConfig,
+    ExperimentConfig, OuterOptConfig, SpeedConfig, StreamConfig, SyncConfig,
+    SyncSchedule, TopologyConfig,
 };
 use crate::runtime::Runtime;
 use std::sync::Arc;
@@ -189,6 +190,81 @@ pub fn async_grid() -> Vec<(&'static str, SpeedConfig, SyncConfig)> {
     ]
 }
 
+/// One row of the Byzantine robustness grid: which estimator reduces
+/// the outer step, which attack (if any) corrupts the compromised
+/// workers' deltas, and the topology/churn/delay axes it composes with.
+#[derive(Clone, Debug)]
+pub struct ByzScenario {
+    pub label: &'static str,
+    pub aggregate: AggregateConfig,
+    pub adversary: Option<AdversaryConfig>,
+    pub topology: TopologyConfig,
+    pub churn: Option<ChurnConfig>,
+    pub sync: SyncConfig,
+}
+
+/// Byzantine scenario family: the aggregator × attack × fraction ×
+/// topology grid the `byzantine` bench sweeps against the base
+/// (k=8, T=8) setting — ROADMAP item 4. Row 0 is the honest plain-mean
+/// baseline; row 1 is the `trimmed:0` honest run the bench hard-asserts
+/// bitwise-equal to it (the API-redesign acceptance criterion). The
+/// flip rows sweep the compromised fraction f ∈ {1, 2, 3} of 8 under a
+/// fixed `trimmed:2` estimator (the PPL-vs-f curve), the remaining rows
+/// pit each robust estimator against the attack it is shaped for, and
+/// the tail rows compose the adversary with a decentralized topology, a
+/// mid-run departure, and one round of delayed application. The one
+/// fatal cell — NaN-bomb × plain mean — is deliberately absent: the
+/// unfiltered mean propagates the NaN to the global model, where the
+/// coordinator's `all_finite` ensure (correctly) kills the run.
+pub fn byzantine_grid() -> Vec<ByzScenario> {
+    let adv = |s: &str| Some(AdversaryConfig::parse(s).expect("adversary grid DSL"));
+    let agg = |s: &str| AggregateConfig::parse(s).expect("aggregate grid DSL");
+    let star = |label, a, b| ByzScenario {
+        label,
+        aggregate: a,
+        adversary: b,
+        topology: TopologyConfig::Star,
+        churn: None,
+        sync: SyncConfig::default(),
+    };
+    let mut grid = vec![
+        star("mean_honest", agg("mean"), None),
+        star("trimmed0_honest", agg("trimmed:0"), None),
+        star("mean_flip_f2", agg("mean"), adv("flip:0.25")),
+        star("trimmed2_flip_f1", agg("trimmed:2"), adv("flip:0.125")),
+        star("trimmed2_flip_f2", agg("trimmed:2"), adv("flip:0.25")),
+        star("trimmed2_flip_f3", agg("trimmed:2"), adv("flip:0.375")),
+        star("median_nan_f2", agg("median"), adv("nan:0.25")),
+        star("krum2_noise_f2", agg("krum:2"), adv("noise:0.25:10")),
+        star("trimmed2_stale_f2", agg("trimmed:2"), adv("stale:0.25")),
+    ];
+    grid.push(ByzScenario {
+        label: "gossip_trimmed2_flip_f2",
+        aggregate: agg("trimmed:2"),
+        adversary: adv("flip:0.25"),
+        topology: TopologyConfig::Gossip,
+        churn: None,
+        sync: SyncConfig::default(),
+    });
+    grid.push(ByzScenario {
+        label: "churn_trimmed2_flip_f2",
+        aggregate: agg("trimmed:2"),
+        adversary: adv("flip:0.25"),
+        topology: TopologyConfig::Star,
+        churn: Some(ChurnConfig::parse("leave:w6@r3").expect("churn grid DSL")),
+        sync: SyncConfig::default(),
+    });
+    grid.push(ByzScenario {
+        label: "delay1_median_noise_f2",
+        aggregate: agg("median"),
+        adversary: adv("noise:0.25:3"),
+        topology: TopologyConfig::Star,
+        churn: None,
+        sync: SyncConfig { delay_rounds: 1, discount: 1.0 },
+    });
+    grid
+}
+
 /// Total inner steps after pretraining (T×H) for the base setting — kept
 /// constant across H sweeps so variants are compute-matched.
 pub fn step_budget(scale: Scale) -> usize {
@@ -328,6 +404,71 @@ mod tests {
     }
 
     #[test]
+    fn byzantine_grid_validates_and_covers_the_axes() {
+        use crate::config::AttackKind;
+        let grid = byzantine_grid();
+        let b = &grid[0];
+        assert!(
+            b.adversary.is_none()
+                && b.aggregate.is_default()
+                && b.topology == TopologyConfig::Star,
+            "row 0 is the honest plain-mean star baseline"
+        );
+        // Every aggregator kind and every attack kind appears somewhere.
+        for name in ["mean", "trimmed", "median", "krum"] {
+            assert!(grid.iter().any(|r| r.aggregate.name() == name), "{name}");
+        }
+        for atk in ["flip", "noise", "nan", "stale"] {
+            assert!(
+                grid.iter()
+                    .any(|r| r.adversary.is_some_and(|a| a.attack.name() == atk)),
+                "{atk}"
+            );
+        }
+        // Composition rows: a decentralized topology, a departure
+        // schedule, and a delayed-application round all meet the
+        // adversary somewhere in the grid.
+        assert!(grid.iter().any(|r| r.topology.is_decentralized()));
+        assert!(grid.iter().any(|r| r.churn.is_some() && r.adversary.is_some()));
+        assert!(
+            grid.iter()
+                .any(|r| r.sync.delay_rounds > 0 && r.adversary.is_some())
+        );
+        // The PPL-vs-f sweep: at least three distinct compromised
+        // fractions under one fixed (estimator, attack) pair.
+        let fracs: std::collections::BTreeSet<u64> = grid
+            .iter()
+            .filter(|r| {
+                r.aggregate.name() == "trimmed"
+                    && r.adversary.is_some_and(|a| a.attack == AttackKind::FlipSign)
+            })
+            .map(|r| r.adversary.unwrap().fraction.to_bits())
+            .collect();
+        assert!(fracs.len() >= 3, "PPL-vs-f sweep needs ≥ 3 fractions");
+        // The fatal cell stays out: NaN-bomb × plain mean would poison
+        // the global model and trip the coordinator's all_finite ensure.
+        assert!(!grid.iter().any(|r| r.aggregate.is_default()
+            && r.adversary.is_some_and(|a| a.attack == AttackKind::NanBomb)));
+        let base = base_config(Scale::Scaled);
+        for r in &grid {
+            let mut cfg = base.clone();
+            cfg.artifacts_dir = "a".into();
+            cfg.aggregate = r.aggregate;
+            cfg.adversary = r.adversary;
+            cfg.topology = r.topology;
+            cfg.churn = r.churn.clone();
+            cfg.sync = r.sync;
+            cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", r.label));
+            if let Some(a) = &r.adversary {
+                // Every adversarial row names at least one attacker but
+                // keeps an honest majority of the 8-worker pool.
+                let n = a.n_attackers(cfg.pool_size());
+                assert!(n >= 1 && 2 * n < cfg.pool_size(), "{}: f = {n}", r.label);
+            }
+        }
+    }
+
+    #[test]
     fn smoke_mode_is_env_gated_and_configs_stay_valid() {
         assert!(!crate::bench::smoke_from_env_var(None));
         assert!(crate::bench::smoke_from_env_var(Some("1")));
@@ -349,6 +490,16 @@ mod tests {
             let mut c = cfg.clone();
             c.sync = sync;
             c.validate().unwrap_or_else(|e| panic!("smoke async {label}: {e}"));
+        }
+        for r in byzantine_grid() {
+            let mut c = cfg.clone();
+            c.aggregate = r.aggregate;
+            c.adversary = r.adversary;
+            c.topology = r.topology;
+            c.churn = r.churn.clone();
+            c.sync = r.sync;
+            c.validate()
+                .unwrap_or_else(|e| panic!("smoke byzantine {}: {e}", r.label));
         }
     }
 

@@ -36,8 +36,12 @@ const STATE_MAGIC: &[u8; 8] = b"DILOST01";
 /// existed) load with an empty queue. Version 3 appends the per-worker
 /// error-feedback residuals; version-2 states (written before error
 /// feedback existed) load with no residuals, which the coordinator
-/// re-initializes to zero when `stream.error_feedback` is on.
-const STATE_VERSION: u32 = 3;
+/// re-initializes to zero when `stream.error_feedback` is on. Version 4
+/// appends the robust-aggregation outcome columns (rejected
+/// contributions, trimmed weight mass) to every stored [`RoundStats`]
+/// record and the adversary's stale-replay swap buffers; pre-version-4
+/// states load with zeroed columns and no parked deltas.
+const STATE_VERSION: u32 = 4;
 /// Sanity caps for untrusted length fields that the manifest cannot
 /// bound (fragment counts, Adam step vectors, kind strings).
 const MAX_FRAGMENTS: usize = 1 << 20;
@@ -384,6 +388,14 @@ pub struct TrainState {
     /// delta. Empty when error feedback is off and in pre-version-3
     /// checkpoints (the coordinator then resumes with zero residuals).
     pub residuals: Vec<Tensors>,
+    /// Stale-replay attack buffers (`[adversary] attack = "stale"`;
+    /// DESIGN.md §16): `(worker id, parked delta)` in strictly ascending
+    /// id order, id-tagged so an *absent* buffer (attacker that has not
+    /// synced yet) is distinguishable from a parked all-zero delta.
+    /// Empty for every other attack, with no adversary at all, and in
+    /// pre-version-4 checkpoints (a resumed stale-replay attacker then
+    /// ships one honest delta before replaying, exactly like round 0).
+    pub stale: Vec<(usize, Tensors)>,
 }
 
 fn w_outer(buf: &mut Vec<u8>, snap: &OuterOptSnapshot) {
@@ -432,9 +444,15 @@ fn w_stats(buf: &mut Vec<u8>, rs: &RoundStats) {
     w_u64(buf, rs.active_workers as u64);
     w_u64(buf, rs.staleness as u64);
     w_f64(buf, rs.idle_s);
+    w_u64(buf, rs.rejected as u64);
+    w_f64(buf, rs.trimmed_mass);
 }
 
-fn r_stats(r: &mut Reader<'_>) -> anyhow::Result<RoundStats> {
+/// `version` is the containing file's format version: the robust
+/// aggregation outcome columns exist only from version 4 on, and a
+/// pre-version-4 record loads them as zero (no rejections — those
+/// states predate the robust aggregators).
+fn r_stats(r: &mut Reader<'_>, version: u32) -> anyhow::Result<RoundStats> {
     Ok(RoundStats {
         round: r.u64()? as usize,
         cos_mean: r.f64()?,
@@ -447,6 +465,8 @@ fn r_stats(r: &mut Reader<'_>) -> anyhow::Result<RoundStats> {
         active_workers: r.u64()? as usize,
         staleness: r.u64()? as usize,
         idle_s: r.f64()?,
+        rejected: if version >= 4 { r.u64()? as usize } else { 0 },
+        trimmed_mass: if version >= 4 { r.f64()? } else { 0.0 },
     })
 }
 
@@ -487,6 +507,7 @@ fn r_pending(
     manifest: &Manifest,
     pool: usize,
     n_frag: usize,
+    version: u32,
 ) -> anyhow::Result<PendingSync> {
     let round = r.u64()? as usize;
     let n_frags = r.u32()? as usize;
@@ -532,7 +553,7 @@ fn r_pending(
     }
     let stats = match r.u8()? {
         0 => None,
-        1 => Some(r_stats(r)?),
+        1 => Some(r_stats(r, version)?),
         other => anyhow::bail!("bad pending stats flag byte {other}"),
     };
     Ok(PendingSync { round, frags, stats })
@@ -553,6 +574,11 @@ pub fn save_state(path: &str, manifest: &Manifest, st: &TrainState) -> anyhow::R
         st.residuals.is_empty() || st.residuals.len() == pool,
         "inconsistent TrainState: pool {pool}, residuals {}",
         st.residuals.len()
+    );
+    anyhow::ensure!(
+        st.stale.iter().all(|&(w, _)| w < pool)
+            && st.stale.windows(2).all(|e| e[0].0 < e[1].0),
+        "inconsistent TrainState: stale-replay ids must be ascending within the pool"
     );
     let mut buf: Vec<u8> = Vec::new();
     buf.extend_from_slice(STATE_MAGIC);
@@ -603,6 +629,11 @@ pub fn save_state(path: &str, manifest: &Manifest, st: &TrainState) -> anyhow::R
     w_u64(&mut buf, st.residuals.len() as u64);
     for res in &st.residuals {
         w_tensors(&mut buf, res);
+    }
+    w_u64(&mut buf, st.stale.len() as u64);
+    for (w, t) in &st.stale {
+        w_u64(&mut buf, *w as u64);
+        w_tensors(&mut buf, t);
     }
     write_checked(path, buf)
 }
@@ -705,7 +736,7 @@ pub fn load_state(path: &str, manifest: &Manifest) -> anyhow::Result<TrainState>
         // flag(1) bytes, bounding the count tightly by the body.
         let n_pending = r.len_capped(r.remaining() / 13, "pending sync")?;
         for _ in 0..n_pending {
-            pending_sync.push(r_pending(&mut r, manifest, pool, n_frag)?);
+            pending_sync.push(r_pending(&mut r, manifest, pool, n_frag, version)?);
         }
     }
     // Version 3: per-worker error-feedback residuals. Absent or zero
@@ -720,6 +751,24 @@ pub fn load_state(path: &str, manifest: &Manifest) -> anyhow::Result<TrainState>
         );
         for i in 0..n_res {
             residuals.push(r.tensors(manifest, &format!("residual[{i}]"))?);
+        }
+    }
+    // Version 4: the stale-replay attack's parked deltas, one per
+    // attacker that has synced at least once. Ids are validated against
+    // the pool and must be strictly ascending — a valid-checksum
+    // corruption duplicating an id (which would silently overwrite one
+    // attacker's buffer with another's) errors instead of loading.
+    let mut stale: Vec<(usize, Tensors)> = Vec::new();
+    if version >= 4 {
+        let n_stale = r.len_capped(pool, "stale-replay buffer")?;
+        for _ in 0..n_stale {
+            let w = r.u64()? as usize;
+            anyhow::ensure!(w < pool, "stale-replay id {w} outside pool {pool}");
+            anyhow::ensure!(
+                stale.last().is_none_or(|(p, _)| *p < w),
+                "stale-replay ids out of order (id {w})"
+            );
+            stale.push((w, r.tensors(manifest, &format!("stale[{w}]"))?));
         }
     }
     r.finish()?;
@@ -738,6 +787,7 @@ pub fn load_state(path: &str, manifest: &Manifest) -> anyhow::Result<TrainState>
         codec_err_sq_total,
         pending_sync,
         residuals,
+        stale,
     })
 }
 
@@ -941,6 +991,7 @@ mod tests {
             codec_err_sq_total: 0.25,
             pending_sync: Vec::new(),
             residuals: Vec::new(),
+            stale: Vec::new(),
         }
     }
 
@@ -973,6 +1024,8 @@ mod tests {
                 active_workers: 2,
                 staleness: 0,
                 idle_s: 0.75,
+                rejected: 1,
+                trimmed_mass: 0.25,
             }),
         }
     }
@@ -1020,15 +1073,15 @@ mod tests {
         let base = tmp("state_pending_neg");
         save_state(&base, &man, &st).unwrap();
         // The queue's count field starts where an empty-queue save ends
-        // minus the trailing residual count (8) and its own 8 bytes:
-        // everything before it is identical.
+        // minus the trailing residual count (8), stale count (8), and
+        // its own 8 bytes: everything before it is identical.
         let mut empty = st.clone();
         empty.pending_sync.clear();
         let empty_path = tmp("state_pending_empty");
         save_state(&empty_path, &man, &empty).unwrap();
         let empty_body_len = std::fs::read(&empty_path).unwrap().len() - 8;
         std::fs::remove_file(&empty_path).ok();
-        let count_off = empty_body_len - 16;
+        let count_off = empty_body_len - 24;
 
         // An absurd batch count must be rejected before allocation.
         rewrite_body(&base, |body| {
@@ -1089,8 +1142,8 @@ mod tests {
     fn version_one_states_load_with_empty_queue() {
         // A pre-async (version 1) TrainState has no queue section; it
         // must load as a state with no batches in flight. Crafted by
-        // rewriting a v3 save: version field back to 1, the trailing
-        // empty-residual and empty-queue counts stripped.
+        // rewriting a v4 save: version field back to 1, the trailing
+        // empty-stale, empty-residual, and empty-queue counts stripped.
         let man = tiny_manifest();
         let st = tiny_state(false);
         let path = tmp("state_v1");
@@ -1098,7 +1151,7 @@ mod tests {
         rewrite_body(&path, |body| {
             body[8..12].copy_from_slice(&1u32.to_le_bytes());
             let n = body.len();
-            body.truncate(n - 16);
+            body.truncate(n - 24);
         });
         let loaded = load_state(&path, &man).unwrap();
         assert_eq!(loaded, st);
@@ -1116,9 +1169,11 @@ mod tests {
         // A pre-error-feedback (version 2) TrainState has no residual
         // section; it must load with no residuals (the coordinator then
         // re-initializes them to zero if error feedback is on). Crafted
-        // by rewriting a v3 save: version field back to 2, the trailing
-        // empty-residual count stripped — the exact inverse of what the
-        // v3 writer appends.
+        // by rewriting a v4 save: version field back to 2, then
+        // stripping — back to front — the empty-stale count, the
+        // empty-residual count, and the two v4 outcome columns at the
+        // tail of the pending batch's stats record — the exact inverse
+        // of what the v4 writer appends.
         let man = tiny_manifest();
         let mut st = tiny_state(false);
         st.pending_sync = vec![tiny_pending()];
@@ -1127,10 +1182,16 @@ mod tests {
         rewrite_body(&path, |body| {
             body[8..12].copy_from_slice(&2u32.to_le_bytes());
             let n = body.len();
-            body.truncate(n - 8);
+            body.truncate(n - 32);
         });
         let loaded = load_state(&path, &man).unwrap();
-        assert_eq!(loaded, st); // pending queue intact, residuals empty
+        // Pending queue intact; residuals empty; the v2 stats record
+        // predates the outcome columns, which default to zero.
+        let mut expected = st.clone();
+        let rs = expected.pending_sync[0].stats.as_mut().unwrap();
+        rs.rejected = 0;
+        rs.trimmed_mass = 0.0;
+        assert_eq!(loaded, expected);
         std::fs::remove_file(&path).ok();
     }
 
@@ -1148,12 +1209,13 @@ mod tests {
         // A residual count that matches neither 0 nor the pool is a
         // structural error, not a partial load. The count field's offset
         // is found from a save identical in everything but residuals:
-        // it occupies that save's last 8 body bytes.
-        let mut empty_res = tiny_state(false);
-        empty_res.pending_sync = vec![tiny_pending()];
+        // with those empty, the count is the save's second-to-last body
+        // u64 (only the empty-stale count follows it).
+        let mut empty_res = st.clone();
+        empty_res.residuals.clear();
         let empty_path = tmp("state_residuals_empty");
         save_state(&empty_path, &man, &empty_res).unwrap();
-        let count_off = std::fs::read(&empty_path).unwrap().len() - 8 - 8;
+        let count_off = std::fs::read(&empty_path).unwrap().len() - 8 - 16;
         std::fs::remove_file(&empty_path).ok();
         save_state(&path, &man, &st).unwrap();
         rewrite_body(&path, |body| {
@@ -1161,6 +1223,82 @@ mod tests {
         });
         let err = load_state(&path, &man).unwrap_err();
         assert!(format!("{err:#}").contains("residual"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_three_states_load_without_stale_buffers() {
+        // A pre-adversary (version 3) TrainState has no stale-replay
+        // section; it must load with no parked deltas. Crafted by
+        // rewriting a v4 save: version field back to 3, the trailing
+        // empty-stale count stripped — the residual section before it
+        // is untouched.
+        let man = tiny_manifest();
+        let mut st = tiny_state(false);
+        st.residuals = vec![tiny_tensors(), Tensors::zeros(&man)];
+        let path = tmp("state_v3");
+        save_state(&path, &man, &st).unwrap();
+        rewrite_body(&path, |body| {
+            body[8..12].copy_from_slice(&3u32.to_le_bytes());
+            let n = body.len();
+            body.truncate(n - 8);
+        });
+        let loaded = load_state(&path, &man).unwrap();
+        assert_eq!(loaded, st); // residuals intact, stale empty
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn train_state_roundtrips_stale_replay_buffers() {
+        let man = tiny_manifest();
+        let mut st = tiny_state(false);
+        st.stale = vec![(0, tiny_tensors()), (1, Tensors::zeros(&man))];
+        let path = tmp("state_stale");
+        save_state(&path, &man, &st).unwrap();
+        assert_eq!(load_state(&path, &man).unwrap(), st);
+
+        // A sparse buffer set (only one attacker has synced) round-trips
+        // too — the id tag is what makes that unambiguous.
+        st.stale = vec![(1, tiny_tensors())];
+        save_state(&path, &man, &st).unwrap();
+        assert_eq!(load_state(&path, &man).unwrap(), st);
+
+        // The writer refuses inconsistent buffers outright.
+        let mut bad = st.clone();
+        bad.stale = vec![(5, tiny_tensors())]; // outside the pool of 2
+        assert!(save_state(&path, &man, &bad).is_err());
+
+        // Crafted valid-checksum corruptions of entry 1's id. The id
+        // starts exactly where a one-entry save's body ends — the two
+        // bodies are identical through the first entry (the count field
+        // differs in value, not width).
+        st.stale = vec![(0, tiny_tensors()), (1, Tensors::zeros(&man))];
+        let one = {
+            let mut s = st.clone();
+            s.stale.truncate(1);
+            s
+        };
+        let one_path = tmp("state_stale_one");
+        save_state(&one_path, &man, &one).unwrap();
+        let id1_off = std::fs::read(&one_path).unwrap().len() - 8;
+        std::fs::remove_file(&one_path).ok();
+
+        // A duplicated (out-of-order) id would silently overwrite one
+        // attacker's buffer with another's — rejected.
+        save_state(&path, &man, &st).unwrap();
+        rewrite_body(&path, |body| {
+            body[id1_off..id1_off + 8].copy_from_slice(&0u64.to_le_bytes());
+        });
+        let err = load_state(&path, &man).unwrap_err();
+        assert!(format!("{err:#}").contains("out of order"), "{err:#}");
+
+        // An id outside the pool is rejected.
+        save_state(&path, &man, &st).unwrap();
+        rewrite_body(&path, |body| {
+            body[id1_off..id1_off + 8].copy_from_slice(&99u64.to_le_bytes());
+        });
+        let err = load_state(&path, &man).unwrap_err();
+        assert!(format!("{err:#}").contains("outside pool"), "{err:#}");
         std::fs::remove_file(&path).ok();
     }
 

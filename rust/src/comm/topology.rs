@@ -150,9 +150,10 @@ pub trait Topology: Send + Sync {
     /// `landed[j]` says whether worker `j`'s outgoing contribution was
     /// delivered. Rows normalize to the row-stochastic mixing matrix
     /// (see [`row_stochastic`]); consumers feed the raw rows to
-    /// [`crate::coordinator::average::weighted_average_refs`], which
-    /// normalizes with the same scalar operations as the monolithic
-    /// star average — keeping star bitwise-stable.
+    /// [`crate::coordinator::aggregate::WeightedMean`] (or a robust
+    /// `[aggregate]` estimator), whose default path normalizes with the
+    /// same scalar operations as the monolithic star average — keeping
+    /// star bitwise-stable.
     fn mixing_raw(
         &self,
         round: usize,
@@ -508,7 +509,7 @@ impl Topology for Hierarchical {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::average::{weighted_average_flat, weighted_average_refs};
+    use crate::coordinator::aggregate::WeightedMean;
     use crate::util::prop::check;
 
     fn all_true(k: usize) -> Vec<bool> {
@@ -691,11 +692,11 @@ mod tests {
             let weights: Vec<f64> = (0..k).map(|_| g.f64_in(0.1..5.0)).collect();
             let star_rows = Star.mixing_raw(0, k, &weights, &vec![true; k]);
             let ring_rows = Ring.mixing_raw(0, k, &weights, &vec![true; k]);
-            let star_avg = weighted_average_flat(&payloads, &star_rows[0]);
+            let star_avg = WeightedMean.mean(&payloads, &star_rows[0]);
             let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
             for row in &ring_rows {
                 assert_eq!(row, &star_rows[0], "ring rows must equal star's row");
-                let ring_avg = weighted_average_refs(&refs, row);
+                let ring_avg = WeightedMean.mean(&refs, row);
                 for (a, b) in ring_avg.iter().zip(&star_avg) {
                     assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
                 }

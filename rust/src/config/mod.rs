@@ -1016,6 +1016,254 @@ impl FabricConfig {
     }
 }
 
+/// Child-stream tag of the attacker-model draws (`[adversary]`): the
+/// attacker set and every per-round noise draw hang off
+/// `Rng::new(seed).child(ADVERSARY_STREAM)`, so they are independent of
+/// the fabric (`child(7)`), worker (`child(100 + i)`), speed-jitter
+/// ([`SPEED_JITTER_STREAM`]), and data streams — a pure function of
+/// `(seed, round, worker)` like every other scenario axis.
+pub const ADVERSARY_STREAM: u64 = 0x00BA_DAC7;
+
+/// What a compromised worker does to its outer delta (after the inner
+/// phase, before the wire — billing and routing see the normal payload
+/// shape).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttackKind {
+    /// Ship `-scale × delta`: the classic sign-flip / model-poisoning
+    /// attack. `scale > 1` amplifies it.
+    FlipSign,
+    /// Replace the delta with i.i.d. `scale × N(0, 1)` draws keyed by
+    /// `(seed, worker, round)`.
+    ScaledNoise,
+    /// Ship all-NaN — fatal to the plain mean in one round.
+    NanBomb,
+    /// Ship the delta from the attacker's *previous* synced round
+    /// (first round ships honestly while parking a copy).
+    StaleReplay,
+}
+
+impl AttackKind {
+    /// Parse `flip` / `noise` / `nan` / `stale`.
+    pub fn parse(s: &str) -> anyhow::Result<AttackKind> {
+        match s {
+            "flip" => Ok(AttackKind::FlipSign),
+            "noise" => Ok(AttackKind::ScaledNoise),
+            "nan" => Ok(AttackKind::NanBomb),
+            "stale" => Ok(AttackKind::StaleReplay),
+            other => anyhow::bail!(
+                "unknown adversary.attack {other:?} (want flip|noise|nan|stale)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttackKind::FlipSign => "flip",
+            AttackKind::ScaledNoise => "noise",
+            AttackKind::NanBomb => "nan",
+            AttackKind::StaleReplay => "stale",
+        }
+    }
+}
+
+/// The `[adversary]` section / `--adversary` DSL: a deterministic
+/// Byzantine attacker model. ⌊`fraction`·pool⌋ workers (chosen once per
+/// run from the seed) corrupt their outer delta every round they sync.
+///
+/// ```
+/// use diloco::config::{AdversaryConfig, AttackKind};
+///
+/// let a = AdversaryConfig::parse("flip:0.25").unwrap();
+/// assert_eq!(a.attack, AttackKind::FlipSign);
+/// assert_eq!(a.n_attackers(8), 2);
+/// let n = AdversaryConfig::parse("noise:0.125:3.0").unwrap();
+/// assert_eq!(n.scale, 3.0);
+/// assert!(AdversaryConfig::parse("flip:1.0").is_err()); // everyone evil
+/// assert!(AdversaryConfig::parse("melt:0.25").is_err());
+/// // The attacker set is a pure function of (seed, pool).
+/// assert_eq!(a.attacker_ids(42, 8), a.attacker_ids(42, 8));
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdversaryConfig {
+    pub attack: AttackKind,
+    /// Fraction of the worker pool that is compromised, in (0, 1).
+    pub fraction: f64,
+    /// Attack amplitude (flip multiplier / noise stddev; ignored by
+    /// `nan` and `stale`).
+    pub scale: f64,
+}
+
+impl AdversaryConfig {
+    /// Parse `kind:fraction[:scale]`, e.g. `flip:0.25` or `noise:0.25:3`.
+    pub fn parse(s: &str) -> anyhow::Result<AdversaryConfig> {
+        let mut it = s.split(':');
+        let attack = AttackKind::parse(it.next().unwrap_or(""))?;
+        let frac = it.next().ok_or_else(|| {
+            anyhow::anyhow!("bad --adversary {s:?} (want kind:fraction[:scale])")
+        })?;
+        let fraction: f64 = frac
+            .trim()
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad adversary fraction {frac:?}: {e}"))?;
+        let scale: f64 = match it.next() {
+            Some(x) => x
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad adversary scale {x:?}: {e}"))?,
+            None => 1.0,
+        };
+        anyhow::ensure!(
+            it.next().is_none(),
+            "bad --adversary {s:?} (want kind:fraction[:scale])"
+        );
+        let cfg = AdversaryConfig { attack, fraction, scale };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Field invariants (pool-dependent checks live in
+    /// `ExperimentConfig::validate`).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.fraction > 0.0 && self.fraction < 1.0,
+            "adversary.fraction must be in (0, 1) — a fraction of {} would \
+             compromise the whole roster (got no honest majority to protect)",
+            self.fraction
+        );
+        anyhow::ensure!(
+            self.scale > 0.0 && self.scale.is_finite(),
+            "adversary.scale must be positive and finite (got {})",
+            self.scale
+        );
+        Ok(())
+    }
+
+    /// ⌊fraction · pool⌋ — how many workers are compromised.
+    pub fn n_attackers(&self, pool: usize) -> usize {
+        (self.fraction * pool as f64).floor() as usize
+    }
+
+    /// The run's compromised ids: `n_attackers` distinct workers drawn
+    /// from `Rng::new(seed).child(ADVERSARY_STREAM)`, sorted. Static for
+    /// the whole run and independent of every other stream.
+    pub fn attacker_ids(&self, seed: u64, pool: usize) -> Vec<usize> {
+        let n = self.n_attackers(pool).min(pool);
+        let mut ids = Rng::new(seed).child(ADVERSARY_STREAM).choose(pool, n);
+        ids.sort_unstable();
+        ids
+    }
+
+    /// `kind:fraction[:scale]` round-trip label for logs and bench rows.
+    pub fn label(&self) -> String {
+        format!("{}:{}:{}", self.attack.name(), self.fraction, self.scale)
+    }
+}
+
+/// The `[aggregate]` section / `--aggregate` DSL: which
+/// [`crate::coordinator::aggregate::Aggregator`] reduces each fragment.
+///
+/// ```
+/// use diloco::config::AggregateConfig;
+///
+/// assert_eq!(AggregateConfig::parse("mean").unwrap(), AggregateConfig::default());
+/// assert_eq!(
+///     AggregateConfig::parse("trimmed:1").unwrap(),
+///     AggregateConfig::TrimmedMean { trim: 1 }
+/// );
+/// assert_eq!(
+///     AggregateConfig::parse("krum:2").unwrap(),
+///     AggregateConfig::Krum { f: 2 }
+/// );
+/// assert!(AggregateConfig::parse("trimmed").is_err()); // trim required
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AggregateConfig {
+    /// The legacy weighted mean — bitwise with every pre-existing trace.
+    #[default]
+    WeightedMean,
+    /// Coordinate-wise trimmed weighted mean (`trimmed:N` drops N values
+    /// from each end of every coordinate).
+    TrimmedMean { trim: usize },
+    /// Coordinate-wise median.
+    CoordinateMedian,
+    /// Krum selection tolerating `f` Byzantine workers (`krum:F`).
+    Krum { f: usize },
+}
+
+impl AggregateConfig {
+    /// Parse `mean` / `trimmed:N` / `median` / `krum:F`.
+    pub fn parse(s: &str) -> anyhow::Result<AggregateConfig> {
+        match s {
+            "mean" => Ok(AggregateConfig::WeightedMean),
+            "median" => Ok(AggregateConfig::CoordinateMedian),
+            other => {
+                if let Some(n) = other.strip_prefix("trimmed:") {
+                    let trim = n.trim().parse().map_err(|e| {
+                        anyhow::anyhow!("bad aggregate trim {n:?}: {e}")
+                    })?;
+                    Ok(AggregateConfig::TrimmedMean { trim })
+                } else if let Some(n) = other.strip_prefix("krum:") {
+                    let f = n.trim().parse().map_err(|e| {
+                        anyhow::anyhow!("bad aggregate krum f {n:?}: {e}")
+                    })?;
+                    Ok(AggregateConfig::Krum { f })
+                } else {
+                    anyhow::bail!(
+                        "unknown aggregate.kind {other:?} \
+                         (want mean|trimmed:N|median|krum:F)"
+                    )
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregateConfig::WeightedMean => "mean",
+            AggregateConfig::TrimmedMean { .. } => "trimmed",
+            AggregateConfig::CoordinateMedian => "median",
+            AggregateConfig::Krum { .. } => "krum",
+        }
+    }
+
+    /// Round-trip DSL label (`trimmed:1`, `krum:2`, ...).
+    pub fn label(&self) -> String {
+        match self {
+            AggregateConfig::TrimmedMean { trim } => format!("trimmed:{trim}"),
+            AggregateConfig::Krum { f } => format!("krum:{f}"),
+            other => other.name().to_string(),
+        }
+    }
+
+    /// True for the bitwise-default mean path.
+    pub fn is_default(&self) -> bool {
+        matches!(self, AggregateConfig::WeightedMean)
+    }
+}
+
+/// Uniform section-tagged validation error: every rejection out of
+/// [`ExperimentConfig::validate`] renders as `[section] message`, so a
+/// failing TOML/CLI combination names the section to fix.
+#[derive(Debug)]
+pub struct ConfigError {
+    pub section: &'static str,
+    pub message: String,
+}
+
+impl ConfigError {
+    fn tag(section: &'static str, e: anyhow::Error) -> anyhow::Error {
+        anyhow::Error::new(ConfigError { section, message: format!("{e:#}") })
+    }
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.section, self.message)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 /// The full description of one run.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -1058,6 +1306,11 @@ pub struct ExperimentConfig {
     /// Elastic island membership: per-round active-worker roster driven
     /// by leave/join/ramp events (None = the static `schedule` roster).
     pub churn: Option<ChurnConfig>,
+    /// Byzantine attacker model (None = all workers honest, the legacy
+    /// path).
+    pub adversary: Option<AdversaryConfig>,
+    /// Outer aggregation strategy (default: the bitwise weighted mean).
+    pub aggregate: AggregateConfig,
     /// Training-state checkpointing (periodic saves + resume).
     pub ckpt: CkptConfig,
     /// Inner-phase executor (sequential reference vs parallel islands).
@@ -1097,6 +1350,8 @@ impl ExperimentConfig {
             sync: SyncConfig::default(),
             topology: TopologyConfig::Star,
             churn: None,
+            adversary: None,
+            aggregate: AggregateConfig::default(),
             ckpt: CkptConfig::default(),
             engine: EngineConfig::Auto,
             fast_math: false,
@@ -1158,7 +1413,33 @@ impl ExperimentConfig {
     /// Cross-field invariants. Every config entry point (TOML, CLI
     /// overrides) funnels through this, so malformed settings surface as
     /// proper `anyhow` errors instead of panics deep in the run.
+    ///
+    /// One dispatcher, one error shape: each section validator runs in
+    /// order and any rejection is wrapped in [`ConfigError`], rendering
+    /// as `[section] message` — no more per-call-site ad-hoc wrapping.
     pub fn validate(&self) -> anyhow::Result<()> {
+        let sections: [(&'static str, fn(&Self) -> anyhow::Result<()>); 13] = [
+            ("diloco", Self::validate_run),
+            ("comm", Self::validate_comm),
+            ("fabric", |c: &Self| c.fabric.validate()),
+            ("stream", |c: &Self| c.stream.validate()),
+            ("speed", |c: &Self| c.speed.validate()),
+            ("sync", |c: &Self| c.sync.validate()),
+            ("topology", |c: &Self| c.topology.validate()),
+            ("churn", Self::validate_churn),
+            ("adversary", Self::validate_adversary),
+            ("aggregate", Self::validate_aggregate),
+            ("ckpt", |c: &Self| c.ckpt.validate()),
+            ("data", Self::validate_data),
+            ("compose", Self::validate_composition),
+        ];
+        for (section, check) in sections {
+            check(self).map_err(|e| ConfigError::tag(section, e))?;
+        }
+        Ok(())
+    }
+
+    fn validate_run(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.workers >= 1, "diloco.workers must be >= 1");
         anyhow::ensure!(self.inner_steps >= 1, "diloco.inner_steps must be >= 1");
         anyhow::ensure!(
@@ -1166,6 +1447,10 @@ impl ExperimentConfig {
             "diloco.prune_frac must be in [0, 1] (got {})",
             self.prune_frac
         );
+        Ok(())
+    }
+
+    fn validate_comm(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
             (0.0..=1.0).contains(&self.comm.drop_prob),
             "comm.drop_prob must be in [0, 1] (got {})",
@@ -1175,11 +1460,97 @@ impl ExperimentConfig {
             self.comm.bandwidth_bps > 0.0,
             "comm.bandwidth_bps must be positive"
         );
-        self.fabric.validate()?;
-        self.stream.validate()?;
-        self.speed.validate()?;
-        self.sync.validate()?;
-        self.topology.validate()?;
+        Ok(())
+    }
+
+    fn validate_churn(&self) -> anyhow::Result<()> {
+        if let Some(churn) = &self.churn {
+            anyhow::ensure!(
+                matches!(self.schedule, ComputeSchedule::Constant(_)),
+                "churn composes with the constant compute schedule only \
+                 (use the churn DSL's ramp:A..B instead of schedule ramps)"
+            );
+            churn.validate(self.rounds, self.workers)?;
+        }
+        Ok(())
+    }
+
+    fn validate_adversary(&self) -> anyhow::Result<()> {
+        let Some(adv) = &self.adversary else { return Ok(()) };
+        adv.validate()?;
+        let pool = self.pool_size();
+        let n = adv.n_attackers(pool);
+        anyhow::ensure!(
+            n >= 1,
+            "adversary.fraction = {} names zero attackers of the {}-worker \
+             pool (drop the [adversary] section for an honest run)",
+            adv.fraction,
+            pool
+        );
+        anyhow::ensure!(
+            n < pool,
+            "adversary.fraction = {} compromises all {} workers — no honest \
+             contribution would ever reach the outer step",
+            adv.fraction,
+            pool
+        );
+        Ok(())
+    }
+
+    fn validate_aggregate(&self) -> anyhow::Result<()> {
+        let k = self.pool_size();
+        match self.aggregate {
+            AggregateConfig::WeightedMean | AggregateConfig::CoordinateMedian => {}
+            AggregateConfig::TrimmedMean { trim } => {
+                anyhow::ensure!(
+                    2 * trim < k,
+                    "aggregate trimmed:{trim} discards 2×{trim} values per \
+                     coordinate but the pool has only {k} workers — nothing \
+                     would survive the trim"
+                );
+            }
+            AggregateConfig::Krum { f } => {
+                anyhow::ensure!(
+                    k >= 2 * f + 3,
+                    "aggregate krum:{f} needs at least 2f+3 = {} workers for \
+                     its Byzantine guarantee; the pool has {k}",
+                    2 * f + 3
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_data(&self) -> anyhow::Result<()> {
+        // Data invariants — previously hard `assert!` panics deep inside
+        // `data::shard::shard_corpus`; surfaced here so every config
+        // entry point reports them as proper errors before a run starts.
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.data.holdout),
+            "data.holdout must be in [0, 1) (got {})",
+            self.data.holdout
+        );
+        let max_k = self.pool_size();
+        // Count the training documents through the same function
+        // Dataset::build splits with (data::shard::holdout_split) — this
+        // used to be a hand-maintained mirror of that arithmetic, which
+        // could drift.
+        let train_docs =
+            crate::data::shard::train_doc_count(self.data.n_docs, self.data.holdout);
+        anyhow::ensure!(
+            train_docs >= max_k,
+            "data.docs = {} leaves {} training documents after the {:.0}% holdout \
+             — fewer than the {} worker shards the schedule needs",
+            self.data.n_docs,
+            train_docs,
+            100.0 * self.data.holdout,
+            max_k
+        );
+        Ok(())
+    }
+
+    /// Pairwise composition rules between sections.
+    fn validate_composition(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
             !(self.sync.delay_rounds > 0 && self.topology.is_decentralized()),
             "delayed outer application (sync.delay_rounds > 0) composes with the \
@@ -1213,38 +1584,12 @@ impl ExperimentConfig {
              corrupt every replica); drop injection (comm.drop_prob > 0) composes \
              with star|gossip|hierarchical"
         );
-        if let Some(churn) = &self.churn {
-            anyhow::ensure!(
-                matches!(self.schedule, ComputeSchedule::Constant(_)),
-                "churn composes with the constant compute schedule only \
-                 (use the churn DSL's ramp:A..B instead of schedule ramps)"
-            );
-            churn.validate(self.rounds, self.workers)?;
-        }
-        self.ckpt.validate()?;
-        // Data invariants — previously hard `assert!` panics deep inside
-        // `data::shard::shard_corpus`; surfaced here so every config
-        // entry point reports them as proper errors before a run starts.
         anyhow::ensure!(
-            (0.0..1.0).contains(&self.data.holdout),
-            "data.holdout must be in [0, 1) (got {})",
-            self.data.holdout
-        );
-        let max_k = self.pool_size();
-        // Count the training documents through the same function
-        // Dataset::build splits with (data::shard::holdout_split) — this
-        // used to be a hand-maintained mirror of that arithmetic, which
-        // could drift.
-        let train_docs =
-            crate::data::shard::train_doc_count(self.data.n_docs, self.data.holdout);
-        anyhow::ensure!(
-            train_docs >= max_k,
-            "data.docs = {} leaves {} training documents after the {:.0}% holdout \
-             — fewer than the {} worker shards the schedule needs",
-            self.data.n_docs,
-            train_docs,
-            100.0 * self.data.holdout,
-            max_k
+            !(self.fast_math && !self.aggregate.is_default()),
+            "engine.fast_math's pairwise reduction tree exists only for the \
+             weighted-mean path; the robust aggregators ({}) already fix \
+             their own scalar-op order",
+            self.aggregate.label()
         );
         Ok(())
     }
@@ -1381,6 +1726,22 @@ impl ExperimentConfig {
         let churn = doc.str_or("churn.schedule", "")?;
         if !churn.is_empty() {
             cfg.churn = Some(ChurnConfig::parse(&churn)?);
+        }
+
+        let attack = doc.str_or("adversary.attack", "")?;
+        if !attack.is_empty() {
+            let adv = AdversaryConfig {
+                attack: AttackKind::parse(&attack)?,
+                fraction: doc.f64_or("adversary.fraction", 0.25)?,
+                scale: doc.f64_or("adversary.scale", 1.0)?,
+            };
+            adv.validate()?;
+            cfg.adversary = Some(adv);
+        }
+
+        let aggregate = doc.str_or("aggregate.kind", "")?;
+        if !aggregate.is_empty() {
+            cfg.aggregate = AggregateConfig::parse(&aggregate)?;
         }
 
         cfg.ckpt.save_every = doc.usize_or("ckpt.save_every", 0)?;
@@ -2096,5 +2457,149 @@ mod tests {
         assert!(ExperimentConfig::from_toml(&doc).is_err());
         let doc = TomlDoc::parse("[engine]\nkind = \"parallel:8\"\nthreads = 2").unwrap();
         assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn adversary_dsl_and_attacker_math() {
+        let a = AdversaryConfig::parse("flip:0.25:2.0").unwrap();
+        assert_eq!(a.attack, AttackKind::FlipSign);
+        assert_eq!(a.fraction, 0.25);
+        assert_eq!(a.scale, 2.0);
+        assert_eq!(a.label(), "flip:0.25:2");
+        assert_eq!(a.n_attackers(8), 2);
+        assert_eq!(a.n_attackers(7), 1); // floor
+        let ids = a.attacker_ids(9, 8);
+        assert_eq!(ids.len(), 2);
+        assert!(ids.windows(2).all(|w| w[0] < w[1]));
+        assert!(ids.iter().all(|&w| w < 8));
+        assert_eq!(ids, a.attacker_ids(9, 8), "set is seed-deterministic");
+        // Scale defaults to 1.0; every attack kind round-trips.
+        assert_eq!(AdversaryConfig::parse("nan:0.125").unwrap().scale, 1.0);
+        for kind in ["flip", "noise", "nan", "stale"] {
+            let c = AdversaryConfig::parse(&format!("{kind}:0.25")).unwrap();
+            assert_eq!(c.attack.name(), kind);
+            assert_eq!(AttackKind::parse(kind).unwrap(), c.attack);
+        }
+        for bad in [
+            "flip", "flip:0.0", "flip:1.0", "flip:-0.5", "flip:nope",
+            "flip:0.25:0", "flip:0.25:inf", "flip:0.25:1:9", "melt:0.25", "",
+        ] {
+            assert!(AdversaryConfig::parse(bad).is_err(), "{bad:?} must fail");
+        }
+    }
+
+    #[test]
+    fn aggregate_dsl_round_trips() {
+        for (s, want) in [
+            ("mean", AggregateConfig::WeightedMean),
+            ("median", AggregateConfig::CoordinateMedian),
+            ("trimmed:1", AggregateConfig::TrimmedMean { trim: 1 }),
+            ("trimmed:0", AggregateConfig::TrimmedMean { trim: 0 }),
+            ("krum:2", AggregateConfig::Krum { f: 2 }),
+        ] {
+            let got = AggregateConfig::parse(s).unwrap();
+            assert_eq!(got, want);
+            assert_eq!(AggregateConfig::parse(&got.label()).unwrap(), got);
+        }
+        assert!(AggregateConfig::default().is_default());
+        assert!(!AggregateConfig::CoordinateMedian.is_default());
+        for bad in ["trimmed", "krum", "trimmed:x", "krum:-1", "average", ""] {
+            assert!(AggregateConfig::parse(bad).is_err(), "{bad:?} must fail");
+        }
+    }
+
+    #[test]
+    fn from_toml_adversary_and_aggregate_sections() -> anyhow::Result<()> {
+        let doc = TomlDoc::parse(
+            "[adversary]\nattack = \"noise\"\nfraction = 0.25\nscale = 3.0\n\
+             [aggregate]\nkind = \"trimmed:2\"",
+        )?;
+        let cfg = ExperimentConfig::from_toml(&doc)?;
+        let adv = cfg.adversary.expect("adversary section parsed");
+        assert_eq!(adv.attack, AttackKind::ScaledNoise);
+        assert_eq!(adv.fraction, 0.25);
+        assert_eq!(adv.scale, 3.0);
+        assert_eq!(cfg.aggregate, AggregateConfig::TrimmedMean { trim: 2 });
+        // fraction defaults to 0.25, scale to 1.0.
+        let doc = TomlDoc::parse("[adversary]\nattack = \"flip\"")?;
+        let adv = ExperimentConfig::from_toml(&doc)?.adversary.unwrap();
+        assert_eq!(adv.fraction, 0.25);
+        assert_eq!(adv.scale, 1.0);
+        // Absent sections keep the honest mean defaults.
+        let doc = TomlDoc::parse("seed = 3")?;
+        let cfg = ExperimentConfig::from_toml(&doc)?;
+        assert!(cfg.adversary.is_none());
+        assert!(cfg.aggregate.is_default());
+        Ok(())
+    }
+
+    #[test]
+    fn validate_rejects_bad_adversary_and_aggregate_compositions() {
+        let base = ExperimentConfig::paper_default("a", "nano");
+
+        // Attacker count >= roster size: only fraction >= 1 can reach it
+        // (floor(f·k) < k for any f < 1), and that is rejected at the
+        // field level — constructed directly to bypass the DSL parser.
+        let mut cfg = base.clone();
+        cfg.adversary =
+            Some(AdversaryConfig { attack: AttackKind::FlipSign, fraction: 1.0, scale: 1.0 });
+        let err = cfg.validate().expect_err("all-attacker roster must fail");
+        assert!(format!("{err}").starts_with("[adversary]"), "{err}");
+
+        // Fraction that floors to zero attackers.
+        let mut cfg = base.clone();
+        cfg.adversary =
+            Some(AdversaryConfig { attack: AttackKind::FlipSign, fraction: 0.05, scale: 1.0 });
+        let err = cfg.validate().expect_err("zero attackers must fail");
+        assert!(format!("{err}").contains("zero attackers"), "{err}");
+
+        // Trim too large for k: 2*trim >= k.
+        let mut cfg = base.clone();
+        cfg.aggregate = AggregateConfig::TrimmedMean { trim: 4 }; // k = 8
+        let err = cfg.validate().expect_err("over-trim must fail");
+        assert!(format!("{err}").starts_with("[aggregate]"), "{err}");
+        cfg.aggregate = AggregateConfig::TrimmedMean { trim: 3 };
+        cfg.validate().expect("2*3 < 8 is fine");
+
+        // Krum on k < 2f + 3.
+        let mut cfg = base.clone();
+        cfg.aggregate = AggregateConfig::Krum { f: 3 }; // needs 9 > 8
+        assert!(cfg.validate().is_err());
+        cfg.aggregate = AggregateConfig::Krum { f: 2 }; // needs 7 <= 8
+        cfg.validate().expect("krum:2 on k=8 is fine");
+
+        // fast_math composes with the mean path only.
+        let mut cfg = base.clone();
+        cfg.fast_math = true;
+        cfg.aggregate = AggregateConfig::CoordinateMedian;
+        let err = cfg.validate().expect_err("fast_math x robust must fail");
+        assert!(format!("{err}").starts_with("[compose]"), "{err}");
+        cfg.aggregate = AggregateConfig::WeightedMean;
+        cfg.validate().expect("fast_math mean path is fine");
+    }
+
+    #[test]
+    fn validate_errors_are_section_tagged() {
+        // The dispatcher wraps every rejection in ConfigError, rendering
+        // as "[section] message" with the original detail preserved.
+        let mut cfg = ExperimentConfig::paper_default("a", "nano");
+        cfg.comm.drop_prob = 1.5;
+        let err = cfg.validate().expect_err("bad drop_prob");
+        let msg = format!("{err}");
+        assert!(msg.starts_with("[comm]"), "{msg}");
+        assert!(msg.contains("drop_prob"), "{msg}");
+        let tagged = err.downcast_ref::<ConfigError>().expect("ConfigError");
+        assert_eq!(tagged.section, "comm");
+
+        let mut cfg = ExperimentConfig::paper_default("a", "nano");
+        cfg.stream.fragments = 0;
+        let err = cfg.validate().expect_err("bad fragments");
+        assert!(format!("{err}").starts_with("[stream]"), "{err}");
+
+        let mut cfg = ExperimentConfig::paper_default("a", "nano");
+        cfg.workers = 0;
+        cfg.schedule = ComputeSchedule::Constant(1);
+        let err = cfg.validate().expect_err("bad workers");
+        assert!(format!("{err}").starts_with("[diloco]"), "{err}");
     }
 }

@@ -1,0 +1,250 @@
+//! Deterministic Byzantine attacker model (`[adversary]` config).
+//!
+//! A fixed subset of the worker pool is compromised for the whole run;
+//! each attacker corrupts its outer delta **after the inner phase and
+//! before the wire** — the honest inner training, byte billing, drop
+//! schedule, and topology routing are all untouched, so byte bills are
+//! invariant under both attack and aggregator choice (a bench hard
+//! assert).
+//!
+//! # Keying (DESIGN.md §16)
+//!
+//! Like `[speed]` jitter and `[churn]` rosters, everything here is a
+//! pure function of `(seed, round, worker)`:
+//!
+//! - the attacker **set** is `Rng::new(seed).child(ADVERSARY_STREAM)`
+//!   choosing ⌊fraction·pool⌋ distinct ids once per run;
+//! - per-round **draws** (the scaled-noise elements) come from
+//!   `Rng::new(seed).child(ADVERSARY_STREAM).child(worker).child(round)`,
+//!   so they replay bit-identically across sequential/parallel engines
+//!   and across save→resume, regardless of what any other stream
+//!   consumed.
+//!
+//! The only cross-round state is the stale-replay swap buffer, which is
+//! serialized in `TrainState` (v4) so resumed runs replay the same
+//! stale deltas.
+
+use crate::config::{AdversaryConfig, AttackKind, ADVERSARY_STREAM};
+use crate::runtime::Tensors;
+use crate::util::rng::Rng;
+
+/// Per-run attacker state: the compromised id set plus the stale-replay
+/// swap buffers. Owned by the coordinator round loop.
+pub struct Adversary {
+    attack: AttackKind,
+    scale: f64,
+    seed: u64,
+    member: Vec<bool>,
+    ids: Vec<usize>,
+    stale: Vec<Option<Tensors>>,
+}
+
+impl Adversary {
+    /// Derive the run's attacker set from the config (see module docs
+    /// for the keying). `pool` is the full worker pool size — attacker
+    /// identity is independent of churn rosters, so a parked-and-
+    /// rejoined attacker stays an attacker.
+    pub fn new(cfg: &AdversaryConfig, seed: u64, pool: usize) -> Adversary {
+        let ids = cfg.attacker_ids(seed, pool);
+        let mut member = vec![false; pool];
+        for &w in &ids {
+            member[w] = true;
+        }
+        Adversary {
+            attack: cfg.attack,
+            scale: cfg.scale,
+            seed,
+            member,
+            ids,
+            stale: (0..pool).map(|_| None).collect(),
+        }
+    }
+
+    /// The sorted compromised worker ids.
+    pub fn attacker_ids(&self) -> &[usize] {
+        &self.ids
+    }
+
+    pub fn is_attacker(&self, wid: usize) -> bool {
+        self.member.get(wid).copied().unwrap_or(false)
+    }
+
+    /// Corrupt `delta` in place if `wid` is compromised; returns whether
+    /// a corruption was applied. Must be called exactly once per
+    /// (round, synced worker), in any order — no attack depends on call
+    /// order within a round (stale-replay state is per-worker).
+    pub fn corrupt(&mut self, round: usize, wid: usize, delta: &mut Tensors) -> bool {
+        if !self.is_attacker(wid) {
+            return false;
+        }
+        match self.attack {
+            AttackKind::FlipSign => delta.scale(-(self.scale as f32)),
+            AttackKind::ScaledNoise => {
+                let mut rng = Rng::new(self.seed)
+                    .child(ADVERSARY_STREAM)
+                    .child(wid as u64)
+                    .child(round as u64);
+                let s = self.scale;
+                delta.for_each_mut(|x| *x = (s * rng.normal()) as f32);
+            }
+            AttackKind::NanBomb => delta.for_each_mut(|x| *x = f32::NAN),
+            AttackKind::StaleReplay => match self.stale[wid].as_mut() {
+                // Ship the previous corrupted-round delta, keep the
+                // current one for next time.
+                Some(prev) => std::mem::swap(delta, prev),
+                // First attack round: nothing stale to replay yet —
+                // ship the honest delta and remember it.
+                None => self.stale[wid] = Some(delta.clone()),
+            },
+        }
+        true
+    }
+
+    /// Stale-replay buffers for checkpointing: `(worker id, parked
+    /// delta)` pairs in ascending id order. Empty unless the attack is
+    /// stale-replay and at least one attacker has synced.
+    pub fn stale_entries(&self) -> Vec<(usize, Tensors)> {
+        let mut out = Vec::new();
+        for (w, slot) in self.stale.iter().enumerate() {
+            if let Some(t) = slot {
+                out.push((w, t.clone()));
+            }
+        }
+        out
+    }
+
+    /// Restore checkpointed stale-replay buffers (inverse of
+    /// [`stale_entries`](Self::stale_entries)). Ids beyond the pool are
+    /// ignored (roster shrank between save and resume is rejected
+    /// upstream by the resume config checks).
+    pub fn restore_stale(&mut self, entries: Vec<(usize, Tensors)>) {
+        for (w, t) in entries {
+            if w < self.stale.len() {
+                self.stale[w] = Some(t);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AdversaryConfig;
+
+    fn t(vals: &[f32]) -> Tensors {
+        Tensors::from_raw(vec![vals.to_vec()])
+    }
+
+    fn cfg(attack: AttackKind, fraction: f64, scale: f64) -> AdversaryConfig {
+        AdversaryConfig { attack, fraction, scale }
+    }
+
+    #[test]
+    fn attacker_set_is_seed_deterministic_and_sized_by_floor() {
+        let c = cfg(AttackKind::FlipSign, 0.25, 1.0);
+        let a = Adversary::new(&c, 7, 8);
+        let b = Adversary::new(&c, 7, 8);
+        assert_eq!(a.attacker_ids(), b.attacker_ids());
+        assert_eq!(a.attacker_ids().len(), 2); // floor(0.25 * 8)
+        assert!(a.attacker_ids().windows(2).all(|w| w[0] < w[1]));
+        assert!(a.attacker_ids().iter().all(|&w| w < 8));
+        // A different seed picks a different set (with overwhelming
+        // probability for this (pool, n) — pinned for these constants).
+        let other = Adversary::new(&c, 8, 8);
+        assert_ne!(a.attacker_ids(), other.attacker_ids());
+        // floor(0.3 * 4) = 1
+        assert_eq!(Adversary::new(&cfg(AttackKind::NanBomb, 0.3, 1.0), 1, 4)
+            .attacker_ids()
+            .len(), 1);
+    }
+
+    #[test]
+    fn honest_workers_pass_through_untouched() {
+        let c = cfg(AttackKind::NanBomb, 0.25, 1.0);
+        let mut adv = Adversary::new(&c, 3, 8);
+        let honest = (0..8).find(|&w| !adv.is_attacker(w)).unwrap();
+        let mut d = t(&[1.0, -2.0]);
+        assert!(!adv.corrupt(0, honest, &mut d));
+        assert_eq!(d, t(&[1.0, -2.0]));
+    }
+
+    #[test]
+    fn flip_sign_scales_and_negates() {
+        let c = cfg(AttackKind::FlipSign, 0.5, 2.0);
+        let mut adv = Adversary::new(&c, 3, 2);
+        let w = adv.attacker_ids()[0];
+        let mut d = t(&[1.0, -2.0, 0.5]);
+        assert!(adv.corrupt(0, w, &mut d));
+        assert_eq!(d, t(&[-2.0, 4.0, -1.0]));
+    }
+
+    #[test]
+    fn nan_bomb_poisons_every_element() {
+        let c = cfg(AttackKind::NanBomb, 0.5, 1.0);
+        let mut adv = Adversary::new(&c, 3, 2);
+        let w = adv.attacker_ids()[0];
+        let mut d = t(&[1.0, -2.0]);
+        adv.corrupt(0, w, &mut d);
+        assert!(d.iter_flat().all(|x| x.is_nan()));
+    }
+
+    #[test]
+    fn scaled_noise_is_keyed_by_seed_round_worker() {
+        let c = cfg(AttackKind::ScaledNoise, 0.5, 3.0);
+        let mut a = Adversary::new(&c, 11, 4);
+        let mut b = Adversary::new(&c, 11, 4);
+        let w = a.attacker_ids()[0];
+        let mut da = t(&[1.0, 2.0, 3.0]);
+        let mut db = t(&[9.0, 9.0, 9.0]); // input-independent replacement
+        a.corrupt(5, w, &mut da);
+        b.corrupt(5, w, &mut db);
+        assert_eq!(da, db, "same (seed, round, worker) must draw the same noise");
+        let mut dc = t(&[1.0, 2.0, 3.0]);
+        b.corrupt(6, w, &mut dc);
+        assert_ne!(da, dc, "different rounds draw different noise");
+        assert!(da.all_finite());
+    }
+
+    #[test]
+    fn stale_replay_ships_previous_and_parks_current() {
+        let c = cfg(AttackKind::StaleReplay, 0.5, 1.0);
+        let mut adv = Adversary::new(&c, 3, 2);
+        let w = adv.attacker_ids()[0];
+        // Round 0: nothing parked — ships the honest delta, parks it.
+        let mut d0 = t(&[1.0]);
+        adv.corrupt(0, w, &mut d0);
+        assert_eq!(d0, t(&[1.0]));
+        // Round 1: ships round 0's delta, parks round 1's.
+        let mut d1 = t(&[2.0]);
+        adv.corrupt(1, w, &mut d1);
+        assert_eq!(d1, t(&[1.0]));
+        // Round 2: ships round 1's.
+        let mut d2 = t(&[3.0]);
+        adv.corrupt(2, w, &mut d2);
+        assert_eq!(d2, t(&[2.0]));
+    }
+
+    #[test]
+    fn stale_buffers_roundtrip_through_entries() {
+        let c = cfg(AttackKind::StaleReplay, 0.5, 1.0);
+        let mut adv = Adversary::new(&c, 3, 4);
+        let ids: Vec<usize> = adv.attacker_ids().to_vec();
+        for (k, &w) in ids.iter().enumerate() {
+            let mut d = t(&[k as f32 + 1.0]);
+            adv.corrupt(0, w, &mut d);
+        }
+        let entries = adv.stale_entries();
+        assert_eq!(entries.len(), ids.len());
+        assert!(entries.windows(2).all(|e| e[0].0 < e[1].0));
+        // A fresh adversary restored from the entries replays the same
+        // parked deltas.
+        let mut resumed = Adversary::new(&c, 3, 4);
+        resumed.restore_stale(entries);
+        let w = ids[0];
+        let mut a = t(&[42.0]);
+        let mut b = t(&[42.0]);
+        adv.corrupt(1, w, &mut a);
+        resumed.corrupt(1, w, &mut b);
+        assert_eq!(a, b);
+    }
+}

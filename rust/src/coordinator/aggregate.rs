@@ -1,0 +1,753 @@
+//! Pluggable outer aggregation — the `Aggregator` trait (ROADMAP item 4).
+//!
+//! Every outer step used to be hard-wired to the flat weighted mean in
+//! [`super::average`]; one NaN-bombing island poisoned the global model
+//! in a single round. This module makes the per-fragment reduction a
+//! first-class seam: [`WeightedMean`] is the bitwise-default
+//! implementation (delegating to the same audited fused kernel the
+//! legacy trio used), and [`TrimmedMean`], [`CoordinateMedian`], and
+//! [`Krum`] are Byzantine-robust alternatives selected via the
+//! `[aggregate]` TOML section or `--aggregate` on the CLI.
+//!
+//! # Determinism contract (DESIGN.md §16)
+//!
+//! Every estimator performs a *fixed scalar-op order* that depends only
+//! on the payload order and values:
+//!
+//! - [`WeightedMean`] delegates to
+//!   [`average::fused_weighted_mean_into`], whose per-element sequence
+//!   is pinned by the PR-6 property tests.
+//! - [`TrimmedMean`] / [`CoordinateMedian`] sort each coordinate's
+//!   column with a *stable* insertion sort under strict `<` (no NaN can
+//!   reach the sort: non-finite contributions are rejected up front), so
+//!   equal values keep payload order and the surviving-value fold is the
+//!   left-to-right [`math::sum_f64`] kernel.
+//! - [`Krum`]'s pairwise distance matrix routes through the audited
+//!   [`math::sq_dist`] kernel, neighbor distances are sorted with
+//!   `f64::total_cmp`, scores are summed left-to-right, and argmin
+//!   tie-breaks to the lowest payload index — the whole selection is a
+//!   pure function of the payloads, which is why it stays inside the
+//!   deterministic zone.
+//!
+//! Float *folds* (totals, score sums) route through the audited
+//! `util::math` kernels; everything else is per-element arithmetic,
+//! which D4 does not constrain.
+//!
+//! # Rejection semantics
+//!
+//! The robust estimators treat a contribution with *any* non-finite
+//! element as wholly compromised and drop it before estimating.
+//! [`WeightedMean`] performs **no** filtering — it is the bitwise legacy
+//! path, and a NaN there propagates to the global model where the
+//! coordinator's `all_finite` ensure fails the run loudly. If no finite
+//! contribution survives, the robust estimators emit an all-zero
+//! fragment (the outer step becomes a no-op) and report everything
+//! rejected.
+//!
+//! ```
+//! use diloco::coordinator::aggregate::{Aggregator, TrimmedMean};
+//! use diloco::coordinator::scratch::RoundScratch;
+//!
+//! // One colluding outlier among three workers: trimming one value from
+//! // each end of every coordinate leaves the honest middle.
+//! let a = [1.0f32, 1.0];
+//! let b = [1.0f32, 3.0];
+//! let c = [100.0f32, -100.0];
+//! let mut scratch = RoundScratch::new();
+//! let mut out = Vec::new();
+//! let agg = TrimmedMean { trim: 1 };
+//! let outcome =
+//!     agg.aggregate_into(&[&a, &b, &c], &[1.0, 1.0, 1.0], &mut scratch, &mut out);
+//! assert_eq!(out, vec![1.0, 1.0]);
+//! assert_eq!(outcome.rejected, 0);
+//! assert!((outcome.trimmed_mass - 2.0 / 3.0).abs() < 1e-12);
+//! ```
+
+use crate::config::AggregateConfig;
+use crate::coordinator::average;
+use crate::coordinator::scratch::RoundScratch;
+use crate::util::math;
+
+/// What an aggregation call filtered out, for [`super::RoundStats`]'
+/// per-round `rejected` / `trimmed_mass` columns.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AggregateOutcome {
+    /// Contributions excluded from the estimate entirely: non-finite
+    /// payloads under every robust estimator, plus (for [`Krum`]) the
+    /// finite payloads that were not selected.
+    pub rejected: usize,
+    /// Fraction of the total contributor weight that did not enter the
+    /// final estimate (rejected weight plus, for the coordinate-wise
+    /// estimators, the count-normalized share trimmed per coordinate).
+    /// 0.0 on the mean path, 1.0 when nothing survived.
+    pub trimmed_mass: f64,
+}
+
+/// A per-fragment reduction strategy over flat wire payloads.
+///
+/// `payloads` are the contributors' fragment slices (equal length),
+/// `weights` their unnormalized averaging weights (shard sizes ×
+/// staleness discounts — exactly what the mean path always received).
+/// `out` is cleared and filled with the aggregated fragment; column
+/// buffers are leased from `scratch`, so steady-state rounds allocate
+/// nothing.
+///
+/// ```
+/// use diloco::coordinator::aggregate::{Aggregator, CoordinateMedian, WeightedMean};
+/// use diloco::coordinator::scratch::RoundScratch;
+///
+/// let mut scratch = RoundScratch::new();
+/// let mut out = Vec::new();
+/// let p = [2.0f32, 4.0];
+/// let q = [4.0f32, 8.0];
+/// WeightedMean.aggregate_into(&[&p, &q], &[1.0, 1.0], &mut scratch, &mut out);
+/// assert_eq!(out, vec![3.0, 6.0]);
+/// // The median of an even column is the midpoint of the two middles.
+/// CoordinateMedian.aggregate_into(&[&p, &q], &[1.0, 1.0], &mut scratch, &mut out);
+/// assert_eq!(out, vec![3.0, 6.0]);
+/// ```
+pub trait Aggregator: Send + Sync {
+    /// Reduce `payloads` into `out`, returning what was filtered.
+    fn aggregate_into(
+        &self,
+        payloads: &[&[f32]],
+        weights: &[f64],
+        scratch: &mut RoundScratch,
+        out: &mut Vec<f32>,
+    ) -> AggregateOutcome;
+
+    /// Stable identifier (`mean`, `trimmed`, `median`, `krum`) for
+    /// logs and bench rows.
+    fn name(&self) -> &'static str;
+
+    /// True only for [`WeightedMean`]: the coordinator keeps the
+    /// parallel per-fragment reduction (and the opt-in `fast_math`
+    /// pairwise tree) on the mean path, and runs robust estimators
+    /// serially against the shared scratch arena.
+    fn is_mean(&self) -> bool {
+        false
+    }
+}
+
+/// The bitwise-default aggregator: the exact legacy weighted mean,
+/// delegating to the audited fused kernel
+/// ([`average::fused_weighted_mean_into`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WeightedMean;
+
+impl WeightedMean {
+    /// Allocation-free weighted mean over any payload representation —
+    /// the generic entry point the coordinator's parallel reduction and
+    /// the benches call directly (trait objects cannot be generic).
+    /// Bitwise-identical to the deprecated `weighted_average_into`.
+    pub fn mean_into<P: AsRef<[f32]>>(
+        &self,
+        payloads: &[P],
+        weights: &[f64],
+        norm: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) {
+        average::fused_weighted_mean_into(payloads, weights, norm, out);
+    }
+
+    /// Allocating convenience over [`mean_into`](Self::mean_into) —
+    /// the migration target for `weighted_average_flat` /
+    /// `weighted_average_refs` call sites off the hot path.
+    ///
+    /// ```
+    /// use diloco::coordinator::aggregate::WeightedMean;
+    ///
+    /// let a = [0.0f32, 2.0];
+    /// let b = [4.0f32, 6.0];
+    /// assert_eq!(WeightedMean.mean(&[&a, &b], &[1.0, 1.0]), vec![2.0, 4.0]);
+    /// ```
+    pub fn mean<P: AsRef<[f32]>>(&self, payloads: &[P], weights: &[f64]) -> Vec<f32> {
+        let mut norm = Vec::new();
+        let mut out = Vec::new();
+        self.mean_into(payloads, weights, &mut norm, &mut out);
+        out
+    }
+}
+
+impl Aggregator for WeightedMean {
+    fn aggregate_into(
+        &self,
+        payloads: &[&[f32]],
+        weights: &[f64],
+        scratch: &mut RoundScratch,
+        out: &mut Vec<f32>,
+    ) -> AggregateOutcome {
+        let mut norm = scratch.lease();
+        self.mean_into(payloads, weights, &mut norm, out);
+        scratch.recycle(norm);
+        AggregateOutcome::default()
+    }
+
+    fn name(&self) -> &'static str {
+        "mean"
+    }
+
+    fn is_mean(&self) -> bool {
+        true
+    }
+}
+
+/// Coordinate-wise trimmed weighted mean: per coordinate, sort the
+/// surviving contributions by value and drop the `trim` lowest and
+/// `trim` highest before the weighted mean of the remainder.
+///
+/// `trim = 0` with no non-finite contribution **delegates to the
+/// [`WeightedMean`] kernel**, so that configuration is bitwise equal to
+/// the mean path by construction (an acceptance criterion, pinned by
+/// integration tests on star, ring, and gossip). When churn shrinks the
+/// roster below `2·trim + 1` contributors the effective trim shrinks to
+/// `(m − 1) / 2` so at least one value always survives.
+#[derive(Clone, Copy, Debug)]
+pub struct TrimmedMean {
+    /// Values dropped from *each* end of every coordinate's column.
+    pub trim: usize,
+}
+
+/// Coordinate-wise median (weights are ignored in the estimate — the
+/// median of an even-sized column is the midpoint of the two middle
+/// values, computed in f64). The classic high-breakdown estimator: up
+/// to ⌊(m−1)/2⌋ colluding workers cannot move any coordinate outside
+/// the honest value range.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoordinateMedian;
+
+/// Krum (Blanchard et al., NeurIPS 2017): select the single
+/// contribution whose summed squared distance to its `m − f − 2`
+/// nearest neighbors is smallest — the payload most surrounded by
+/// agreeing peers. Needs `m ≥ 2f + 3` for its Byzantine guarantee
+/// (config-validated); when churn shrinks the roster mid-run the
+/// effective `f` shrinks to keep the score well-defined rather than
+/// failing the round.
+#[derive(Clone, Copy, Debug)]
+pub struct Krum {
+    /// Number of Byzantine contributors the selection must tolerate.
+    pub f: usize,
+}
+
+/// Shared preamble for the robust estimators: partition contributor
+/// indices into finite survivors and non-finite rejects, in payload
+/// order.
+fn finite_survivors(payloads: &[&[f32]], survivors: &mut Vec<usize>) -> usize {
+    survivors.clear();
+    let mut rejected = 0usize;
+    for (i, p) in payloads.iter().enumerate() {
+        if p.iter().all(|x| x.is_finite()) {
+            survivors.push(i);
+        } else {
+            rejected += 1;
+        }
+    }
+    rejected
+}
+
+/// Everything-rejected fallback: a zero fragment (the outer step
+/// becomes a no-op for this fragment) and full trimmed mass.
+fn all_rejected(n: usize, m: usize, out: &mut Vec<f32>) -> AggregateOutcome {
+    out.clear();
+    out.resize(n, 0.0);
+    AggregateOutcome { rejected: m, trimmed_mass: 1.0 }
+}
+
+fn check_arity(payloads: &[&[f32]], weights: &[f64]) -> usize {
+    assert!(!payloads.is_empty(), "no fragment payloads to aggregate");
+    assert_eq!(payloads.len(), weights.len());
+    let n = payloads[0].len();
+    for p in payloads {
+        assert_eq!(p.len(), n, "payload arity");
+    }
+    n
+}
+
+/// Stable ascending insertion co-sort of `vals` with `wts` carried
+/// along. Strict `>` comparison keeps equal values in payload order;
+/// callers guarantee no NaN reaches this point.
+fn co_sort(vals: &mut [f64], wts: &mut [f64]) {
+    for i in 1..vals.len() {
+        let mut j = i;
+        while j > 0 && vals[j - 1] > vals[j] {
+            vals.swap(j - 1, j);
+            wts.swap(j - 1, j);
+            j -= 1;
+        }
+    }
+}
+
+impl Aggregator for TrimmedMean {
+    fn aggregate_into(
+        &self,
+        payloads: &[&[f32]],
+        weights: &[f64],
+        scratch: &mut RoundScratch,
+        out: &mut Vec<f32>,
+    ) -> AggregateOutcome {
+        let n = check_arity(payloads, weights);
+        let mut survivors: Vec<usize> = Vec::with_capacity(payloads.len());
+        let rejected = finite_survivors(payloads, &mut survivors);
+        let m = survivors.len();
+        if m == 0 {
+            return all_rejected(n, payloads.len(), out);
+        }
+        if self.trim == 0 && rejected == 0 {
+            // Bitwise fast path: exactly the mean kernel.
+            let mut norm = scratch.lease();
+            WeightedMean.mean_into(payloads, weights, &mut norm, out);
+            scratch.recycle(norm);
+            return AggregateOutcome::default();
+        }
+        let e = self.trim.min((m - 1) / 2);
+        let w_total = math::sum_f64(weights);
+        assert!(w_total > 0.0, "all-zero averaging weights");
+        let mut vals = scratch.lease_f64();
+        let mut wts = scratch.lease_f64();
+        let mut prod = scratch.lease_f64();
+        // Surviving weight is coordinate-independent: sum it once.
+        wts.clear();
+        for &i in &survivors {
+            wts.push(weights[i]);
+        }
+        let w_surv = math::sum_f64(&wts);
+        assert!(w_surv > 0.0, "all-zero surviving weights");
+        out.clear();
+        out.reserve(n);
+        for c in 0..n {
+            vals.clear();
+            wts.clear();
+            for &i in &survivors {
+                vals.push(payloads[i][c] as f64);
+                wts.push(weights[i]);
+            }
+            co_sort(&mut vals, &mut wts);
+            let keep = e..m - e;
+            prod.clear();
+            for j in keep.clone() {
+                prod.push(vals[j] * wts[j]);
+            }
+            let num = math::sum_f64(&prod);
+            let den = math::sum_f64(&wts[keep]);
+            out.push((num / den) as f32);
+        }
+        scratch.recycle_f64(vals);
+        scratch.recycle_f64(wts);
+        scratch.recycle_f64(prod);
+        let trimmed =
+            (w_total - w_surv + (2 * e) as f64 / m as f64 * w_surv) / w_total;
+        AggregateOutcome { rejected, trimmed_mass: trimmed }
+    }
+
+    fn name(&self) -> &'static str {
+        "trimmed"
+    }
+}
+
+impl Aggregator for CoordinateMedian {
+    fn aggregate_into(
+        &self,
+        payloads: &[&[f32]],
+        weights: &[f64],
+        scratch: &mut RoundScratch,
+        out: &mut Vec<f32>,
+    ) -> AggregateOutcome {
+        let n = check_arity(payloads, weights);
+        let mut survivors: Vec<usize> = Vec::with_capacity(payloads.len());
+        let rejected = finite_survivors(payloads, &mut survivors);
+        let m = survivors.len();
+        if m == 0 {
+            return all_rejected(n, payloads.len(), out);
+        }
+        let w_total = math::sum_f64(weights);
+        assert!(w_total > 0.0, "all-zero averaging weights");
+        let mut wts = scratch.lease_f64();
+        wts.clear();
+        for &i in &survivors {
+            wts.push(weights[i]);
+        }
+        let w_surv = math::sum_f64(&wts);
+        let mut vals = scratch.lease_f64();
+        out.clear();
+        out.reserve(n);
+        for c in 0..n {
+            vals.clear();
+            for &i in &survivors {
+                vals.push(payloads[i][c] as f64);
+            }
+            // Stable insertion sort, same discipline as the trimmed mean.
+            for i in 1..vals.len() {
+                let mut j = i;
+                while j > 0 && vals[j - 1] > vals[j] {
+                    vals.swap(j - 1, j);
+                    j -= 1;
+                }
+            }
+            let est = if m % 2 == 1 {
+                vals[m / 2]
+            } else {
+                (vals[m / 2 - 1] + vals[m / 2]) * 0.5
+            };
+            out.push(est as f32);
+        }
+        scratch.recycle_f64(vals);
+        scratch.recycle_f64(wts);
+        let used = if m % 2 == 1 { 1 } else { 2 };
+        let trimmed =
+            (w_total - w_surv + (m - used) as f64 / m as f64 * w_surv) / w_total;
+        AggregateOutcome { rejected, trimmed_mass: trimmed }
+    }
+
+    fn name(&self) -> &'static str {
+        "median"
+    }
+}
+
+impl Aggregator for Krum {
+    fn aggregate_into(
+        &self,
+        payloads: &[&[f32]],
+        weights: &[f64],
+        scratch: &mut RoundScratch,
+        out: &mut Vec<f32>,
+    ) -> AggregateOutcome {
+        let n = check_arity(payloads, weights);
+        let mut survivors: Vec<usize> = Vec::with_capacity(payloads.len());
+        let _nonfinite = finite_survivors(payloads, &mut survivors);
+        let m = survivors.len();
+        if m == 0 {
+            return all_rejected(n, payloads.len(), out);
+        }
+        let w_total = math::sum_f64(weights);
+        assert!(w_total > 0.0, "all-zero averaging weights");
+        let selected = if m == 1 {
+            survivors[0]
+        } else {
+            // Effective f shrinks with the live roster so the neighbor
+            // count m − f − 2 stays ≥ 1 whenever m ≥ 3 (validate()
+            // guarantees m ≥ 2f + 3 at full roster).
+            let ef = self.f.min(m.saturating_sub(3) / 2);
+            let q = m.saturating_sub(ef + 2).max(1).min(m - 1);
+            // Pairwise squared distances through the audited kernel;
+            // symmetric, so each pair is computed once and mirrored.
+            let mut mat = scratch.lease_f64();
+            mat.clear();
+            mat.resize(m * m, 0.0);
+            for a in 0..m {
+                for b in a + 1..m {
+                    let d =
+                        math::sq_dist(payloads[survivors[a]], payloads[survivors[b]]);
+                    mat[a * m + b] = d;
+                    mat[b * m + a] = d;
+                }
+            }
+            let mut row = scratch.lease_f64();
+            let mut best: Option<(f64, usize)> = None;
+            for a in 0..m {
+                row.clear();
+                for b in 0..m {
+                    if b != a {
+                        row.push(mat[a * m + b]);
+                    }
+                }
+                row.sort_by(f64::total_cmp);
+                let score = math::sum_f64(&row[..q]);
+                // Strict < keeps the lowest payload index on ties.
+                let better = match best {
+                    None => true,
+                    Some((s, _)) => score < s,
+                };
+                if better {
+                    best = Some((score, survivors[a]));
+                }
+            }
+            scratch.recycle_f64(mat);
+            scratch.recycle_f64(row);
+            best.expect("non-empty survivor set").1
+        };
+        out.clear();
+        out.extend_from_slice(payloads[selected]);
+        AggregateOutcome {
+            rejected: payloads.len() - 1,
+            trimmed_mass: (w_total - weights[selected]) / w_total,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "krum"
+    }
+}
+
+/// Instantiate the configured aggregator (`[aggregate]` TOML /
+/// `--aggregate` CLI). Lives here rather than in `config` because the
+/// config crate layer cannot depend on the coordinator.
+pub fn build(cfg: &AggregateConfig) -> Box<dyn Aggregator> {
+    match *cfg {
+        AggregateConfig::WeightedMean => Box::new(WeightedMean),
+        AggregateConfig::TrimmedMean { trim } => Box::new(TrimmedMean { trim }),
+        AggregateConfig::CoordinateMedian => Box::new(CoordinateMedian),
+        AggregateConfig::Krum { f } => Box::new(Krum { f }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn run(
+        agg: &dyn Aggregator,
+        payloads: &[&[f32]],
+        weights: &[f64],
+    ) -> (Vec<f32>, AggregateOutcome) {
+        let mut scratch = RoundScratch::new();
+        let mut out = vec![f32::NAN; 3]; // dirty scratch
+        let outcome = agg.aggregate_into(payloads, weights, &mut scratch, &mut out);
+        (out, outcome)
+    }
+
+    #[test]
+    fn build_maps_every_config_variant() {
+        use crate::config::AggregateConfig as C;
+        assert_eq!(build(&C::WeightedMean).name(), "mean");
+        assert_eq!(build(&C::TrimmedMean { trim: 1 }).name(), "trimmed");
+        assert_eq!(build(&C::CoordinateMedian).name(), "median");
+        assert_eq!(build(&C::Krum { f: 1 }).name(), "krum");
+        assert!(build(&C::WeightedMean).is_mean());
+        assert!(!build(&C::TrimmedMean { trim: 0 }).is_mean());
+    }
+
+    #[test]
+    fn prop_trim_zero_no_attackers_is_bitwise_mean() {
+        // The acceptance-criterion identity at the unit level: with all
+        // contributions finite and trim = 0 the robust path IS the mean
+        // kernel (structural delegation), for every length and weight.
+        check("TrimmedMean{0} == WeightedMean bitwise", 60, |g| {
+            let k = g.usize_in(1..7);
+            let n = g.usize_in(1..50);
+            let payloads: Vec<Vec<f32>> = (0..k)
+                .map(|_| {
+                    let mut v = g.f32_vec(n..n + 1, 3.0);
+                    v.resize(n, 0.0);
+                    v
+                })
+                .collect();
+            let weights: Vec<f64> = (0..k).map(|_| g.f64_in(0.1..5.0)).collect();
+            let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
+            let (mean, om) = run(&WeightedMean, &refs, &weights);
+            let (trim, ot) = run(&TrimmedMean { trim: 0 }, &refs, &weights);
+            assert_eq!(om, ot);
+            assert_eq!(mean.len(), trim.len());
+            for (a, b) in mean.iter().zip(&trim) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn trimmed_mean_drops_outliers_and_accounts_mass() {
+        let a = [1.0f32, 1.0];
+        let b = [1.0f32, 3.0];
+        let c = [100.0f32, -100.0];
+        let (out, o) =
+            run(&TrimmedMean { trim: 1 }, &[&a, &b, &c], &[1.0, 1.0, 1.0]);
+        assert_eq!(out, vec![1.0, 1.0]);
+        assert_eq!(o.rejected, 0);
+        assert!((o.trimmed_mass - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trimmed_mean_weights_survivors() {
+        // Columns sorted: [0, 6, 100] with weights [1, 3, 1]; trim=1
+        // keeps the middle value only — its weight cancels out.
+        let (out, _) = run(
+            &TrimmedMean { trim: 1 },
+            &[&[0.0f32], &[6.0f32], &[100.0f32]],
+            &[1.0, 3.0, 1.0],
+        );
+        assert_eq!(out, vec![6.0]);
+        // trim=1 over 5 values keeps the middle 3, weighted.
+        let (out, _) = run(
+            &TrimmedMean { trim: 1 },
+            &[&[0.0f32], &[2.0f32], &[4.0f32], &[6.0f32], &[100.0f32]],
+            &[1.0, 1.0, 3.0, 1.0, 1.0],
+        );
+        // survivors 2,4,6 with weights 1,3,1 → (2 + 12 + 6)/5 = 4.0
+        assert_eq!(out, vec![4.0]);
+    }
+
+    #[test]
+    fn trimmed_mean_rejects_nonfinite_then_trims_what_is_left() {
+        let nan = [f32::NAN, 1.0];
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let c = [5.0f32, 6.0];
+        let (out, o) = run(
+            &TrimmedMean { trim: 1 },
+            &[&nan, &a, &b, &c],
+            &[1.0, 1.0, 1.0, 1.0],
+        );
+        assert_eq!(o.rejected, 1);
+        assert_eq!(out, vec![3.0, 4.0]); // middle of the 3 finite rows
+        assert!(o.trimmed_mass > 0.0 && o.trimmed_mass < 1.0);
+    }
+
+    #[test]
+    fn trimmed_mean_effective_trim_shrinks_with_roster() {
+        // trim=2 over m=3 would drop everything; effective trim is 1.
+        let (out, _) = run(
+            &TrimmedMean { trim: 2 },
+            &[&[1.0f32], &[2.0f32], &[9.0f32]],
+            &[1.0, 1.0, 1.0],
+        );
+        assert_eq!(out, vec![2.0]);
+    }
+
+    #[test]
+    fn median_odd_even_and_nan_rejection() {
+        let (out, _) = run(
+            &CoordinateMedian,
+            &[&[1.0f32], &[9.0f32], &[2.0f32]],
+            &[1.0, 1.0, 1.0],
+        );
+        assert_eq!(out, vec![2.0]);
+        let (out, _) =
+            run(&CoordinateMedian, &[&[1.0f32], &[3.0f32]], &[1.0, 1.0]);
+        assert_eq!(out, vec![2.0]);
+        let nan = [f32::NAN];
+        let (out, o) = run(
+            &CoordinateMedian,
+            &[&nan, &[1.0f32], &[5.0f32], &[2.0f32]],
+            &[1.0, 1.0, 1.0, 1.0],
+        );
+        assert_eq!(o.rejected, 1);
+        assert_eq!(out, vec![2.0]);
+    }
+
+    #[test]
+    fn median_ignores_weights_in_the_estimate() {
+        let (out, _) = run(
+            &CoordinateMedian,
+            &[&[1.0f32], &[2.0f32], &[100.0f32]],
+            &[0.1, 0.1, 100.0],
+        );
+        assert_eq!(out, vec![2.0]);
+    }
+
+    #[test]
+    fn krum_selects_the_most_surrounded_payload() {
+        // Three near-identical honest rows and one far outlier: the
+        // outlier's neighbor distances are huge, any honest row wins;
+        // tie-break selects the lowest index among equal scores.
+        let h0 = [1.0f32, 1.0];
+        let h1 = [1.1f32, 1.0];
+        let h2 = [0.9f32, 1.0];
+        let bad = [50.0f32, -50.0];
+        let (out, o) =
+            run(&Krum { f: 1 }, &[&bad, &h0, &h1, &h2], &[1.0; 4]);
+        assert_eq!(out, vec![1.0, 1.0]); // h0: lowest index among the cluster
+        assert_eq!(o.rejected, 3);
+        assert!((o.trimmed_mass - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn krum_rejects_nonfinite_and_survives_tiny_rosters() {
+        let nan = [f32::NAN];
+        let (out, _) =
+            run(&Krum { f: 1 }, &[&nan, &[2.0f32]], &[1.0, 1.0]);
+        assert_eq!(out, vec![2.0]);
+        // Two finite rows, f too large for the roster: effective f
+        // shrinks, scores tie, lowest index wins.
+        let (out, _) =
+            run(&Krum { f: 5 }, &[&[3.0f32], &[4.0f32]], &[1.0, 1.0]);
+        assert_eq!(out, vec![3.0]);
+    }
+
+    #[test]
+    fn all_nonfinite_contributions_yield_zero_fragment() {
+        let nan = [f32::NAN, f32::INFINITY];
+        for agg in [
+            &TrimmedMean { trim: 1 } as &dyn Aggregator,
+            &CoordinateMedian,
+            &Krum { f: 0 },
+        ] {
+            let (out, o) = run(agg, &[&nan, &nan], &[1.0, 1.0]);
+            assert_eq!(out, vec![0.0, 0.0], "{}", agg.name());
+            assert_eq!(o.rejected, 2);
+            assert_eq!(o.trimmed_mass, 1.0);
+        }
+    }
+
+    #[test]
+    fn prop_robust_estimates_stay_within_honest_bounds() {
+        // With any minority of arbitrarily corrupted rows, trimmed mean
+        // (trim ≥ #bad) and median stay within the elementwise honest
+        // min/max envelope.
+        check("robust estimators bounded by honest envelope", 40, |g| {
+            let honest = g.usize_in(3..6);
+            let n = g.usize_in(1..20);
+            let mut payloads: Vec<Vec<f32>> = (0..honest)
+                .map(|_| {
+                    let mut v = g.f32_vec(n..n + 1, 2.0);
+                    v.resize(n, 0.0);
+                    v
+                })
+                .collect();
+            let mut bad = vec![0.0f32; n];
+            for x in bad.iter_mut() {
+                *x = 1.0e6;
+            }
+            payloads.push(bad);
+            let weights = vec![1.0f64; payloads.len()];
+            let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
+            for agg in
+                [&TrimmedMean { trim: 1 } as &dyn Aggregator, &CoordinateMedian]
+            {
+                let (out, _) = run(agg, &refs, &weights);
+                for c in 0..n {
+                    let mut lo = f32::INFINITY;
+                    let mut hi = f32::NEG_INFINITY;
+                    for p in payloads[..honest].iter() {
+                        lo = lo.min(p[c]);
+                        hi = hi.max(p[c]);
+                    }
+                    assert!(
+                        out[c] >= lo - 1e-4 && out[c] <= hi + 1e-4,
+                        "{}: coord {c} value {} outside honest [{lo}, {hi}]",
+                        agg.name(),
+                        out[c]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn estimators_are_deterministic_across_repeated_calls() {
+        // Same inputs, fresh vs reused scratch: identical bits and
+        // outcomes — the Aggregator determinism contract at unit scale.
+        let a = [1.5f32, -2.0, 3.0];
+        let b = [0.5f32, 2.0, -1.0];
+        let c = [9.0f32, -9.0, 9.0];
+        let refs: [&[f32]; 3] = [&a, &b, &c];
+        let w = [1.0, 2.0, 0.5];
+        for agg in [
+            &WeightedMean as &dyn Aggregator,
+            &TrimmedMean { trim: 1 },
+            &CoordinateMedian,
+            &Krum { f: 0 },
+        ] {
+            let (x, ox) = run(agg, &refs, &w);
+            let mut scratch = RoundScratch::new();
+            let mut out = Vec::new();
+            // Warm the arena with a throwaway call, then re-run.
+            agg.aggregate_into(&refs, &w, &mut scratch, &mut out);
+            let oy = agg.aggregate_into(&refs, &w, &mut scratch, &mut out);
+            assert_eq!(ox, oy, "{}", agg.name());
+            assert_eq!(x.len(), out.len());
+            for (p, q) in x.iter().zip(&out) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{}", agg.name());
+            }
+        }
+    }
+}

@@ -49,10 +49,14 @@ pub fn uniform_average_refs(ts: &[&Tensors]) -> Tensors {
 /// payload, axpy the rest), so a single fragment covering the whole
 /// parameter space reproduces the monolithic average bitwise — the
 /// property tests below pin that equivalence.
+#[deprecated(
+    since = "0.10.0",
+    note = "use `coordinator::aggregate::WeightedMean::mean` (the Aggregator API)"
+)]
 pub fn weighted_average_flat(payloads: &[Vec<f32>], weights: &[f64]) -> Vec<f32> {
     let mut norm = Vec::new();
     let mut out = Vec::new();
-    weighted_average_into(payloads, weights, &mut norm, &mut out);
+    fused_weighted_mean_into(payloads, weights, &mut norm, &mut out);
     out
 }
 
@@ -61,8 +65,9 @@ pub fn weighted_average_flat(payloads: &[Vec<f32>], weights: &[f64]) -> Vec<f32>
 /// payload passes, instead of streaming the full accumulator k times.
 const BLOCK: usize = 512;
 
-/// Allocation-free fused weighted average — the hot-path form every
-/// other signature delegates to. `norm` and `out` are caller-provided
+/// Allocation-free fused weighted average — the hot-path kernel every
+/// other signature (and the [`crate::coordinator::aggregate::WeightedMean`]
+/// aggregator) delegates to. `norm` and `out` are caller-provided
 /// scratch (leased from [`super::scratch::RoundScratch`] on the round
 /// loop); both are cleared before use, so reuse across rounds cannot
 /// leak stale values.
@@ -77,7 +82,11 @@ const BLOCK: usize = 512;
 /// property tests pin equality with the multi-pass reference bit for
 /// bit. Float-op *reordering* lives only in the opt-in
 /// [`weighted_average_pairwise_into`].
-pub fn weighted_average_into<P: AsRef<[f32]>>(
+///
+/// This file is one of the two D4-audited float-fold homes (DESIGN.md
+/// §15), which is why the kernel body — including the `weights` total —
+/// lives here rather than in `coordinator/aggregate.rs`.
+pub fn fused_weighted_mean_into<P: AsRef<[f32]>>(
     payloads: &[P],
     weights: &[f64],
     norm: &mut Vec<f32>,
@@ -109,6 +118,23 @@ pub fn weighted_average_into<P: AsRef<[f32]>>(
         }
         start = end;
     }
+}
+
+/// Legacy name for [`fused_weighted_mean_into`] — a zero-cost delegating
+/// shim kept for one release so out-of-tree callers migrate at their own
+/// pace. Bitwise-identical by construction; the shim property test pins
+/// it.
+#[deprecated(
+    since = "0.10.0",
+    note = "use `coordinator::aggregate::Aggregator` / `WeightedMean::mean_into`"
+)]
+pub fn weighted_average_into<P: AsRef<[f32]>>(
+    payloads: &[P],
+    weights: &[f64],
+    norm: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) {
+    fused_weighted_mean_into(payloads, weights, norm, out);
 }
 
 /// Opt-in (`[engine] fast_math = true`) pairwise-tree reduction across
@@ -170,6 +196,7 @@ fn pairwise_sum(payloads: &[&[f32]], w: &[f32], out: &mut [f32]) {
 /// ring average == star average, bit for bit).
 ///
 /// ```
+/// #![allow(deprecated)]
 /// use diloco::coordinator::average::weighted_average_refs;
 ///
 /// let a = [0.0f32, 2.0];
@@ -177,10 +204,14 @@ fn pairwise_sum(payloads: &[&[f32]], w: &[f32], out: &mut [f32]) {
 /// let avg = weighted_average_refs(&[&a, &b], &[1.0, 1.0]);
 /// assert_eq!(avg, vec![2.0, 4.0]);
 /// ```
+#[deprecated(
+    since = "0.10.0",
+    note = "use `coordinator::aggregate::WeightedMean::mean` (the Aggregator API)"
+)]
 pub fn weighted_average_refs(payloads: &[&[f32]], weights: &[f64]) -> Vec<f32> {
     let mut norm = Vec::new();
     let mut out = Vec::new();
-    weighted_average_into(payloads, weights, &mut norm, &mut out);
+    fused_weighted_mean_into(payloads, weights, &mut norm, &mut out);
     out
 }
 
@@ -191,6 +222,16 @@ mod tests {
 
     fn t(vals: &[f32]) -> Tensors {
         Tensors::from_raw(vec![vals.to_vec()])
+    }
+
+    /// Non-deprecated convenience over the fused kernel for the tests
+    /// below (the production owned-payload entry point is now
+    /// `aggregate::WeightedMean`).
+    fn flat_mean(payloads: &[Vec<f32>], weights: &[f64]) -> Vec<f32> {
+        let mut norm = Vec::new();
+        let mut out = Vec::new();
+        fused_weighted_mean_into(payloads, weights, &mut norm, &mut out);
+        out
     }
 
     #[test]
@@ -281,7 +322,7 @@ mod tests {
                 .iter()
                 .map(|d| d.iter_flat().collect())
                 .collect();
-            let flat = weighted_average_flat(&payloads, &weights);
+            let flat = flat_mean(&payloads, &weights);
             let legacy_flat: Vec<f32> = legacy.iter_flat().collect();
             assert_eq!(flat.len(), legacy_flat.len());
             for (a, b) in flat.iter().zip(&legacy_flat) {
@@ -316,7 +357,7 @@ mod tests {
             for f in 0..plan.n_fragments() {
                 let payloads: Vec<Vec<f32>> =
                     deltas.iter().map(|d| plan.extract(d, f)).collect();
-                let avg = weighted_average_flat(&payloads, &weights);
+                let avg = flat_mean(&payloads, &weights);
                 plan.scatter(&avg, f, &mut assembled);
             }
             for (a, b) in assembled.iter_flat().zip(legacy.iter_flat()) {
@@ -361,7 +402,7 @@ mod tests {
             let want = multipass_reference(&refs, &weights);
             let mut norm = vec![f32::NAN; 2]; // dirty scratch
             let mut out = vec![f32::NAN; n + 3];
-            super::weighted_average_into(&payloads, &weights, &mut norm, &mut out);
+            super::fused_weighted_mean_into(&payloads, &weights, &mut norm, &mut out);
             assert_eq!(out.len(), want.len());
             for (a, b) in out.iter().zip(&want) {
                 assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
@@ -380,7 +421,7 @@ mod tests {
             let refs: Vec<&[f32]> =
                 payloads.iter().map(|p| p.as_slice()).collect();
             let want = multipass_reference(&refs, &weights);
-            let got = weighted_average_flat(&payloads, &weights);
+            let got = flat_mean(&payloads, &weights);
             for (a, b) in got.iter().zip(&want) {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
@@ -403,7 +444,7 @@ mod tests {
                 })
                 .collect();
             let weights: Vec<f64> = (0..k).map(|_| g.f64_in(0.1..5.0)).collect();
-            let seq = weighted_average_flat(&payloads, &weights);
+            let seq = flat_mean(&payloads, &weights);
             let mut norm = Vec::new();
             let mut out = Vec::new();
             super::weighted_average_pairwise_into(
@@ -434,7 +475,7 @@ mod tests {
                 .map(|j| (0..37).map(|i| (i * (j + 1)) as f32 * 0.3 - 4.0).collect())
                 .collect();
             let weights: Vec<f64> = (0..k).map(|j| 1.0 + j as f64).collect();
-            let seq = weighted_average_flat(&payloads, &weights);
+            let seq = flat_mean(&payloads, &weights);
             let mut norm = Vec::new();
             let mut out = Vec::new();
             super::weighted_average_pairwise_into(
@@ -444,6 +485,38 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
         }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn prop_deprecated_shims_delegate_bitwise() {
+        // The three legacy names are pure delegating shims over the
+        // fused kernel: same bits, every length, dirty scratch included.
+        check("deprecated trio == fused kernel bitwise", 40, |g| {
+            let k = g.usize_in(1..6);
+            let n = g.usize_in(1..60);
+            let payloads: Vec<Vec<f32>> = (0..k)
+                .map(|_| {
+                    let mut v = g.f32_vec(n..n + 1, 3.0);
+                    v.resize(n, 0.0);
+                    v
+                })
+                .collect();
+            let weights: Vec<f64> = (0..k).map(|_| g.f64_in(0.1..5.0)).collect();
+            let want = flat_mean(&payloads, &weights);
+            let flat = weighted_average_flat(&payloads, &weights);
+            let refs: Vec<&[f32]> = payloads.iter().map(|p| p.as_slice()).collect();
+            let by_ref = weighted_average_refs(&refs, &weights);
+            let mut norm = vec![f32::NAN; 1];
+            let mut into = vec![f32::NAN; n + 2];
+            weighted_average_into(&payloads, &weights, &mut norm, &mut into);
+            for got in [&flat, &by_ref, &into] {
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+                }
+            }
+        });
     }
 
     #[test]

@@ -39,6 +39,8 @@
 //! discounting stale contributions by `γ^staleness`. `D = 0` with
 //! homogeneous speeds is the synchronous loop, bitwise.
 
+pub mod adversary;
+pub mod aggregate;
 pub mod average;
 pub mod baselines;
 pub mod opt;
@@ -409,6 +411,7 @@ impl Coordinator {
         codec_err_sq_total: f64,
         pending_sync: &[PendingSync],
         residuals: &[Tensors],
+        stale: Vec<(usize, Tensors)>,
     ) -> anyhow::Result<()> {
         let path = self
             .cfg
@@ -431,6 +434,7 @@ impl Coordinator {
             codec_err_sq_total,
             pending_sync: pending_sync.to_vec(),
             residuals: residuals.to_vec(),
+            stale,
         };
         checkpoint::save_state(path, &self.rt.manifest, &st)
     }
@@ -584,6 +588,21 @@ impl Coordinator {
         // that produced it — the synchronous legacy loop, bitwise.
         let delay = cfg.sync.delay_rounds;
         let mut pending: Vec<PendingSync> = Vec::new();
+        // Outer aggregation estimator (`[aggregate]`, DESIGN.md §16):
+        // the weighted mean by default — bitwise the legacy reduction —
+        // or a Byzantine-robust estimator. Robust estimators reduce
+        // serially (they lease per-coordinate columns from the arena),
+        // so the parallel fragment fan-out below stays gated on
+        // `agg.is_mean()`.
+        let agg = aggregate::build(&cfg.aggregate);
+        // Byzantine attacker model (`[adversary]`, DESIGN.md §16):
+        // corrupts compromised workers' outer deltas after the inner
+        // phase and before pruning/codec/billing, so byte bills are
+        // invariant under attack.
+        let mut adv: Option<adversary::Adversary> = cfg
+            .adversary
+            .as_ref()
+            .map(|a| adversary::Adversary::new(a, cfg.seed, max_k));
         let mut start_round = 0usize;
 
         // Resume: overwrite every piece of mutable loop state with the
@@ -623,6 +642,12 @@ impl Coordinator {
             // off) carry no residuals — resume with zeros.
             if ef && !st.residuals.is_empty() {
                 residuals = st.residuals;
+            }
+            // Pre-v4 checkpoints (and non-stale-replay runs) park no
+            // stale deltas — a resumed stale-replay attacker then ships
+            // one honest delta first, exactly like round 0.
+            if let Some(a) = adv.as_mut() {
+                a.restore_stale(st.stale);
             }
             let snap = st
                 .outer
@@ -781,6 +806,13 @@ impl Coordinator {
             for &wid in &roster {
                 let w = &workers[wid];
                 let mut delta = refs[wid].delta(&w.params);
+                // Byzantine corruption happens exactly here: after the
+                // honest inner phase produced the outer delta, before
+                // error-feedback replay, pruning, the codec, and any
+                // billing — a corrupted round ships the same bytes.
+                if let Some(a) = adv.as_mut() {
+                    a.corrupt(t, wid, &mut delta);
+                }
                 if ef {
                     // Error feedback (MuLoCo): replay what the last
                     // compressed upload of each due fragment failed to
@@ -1051,7 +1083,14 @@ impl Coordinator {
                 (0..due.len()).filter(|&di| !frag_rx[di].is_empty()).collect();
             let reduce_threads = self.exec.reduce_threads(nonempty.len());
             let mut frag_avgs: Vec<Option<Vec<f32>>> = vec![None; due.len()];
-            if reduce_threads > 1 && nonempty.len() > 1 {
+            // Robust-aggregation outcome accumulators for the round's
+            // stats columns: rejected contributions sum; trimmed weight
+            // mass averages over the round's aggregation calls. Both
+            // stay zero on the mean path.
+            let mut agg_rejected = 0usize;
+            let mut agg_trim_sum = 0.0f64;
+            let mut agg_calls = 0usize;
+            if agg.is_mean() && reduce_threads > 1 && nonempty.len() > 1 {
                 let mut tasks: Vec<
                     Box<dyn FnOnce() -> (usize, Vec<f32>, Vec<f32>) + Send + '_>,
                 > = Vec::with_capacity(nonempty.len());
@@ -1064,9 +1103,8 @@ impl Coordinator {
                                 rx, wts, &mut norm, &mut out,
                             );
                         } else {
-                            average::weighted_average_into(
-                                rx, wts, &mut norm, &mut out,
-                            );
+                            aggregate::WeightedMean
+                                .mean_into(rx, wts, &mut norm, &mut out);
                         }
                         (di, norm, out)
                     }));
@@ -1075,7 +1113,7 @@ impl Coordinator {
                     scratch.recycle(norm);
                     frag_avgs[di] = Some(out);
                 }
-            } else {
+            } else if agg.is_mean() {
                 for &di in &nonempty {
                     let (mut norm, mut out) = (scratch.lease(), scratch.lease());
                     if fast_math {
@@ -1083,11 +1121,29 @@ impl Coordinator {
                             &frag_rx[di], &frag_wts[di], &mut norm, &mut out,
                         );
                     } else {
-                        average::weighted_average_into(
+                        aggregate::WeightedMean.mean_into(
                             &frag_rx[di], &frag_wts[di], &mut norm, &mut out,
                         );
                     }
                     scratch.recycle(norm);
+                    frag_avgs[di] = Some(out);
+                }
+            } else {
+                // Robust estimators (`[aggregate]` ≠ mean) reduce each
+                // fragment serially: every call leases per-coordinate
+                // columns from the shared arena, and the due order is
+                // the deterministic fold order. `fast_math` composes
+                // with the mean only — validate() rejects the rest.
+                for &di in &nonempty {
+                    let mut out = scratch.lease();
+                    let views: Vec<&[f32]> =
+                        frag_rx[di].iter().map(|v| v.as_slice()).collect();
+                    let outcome = agg.aggregate_into(
+                        &views, &frag_wts[di], &mut scratch, &mut out,
+                    );
+                    agg_rejected += outcome.rejected;
+                    agg_trim_sum += outcome.trimmed_mass;
+                    agg_calls += 1;
                     frag_avgs[di] = Some(out);
                 }
             }
@@ -1135,6 +1191,10 @@ impl Coordinator {
                 rs.codec_err_l2 = codec_err_sq.sqrt();
                 rs.active_workers = k_t;
                 rs.idle_s = idle;
+                rs.rejected = agg_rejected;
+                if agg_calls > 0 {
+                    rs.trimmed_mass = agg_trim_sum / agg_calls as f64;
+                }
                 rs
             });
             if stats_rec.is_some() {
@@ -1236,6 +1296,7 @@ impl Coordinator {
                     codec_err_sq_total,
                     &pending,
                     &residuals,
+                    adv.as_ref().map(|a| a.stale_entries()).unwrap_or_default(),
                 )?;
             }
         }
@@ -1310,6 +1371,15 @@ impl Coordinator {
         // state as the centralized loop (see `RoundScratch`).
         let mut scratch = scratch::RoundScratch::new();
         let fast_math = cfg.fast_math;
+        // Pluggable outer aggregation + Byzantine attacker model, as on
+        // the centralized loop (DESIGN.md §16). Here the estimator runs
+        // inside each mixing row: a robust row aggregates the positive-
+        // weight peer payloads it would otherwise have averaged.
+        let agg = aggregate::build(&cfg.aggregate);
+        let mut adv: Option<adversary::Adversary> = cfg
+            .adversary
+            .as_ref()
+            .map(|a| adversary::Adversary::new(a, cfg.seed, max_k));
         let mut refs: Vec<Tensors> = (0..max_k).map(|_| global.clone()).collect();
         // Per-worker error-feedback residuals, exactly as on the
         // centralized loop. Decentralized senders always mix their own
@@ -1359,6 +1429,11 @@ impl Coordinator {
             // off) carry no residuals — resume with zeros.
             if ef && !st.residuals.is_empty() {
                 residuals = st.residuals;
+            }
+            // Pre-v4 checkpoints park no stale-replay deltas; a resumed
+            // attacker then ships one honest delta, like round 0.
+            if let Some(a) = adv.as_mut() {
+                a.restore_stale(st.stale);
             }
         }
         let mut ever_active = self.ever_active_before(start_round, max_k);
@@ -1482,6 +1557,12 @@ impl Coordinator {
             for &wid in &roster {
                 let w = &workers[wid];
                 let mut delta = refs[wid].delta(&w.params);
+                // Byzantine corruption: after the inner phase, before
+                // error feedback, pruning, the codec, and billing —
+                // identical placement to the centralized loop.
+                if let Some(a) = adv.as_mut() {
+                    a.corrupt(t, wid, &mut delta);
+                }
                 if ef {
                     // Error feedback: replay the last round's
                     // compression residual into this outer delta.
@@ -1578,6 +1659,12 @@ impl Coordinator {
             let mut dropped_any = vec![false; k_t];
             let mut fragments_synced = 0usize;
             let mut avg_assembled: Option<Tensors> = None;
+            // Robust-aggregation outcome accumulators: one sample per
+            // *performed* aggregation (the ring's shared row counts
+            // once, not once per replica). Zero on the mean path.
+            let mut agg_rejected = 0usize;
+            let mut agg_trim_sum = 0.0f64;
+            let mut agg_calls = 0usize;
             for (di, &f) in due.iter().enumerate() {
                 // Execute the fragment's transfer schedule against the
                 // fabric; the schedule speaks roster *positions*, which
@@ -1666,10 +1753,13 @@ impl Coordinator {
                 // Mixed averages land in leased scratch (the arena is
                 // threaded through as an argument so the closure holds
                 // no long-lived &mut). `fast_math` swaps the reduction
-                // for the tolerance-gated pairwise tree (DESIGN.md §12).
+                // for the tolerance-gated pairwise tree (DESIGN.md §12);
+                // a non-mean `[aggregate]` estimator replaces it with a
+                // robust reduction over the row's positive-weight peers,
+                // and each call reports its rejection outcome.
                 let mix = |row: &[f64],
                            scratch: &mut scratch::RoundScratch|
-                 -> Option<Vec<f32>> {
+                 -> Option<(Vec<f32>, aggregate::AggregateOutcome)> {
                     let mut pl: Vec<&[f32]> = Vec::with_capacity(k_t);
                     let mut wt: Vec<f64> = Vec::with_capacity(k_t);
                     for (j, &wgt) in row.iter().enumerate() {
@@ -1681,17 +1771,23 @@ impl Coordinator {
                     if pl.is_empty() {
                         return None;
                     }
-                    let mut norm = scratch.lease();
                     let mut out = scratch.lease();
-                    if fast_math {
-                        average::weighted_average_pairwise_into(
-                            &pl, &wt, &mut norm, &mut out,
-                        );
+                    let outcome = if agg.is_mean() {
+                        let mut norm = scratch.lease();
+                        if fast_math {
+                            average::weighted_average_pairwise_into(
+                                &pl, &wt, &mut norm, &mut out,
+                            );
+                        } else {
+                            aggregate::WeightedMean
+                                .mean_into(&pl, &wt, &mut norm, &mut out);
+                        }
+                        scratch.recycle(norm);
+                        aggregate::AggregateOutcome::default()
                     } else {
-                        average::weighted_average_into(&pl, &wt, &mut norm, &mut out);
-                    }
-                    scratch.recycle(norm);
-                    Some(out)
+                        agg.aggregate_into(&pl, &wt, scratch, &mut out)
+                    };
+                    Some((out, outcome))
                 };
                 // All-equal rows (the ring) share one mixed average
                 // instead of recomputing k bit-identical ones.
@@ -1699,13 +1795,21 @@ impl Coordinator {
                     && rows.windows(2).all(|w| w[0] == w[1]))
                 .then(|| mix(&rows[0], &mut scratch))
                 .flatten();
+                if let Some((_, oc)) = &shared {
+                    agg_rejected += oc.rejected;
+                    agg_trim_sum += oc.trimmed_mass;
+                    agg_calls += 1;
+                }
                 for (r, row) in rows.iter().enumerate() {
                     let mut owned: Option<Vec<f32>> = None;
-                    let mixed: &[f32] = if let Some(m) = &shared {
+                    let mixed: &[f32] = if let Some((m, _)) = &shared {
                         m
                     } else {
                         match mix(row, &mut scratch) {
-                            Some(m) => {
+                            Some((m, oc)) => {
+                                agg_rejected += oc.rejected;
+                                agg_trim_sum += oc.trimmed_mass;
+                                agg_calls += 1;
                                 owned = Some(m);
                                 owned.as_deref().unwrap()
                             }
@@ -1719,7 +1823,7 @@ impl Coordinator {
                         scratch.recycle(m);
                     }
                 }
-                if let Some(m) = shared {
+                if let Some((m, _)) = shared {
                     scratch.recycle(m);
                 }
                 fragments_synced += 1;
@@ -1730,7 +1834,7 @@ impl Coordinator {
                 // bitwise reduction regardless of `fast_math`.
                 let mut norm = scratch.lease();
                 let mut avg = scratch.lease();
-                average::weighted_average_into(
+                aggregate::WeightedMean.mean_into(
                     &payloads[di], &weights, &mut norm, &mut avg,
                 );
                 plan.scatter(&avg, f, avg_assembled.get_or_insert_with(|| zeros.clone()));
@@ -1755,6 +1859,10 @@ impl Coordinator {
                 rs.codec_err_l2 = codec_err_sq.sqrt();
                 rs.active_workers = k_t;
                 rs.idle_s = idle;
+                rs.rejected = agg_rejected;
+                if agg_calls > 0 {
+                    rs.trimmed_mass = agg_trim_sum / agg_calls as f64;
+                }
                 let active_replicas: Vec<&Tensors> =
                     roster.iter().map(|&id| &replicas[id]).collect();
                 consensus = average::uniform_average_refs(&active_replicas);
@@ -1806,6 +1914,7 @@ impl Coordinator {
                     codec_err_sq_total,
                     &[],
                     &residuals,
+                    adv.as_ref().map(|a| a.stale_entries()).unwrap_or_default(),
                 )?;
             }
         }

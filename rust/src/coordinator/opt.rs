@@ -19,6 +19,14 @@
 //! different cadences under the staggered schedule). The monolithic
 //! [`OuterOpt::step`] is fragment 0 covering everything, and performs
 //! bit-identical arithmetic to the pre-streaming implementation.
+//!
+//! **Robust aggregation.** The outer optimizer is downstream of the
+//! [`crate::coordinator::aggregate::Aggregator`] seam: Δ here is
+//! whatever estimator the `[aggregate]` section selected (weighted
+//! mean by default; trimmed mean / coordinate median / Krum under
+//! Byzantine workers). The optimizer never sees individual
+//! contributions, so swapping the estimator changes only the Δ bytes
+//! it is handed — the recurrence itself stays bitwise.
 
 use crate::comm::fragment::{FragmentPlan, LeafSlice};
 use crate::config::OuterOptConfig;

@@ -15,15 +15,17 @@
 //! scratch-reuse property tests pin bitwise equality against
 //! fresh-allocation runs (DESIGN.md §12).
 
-/// Free-list arena of `Vec<f32>` buffers (see module docs).
+/// Free-list arena of `Vec<f32>` (and, for the robust aggregators'
+/// per-coordinate column views, `Vec<f64>`) buffers (see module docs).
 #[derive(Default)]
 pub struct RoundScratch {
     free: Vec<Vec<f32>>,
+    free_f64: Vec<Vec<f64>>,
 }
 
 impl RoundScratch {
     pub fn new() -> RoundScratch {
-        RoundScratch { free: Vec::new() }
+        RoundScratch { free: Vec::new(), free_f64: Vec::new() }
     }
 
     /// Take a buffer from the free list (or create one on first use).
@@ -39,11 +41,26 @@ impl RoundScratch {
         self.free.push(v);
     }
 
-    /// Buffers currently parked in the free list (test/bench hook: a
+    /// As [`lease`](Self::lease), for the f64 side pool. The robust
+    /// aggregators ([`crate::coordinator::aggregate`]) lease their
+    /// per-coordinate value/weight columns here once per call and sweep
+    /// them across every coordinate, so trimming and medians stay
+    /// allocation-free in the steady state.
+    pub fn lease_f64(&mut self) -> Vec<f64> {
+        self.free_f64.pop().unwrap_or_default()
+    }
+
+    /// As [`recycle`](Self::recycle), for the f64 side pool.
+    pub fn recycle_f64(&mut self, mut v: Vec<f64>) {
+        v.clear();
+        self.free_f64.push(v);
+    }
+
+    /// Buffers currently parked in the free lists (test/bench hook: a
     /// steady-state round leases and recycles the same buffers, so this
     /// stabilizes after the first round).
     pub fn pooled(&self) -> usize {
-        self.free.len()
+        self.free.len() + self.free_f64.len()
     }
 }
 
@@ -64,6 +81,23 @@ mod tests {
         assert!(b.is_empty(), "recycled buffer leaked stale length");
         assert!(b.capacity() >= cap, "capacity was not retained");
         assert_eq!(s.pooled(), 0);
+    }
+
+    #[test]
+    fn f64_pool_is_independent_and_starts_empty() {
+        let mut s = RoundScratch::new();
+        let mut a = s.lease_f64();
+        assert!(a.is_empty());
+        a.extend_from_slice(&[1.0f64, 2.0]);
+        let cap = a.capacity();
+        s.recycle_f64(a);
+        // The two pools never exchange buffers.
+        let f32_buf = s.lease();
+        assert!(f32_buf.is_empty() && f32_buf.capacity() == 0);
+        s.recycle(f32_buf);
+        let b = s.lease_f64();
+        assert!(b.is_empty(), "recycled f64 buffer leaked stale length");
+        assert!(b.capacity() >= cap, "f64 capacity was not retained");
     }
 
     #[test]
@@ -117,14 +151,17 @@ mod tests {
                     }
                     let mut norm = scratch.lease();
                     let mut out = scratch.lease();
-                    average::weighted_average_into(
+                    average::fused_weighted_mean_into(
                         &payloads, &weights, &mut norm, &mut out,
                     );
                     // Fresh path: plain allocations, same arithmetic.
                     let fresh_payloads: Vec<Vec<f32>> =
                         deltas.iter().map(|d| plan.extract(d, f)).collect();
-                    let fresh =
-                        average::weighted_average_flat(&fresh_payloads, &weights);
+                    let mut fresh_norm = Vec::new();
+                    let mut fresh = Vec::new();
+                    average::fused_weighted_mean_into(
+                        &fresh_payloads, &weights, &mut fresh_norm, &mut fresh,
+                    );
                     assert_eq!(out.len(), fresh.len());
                     for (x, y) in out.iter().zip(&fresh) {
                         assert_eq!(x.to_bits(), y.to_bits(), "{x} != {y}");

@@ -43,6 +43,18 @@ pub struct RoundStats {
     /// compute). 0.0 only when every island finishes simultaneously;
     /// grows with `[speed]` heterogeneity.
     pub idle_s: f64,
+    /// Contributions the round's robust aggregator rejected outright
+    /// (non-finite payloads, Krum's non-selected rows), summed over the
+    /// round's aggregations. Always 0 under the default
+    /// `coordinator::aggregate::WeightedMean`, which averages everything
+    /// it is handed.
+    pub rejected: usize,
+    /// Mean (over the round's aggregations) of the weight-mass share
+    /// each robust estimator discarded — rejected weight plus the
+    /// trimmed/unused share of the surviving weight, normalized by total
+    /// weight (see `coordinator::aggregate::AggregateOutcome`). 0.0
+    /// under the plain weighted mean.
+    pub trimmed_mass: f64,
 }
 
 /// Mean L2 distance of `replicas` from `consensus` (their uniform mean).
@@ -107,6 +119,8 @@ pub fn round_stats(round: usize, deltas: &[Tensors], avg: &Tensors) -> RoundStat
         active_workers: deltas.len(),
         staleness: 0,
         idle_s: 0.0,
+        rejected: 0,
+        trimmed_mass: 0.0,
     }
 }
 

@@ -16,8 +16,8 @@
 
 use diloco::config::toml::TomlDoc;
 use diloco::config::{
-    ChurnConfig, EngineConfig, ExperimentConfig, SpeedConfig, StreamConfig,
-    TopologyConfig,
+    AdversaryConfig, AggregateConfig, ChurnConfig, EngineConfig, ExperimentConfig,
+    SpeedConfig, StreamConfig, TopologyConfig,
 };
 use diloco::coordinator::Coordinator;
 use diloco::data::Dataset;
@@ -96,6 +96,10 @@ fn print_help() {
          \x20       [--speed w3=2.0,w7=1.5..3.0,jitter:0.2] [--delay D] [--discount G]\n\
          \x20       (speed: per-worker compute-time factors; delay: apply outer\n\
          \x20        contributions D rounds late; discount: stale weight gamma^s)\n\
+         \x20       [--aggregate mean|trimmed:N|median|krum:F]\n\
+         \x20       [--adversary flip:0.25|noise:0.25:3.0|nan:0.25|stale:0.25]\n\
+         \x20       (aggregate: robust outer estimator; adversary: kind:fraction[:scale]\n\
+         \x20        — floor(fraction*pool) seeded workers corrupt their outer delta)\n\
          \x20       [--save-every N --save-path state.ckpt] [--resume state.ckpt]\n\
          \x20       [--fabric sim|tcp] (tcp: islands run as real worker processes;\n\
          \x20        sim — the default — is the bitwise golden path)\n\
@@ -153,6 +157,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.sync.discount = discount
             .parse()
             .map_err(|e| anyhow::anyhow!("bad --discount {discount:?}: {e}"))?;
+    }
+    if let Some(aggregate) = args.get("aggregate") {
+        cfg.aggregate = AggregateConfig::parse(aggregate)?;
+    }
+    if let Some(adversary) = args.get("adversary") {
+        cfg.adversary = Some(AdversaryConfig::parse(adversary)?);
     }
     if let Some(every) = args.get("save-every") {
         cfg.ckpt.save_every = every
@@ -220,6 +230,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         println!(
             "async: outer contributions applied {} rounds late, discount {:.2}^s",
             cfg.sync.delay_rounds, cfg.sync.discount
+        );
+    }
+    if !cfg.aggregate.is_default() {
+        println!("aggregate: robust outer estimator {}", cfg.aggregate.label());
+    }
+    if let Some(adv) = &cfg.adversary {
+        println!(
+            "adversary: {} — {} of {} workers compromised (ids drawn from the seed)",
+            adv.label(),
+            adv.n_attackers(cfg.pool_size()),
+            cfg.pool_size()
         );
     }
     if cfg.ckpt.save_every > 0 {

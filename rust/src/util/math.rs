@@ -52,6 +52,22 @@ pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
     dot(a, b) / (na * nb)
 }
 
+/// Σ (a[i] - b[i])² in f64 accumulation — audited squared L2 distance.
+///
+/// Krum's pairwise distance matrix routes through this kernel so the
+/// fold order stays pinned (DESIGN.md §15, D4) no matter how the
+/// caller iterates the worker pairs.
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = *x as f64 - *y as f64;
+            d * d
+        })
+        .sum()
+}
+
 /// out[i] += x[i]
 pub fn add_assign(out: &mut [f32], x: &[f32]) {
     assert_eq!(out.len(), x.len());
@@ -180,6 +196,22 @@ mod tests {
         assert_eq!(sum_as_f64(&fs), wide);
         assert_eq!(sum_f64(&[]), 0.0);
         assert_eq!(sum_as_f64(&[]), 0.0);
+    }
+
+    #[test]
+    fn sq_dist_matches_reference_fold() {
+        let a = [1.0f32, -2.0, 3.5, 0.25];
+        let b = [0.5f32, 2.0, -1.5, 0.25];
+        let mut acc = 0.0f64;
+        for (x, y) in a.iter().zip(&b) {
+            let d = *x as f64 - *y as f64;
+            acc += d * d;
+        }
+        assert_eq!(sq_dist(&a, &b), acc);
+        assert_eq!(sq_dist(&a, &a), 0.0);
+        assert_eq!(sq_dist(&[], &[]), 0.0);
+        // Symmetric: the per-pair squared term is order-free.
+        assert_eq!(sq_dist(&a, &b), sq_dist(&b, &a));
     }
 
     #[test]

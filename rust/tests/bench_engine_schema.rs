@@ -18,8 +18,14 @@ fn ledger() -> Json {
 }
 
 /// Sections whose run rows are arrays of per-variant objects.
-const ARRAY_SECTIONS: &[&str] =
-    &["stream_sync", "topology", "churn", "async_delay", "table6_sparse_wire"];
+const ARRAY_SECTIONS: &[&str] = &[
+    "stream_sync",
+    "topology",
+    "churn",
+    "async_delay",
+    "table6_sparse_wire",
+    "byzantine",
+];
 /// Sections whose run entry is a single object of columns.
 const OBJECT_SECTIONS: &[&str] = &["microbench_hotpath", "fig2_table2_main"];
 

@@ -4,8 +4,9 @@
 use diloco::checkpoint;
 use diloco::comm::codec::Codec;
 use diloco::config::{
-    ChurnConfig, ComputeSchedule, EngineConfig, ExperimentConfig, OuterOptConfig,
-    SpeedConfig, StreamConfig, SyncConfig, SyncSchedule, TopologyConfig,
+    AdversaryConfig, AggregateConfig, ChurnConfig, ComputeSchedule, EngineConfig,
+    ExperimentConfig, OuterOptConfig, SpeedConfig, StreamConfig, SyncConfig,
+    SyncSchedule, TopologyConfig,
 };
 use diloco::coordinator::Coordinator;
 use diloco::data::batch::BatchIter;
@@ -1145,6 +1146,130 @@ fn async_churn_resume_composition_is_bitwise() {
         straight.comm_per_round[3..],
         "resumed billing rows diverged"
     );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn aggregate_trim0_no_attackers_is_bitwise_mean_on_every_topology() {
+    // The API-redesign acceptance criterion at integration scale:
+    // `trimmed:0` with no adversary must reproduce the plain weighted
+    // mean bit for bit — on the centralized star and the decentralized
+    // gossip loop with drop injection live, and on the ring drop-free
+    // (validate rejects ring × drops: the ring all-reduce is a reliable
+    // collective, a dropped chunk would corrupt every replica).
+    let Some(rt) = runtime() else { return };
+    let init = rt.init_params().unwrap();
+    for (what, topology, drop_prob) in [
+        ("star", TopologyConfig::Star, 0.3),
+        ("gossip", TopologyConfig::Gossip, 0.3),
+        ("ring", TopologyConfig::Ring, 0.0),
+    ] {
+        let run = |aggregate: AggregateConfig| {
+            let mut cfg = small_cfg();
+            cfg.rounds = 3;
+            cfg.pretrain_steps = 0;
+            cfg.topology = topology;
+            cfg.comm.drop_prob = drop_prob;
+            cfg.aggregate = aggregate;
+            cfg.seed = 7;
+            cfg.validate().unwrap();
+            Coordinator::new(cfg, rt.clone())
+                .unwrap()
+                .run_from(Some(init.clone()))
+                .unwrap()
+        };
+        let mean = run(AggregateConfig::WeightedMean);
+        let trim0 = run(AggregateConfig::TrimmedMean { trim: 0 });
+        assert_eq!(
+            trim0.final_params, mean.final_params,
+            "{what}: trimmed:0 final params diverged from the mean"
+        );
+        assert_eq!(trim0.metrics.loss_curve, mean.metrics.loss_curve, "{what}");
+        assert_eq!(trim0.round_stats, mean.round_stats, "{what}: stats diverged");
+        assert_eq!(
+            trim0.comm_per_round, mean.comm_per_round,
+            "{what}: the byte bill must not depend on the aggregator"
+        );
+        for rs in &trim0.round_stats {
+            assert_eq!(rs.rejected, 0, "{what}: honest run rejected a payload");
+            assert_eq!(rs.trimmed_mass, 0.0, "{what}");
+        }
+    }
+}
+
+#[test]
+fn adversary_noise_draws_replay_across_engines() {
+    // The attacker set and every noise draw hang off their own RNG
+    // stream as pure functions of (seed, round, worker), so a Byzantine
+    // run must replay bitwise under the sequential and parallel engines
+    // — corruption happens on the coordinator side of the inner phase,
+    // after whichever engine produced the honest delta.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 3;
+    cfg.adversary = Some(AdversaryConfig::parse("noise:0.25:4.0").unwrap());
+    cfg.aggregate = AggregateConfig::TrimmedMean { trim: 1 };
+    cfg.seed = 11;
+    cfg.validate().unwrap();
+    let init = rt.init_params().unwrap();
+    let run = |engine: EngineConfig| {
+        let mut cfg = cfg.clone();
+        cfg.engine = engine;
+        Coordinator::new(cfg, rt.clone())
+            .unwrap()
+            .run_from(Some(init.clone()))
+            .unwrap()
+    };
+    let seq = run(EngineConfig::Sequential);
+    let par = run(EngineConfig::Parallel { threads: 0 });
+    assert_eq!(par.final_params, seq.final_params);
+    assert_eq!(par.metrics.loss_curve, seq.metrics.loss_curve);
+    assert_eq!(par.round_stats, seq.round_stats);
+    assert_eq!(par.comm_per_round, seq.comm_per_round);
+    // The estimator really worked: trimming discards mass every round.
+    assert!(seq.round_stats.iter().all(|rs| rs.trimmed_mass > 0.0));
+}
+
+#[test]
+fn resume_matches_straight_run_bitwise_stale_adversary() {
+    // The stale-replay attacker parks its previous delta between rounds;
+    // version-4 states carry the parked buffers, so save → resume must
+    // be bitwise even when the boundary splits two attacked rounds —
+    // a resume that lost the buffer would replay round 2 as the
+    // attacker's honest first round.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = small_cfg();
+    cfg.rounds = 4;
+    cfg.adversary = Some(AdversaryConfig::parse("stale:0.25").unwrap());
+    cfg.aggregate = AggregateConfig::TrimmedMean { trim: 1 };
+    cfg.seed = 23;
+    cfg.validate().unwrap();
+
+    let straight = Coordinator::new(cfg.clone(), rt.clone())
+        .unwrap()
+        .run()
+        .unwrap();
+
+    let path = tmp_state_path("stale_adv");
+    let mut saver_cfg = cfg.clone();
+    saver_cfg.rounds = 2;
+    saver_cfg.ckpt.save_every = 2;
+    saver_cfg.ckpt.path = Some(path.clone());
+    Coordinator::new(saver_cfg, rt.clone()).unwrap().run().unwrap();
+
+    // The parked replay buffers are in the state, one per attacker.
+    let st = checkpoint::load_state(&path, &rt.manifest).unwrap();
+    let attackers = cfg.adversary.unwrap().attacker_ids(cfg.seed, cfg.workers);
+    assert_eq!(
+        st.stale.iter().map(|(w, _)| *w).collect::<Vec<_>>(),
+        attackers,
+        "checkpoint must park exactly the attackers' replay buffers"
+    );
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.ckpt.resume = Some(path.clone());
+    let resumed = Coordinator::new(resume_cfg, rt.clone()).unwrap().run().unwrap();
+    assert_bitwise_tail(&straight, &resumed, 2, "stale adversary");
     std::fs::remove_file(&path).ok();
 }
 

@@ -91,6 +91,12 @@ mod tests {
     #[test]
     fn zone_table_matches_design_doc() {
         assert_eq!(zone_of("coordinator/mod.rs"), Zone::Deterministic);
+        // The robust-aggregation seam and the scripted adversary are
+        // fully deterministic (PR 10): estimator selection, rejection,
+        // and every attack draw are pure functions of (seed, round,
+        // worker) — D1/D2/D4 stay live for them.
+        assert_eq!(zone_of("coordinator/aggregate.rs"), Zone::Deterministic);
+        assert_eq!(zone_of("coordinator/adversary.rs"), Zone::Deterministic);
         assert_eq!(zone_of("comm/codec.rs"), Zone::Deterministic);
         assert_eq!(zone_of("comm/tcp.rs"), Zone::WallClock);
         assert_eq!(zone_of("comm/tcp/rendezvous.rs"), Zone::WallClock);
